@@ -1,0 +1,54 @@
+//! Diagnostic: how much does each drift flavour hurt the pretrained
+//! student, and how much headroom does retraining recover?
+use anyhow::Result;
+use ecco::runtime::{Engine, Task};
+use ecco::scene::{DriftEvent, DriftProcess, SceneState, Zone};
+use ecco::server::{eval_model, pretrain};
+use ecco::util::rng::Pcg32;
+use ecco::scene::render;
+
+fn eval_on(engine: &mut Engine, theta: &[f32], s: &SceneState, salt: u64) -> Result<f32> {
+    let frames: Vec<_> = (0..16).map(|i| render(s, 32, salt + i)).collect();
+    eval_model(engine, Task::Det, theta, &frames)
+}
+
+fn main() -> Result<()> {
+    let mut engine = Engine::open_default()?;
+    let pre = pretrain::pretrained_default(&mut engine, Task::Det, 300, 0.03, 0x7 ^ 0xbeef)?;
+    let day = SceneState::default_day();
+    println!("pretrained on default_day: {:.3}", eval_on(&mut engine, &pre.theta, &day, 1000)?);
+
+    let events: Vec<(&str, DriftEvent)> = vec![
+        ("rain 0.85", DriftEvent::Rain(0.85)),
+        ("lighting 0.45", DriftEvent::Lighting(0.45)),
+        ("palette shift", DriftEvent::Palette([0.62, 0.5, 0.35])),
+        ("class shift", DriftEvent::ClassShift([2.2, 0.3, 1.8, 0.2])),
+        ("tunnel", DriftEvent::ZoneChange(Zone::Tunnel)),
+        ("urban", DriftEvent::ZoneChange(Zone::Urban)),
+    ];
+    for (name, ev) in events {
+        let mut p = DriftProcess::new(day.clone(), 0.015, 5);
+        p.apply(&ev);
+        let drifted = p.state.clone();
+        let acc0 = eval_on(&mut engine, &pre.theta, &drifted, 2000)?;
+        // Retrain to convergence on the drifted distribution.
+        let mut model = ecco::runtime::ModelState::from_theta(Task::Det, pre.theta.clone());
+        let m = engine.manifest.clone();
+        let mut rng = Pcg32::seeded(9);
+        let pool: Vec<_> = (0..96).map(|i| render(&drifted, 32, 5000 + i)).collect();
+        for step in 0..400 {
+            let picks: Vec<usize> = (0..m.train_batch).map(|_| rng.index(pool.len())).collect();
+            let frames: Vec<_> = picks.iter().map(|&i| &pool[i]).collect();
+            let truths: Vec<_> = picks.iter().map(|&i| &pool[i].truth).collect();
+            let tb = ecco::runtime::batch::train_batch(Task::Det, &frames, &truths, m.train_batch, 32, m.classes, m.grid);
+            engine.train_step(&mut model, &tb, 0.03)?;
+            if step == 49 || step == 199 {
+                let a = eval_on(&mut engine, &model.theta, &drifted, 2000)?;
+                print!(" [{}st: {:.3}]", step + 1, a);
+            }
+        }
+        let acc_final = eval_on(&mut engine, &model.theta, &drifted, 2000)?;
+        println!("  {name:<16} drop-> {acc0:.3}, retrained(400)-> {acc_final:.3}");
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Compare ECCO vs baselines on a 6-camera fleet (two correlated triples)
+//! under a constrained GPU + bandwidth budget — the Fig. 6 setting, small.
+use anyhow::Result;
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::{Policy, System, SystemConfig};
+
+fn main() -> Result<()> {
+    let mut engine = Engine::open_default()?;
+    let gpus: f64 = std::env::args().nth(1).map(|s| s.parse().unwrap()).unwrap_or(2.0);
+    let bw: f64 = std::env::args().nth(2).map(|s| s.parse().unwrap()).unwrap_or(6.0);
+    let windows: usize = std::env::args().nth(3).map(|s| s.parse().unwrap()).unwrap_or(8);
+    println!("fleet: 6 cams (3+3 correlated), {gpus} GPUs, {bw} Mbps shared, {windows} windows");
+    for policy in [Policy::ecco(), Policy::recl(), Policy::ekya(), Policy::naive()] {
+        let name = policy.name;
+        let sc = scenario::grouped_static(&[3, 3], 0.06, 30.0, 42);
+        let mut cfg = SystemConfig::new(Task::Det, policy);
+        cfg.gpus = gpus;
+        let mut sys = System::new(cfg, sc.world, &[20.0; 6], bw, &mut engine)?;
+        if sys.cfg.policy.zoo_warm_start {
+            sys.populate_zoo_from_initial(40)?;
+        }
+        let t0 = std::time::Instant::now();
+        let mut series = Vec::new();
+        for _ in 0..windows {
+            sys.run_window()?;
+            series.push(format!("{:.3}", sys.mean_accuracy()));
+        }
+        println!(
+            "{name:<8} steady={:.3} final={:.3} resp={:.0}s jobs={} [{}] ({:.0}s wall)",
+            sys.history.steady_mean(0.4),
+            sys.mean_accuracy(),
+            sys.tracker.mean_response(windows as f64 * 60.0),
+            sys.jobs.len(),
+            series.join(" "),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}

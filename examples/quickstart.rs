@@ -1,0 +1,59 @@
+//! Quickstart: three correlated cameras hit by a drift event; ECCO groups
+//! them into one retraining job and recovers accuracy with 1 simulated GPU.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::{Policy, System, SystemConfig};
+
+fn main() -> Result<()> {
+    let mut engine = Engine::open_default()?;
+    println!("loaded {} artifacts", engine.manifest.artifacts.len());
+
+    // Three static cameras in one region (correlated drift at t=30s).
+    let scenario = scenario::grouped_static(&[3], 0.06, 30.0, 42);
+    let cfg = SystemConfig::new(Task::Det, Policy::ecco());
+    let mut system = System::new(
+        cfg,
+        scenario.world,
+        &[20.0, 20.0, 20.0], // uplinks (Mbit/s)
+        6.0,                 // shared bottleneck
+        &mut engine,
+    )?;
+
+    println!("window |  t(s) | jobs | mean mAP | per-camera mAP");
+    for w in 0..8 {
+        system.run_window()?;
+        let accs: Vec<String> = system
+            .cams
+            .iter()
+            .map(|c| format!("{:.3}", c.last_acc))
+            .collect();
+        println!(
+            "{:>6} | {:>5.0} | {:>4} |   {:.3}  | {}",
+            w,
+            system.now(),
+            system.jobs.len(),
+            system.mean_accuracy(),
+            accs.join(" ")
+        );
+    }
+
+    let stats = &system.engine.stats;
+    println!(
+        "\nengine: {} train steps, {} infer calls, {} feature calls, {:.2}s in PJRT",
+        stats.train_steps,
+        stats.infer_calls,
+        stats.feature_calls,
+        stats.exec_nanos as f64 / 1e9
+    );
+    println!(
+        "teacher annotated {} frames; response: {}/{} requests satisfied",
+        system.teacher.annotated,
+        system.tracker.satisfied(),
+        system.tracker.total()
+    );
+    Ok(())
+}

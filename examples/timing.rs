@@ -1,0 +1,26 @@
+use ecco::runtime::{Engine, Task, TrainBatch, Labels};
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let mut e = Engine::open_default()?;
+    let m = e.manifest.clone();
+    for &r in &[16usize, 32, 48] {
+        let mut st = e.init_model(Task::Det)?;
+        let b = TrainBatch { res: r, pixels: vec![0.3; m.train_batch*r*r*3],
+            labels: Labels::Det { obj: vec![0.0; m.train_batch*16], cls: vec![0.0; m.train_batch*64] } };
+        e.train_step(&mut st, &b, 0.01)?; // compile
+        let t0 = Instant::now();
+        for _ in 0..10 { e.train_step(&mut st, &b, 0.01)?; }
+        println!("train r{r}: {:.1} ms/step", t0.elapsed().as_secs_f64()*100.0);
+        let px = vec![0.3; m.infer_batch*r*r*3];
+        e.infer_det(&st.theta, r, &px)?;
+        let t0 = Instant::now();
+        for _ in 0..10 { e.infer_det(&st.theta, r, &px)?; }
+        println!("infer r{r}: {:.1} ms/call", t0.elapsed().as_secs_f64()*100.0);
+    }
+    let px = vec![0.3; m.infer_batch*32*32*3];
+    e.features(&px)?;
+    let t0 = Instant::now();
+    for _ in 0..10 { e.features(&px)?; }
+    println!("features: {:.1} ms/call", t0.elapsed().as_secs_f64()*100.0);
+    Ok(())
+}

@@ -1,0 +1,235 @@
+"""AOT pipeline: lower every (task, resolution) model variant to HLO text.
+
+Python runs ONLY here (``make artifacts``). The Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+never imports Python at runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under --out-dir, default ../artifacts):
+  {det,seg}_train_r{16,32,48}.hlo.txt   (theta, mom, x, labels..., lr) ->
+                                        (theta', mom', loss)
+  {det,seg}_infer_r{16,32,48}.hlo.txt   (theta, x) -> probs...
+  features_r32.hlo.txt                  (x,) -> (embeddings,)
+  init_{det,seg}.bin                    raw little-endian f32 init params
+  manifest.json                         shapes / layouts / hyperparams
+  golden.json                           reference numerics for rust tests
+"""
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+INIT_SEED = 1234
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_json(specs):
+    return [{"dtype": "f32", "shape": list(s.shape)} for s in specs]
+
+
+def train_specs(task: str, r: int):
+    p = model.param_count(task)
+    b = model.TRAIN_BATCH
+    base = [f32(p), f32(p), f32(b, r, r, 3)]
+    if task == "det":
+        g = model.GRID
+        labels = [f32(b, g, g), f32(b, g, g, model.K)]
+    else:
+        s = r // 4
+        labels = [f32(b, s, s, model.K + 1)]
+    return base + labels + [f32()]
+
+
+def infer_specs(task: str, r: int):
+    return [f32(model.param_count(task)), f32(model.INFER_BATCH, r, r, 3)]
+
+
+def lcg_array(shape, seed: int) -> np.ndarray:
+    """Deterministic pseudo-random f32 in [0,1), reproducible bit-for-bit in
+    Rust (same LCG): x_{n+1} = 1664525*x_n + 1013904223 (mod 2^32)."""
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=np.float32)
+    state = np.uint32(seed)
+    a, c = np.uint32(1664525), np.uint32(1013904223)
+    with np.errstate(over="ignore"):
+        for i in range(n):
+            state = a * state + c
+            out[i] = float(state) / 4294967296.0
+    return out.reshape(shape)
+
+
+def make_golden():
+    """Reference numerics for the Rust integration tests.
+
+    Inputs are LCG-generated (seed recorded) so Rust can regenerate them
+    exactly; outputs are what jax computes for 3 train steps + one infer +
+    one features call at r=32.
+    """
+    golden = {"lcg": {"a": 1664525, "c": 1013904223}, "cases": {}}
+    r, b = 32, model.TRAIN_BATCH
+    for task in ("det", "seg"):
+        p = model.param_count(task)
+        theta = model.init_params(INIT_SEED, task)
+        mom = jnp.zeros(p, jnp.float32)
+        x = jnp.asarray(lcg_array((b, r, r, 3), seed=7))
+        if task == "det":
+            g = model.GRID
+            y_obj = (lcg_array((b, g, g), seed=11) > 0.7).astype(np.float32)
+            cls_idx = (lcg_array((b, g, g), seed=13) * model.K).astype(np.int64)
+            y_cls = np.eye(model.K, dtype=np.float32)[cls_idx % model.K]
+            labels = [jnp.asarray(y_obj), jnp.asarray(y_cls)]
+        else:
+            s = r // 4
+            m_idx = (lcg_array((b, s, s), seed=17) * (model.K + 1)).astype(np.int64)
+            y_mask = np.eye(model.K + 1, dtype=np.float32)[m_idx % (model.K + 1)]
+            labels = [jnp.asarray(y_mask)]
+        lr = jnp.float32(0.05)
+        losses = []
+        for _ in range(3):
+            theta, mom, loss = model.train_step(task, theta, mom, x, *labels, lr)
+            losses.append(float(loss))
+        xi = jnp.asarray(lcg_array((model.INFER_BATCH, r, r, 3), seed=23))
+        outs = model.infer(task, model.init_params(INIT_SEED, task), xi)
+        golden["cases"][task] = {
+            "resolution": r,
+            "train_seed_x": 7,
+            "infer_seed_x": 23,
+            "label_seeds": [11, 13] if task == "det" else [17],
+            "lr": 0.05,
+            "losses": losses,
+            "theta_head8": [float(v) for v in np.asarray(theta[:8])],
+            "infer_head8": [
+                [float(v) for v in np.asarray(o).reshape(-1)[:8]] for o in outs
+            ],
+        }
+    xe = jnp.asarray(lcg_array((model.INFER_BATCH, 32, 32, 3), seed=29))
+    (emb,) = model.features(xe)
+    golden["features"] = {
+        "seed_x": 29,
+        "head8": [float(v) for v in np.asarray(emb).reshape(-1)[:8]],
+    }
+    return golden
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--golden", action="store_true", default=True)
+    ap.add_argument("--no-golden", dest="golden", action="store_false")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "init_seed": INIT_SEED,
+        "classes": model.K,
+        "grid": model.GRID,
+        "momentum": model.MOMENTUM,
+        "grad_clip": model.GRAD_CLIP,
+        "resolutions": list(model.RESOLUTIONS),
+        "train_batch": model.TRAIN_BATCH,
+        "infer_batch": model.INFER_BATCH,
+        "feature_res": model.FEATURE_RES,
+        "embed_dim": model.EMBED_DIM,
+        "tasks": {},
+        "artifacts": {},
+    }
+
+    for task in ("det", "seg"):
+        manifest["tasks"][task] = {
+            "param_count": model.param_count(task),
+            "head_out": model.HEAD_OUT[task],
+            "layout": [
+                {"name": n, "shape": list(s)} for n, s in model.param_layout(task)
+            ],
+            "init_file": f"init_{task}.bin",
+        }
+        theta0 = np.asarray(model.init_params(INIT_SEED, task), dtype=np.float32)
+        theta0.tofile(os.path.join(args.out_dir, f"init_{task}.bin"))
+
+        for r in model.RESOLUTIONS:
+            # --- train step ---
+            specs = train_specs(task, r)
+            fn = partial(model.train_step, task)
+            lowered = jax.jit(fn).lower(*specs)
+            name = f"{task}_train_r{r}"
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(to_hlo_text(lowered))
+            out_specs = [specs[0], specs[1], f32()]
+            manifest["artifacts"][name] = {
+                "file": f"{name}.hlo.txt",
+                "inputs": spec_json(specs),
+                "outputs": spec_json(out_specs),
+            }
+            print(f"wrote {name}")
+
+            # --- infer ---
+            specs = infer_specs(task, r)
+            fn = partial(model.infer, task)
+            lowered = jax.jit(fn).lower(*specs)
+            name = f"{task}_infer_r{r}"
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(to_hlo_text(lowered))
+            b, g = model.INFER_BATCH, model.GRID
+            if task == "det":
+                outs = [f32(b, g, g), f32(b, g, g, model.K)]
+            else:
+                outs = [f32(b, r // 4, r // 4, model.K + 1)]
+            manifest["artifacts"][name] = {
+                "file": f"{name}.hlo.txt",
+                "inputs": spec_json(specs),
+                "outputs": spec_json(outs),
+            }
+            print(f"wrote {name}")
+
+    # --- features ---
+    specs = [f32(model.INFER_BATCH, model.FEATURE_RES, model.FEATURE_RES, 3)]
+    lowered = jax.jit(model.features).lower(*specs)
+    with open(os.path.join(args.out_dir, "features_r32.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["features_r32"] = {
+        "file": "features_r32.hlo.txt",
+        "inputs": spec_json(specs),
+        "outputs": spec_json([f32(model.INFER_BATCH, model.EMBED_DIM)]),
+    }
+    print("wrote features_r32")
+
+    if args.golden:
+        golden = make_golden()
+        with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+            json.dump(golden, f, indent=1)
+        manifest["golden"] = "golden.json"
+        print("wrote golden.json")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

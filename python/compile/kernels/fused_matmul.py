@@ -1,0 +1,167 @@
+"""L1: fused tiled matmul + bias + activation as a Pallas kernel.
+
+This is the compute hot-spot of the whole stack: every convolution in the
+student model lowers to im2col followed by this kernel, and the detection /
+segmentation heads call it directly (1x1 conv == per-cell dense).
+
+TPU mapping (see DESIGN.md "Hardware-Adaptation"): the paper's student
+(YOLO11n) runs CUDA convs tiled over threadblocks + shared memory. Here the
+same schedule is expressed with Pallas BlockSpecs: each (bm, bn) output tile
+lives in VMEM while the k-loop streams (bm, bk) x (bk, bn) operand tiles
+from HBM through the MXU; bias-add and activation are fused into the
+epilogue so the accumulator never round-trips HBM.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute. Correctness is pinned against the pure-jnp
+oracle in ref.py (pytest + hypothesis).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fallback block shape for large problems. 128x128 matches the MXU systolic
+# array footprint (and the f32 VMEM tiling of (8, 128)).
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+# Whole-operand budget: if the padded x/w/out tiles together fit in this many
+# f32 elements (~6 MiB of the ~16 MiB per-core VMEM), run the matmul as a
+# single grid step — one HBM->VMEM stream per operand, zero revisits. Every
+# layer of the student model fits this budget at all supported resolutions,
+# so the 128-tiling is only exercised by stress tests.
+VMEM_F32_BUDGET = 1_572_864
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """One (m, n, k) grid step: accumulate a bk-slice into the output tile.
+
+    Grid order is (m, n, k) with k innermost, so o_ref for a given (m, n)
+    tile is revisited across consecutive steps and can serve as the
+    accumulator; the epilogue (bias + activation) fires on the last k step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        act = _ACTIVATIONS[activation]
+        o_ref[...] = act(o_ref[...] + b_ref[...][None, :])
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    *,
+    bm: int = BLOCK_M,
+    bn: int = BLOCK_N,
+    bk: int = BLOCK_K,
+) -> jax.Array:
+    """act(x @ w + b) with x:[m,k], w:[k,n], b:[n] -> [m,n] (f32).
+
+    Operands are zero-padded up to block multiples (zero rows/cols do not
+    perturb the product) and the result is sliced back, so arbitrary shapes
+    are supported; the kernel itself only ever sees full tiles.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    # Pick the schedule: whole-operand single-step when it fits the VMEM
+    # budget (the common case for the student model), otherwise classic
+    # 128-tiling. Blocks are rounded to multiples of 8 (f32 sublane tiling)
+    # so pad overhead stays bounded.
+    mp8, kp8, np8 = _round8(m), _round8(k), _round8(n)
+    if mp8 * kp8 + kp8 * np8 + mp8 * np8 <= VMEM_F32_BUDGET:
+        bm, bk, bn = mp8, kp8, np8
+    else:
+        bm = min(bm, mp8)
+        bn = min(bn, np8)
+        bk = min(bk, kp8)
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    bp = _pad_to(b.astype(jnp.float32), 0, bn)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _round8(v: int) -> int:
+    return max(8, (v + 7) // 8 * 8)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: custom VJP re-expresses both gradient matmuls with
+# the same fused kernel, so forward AND backward run on the L1 hot path.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation="none"):
+    return matmul_bias_act(x, w, b, activation)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    y = matmul_bias_act(x, w, b, activation)
+    # For relu the post-activation output is enough to reconstruct the mask.
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        dy = dy * (y > 0.0).astype(dy.dtype)
+    dx = matmul_bias_act(dy, w.T, jnp.zeros((w.shape[0],), jnp.float32), "none")
+    dw = matmul_bias_act(x.T, dy, jnp.zeros((dy.shape[1],), jnp.float32), "none")
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,62 @@
+"""L1: per-patch frame statistics as a Pallas kernel.
+
+Produces the compact frame descriptor the Rust coordinator uses for drift
+detection and camera grouping (cosine distance between descriptors). A
+frame [R, R, 3] is split into a PATCHES x PATCHES grid; each patch
+contributes per-channel (mean, std), giving an embedding of
+PATCHES * PATCHES * 3 * 2 floats.
+
+The kernel runs one grid step per (frame, patch-row) and reduces a
+VMEM-resident stripe of the image, which is the natural TPU layout: the
+stripe is a contiguous HBM->VMEM block and both moments come out of a
+single pass (sum / sum-of-squares), i.e. one read of the pixels.
+
+interpret=True as everywhere (see fused_matmul.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PATCHES = 4  # descriptor grid; embedding dim = PATCHES^2 * 3 * 2
+EPS = 1e-6
+
+
+def _patchstats_kernel(x_ref, o_ref, *, patch: int, patches: int):
+    """x_ref: [1, patch, R, 3] stripe (one patch-row); o_ref: [1, 1, patches, 3, 2]."""
+    x = x_ref[...]  # (1, patch, R, 3)
+    # Split the stripe into `patches` column-patches of width `patch`.
+    x = x.reshape(patch, patches, patch, 3)
+    n = float(patch * patch)
+    s1 = jnp.sum(x, axis=(0, 2)) / n  # (patches, 3) mean
+    s2 = jnp.sum(x * x, axis=(0, 2)) / n  # (patches, 3) E[x^2]
+    var = jnp.maximum(s2 - s1 * s1, 0.0)
+    stats = jnp.stack([s1, jnp.sqrt(var + EPS)], axis=-1)  # (patches, 3, 2)
+    o_ref[...] = stats.reshape(1, 1, patches, 3, 2)
+
+
+def patch_stats(x: jax.Array, patches: int = PATCHES) -> jax.Array:
+    """x: [B, R, R, 3] -> descriptors [B, patches*patches*6] (f32).
+
+    R must be divisible by `patches` (all supported resolutions are).
+    """
+    b, r, r2, c = x.shape
+    if r != r2 or c != 3:
+        raise ValueError(f"expected [B,R,R,3], got {x.shape}")
+    if r % patches != 0:
+        raise ValueError(f"R={r} not divisible by patches={patches}")
+    patch = r // patches
+
+    out = pl.pallas_call(
+        partial(_patchstats_kernel, patch=patch, patches=patches),
+        grid=(b, patches),
+        in_specs=[
+            pl.BlockSpec((1, patch, r, 3), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, patches, 3, 2), lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, patches, patches, 3, 2), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+    return out.reshape(b, patches * patches * 6)

@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the straightforward, obviously-correct formulation; the
+pytest suite (python/tests/) asserts the Pallas kernels match these to
+tight tolerances across hypothesis-generated shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(x, w, b, activation="none"):
+    """act(x @ w + b) -- oracle for fused_matmul.matmul_bias_act."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y = y + b.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def patch_stats_ref(x, patches=4, eps=1e-6):
+    """Oracle for patchstats.patch_stats: per-patch (mean, std) descriptor."""
+    b, r, _, _ = x.shape
+    patch = r // patches
+    x = x.astype(jnp.float32).reshape(b, patches, patch, patches, patch, 3)
+    mean = x.mean(axis=(2, 4))  # (b, patches, patches, 3)
+    var = jnp.maximum((x * x).mean(axis=(2, 4)) - mean * mean, 0.0)
+    std = jnp.sqrt(var + eps)
+    out = jnp.stack([mean, std], axis=-1)  # (b, patches, patches, 3, 2)
+    return out.reshape(b, patches * patches * 6)

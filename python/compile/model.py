@@ -1,0 +1,230 @@
+"""L2: the student model (JAX), built on the L1 Pallas kernels.
+
+This is ECCO's retrained "student": a tiny convolutional detector in the
+spirit of YOLO11n (see DESIGN.md for the substitution argument). Every
+convolution is expressed as im2col followed by the fused Pallas matmul
+kernel, so the L1 kernel is on the hot path of both forward and backward.
+
+Two task heads share the trunk:
+  * det -- per-cell objectness + class logits on a GRID x GRID grid
+           (grid-cell detection; scored by mAP in the Rust coordinator).
+  * seg -- per-cell (K+1)-class logits at the trunk's finest spatial
+           resolution (R/4 x R/4), a coarse instance-mask task.
+
+Parameters (and SGD momentum) live in ONE flat f32 vector so the Rust
+runtime handles exactly two device-resident buffers per model; the layout
+is recorded in artifacts/manifest.json by aot.py.
+
+All functions here are pure and jit/lower-friendly; aot.py lowers
+train_step / infer / features to HLO text once per (task, resolution).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_matmul import fused_linear
+from .kernels.patchstats import patch_stats
+
+K = 4  # object classes
+GRID = 4  # detection grid (GRID x GRID cells)
+MOMENTUM = 0.9
+GRAD_CLIP = 5.0
+RESOLUTIONS = (16, 32, 48)
+TRAIN_BATCH = 8
+INFER_BATCH = 16
+FEATURE_RES = 32
+EMBED_DIM = 96  # patch_stats output: 4*4 patches * 3 ch * 2 moments
+
+# (name, (in_features, out_features)) for the conv trunk; convs are 3x3.
+TRUNK = [
+    ("conv1", (3 * 9, 8)),
+    ("conv2", (8 * 9, 16)),
+    ("conv3", (16 * 9, 32)),
+]
+HEAD_OUT = {"det": 1 + K, "seg": K + 1}
+
+
+def param_layout(task: str):
+    """[(name, shape)] in flat-vector order."""
+    layout = []
+    for name, (fin, fout) in TRUNK:
+        layout.append((f"{name}_w", (fin, fout)))
+        layout.append((f"{name}_b", (fout,)))
+    layout.append(("head_w", (32, HEAD_OUT[task])))
+    layout.append(("head_b", (HEAD_OUT[task],)))
+    return layout
+
+
+def param_count(task: str) -> int:
+    total = 0
+    for _, shape in param_layout(task):
+        size = 1
+        for d in shape:
+            size *= d
+        total += size
+    return total
+
+
+def unpack(theta: jax.Array, task: str):
+    """Flat f32 vector -> dict of named parameter arrays (static slices)."""
+    out, off = {}, 0
+    for name, shape in param_layout(task):
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = theta[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(seed: int, task: str) -> jax.Array:
+    """He-init flat parameter vector (deterministic in `seed`)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_layout(task):
+        key, sub = jax.random.split(key)
+        if name.endswith("_w"):
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / fan_in)
+            chunks.append(w.reshape(-1))
+        else:
+            chunks.append(jnp.zeros(shape).reshape(-1))
+    return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Trunk
+# ---------------------------------------------------------------------------
+
+
+def _im2col3x3(x: jax.Array) -> jax.Array:
+    """[B,H,W,C] -> [B,H,W,9C] SAME-padded 3x3 patches (9 static slices)."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _conv3x3(x, w, b, activation="relu"):
+    """3x3 SAME conv via im2col x fused Pallas matmul."""
+    bsz, h, wd, _ = x.shape
+    patches = _im2col3x3(x).reshape(bsz * h * wd, -1)
+    y = fused_linear(patches, w, b, activation)
+    return y.reshape(bsz, h, wd, w.shape[1])
+
+
+def _pool2(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def trunk(theta_d, x):
+    """[B,R,R,3] -> [B,R/4,R/4,32] feature map."""
+    h = _conv3x3(x, theta_d["conv1_w"], theta_d["conv1_b"])
+    h = _pool2(h)
+    h = _conv3x3(h, theta_d["conv2_w"], theta_d["conv2_b"])
+    h = _pool2(h)
+    h = _conv3x3(h, theta_d["conv3_w"], theta_d["conv3_b"])
+    return h
+
+
+def _grid_pool(h, grid=GRID):
+    """Average-pool a [B,S,S,C] map down to [B,grid,grid,C]."""
+    b, s, _, c = h.shape
+    f = s // grid
+    return h.reshape(b, grid, f, grid, f, c).mean(axis=(2, 4))
+
+
+def _head(h, theta_d):
+    """1x1 conv head via the fused kernel: [B,S,S,32] -> [B,S,S,out]."""
+    b, s, _, c = h.shape
+    y = fused_linear(
+        h.reshape(b * s * s, c), theta_d["head_w"], theta_d["head_b"], "none"
+    )
+    return y.reshape(b, s, s, -1)
+
+
+def det_logits(theta: jax.Array, x: jax.Array) -> jax.Array:
+    d = unpack(theta, "det")
+    return _head(_grid_pool(trunk(d, x)), d)  # [B,GRID,GRID,1+K]
+
+
+def seg_logits(theta: jax.Array, x: jax.Array) -> jax.Array:
+    d = unpack(theta, "seg")
+    return _head(trunk(d, x), d)  # [B,R/4,R/4,K+1]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def det_loss(theta, x, y_obj, y_cls):
+    """BCE(objectness) + objectness-masked CE(class).
+
+    y_obj: [B,GRID,GRID] in {0,1};  y_cls: [B,GRID,GRID,K] one-hot.
+    """
+    logits = det_logits(theta, x)
+    lo = logits[..., 0]
+    bce = jnp.maximum(lo, 0.0) - lo * y_obj + jnp.log1p(jnp.exp(-jnp.abs(lo)))
+    bce = bce.mean()
+    lc = jax.nn.log_softmax(logits[..., 1:], axis=-1)
+    ce = -(y_cls * lc).sum(axis=-1)
+    ce = (ce * y_obj).sum() / (y_obj.sum() + 1e-6)
+    return bce + ce
+
+
+def seg_loss(theta, x, y_mask):
+    """CE over every mask cell. y_mask: [B,S,S,K+1] one-hot."""
+    lm = jax.nn.log_softmax(seg_logits(theta, x), axis=-1)
+    return -(y_mask * lm).sum(axis=-1).mean()
+
+
+_LOSS = {"det": det_loss, "seg": seg_loss}
+
+
+# ---------------------------------------------------------------------------
+# Train / infer / features entry points (these get lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def _clip_by_norm(g, max_norm):
+    norm = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+    return g * jnp.minimum(1.0, max_norm / norm)
+
+
+def train_step(task: str, theta, mom, x, *labels_and_lr):
+    """One SGD+momentum step.
+
+    det: labels = (y_obj, y_cls);  seg: labels = (y_mask,). Final positional
+    argument is the scalar learning rate.
+    Returns (theta', mom', loss).
+    """
+    *labels, lr = labels_and_lr
+    loss, grad = jax.value_and_grad(_LOSS[task])(theta, x, *labels)
+    grad = _clip_by_norm(grad, GRAD_CLIP)
+    mom = MOMENTUM * mom + grad
+    theta = theta - lr * mom
+    return theta, mom, loss
+
+
+def infer(task: str, theta, x):
+    """det -> (obj_prob [B,G,G], cls_prob [B,G,G,K]); seg -> (mask probs,)."""
+    if task == "det":
+        logits = det_logits(theta, x)
+        return (
+            jax.nn.sigmoid(logits[..., 0]),
+            jax.nn.softmax(logits[..., 1:], axis=-1),
+        )
+    return (jax.nn.softmax(seg_logits(theta, x), axis=-1),)
+
+
+def features(x):
+    """[B,32,32,3] -> L2-normalised drift/grouping descriptors [B,96]."""
+    e = patch_stats(x)
+    return (e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-8),)

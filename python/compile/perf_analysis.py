@@ -1,0 +1,123 @@
+"""L1/L2 performance analysis (build-time).
+
+Pallas runs under interpret=True on this CPU testbed, so TPU performance is
+*estimated structurally* rather than measured (see the system prompt's
+hardware note): for every matmul the student model issues, this script
+reports the padded tile shapes the kernel's BlockSpecs produce, the VMEM
+footprint of one grid step, and the MXU utilisation bound implied by the
+operand geometry. It also audits the lowered HLO artifacts (op histogram,
+fusion count) as the L2 profile.
+
+Usage:  cd python && python -m compile.perf_analysis [--artifacts ../artifacts]
+Output: a markdown table to paste into EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+import os
+import re
+from collections import Counter
+
+from . import model
+from .kernels import fused_matmul as fm
+
+MXU_DIM = 128  # systolic array edge (lanes); f32 VMEM tiling is (8, 128)
+
+
+def matmul_shapes(task: str, res: int):
+    """Every (m, k, n) the model issues at this resolution (fwd pass)."""
+    shapes = []
+    b = model.TRAIN_BATCH
+    h = res
+    # conv1: im2col rows = B*H*W, k = 27, n = 8
+    shapes.append((f"conv1 r{res}", b * h * h, 27, 8))
+    h //= 2
+    shapes.append((f"conv2 r{res}", b * h * h, 72, 16))
+    h //= 2
+    shapes.append((f"conv3 r{res}", b * h * h, 144, 32))
+    out = model.HEAD_OUT[task]
+    if task == "det":
+        shapes.append((f"head r{res}", b * model.GRID * model.GRID, 32, out))
+    else:
+        shapes.append((f"head r{res}", b * h * h, 32, out))
+    return shapes
+
+
+def analyze_matmul(m, k, n):
+    """Tile choice (mirrors fused_matmul), VMEM bytes, MXU utilisation."""
+    mp, kp, np_ = fm._round8(m), fm._round8(k), fm._round8(n)
+    whole = mp * kp + kp * np_ + mp * np_ <= fm.VMEM_F32_BUDGET
+    if whole:
+        bm, bk, bn = mp, kp, np_
+        grid = 1
+    else:
+        bm = min(fm.BLOCK_M, mp)
+        bk = min(fm.BLOCK_K, kp)
+        bn = min(fm.BLOCK_N, np_)
+        grid = -(-mp // bm) * -(-np_ // bn) * -(-kp // bk)
+    vmem_bytes = 4 * (bm * bk + bk * bn + bm * bn + bn)
+    # MXU utilisation bound: useful MACs / systolic-array MAC slots consumed.
+    # The array is MXU_DIM x MXU_DIM; a (bm, bk) x (bk, bn) tile occupies
+    # ceil(bk/128)*ceil(bn/128) passes of bm cycles each.
+    import math
+
+    passes = math.ceil(bk / MXU_DIM) * math.ceil(bn / MXU_DIM)
+    slots = grid * passes * bm * MXU_DIM * MXU_DIM
+    useful = m * k * n
+    util = useful / slots
+    return bm, bk, bn, grid, vmem_bytes, util
+
+
+def hlo_stats(path):
+    """Crude HLO-text op histogram (L2 fusion audit)."""
+    ops = Counter()
+    with open(path) as f:
+        for line in f:
+            m = re.match(r"\s*(%?[\w.-]+)\s*=\s*[\w\[\]{},:/ ]+\s(\w+)\(", line)
+            if m:
+                ops[m.group(2)] += 1
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    print("## L1: Pallas fused-matmul schedule (per conv, forward pass)\n")
+    print("| layer | m x k x n | tile (bm,bk,bn) | grid steps | VMEM/step | MXU util bound |")
+    print("|-------|-----------|-----------------|------------|-----------|----------------|")
+    for task, res in [("det", 32), ("det", 48)]:
+        for name, m, k, n in matmul_shapes(task, res):
+            bm, bk, bn, grid, vmem, util = analyze_matmul(m, k, n)
+            print(
+                f"| {name} | {m}x{k}x{n} | ({bm},{bk},{bn}) | {grid} |"
+                f" {vmem/1024:.0f} KiB | {util*100:.1f}% |"
+            )
+    print(
+        "\nNotes: one grid step per layer (whole-operand schedule) — each"
+        " operand streams HBM->VMEM exactly once and bias+activation fuse"
+        " into the epilogue. The MXU bound is set by n<=32 (<128 lanes);"
+        " raising it requires wider channels or batched-layer fusion, i.e."
+        " a bigger student — a model-capacity decision, not a kernel one."
+    )
+
+    print("\n## L2: lowered HLO op histogram (fusion audit)\n")
+    for name in ["det_train_r32", "det_infer_r32", "features_r32"]:
+        path = os.path.join(args.artifacts, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            print(f"(missing {path} — run make artifacts)")
+            continue
+        ops = hlo_stats(path)
+        total = sum(ops.values())
+        top = ", ".join(f"{op}:{c}" for op, c in ops.most_common(8))
+        print(f"* `{name}`: {total} instructions — {top}")
+    print(
+        "\nXLA fuses elementwise chains around the dots after compilation;"
+        " the interpret-mode pallas_call lowers to plain dot+elementwise HLO"
+        " (single grid step), so no while-loop overhead survives into the"
+        " compiled executable."
+    )
+
+
+if __name__ == "__main__":
+    main()

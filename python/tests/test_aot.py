@@ -1,0 +1,93 @@
+"""AOT pipeline consistency: manifest <-> model code <-> artifact files.
+
+These tests run against an existing artifacts/ directory (they skip if
+`make artifacts` has not been run) and pin the contract the Rust runtime
+depends on.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import lcg_array, train_specs, infer_specs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_matches_model_constants(manifest):
+    assert manifest["classes"] == model.K
+    assert manifest["grid"] == model.GRID
+    assert manifest["resolutions"] == list(model.RESOLUTIONS)
+    assert manifest["train_batch"] == model.TRAIN_BATCH
+    assert manifest["infer_batch"] == model.INFER_BATCH
+    assert manifest["embed_dim"] == model.EMBED_DIM
+    for task in ("det", "seg"):
+        assert manifest["tasks"][task]["param_count"] == model.param_count(task)
+
+
+def test_all_artifact_files_exist_and_nonempty(manifest):
+    for name, spec in manifest["artifacts"].items():
+        path = os.path.join(ART, spec["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 1000, f"{name} suspiciously small"
+
+
+def test_artifact_signatures_match_model_specs(manifest):
+    for task in ("det", "seg"):
+        for r in model.RESOLUTIONS:
+            spec = manifest["artifacts"][f"{task}_train_r{r}"]
+            expect = [list(s.shape) for s in train_specs(task, r)]
+            assert [i["shape"] for i in spec["inputs"]] == expect
+            spec = manifest["artifacts"][f"{task}_infer_r{r}"]
+            expect = [list(s.shape) for s in infer_specs(task, r)]
+            assert [i["shape"] for i in spec["inputs"]] == expect
+
+
+def test_init_params_roundtrip(manifest):
+    for task in ("det", "seg"):
+        path = os.path.join(ART, manifest["tasks"][task]["init_file"])
+        raw = np.fromfile(path, dtype=np.float32)
+        expect = np.asarray(model.init_params(manifest["init_seed"], task))
+        np.testing.assert_array_equal(raw, expect)
+
+
+def test_golden_losses_are_decreasing(manifest):
+    with open(os.path.join(ART, "golden.json")) as f:
+        golden = json.load(f)
+    for task in ("det", "seg"):
+        losses = golden["cases"][task]["losses"]
+        assert len(losses) == 3
+        assert losses[2] < losses[0], f"{task} golden losses must decrease"
+
+
+def test_lcg_matches_documented_recurrence():
+    vals = lcg_array((3,), seed=7)
+    state = 7
+    expect = []
+    for _ in range(3):
+        state = (1664525 * state + 1013904223) % 2**32
+        expect.append(np.float32(state) / np.float32(2**32))
+    np.testing.assert_allclose(vals, np.array(expect, dtype=np.float32), rtol=1e-6)
+
+
+def test_hlo_text_artifacts_are_parseable_headers(manifest):
+    """HLO text must start with the module header the Rust loader expects."""
+    for name, spec in manifest["artifacts"].items():
+        path = os.path.join(ART, spec["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), f"{name}: {head[:40]!r}"

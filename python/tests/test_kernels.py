@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value ranges; this is the core correctness
+signal for the kernels that end up inside every HLO artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_matmul import fused_linear, matmul_bias_act
+from compile.kernels.patchstats import patch_stats
+from compile.kernels.ref import matmul_bias_act_ref, patch_stats_ref
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def _rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    x = _rand((m, k), seed)
+    w = _rand((k, n), seed + 1)
+    b = _rand((n,), seed + 2)
+    got = matmul_bias_act(x, w, b, act)
+    exp = matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (8, 8), (128, 128), (129, 3), (200, 130)])
+def test_matmul_block_boundaries(shape):
+    """Exact block multiples and off-by-one shapes around BLOCK_{M,N,K}."""
+    m, k = shape
+    n = 17
+    x = _rand((m, k), 0)
+    w = _rand((k, n), 1)
+    b = _rand((n,), 2)
+    got = matmul_bias_act(x, w, b, "relu")
+    exp = matmul_bias_act_ref(x, w, b, "relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = _rand((4, 5), 0)
+    w = _rand((6, 3), 1)
+    b = _rand((3,), 2)
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, w, b)
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, _rand((5, 3), 1), _rand((4,), 2))
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, _rand((5, 3), 1), b, "gelu")
+
+
+@given(
+    m=st.integers(2, 40),
+    k=st.integers(2, 40),
+    n=st.integers(2, 20),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_grads_match_ref(m, k, n, act, seed):
+    x = _rand((m, k), seed)
+    w = _rand((k, n), seed + 1)
+    b = _rand((n,), seed + 2)
+
+    def f(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def fr(x, w, b):
+        return jnp.sum(matmul_bias_act_ref(x, w, b, act) ** 2)
+
+    got = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    exp = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=1e-4, atol=1e-3)
+
+
+@given(
+    b=st.integers(1, 6),
+    r=st.sampled_from([16, 32, 48]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_patch_stats_matches_ref(b, r, seed):
+    x = _rand((b, r, r, 3), seed, lo=0.0, hi=1.0)
+    got = patch_stats(x)
+    exp = patch_stats_ref(x)
+    assert got.shape == (b, 96)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+def test_patch_stats_constant_frame_has_zero_std():
+    x = jnp.ones((2, 32, 32, 3), jnp.float32) * 0.5
+    e = np.asarray(patch_stats(x)).reshape(2, 16, 3, 2)
+    np.testing.assert_allclose(e[..., 0], 0.5, atol=1e-6)
+    np.testing.assert_allclose(e[..., 1], 1e-3, atol=1e-3)  # sqrt(eps)
+
+
+def test_patch_stats_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        patch_stats(jnp.zeros((1, 30, 32, 3)))
+    with pytest.raises(ValueError):
+        patch_stats(jnp.zeros((1, 18, 18, 3)))  # not divisible by 4

@@ -1,0 +1,136 @@
+"""L2 correctness: student model shapes, losses, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _det_batch(seed, b=model.TRAIN_BATCH, r=32):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x = jax.random.uniform(k1, (b, r, r, 3))
+    y_obj = (jax.random.uniform(k2, (b, model.GRID, model.GRID)) > 0.6).astype(
+        jnp.float32
+    )
+    y_cls = jax.nn.one_hot(
+        jax.random.randint(k3, (b, model.GRID, model.GRID), 0, model.K), model.K
+    )
+    return x, y_obj, y_cls
+
+
+def test_param_layout_matches_count():
+    for task in ("det", "seg"):
+        layout = model.param_layout(task)
+        total = sum(int(np.prod(s)) for _, s in layout)
+        assert total == model.param_count(task)
+        theta = model.init_params(0, task)
+        assert theta.shape == (total,)
+        d = model.unpack(theta, task)
+        assert set(d) == {n for n, _ in layout}
+
+
+def test_init_is_deterministic_and_seed_sensitive():
+    a = np.asarray(model.init_params(7, "det"))
+    b = np.asarray(model.init_params(7, "det"))
+    c = np.asarray(model.init_params(8, "det"))
+    np.testing.assert_array_equal(a, b)
+    assert np.abs(a - c).max() > 0
+
+
+@pytest.mark.parametrize("r", model.RESOLUTIONS)
+def test_det_logits_shapes(r):
+    theta = model.init_params(0, "det")
+    x = jnp.zeros((2, r, r, 3))
+    out = model.det_logits(theta, x)
+    assert out.shape == (2, model.GRID, model.GRID, 1 + model.K)
+
+
+@pytest.mark.parametrize("r", model.RESOLUTIONS)
+def test_seg_logits_shapes(r):
+    theta = model.init_params(0, "seg")
+    x = jnp.zeros((2, r, r, 3))
+    out = model.seg_logits(theta, x)
+    assert out.shape == (2, r // 4, r // 4, model.K + 1)
+
+
+def test_det_loss_finite_and_positive():
+    theta = model.init_params(0, "det")
+    x, y_obj, y_cls = _det_batch(0)
+    loss = model.det_loss(theta, x, y_obj, y_cls)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_train_step_decreases_loss_det():
+    theta = model.init_params(0, "det")
+    mom = jnp.zeros_like(theta)
+    x, y_obj, y_cls = _det_batch(1)
+    losses = []
+    for _ in range(6):
+        theta, mom, loss = model.train_step(
+            "det", theta, mom, x, y_obj, y_cls, jnp.float32(0.05)
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_train_step_decreases_loss_seg():
+    theta = model.init_params(0, "seg")
+    mom = jnp.zeros_like(theta)
+    b, r = model.TRAIN_BATCH, 16
+    s = r // 4
+    k = jax.random.PRNGKey(2)
+    x = jax.random.uniform(k, (b, r, r, 3))
+    y = jax.nn.one_hot(
+        jax.random.randint(jax.random.PRNGKey(3), (b, s, s), 0, model.K + 1),
+        model.K + 1,
+    )
+    losses = []
+    for _ in range(6):
+        theta, mom, loss = model.train_step("seg", theta, mom, x, y, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_infer_outputs_are_probabilities():
+    theta = model.init_params(0, "det")
+    x = jax.random.uniform(jax.random.PRNGKey(4), (model.INFER_BATCH, 32, 32, 3))
+    obj, cls = model.infer("det", theta, x)
+    assert obj.shape == (model.INFER_BATCH, model.GRID, model.GRID)
+    assert cls.shape == (model.INFER_BATCH, model.GRID, model.GRID, model.K)
+    assert float(jnp.min(obj)) >= 0 and float(jnp.max(obj)) <= 1
+    np.testing.assert_allclose(np.asarray(cls.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_features_normalised():
+    x = jax.random.uniform(jax.random.PRNGKey(5), (model.INFER_BATCH, 32, 32, 3))
+    (emb,) = model.features(x)
+    assert emb.shape == (model.INFER_BATCH, model.EMBED_DIM)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(emb), axis=-1), 1.0, atol=1e-4
+    )
+
+
+def test_same_weights_usable_across_resolutions():
+    """Convs are size-agnostic: one theta serves all resolution variants."""
+    theta = model.init_params(0, "det")
+    for r in model.RESOLUTIONS:
+        out = model.det_logits(theta, jnp.ones((1, r, r, 3)) * 0.3)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_grad_clip_bounds_update():
+    theta = model.init_params(0, "det")
+    mom = jnp.zeros_like(theta)
+    # Pathological batch: huge values -> gradient should still be clipped.
+    x = jnp.ones((model.TRAIN_BATCH, 16, 16, 3)) * 100.0
+    y_obj = jnp.ones((model.TRAIN_BATCH, model.GRID, model.GRID))
+    y_cls = jnp.tile(jnp.eye(model.K)[0], (model.TRAIN_BATCH, model.GRID, model.GRID, 1))
+    theta2, mom2, loss = model.train_step(
+        "det", theta, mom, x, y_obj, y_cls, jnp.float32(0.05)
+    )
+    # ||mom2|| = ||clipped grad|| <= GRAD_CLIP
+    assert float(jnp.linalg.norm(mom2)) <= model.GRAD_CLIP + 1e-3
+    assert np.isfinite(np.asarray(theta2)).all()

@@ -1,0 +1,103 @@
+//! Coordinator benchmarks: allocator decisions, grouping decisions, and the
+//! end-to-end retraining window (the paper's operational unit). The window
+//! bench is the one a deployment sizes hardware against — it corresponds to
+//! the per-window work behind every table in §5.
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use ecco::alloc::{Allocator, EccoAllocator, JobView, UniformAllocator, UtilityAllocator};
+use ecco::grouping::{group_request, metadata_correlated, GroupJob, GroupingPolicy, RequestMeta};
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::{Policy, System, SystemConfig};
+use ecco::util::bench::{black_box, BenchSuite};
+
+fn jobs(n: usize) -> Vec<JobView> {
+    (0..n)
+        .map(|id| JobView {
+            id,
+            n_cams: 1 + id % 4,
+            acc: 0.2 + 0.05 * (id % 7) as f32,
+            acc_gain: 0.01 * (id % 5) as f32,
+            micro_windows: 1,
+            lifetime_mw: 1 + id,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = BenchSuite::new("coordinator");
+
+    // Allocator decision latency at fleet scale.
+    for n in [4usize, 22, 128] {
+        let views = jobs(n);
+        let mut ecco_alloc = EccoAllocator::default();
+        b.bench(&format!("alloc_pick_ecco_{n}jobs"), || {
+            ecco_alloc.pick(black_box(&views))
+        });
+        let mut util = UtilityAllocator;
+        b.bench(&format!("alloc_pick_utility_{n}jobs"), || {
+            util.pick(black_box(&views))
+        });
+        let mut uni = UniformAllocator;
+        b.bench(&format!("alloc_pick_uniform_{n}jobs"), || {
+            uni.pick(black_box(&views))
+        });
+        let e2 = EccoAllocator::default();
+        b.bench(&format!("alloc_share_estimates_{n}jobs"), || {
+            e2.share_estimates(black_box(&views))
+        });
+    }
+
+    // Grouping: metadata filter + request placement over a job population.
+    let policy = GroupingPolicy::default();
+    let mut gjobs: Vec<GroupJob> = (0..64)
+        .map(|i| {
+            GroupJob::new(
+                i,
+                RequestMeta {
+                    cam: i,
+                    time: 10.0 * i as f64,
+                    loc: (0.01 * i as f32, 0.5),
+                    acc: 0.2,
+                },
+            )
+        })
+        .collect();
+    let req = RequestMeta {
+        cam: 999,
+        time: 320.0,
+        loc: (0.3, 0.5),
+        acc: 0.2,
+    };
+    b.bench("grouping_metadata_filter_64jobs", || {
+        gjobs
+            .iter()
+            .filter(|j| metadata_correlated(&policy, j, &req))
+            .count()
+    });
+    let mut next_id = 1000;
+    b.bench("grouping_request_64jobs", || {
+        let mut jobs2 = gjobs.clone();
+        group_request(&mut jobs2, &mut next_id, &policy, req.clone(), |_| 0.1)
+    });
+    gjobs.truncate(64);
+
+    // End-to-end: one full retraining window of the real system (PJRT
+    // training, network sim, teacher, metrics) at the Fig. 6 scale.
+    let mut engine = Engine::open_default().expect("run `make artifacts` first");
+    b.bench_timed("e2e_window_6cams_ecco", || {
+        let sc = scenario::grouped_static(&[3, 3], 0.06, 10.0, 42);
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        cfg.gpus = 2.0;
+        cfg.pretrain_steps = 120;
+        let mut sys = System::new(cfg, sc.world, &[20.0; 6], 6.0, &mut engine).unwrap();
+        let t0 = std::time::Instant::now();
+        sys.run_window().unwrap();
+        let dt = t0.elapsed();
+        black_box(sys.mean_accuracy());
+        dt
+    });
+
+    b.finish();
+}

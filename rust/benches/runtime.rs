@@ -1,0 +1,70 @@
+//! PJRT runtime benchmarks: per-call latency of the AOT executables — the
+//! L3 hot path's dominant cost. Paper-table analogue: the per-step training
+//! cost that the GPU allocator budgets (§3.1).
+//!
+//! Run: `cargo bench --bench runtime`
+
+use ecco::runtime::{Engine, Labels, Task, TrainBatch};
+use ecco::util::bench::BenchSuite;
+
+fn main() {
+    let mut engine = Engine::open_default().expect("run `make artifacts` first");
+    let m = engine.manifest.clone();
+    let mut b = BenchSuite::new("runtime");
+
+    for &res in &m.resolutions.clone() {
+        let mut state = engine.init_model(Task::Det).unwrap();
+        let batch = TrainBatch {
+            res,
+            pixels: vec![0.3; m.train_batch * res * res * 3],
+            labels: Labels::Det {
+                obj: vec![0.0; m.train_batch * m.grid * m.grid],
+                cls: vec![0.0; m.train_batch * m.grid * m.grid * m.classes],
+            },
+        };
+        engine.train_step(&mut state, &batch, 0.01).unwrap(); // compile
+        b.bench(&format!("train_step_det_r{res}"), || {
+            engine.train_step(&mut state, &batch, 0.01).unwrap()
+        });
+
+        let px = vec![0.3; m.infer_batch * res * res * 3];
+        engine.infer_det(&state.theta, res, &px).unwrap();
+        b.bench(&format!("infer_det_r{res}"), || {
+            engine.infer_det(&state.theta, res, &px).unwrap()
+        });
+    }
+
+    // Seg at the default eval resolution.
+    let mut seg = engine.init_model(Task::Seg).unwrap();
+    let res = 32;
+    let s = res / 4;
+    let batch = TrainBatch {
+        res,
+        pixels: vec![0.3; m.train_batch * res * res * 3],
+        labels: Labels::Seg {
+            mask: {
+                let mut v = vec![0.0; m.train_batch * s * s * (m.classes + 1)];
+                for c in v.chunks_mut(m.classes + 1) {
+                    c[m.classes] = 1.0;
+                }
+                v
+            },
+        },
+    };
+    engine.train_step(&mut seg, &batch, 0.01).unwrap();
+    b.bench("train_step_seg_r32", || {
+        engine.train_step(&mut seg, &batch, 0.01).unwrap()
+    });
+
+    let px = vec![0.3; m.infer_batch * m.feature_res * m.feature_res * 3];
+    engine.features(&px).unwrap();
+    b.bench("features_b16", || engine.features(&px).unwrap());
+
+    b.finish();
+    println!(
+        "engine stats: {} train steps, {} infer calls, {:.2}s total in PJRT",
+        engine.stats.train_steps,
+        engine.stats.infer_calls,
+        engine.stats.exec_nanos as f64 / 1e9
+    );
+}

@@ -1,0 +1,63 @@
+//! Microbenchmarks for the simulation substrates: scene rendering, network
+//! simulation, encoding, metrics. These are the §Perf probes for everything
+//! that runs per-frame or per-tick in the window loop.
+//!
+//! Run: `cargo bench --bench substrates` (optionally with a filter).
+
+use ecco::metrics::det_map;
+use ecco::net::NetSim;
+use ecco::runtime::DetPred;
+use ecco::scene::{render, GroundTruth, SceneState};
+use ecco::util::bench::{black_box, BenchSuite};
+use ecco::util::rng::Pcg32;
+use ecco::video::{degrade, transport_window, SamplingConfig};
+
+fn main() {
+    let mut b = BenchSuite::new("substrates");
+    let state = SceneState::default_day();
+
+    for res in [16usize, 32, 48] {
+        let mut seed = 0u64;
+        b.bench(&format!("render_frame_r{res}"), || {
+            seed += 1;
+            render(&state, res, seed)
+        });
+    }
+
+    b.bench("degrade_frame_r32_q0.4", || {
+        let mut px = vec![0.5f32; 32 * 32 * 3];
+        degrade(&mut px, 32, 0.4, 7);
+        px
+    });
+
+    b.bench("transport_window", || {
+        transport_window(SamplingConfig { fps: 5.0, res: 48 }, 60.0, 3.0)
+    });
+
+    // Network: 22 flows over a shared bottleneck, one 60s window.
+    b.bench_timed("netsim_60s_22flows", || {
+        let mut sim = NetSim::star(&vec![20.0; 22], 50.0);
+        for i in 0..22 {
+            sim.add_camera_flow(i, 1.0, 0.5).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        sim.run(60.0);
+        black_box(sim.delivered_mbit(ecco::net::FlowId(0)));
+        t0.elapsed()
+    });
+
+    // Metrics: mAP over a 16-frame eval batch.
+    let frames: Vec<_> = (0..16).map(|i| render(&state, 32, 100 + i)).collect();
+    let truths: Vec<&GroundTruth> = frames.iter().map(|f| &f.truth).collect();
+    let mut rng = Pcg32::seeded(3);
+    let pred = DetPred {
+        batch: 16,
+        grid: 4,
+        classes: 4,
+        obj: (0..16 * 16).map(|_| rng.f32()).collect(),
+        cls: (0..16 * 16 * 4).map(|_| rng.f32()).collect(),
+    };
+    b.bench("det_map_16frames", || det_map(&pred, &truths, 16));
+
+    b.finish();
+}

@@ -1,0 +1,355 @@
+//! GPU allocation for group retraining — the paper's Algorithm 1 plus the
+//! baseline allocators it is compared against.
+//!
+//! The server time-shares G GPUs across retraining jobs in micro-windows:
+//! within each micro-window exactly one job trains on all GPUs. After every
+//! micro-window the scheduler re-scores jobs and greedily picks the next.
+//!
+//! * [`EccoAllocator`] — optimises Eq. 1: a size-weighted (`n_j^beta`)
+//!   average-accuracy term scaled by `alpha`, plus a max-min fairness term
+//!   implemented as an extra `AccGain` bonus for the currently
+//!   lowest-accuracy job (Alg. 1, CalObjectiveGain).
+//! * [`UtilityAllocator`] — the Ekya/RECL-style scheduler: maximises total
+//!   accuracy improvement, i.e. weights every job by its camera count.
+//!   This is the allocator the paper shows starves small groups (Fig. 10).
+//! * [`UniformAllocator`] — the naive baseline: round-robin micro-windows.
+
+/// Scheduler-visible state of one retraining job (group).
+#[derive(Debug, Clone)]
+pub struct JobView {
+    /// Stable job id.
+    pub id: usize,
+    /// Number of member cameras `n_j`.
+    pub n_cams: usize,
+    /// Latest evaluated accuracy `Acc[j]` (mAP in [0,1]).
+    pub acc: f32,
+    /// Accuracy gain over the job's last micro-window `AccGain[j]`.
+    pub acc_gain: f32,
+    /// Micro-windows this job has received so far in the current window.
+    pub micro_windows: usize,
+    /// Micro-windows over the job's lifetime (0 = never trained).
+    pub lifetime_mw: usize,
+}
+
+/// A micro-window GPU scheduler.
+pub trait Allocator {
+    /// Pick the job to train next. `jobs` is non-empty.
+    fn pick(&mut self, jobs: &[JobView]) -> usize;
+
+    /// Normalised GPU-share estimates `p_j` for the coming window, used by
+    /// the transmission controller (Alg. 1 line 15). Defaults to the
+    /// allocator's scoring weights normalised over jobs.
+    fn share_estimates(&self, jobs: &[JobView]) -> Vec<f64> {
+        let scores: Vec<f64> = jobs.iter().map(|j| self.score(j, jobs).max(1e-9)).collect();
+        let total: f64 = scores.iter().sum();
+        scores.iter().map(|s| s / total).collect()
+    }
+
+    /// The job score this allocator maximises (exposed for estimates/tests).
+    fn score(&self, job: &JobView, all: &[JobView]) -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Alg. 1 lines 13-14: every window starts with an initial training pass so
+/// each job's accuracy-gain estimate is fresh (stale gains would let greedy
+/// allocation starve a job forever on an outdated estimate). The server
+/// scales W with the number of jobs (see `System::effective_micro_windows`)
+/// so the pass never consumes the whole window.
+fn initial_pass_pick(jobs: &[JobView]) -> Option<usize> {
+    jobs.iter()
+        .filter(|j| j.micro_windows == 0)
+        .min_by_key(|j| j.id)
+        .map(|j| j.id)
+}
+
+fn argmax_score<A: Allocator + ?Sized>(alloc: &A, jobs: &[JobView]) -> usize {
+    let mut best = &jobs[0];
+    let mut best_score = f64::NEG_INFINITY;
+    for j in jobs {
+        let s = alloc.score(j, jobs);
+        if s > best_score || (s == best_score && j.id < best.id) {
+            best = j;
+            best_score = s;
+        }
+    }
+    best.id
+}
+
+// ---------------------------------------------------------------------------
+// ECCO (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+/// ECCO's objective-gain allocator (Eq. 1 / Alg. 1).
+#[derive(Debug, Clone)]
+pub struct EccoAllocator {
+    /// Eq. 1 `alpha`: weight of the average-accuracy term relative to the
+    /// fairness (min-accuracy) term.
+    pub alpha: f64,
+    /// Eq. 1 `beta` (<= 1): group-size exponent.
+    pub beta: f64,
+}
+
+impl Default for EccoAllocator {
+    fn default() -> Self {
+        // Paper defaults: balanced objective with sublinear size weighting.
+        EccoAllocator {
+            alpha: 1.0,
+            beta: 0.5,
+        }
+    }
+}
+
+impl EccoAllocator {
+    /// ObjGain[j] (Alg. 1 lines 9-12).
+    fn obj_gain(&self, job: &JobView, all: &[JobView]) -> f64 {
+        let size_weight_sum: f64 = all.iter().map(|j| (j.n_cams as f64).powf(self.beta)).sum();
+        let w = (job.n_cams as f64).powf(self.beta) / size_weight_sum;
+        let mut gain = self.alpha * w * job.acc_gain as f64;
+        // Fairness bonus for the lowest-accuracy job.
+        let min_id = all
+            .iter()
+            .min_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap().then(a.id.cmp(&b.id)))
+            .map(|j| j.id);
+        if Some(job.id) == min_id {
+            gain += job.acc_gain as f64;
+        }
+        gain
+    }
+}
+
+impl Allocator for EccoAllocator {
+    fn pick(&mut self, jobs: &[JobView]) -> usize {
+        if let Some(id) = initial_pass_pick(jobs) {
+            return id;
+        }
+        argmax_score(self, jobs)
+    }
+
+    fn score(&self, job: &JobView, all: &[JobView]) -> f64 {
+        self.obj_gain(job, all)
+    }
+
+    fn name(&self) -> &'static str {
+        "ecco"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Utility (Ekya / RECL style)
+// ---------------------------------------------------------------------------
+
+/// Total-accuracy-gain allocator: score = n_j * AccGain[j]. With one camera
+/// per job (independent retraining) this is exactly Ekya's/RECL's
+/// micro-window scheduling; with groups it exhibits the large-group bias
+/// analysed in §3.1.
+#[derive(Debug, Clone, Default)]
+pub struct UtilityAllocator;
+
+impl Allocator for UtilityAllocator {
+    fn pick(&mut self, jobs: &[JobView]) -> usize {
+        if let Some(id) = initial_pass_pick(jobs) {
+            return id;
+        }
+        argmax_score(self, jobs)
+    }
+
+    fn score(&self, job: &JobView, _all: &[JobView]) -> f64 {
+        job.n_cams as f64 * job.acc_gain as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "utility"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uniform (naive)
+// ---------------------------------------------------------------------------
+
+/// Round-robin: every job gets the same number of micro-windows.
+#[derive(Debug, Clone, Default)]
+pub struct UniformAllocator;
+
+impl Allocator for UniformAllocator {
+    fn pick(&mut self, jobs: &[JobView]) -> usize {
+        jobs.iter()
+            .min_by_key(|j| (j.micro_windows, j.id))
+            .unwrap()
+            .id
+    }
+
+    fn score(&self, _job: &JobView, _all: &[JobView]) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Which allocator a system run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocKind {
+    Ecco,
+    Utility,
+    Uniform,
+}
+
+impl AllocKind {
+    pub fn build(self) -> Box<dyn Allocator> {
+        match self {
+            AllocKind::Ecco => Box::new(EccoAllocator::default()),
+            AllocKind::Utility => Box::new(UtilityAllocator),
+            AllocKind::Uniform => Box::new(UniformAllocator),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn job(id: usize, n: usize, acc: f32, gain: f32, mw: usize) -> JobView {
+        JobView {
+            id,
+            n_cams: n,
+            acc,
+            acc_gain: gain,
+            micro_windows: mw,
+            lifetime_mw: mw,
+        }
+    }
+
+    #[test]
+    fn initial_pass_trains_everyone_once() {
+        let mut a = EccoAllocator::default();
+        let jobs = vec![job(0, 4, 0.3, 0.1, 1), job(1, 1, 0.2, 0.05, 0)];
+        assert_eq!(a.pick(&jobs), 1, "unprimed job must go first");
+    }
+
+    #[test]
+    fn utility_favours_large_groups() {
+        let mut a = UtilityAllocator;
+        // Same per-model gain; 4-camera group wins on total utility.
+        let jobs = vec![job(0, 4, 0.3, 0.10, 1), job(1, 1, 0.28, 0.15, 1)];
+        assert_eq!(a.pick(&jobs), 0);
+    }
+
+    #[test]
+    fn ecco_fairness_bonus_rescues_small_low_acc_group() {
+        let mut a = EccoAllocator::default();
+        // The paper's G1/G2 example: G1 has 4 cams +10%, G2 1 cam +15%,
+        // and G2 is behind on accuracy. ECCO must pick G2.
+        let jobs = vec![job(0, 4, 0.40, 0.10, 1), job(1, 1, 0.20, 0.15, 1)];
+        assert_eq!(a.pick(&jobs), 1);
+    }
+
+    #[test]
+    fn ecco_without_fairness_reduces_to_weighted_average() {
+        let a = EccoAllocator {
+            alpha: 1.0,
+            beta: 1.0,
+        };
+        // Job 1 has the lower accuracy -> gets the bonus; score must exceed
+        // its plain weighted term.
+        let jobs = vec![job(0, 4, 0.4, 0.1, 1), job(1, 1, 0.2, 0.1, 1)];
+        let s1 = a.score(&jobs[1], &jobs);
+        let plain = 1.0 * (1.0 / 5.0) * 0.1;
+        assert!(s1 > plain, "fairness bonus missing: {s1} vs {plain}");
+    }
+
+    #[test]
+    fn uniform_round_robins() {
+        let mut a = UniformAllocator;
+        let mut jobs = vec![job(0, 3, 0.5, 0.2, 0), job(1, 1, 0.1, 0.0, 0)];
+        let first = a.pick(&jobs);
+        jobs[first].micro_windows += 1;
+        let second = a.pick(&jobs);
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn share_estimates_normalised_and_positive() {
+        let a = EccoAllocator::default();
+        let jobs = vec![
+            job(0, 3, 0.5, 0.08, 1),
+            job(1, 1, 0.3, 0.12, 1),
+            job(2, 2, 0.4, 0.0, 1),
+        ];
+        let p = a.share_estimates(&jobs);
+        assert_eq!(p.len(), 3);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x > 0.0));
+        // The low-accuracy high-gain job should get the largest share.
+        assert!(p[1] > p[0] && p[1] > p[2], "{p:?}");
+    }
+
+    #[test]
+    fn prop_budget_conservation_and_no_total_starvation() {
+        // Simulate W micro-window picks over synthetic gain dynamics: total
+        // assignments == W, and with ECCO no job starves across a full
+        // window when it keeps showing positive gain.
+        prop::check("alloc-no-starvation", 40, |g| {
+            let n_jobs = g.usize(2, 5);
+            let w = g.usize(2 * n_jobs, 30);
+            let mut jobs: Vec<JobView> = (0..n_jobs)
+                .map(|id| job(id, g.usize(1, 5), g.f32(0.05, 0.5), 0.0, 0))
+                .collect();
+            let mut alloc = EccoAllocator::default();
+            let mut assigned = vec![0usize; n_jobs];
+            for _ in 0..w {
+                let pick = alloc.pick(&jobs);
+                if pick >= n_jobs {
+                    return Err(format!("picked unknown job {pick}"));
+                }
+                assigned[pick] += 1;
+                jobs[pick].micro_windows += 1;
+                jobs[pick].lifetime_mw += 1;
+                // Diminishing but positive gains; accuracy saturates at 0.9.
+                let j = &mut jobs[pick];
+                j.acc_gain = (0.9 - j.acc) * 0.2;
+                j.acc += j.acc_gain;
+            }
+            if assigned.iter().sum::<usize>() != w {
+                return Err("budget not conserved".to_string());
+            }
+            if assigned.iter().any(|&a| a == 0) {
+                return Err(format!("a job starved entirely: {assigned:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_utility_biases_to_large_groups_vs_ecco() {
+        // Statistical version of Fig. 10: with a big and a small group of
+        // equal per-model learning dynamics, utility gives the big group
+        // strictly more micro-windows than ECCO does.
+        let run = |mut alloc: Box<dyn Allocator>| -> (usize, usize) {
+            let mut jobs = vec![job(0, 4, 0.1, 0.0, 0), job(1, 1, 0.1, 0.0, 0)];
+            let mut counts = (0usize, 0usize);
+            for _ in 0..24 {
+                let pick = alloc.pick(&jobs);
+                if pick == 0 {
+                    counts.0 += 1;
+                } else {
+                    counts.1 += 1;
+                }
+                jobs[pick].micro_windows += 1;
+                jobs[pick].lifetime_mw += 1;
+                let j = &mut jobs[pick];
+                j.acc_gain = (0.8 - j.acc) * 0.25;
+                j.acc += j.acc_gain;
+            }
+            counts
+        };
+        let (ecco_big, ecco_small) = run(Box::new(EccoAllocator::default()));
+        let (util_big, util_small) = run(Box::new(UtilityAllocator));
+        assert!(util_big > ecco_big, "utility {util_big} !> ecco {ecco_big}");
+        assert!(ecco_small > util_small);
+        // ECCO keeps the small group within a reasonable band of parity.
+        assert!(ecco_small >= 24 / 4, "ecco small-group share too low: {ecco_small}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Design-choice ablations beyond the paper's figures (DESIGN.md §4):
+//!
+//! * `abl_alpha_beta` — Eq. 1 sensitivity: sweep the allocator's alpha
+//!   (average-vs-fairness balance) and beta (group-size exponent).
+//! * `abl_filter` — Alg. 2 metadata pre-filter: accuracy AND grouping-eval
+//!   cost with the filter disabled.
+//! * `abl_teacher` — teacher label-noise sensitivity (oracle / strong /
+//!   noisy), i.e. how much of the pipeline's headroom depends on the
+//!   annotator.
+
+use anyhow::Result;
+
+use crate::alloc::{AllocKind, EccoAllocator};
+use crate::runtime::{Engine, Task};
+use crate::scene::scenario;
+use crate::server::{Policy, System, SystemConfig};
+use crate::teacher::TeacherConfig;
+use crate::util::json::{arr, num, obj, s};
+
+use super::common::{print_table, ExpContext};
+
+/// Eq. 1 parameter sweep on the Fig. 10 workload (3+1 groups).
+pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(6);
+    let combos: Vec<(f64, f64)> = if ctx.fast {
+        vec![(1.0, 0.5), (0.25, 0.5), (4.0, 0.5)]
+    } else {
+        vec![
+            (1.0, 0.5),
+            (0.25, 0.5),
+            (4.0, 0.5),
+            (1.0, 0.0),
+            (1.0, 1.0),
+        ]
+    };
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for (alpha, beta) in combos {
+        let sc = scenario::three_plus_one(ctx.seed);
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        cfg.gpus = 1.0;
+        cfg.seed = ctx.seed;
+        cfg.auto_request = false;
+        cfg.auto_regroup = false;
+        cfg.micro_windows = 8;
+        let mut sys = System::new(cfg, sc.world, &[20.0; 4], 12.0, engine)?;
+        sys.force_group(&[0, 1, 2])?;
+        sys.force_group(&[3])?;
+        sys.set_allocator(Box::new(EccoAllocator { alpha, beta }));
+        sys.run_windows(windows)?;
+        let g1: f32 = (0..3).map(|c| sys.cams[c].last_acc).sum::<f32>() / 3.0;
+        let g2 = sys.cams[3].last_acc;
+        rows.push(vec![
+            format!("a={alpha} b={beta}"),
+            format!("{g1:.3}"),
+            format!("{g2:.3}"),
+            format!("{:.3}", (g1 - g2).abs()),
+            format!("{:.3}", (3.0 * g1 + g2) / 4.0),
+        ]);
+        json_rows.push(obj(vec![
+            ("alpha", num(alpha)),
+            ("beta", num(beta)),
+            ("g1", num(g1 as f64)),
+            ("g2", num(g2 as f64)),
+        ]));
+    }
+    print_table(
+        "Ablation: Eq.1 alpha/beta sweep (3-cam vs 1-cam groups)",
+        &["params", "G1 mAP", "G2 mAP", "gap", "per-cam mean"],
+        &rows,
+    );
+    println!("expectation: larger alpha -> average-optimising (bigger gap); beta->1 weights big groups harder");
+    ctx.save(
+        "abl_alpha_beta",
+        &obj(vec![("experiment", s("abl_alpha_beta")), ("rows", arr(json_rows))]),
+    )?;
+    Ok(())
+}
+
+/// Alg. 2 metadata-filter ablation: accuracy and grouping-eval cost.
+pub fn filter(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(6);
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for enabled in [true, false] {
+        let sc = scenario::town(8, ctx.seed);
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        cfg.gpus = 2.0;
+        cfg.seed = ctx.seed;
+        cfg.grouping.metadata_filter = enabled;
+        let infer_before = engine.stats.infer_calls;
+        let mut sys = System::new(cfg, sc.world, &[20.0; 8], 10.0, engine)?;
+        sys.run_windows(windows)?;
+        let acc = sys.history.steady_mean(0.4);
+        let jobs = sys.jobs.len();
+        let evals = sys.engine.stats.infer_calls - infer_before;
+        rows.push(vec![
+            if enabled { "with filter" } else { "no filter" }.into(),
+            format!("{acc:.3}"),
+            format!("{jobs}"),
+            format!("{evals}"),
+        ]);
+        json_rows.push(obj(vec![
+            ("filter", num(enabled as u8 as f64)),
+            ("steady", num(acc as f64)),
+            ("jobs", num(jobs as f64)),
+            ("infer_calls", num(evals as f64)),
+        ]));
+    }
+    print_table(
+        "Ablation: Alg.2 metadata pre-filter (8 cameras, 4 regions)",
+        &["mode", "steady mAP", "jobs", "infer calls"],
+        &rows,
+    );
+    println!("expectation: similar accuracy, strictly more grouping evals without the filter");
+    ctx.save(
+        "abl_filter",
+        &obj(vec![("experiment", s("abl_filter")), ("rows", arr(json_rows))]),
+    )?;
+    Ok(())
+}
+
+/// Teacher-quality sensitivity.
+pub fn teacher(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(6);
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for (name, tc) in [
+        ("oracle", TeacherConfig::oracle()),
+        ("strong", TeacherConfig::strong()),
+        ("noisy", TeacherConfig::noisy()),
+    ] {
+        let sc = scenario::grouped_static(&[3], 0.06, 20.0, ctx.seed);
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        cfg.gpus = 2.0;
+        cfg.seed = ctx.seed;
+        cfg.teacher = tc;
+        let mut sys = System::new(cfg, sc.world, &[20.0; 3], 10.0, engine)?;
+        sys.run_windows(windows)?;
+        let acc = sys.history.steady_mean(0.4);
+        rows.push(vec![name.to_string(), format!("{acc:.3}")]);
+        json_rows.push(obj(vec![("teacher", s(name)), ("steady", num(acc as f64))]));
+    }
+    print_table(
+        "Ablation: teacher label quality",
+        &["teacher", "steady mAP"],
+        &rows,
+    );
+    println!("expectation: monotone in teacher quality; strong ~ oracle (paper's implicit assumption)");
+    ctx.save(
+        "abl_teacher",
+        &obj(vec![("experiment", s("abl_teacher")), ("rows", arr(json_rows))]),
+    )?;
+    Ok(())
+}
+
+/// Run all ablations.
+pub fn all(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    alpha_beta(engine, ctx)?;
+    filter(engine, ctx)?;
+    teacher(engine, ctx)
+}

@@ -1,0 +1,148 @@
+//! Fig. 6 (end-to-end accuracy vs GPUs and vs bandwidth, det + seg) and
+//! Fig. 7 (scalability with camera count).
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Task};
+use crate::scene::scenario;
+use crate::util::json::{arr, num, obj, s};
+
+use super::common::{f3, headline_policies, print_table, run_policy, ExpContext};
+
+/// Fig. 6 for one task: two sweeps (GPUs at fixed bandwidth; bandwidth at
+/// fixed GPUs) across the four systems.
+pub fn fig6(engine: &mut Engine, ctx: &ExpContext, task: Task) -> Result<()> {
+    let windows = ctx.windows(8);
+    let gpu_sweep: Vec<f64> = if ctx.fast {
+        vec![1.0, 4.0]
+    } else {
+        vec![1.0, 2.0, 4.0, 8.0]
+    };
+    let bw_sweep: Vec<f64> = if ctx.fast {
+        vec![3.0, 12.0]
+    } else {
+        vec![1.5, 3.0, 6.0, 12.0]
+    };
+    let fixed_bw = 6.0;
+    let fixed_gpus = 4.0;
+    let mut json_rows = Vec::new();
+
+    for (sweep_name, conditions) in [("gpus", &gpu_sweep), ("bandwidth", &bw_sweep)] {
+        let mut rows = Vec::new();
+        for policy in headline_policies() {
+            let mut row = vec![policy.name.to_string()];
+            for &x in conditions.iter() {
+                let (gpus, bw) = if sweep_name == "gpus" {
+                    (x, fixed_bw)
+                } else {
+                    (fixed_gpus, x)
+                };
+                let sc = scenario::grouped_static(&[3, 3], 0.06, 30.0, ctx.seed);
+                let out = run_policy(
+                    engine,
+                    sc.world,
+                    task,
+                    policy.clone(),
+                    gpus,
+                    bw,
+                    &[20.0; 6],
+                    windows,
+                    ctx.seed,
+                    None,
+                )?;
+                row.push(f3(out.steady));
+                json_rows.push(obj(vec![
+                    ("sweep", s(sweep_name)),
+                    ("x", num(x)),
+                    ("policy", s(policy.name)),
+                    ("steady", num(out.steady as f64)),
+                    ("final", num(out.final_acc as f64)),
+                    ("response_s", num(out.response)),
+                ]));
+            }
+            rows.push(row);
+        }
+        let mut hdr = vec!["policy".to_string()];
+        hdr.extend(conditions.iter().map(|&x| {
+            if sweep_name == "gpus" {
+                format!("{x} GPU")
+            } else {
+                format!("{x} Mbps")
+            }
+        }));
+        let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
+        print_table(
+            &format!(
+                "Fig 6 [{}]: steady mAP vs {} ({} cams, {} windows)",
+                task.name(),
+                sweep_name,
+                6,
+                windows
+            ),
+            &hdr_refs,
+            &rows,
+        );
+    }
+    ctx.save(
+        &format!("fig6{}", task.name()),
+        &obj(vec![
+            ("experiment", s(&format!("fig6{}", task.name()))),
+            ("rows", arr(json_rows)),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// Fig. 7: scalability — accuracy and response time vs number of cameras.
+pub fn fig7(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(8);
+    let cams_sweep: Vec<usize> = if ctx.fast {
+        vec![4, 10]
+    } else {
+        vec![4, 10, 16, 22]
+    };
+    let mut acc_rows = Vec::new();
+    let mut resp_rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for policy in headline_policies() {
+        let mut acc_row = vec![policy.name.to_string()];
+        let mut resp_row = vec![policy.name.to_string()];
+        for &n in &cams_sweep {
+            let sc = scenario::town(n, ctx.seed);
+            let out = run_policy(
+                engine,
+                sc.world,
+                Task::Det,
+                policy.clone(),
+                4.0,
+                50.0,
+                &vec![20.0; n],
+                windows,
+                ctx.seed,
+                None,
+            )?;
+            acc_row.push(f3(out.steady));
+            resp_row.push(format!("{:.0}", out.response));
+            json_rows.push(obj(vec![
+                ("cams", num(n as f64)),
+                ("policy", s(policy.name)),
+                ("steady", num(out.steady as f64)),
+                ("response_s", num(out.response)),
+                ("satisfied", num(out.satisfied as f64)),
+                ("requests", num(out.requests as f64)),
+            ]));
+        }
+        acc_rows.push(acc_row);
+        resp_rows.push(resp_row);
+    }
+    let mut hdr = vec!["policy".to_string()];
+    hdr.extend(cams_sweep.iter().map(|n| format!("{n} cams")));
+    let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
+    print_table("Fig 7a: steady mAP vs #cameras (4 GPUs, 50 Mbps)", &hdr_refs, &acc_rows);
+    print_table("Fig 7b: mean response time (s) vs #cameras", &hdr_refs, &resp_rows);
+    ctx.save(
+        "fig7",
+        &obj(vec![("experiment", s("fig7")), ("rows", arr(json_rows))]),
+    )?;
+    Ok(())
+}

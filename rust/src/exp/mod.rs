@@ -1,0 +1,74 @@
+//! Experiment runners: one per table/figure in the paper's evaluation.
+//!
+//! | id      | paper result                                   |
+//! |---------|------------------------------------------------|
+//! | fig2c   | motivation: independent vs group retraining    |
+//! | fig5    | sampling-config profiling heatmaps             |
+//! | tab1    | equal vs GPU-proportional bandwidth            |
+//! | fig6det | end-to-end sweeps, object detection            |
+//! | fig6seg | end-to-end sweeps, instance segmentation       |
+//! | fig7    | scalability with camera count                  |
+//! | fig8    | camera-similarity ablation                     |
+//! | fig9    | dynamic grouping timeline                      |
+//! | fig10   | GPU allocator vs RECL's allocator              |
+//! | fig11   | transmission-controller ablation + BW traces   |
+//! | fig12   | natural model reuse (staggered joins)          |
+//! | fig13   | response time under low uplink bandwidth       |
+//!
+//! Each runner prints the paper-shaped table/series and writes JSON into
+//! the results directory. `ecco exp all` runs everything.
+
+pub mod ablations;
+pub mod common;
+pub mod endtoend;
+pub mod modules;
+pub mod motivation;
+pub mod profiling;
+pub mod responsiveness;
+pub mod similarity;
+
+pub use common::ExpContext;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Engine, Task};
+
+/// All experiment ids in run order.
+pub const ALL_EXPERIMENTS: [&str; 12] = [
+    "fig2c", "fig5", "tab1", "fig6det", "fig6seg", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "fig13",
+];
+
+/// Dispatch one experiment id (or `all`).
+pub fn run_experiment(engine: &mut Engine, id: &str, ctx: &ExpContext) -> Result<()> {
+    match id {
+        "all" => {
+            for id in ALL_EXPERIMENTS {
+                let t0 = std::time::Instant::now();
+                println!("\n########## {id} ##########");
+                run_experiment(engine, id, ctx)?;
+                println!("[{id} done in {:.0}s]", t0.elapsed().as_secs_f64());
+            }
+            Ok(())
+        }
+        "fig2c" => motivation::run(engine, ctx),
+        "fig5" => profiling::fig5(engine, ctx),
+        "tab1" => profiling::tab1(engine, ctx),
+        "fig6det" => endtoend::fig6(engine, ctx, Task::Det),
+        "fig6seg" => endtoend::fig6(engine, ctx, Task::Seg),
+        "fig7" => endtoend::fig7(engine, ctx),
+        "fig8" => similarity::fig8(engine, ctx),
+        "fig9" => similarity::fig9(engine, ctx),
+        "fig10" => modules::fig10(engine, ctx),
+        "fig11" => modules::fig11(engine, ctx),
+        "ablations" => ablations::all(engine, ctx),
+        "abl_alpha_beta" => ablations::alpha_beta(engine, ctx),
+        "abl_filter" => ablations::filter(engine, ctx),
+        "abl_teacher" => ablations::teacher(engine, ctx),
+        "fig12" => responsiveness::fig12(engine, ctx),
+        "fig13" => responsiveness::fig13(engine, ctx),
+        _ => bail!(
+            "unknown experiment {id:?}; known: {ALL_EXPERIMENTS:?}, ablations, or `all`"
+        ),
+    }
+}

@@ -1,0 +1,298 @@
+//! Fig. 5 (sampling-configuration profiling) and Table 1 (equal vs
+//! GPU-proportional bandwidth allocation).
+//!
+//! Both experiments run a direct retraining loop (no full System): they
+//! characterise the *transmission* design space, so the GPU allocator and
+//! grouping are held fixed by construction, exactly as in §3.2's case
+//! studies.
+
+use anyhow::Result;
+
+use crate::net::NetSim;
+use crate::runtime::{batch, Engine, ModelState, Task};
+use crate::scene::{drift::DriftEvent, scenario::AMBIENT_VOL, DriftProcess, Frame, SceneState};
+use crate::scene::{Camera, Mount, World, Zone, ZoneMap};
+use crate::server::{eval_model, pretrain};
+use crate::teacher::{Teacher, TeacherConfig};
+use crate::transmission::BUDGET_LEVELS;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Pcg32;
+use crate::video::{degrade, transport_window, SamplingConfig, FPS_CHOICES, RES_CHOICES};
+
+use super::common::{print_table, ExpContext};
+
+/// One camera world with the requested mount; drift at t=1.
+fn one_cam_world(mount: Mount, seed: u64) -> World {
+    let region = DriftProcess::new(SceneState::default_day(), AMBIENT_VOL, seed);
+    let cam = Camera {
+        id: 0,
+        region: 0,
+        pos: (0.3, 0.3),
+        mount,
+        offset_seed: seed ^ 0xca3,
+        offset_scale: 0.0,
+    };
+    let map = ZoneMap {
+        cells: vec![vec![Zone::Suburban, Zone::Urban]],
+    };
+    let mut world = World::new(vec![region], map, vec![cam]);
+    world.schedule(vec![
+        (1.0, 0, DriftEvent::Appearance(0.5)),
+        (1.0, 0, DriftEvent::Palette([0.64, 0.47, 0.33])),
+    ]);
+    world
+}
+
+/// Retrain one camera under a fixed pixel budget and bitrate with a forced
+/// sampling config; returns final mAP.
+#[allow(clippy::too_many_arguments)]
+fn retrain_with_config(
+    engine: &mut Engine,
+    mount: Mount,
+    config: SamplingConfig,
+    budget_pps: f64,
+    bitrate_mbps: f64,
+    windows: usize,
+    seed: u64,
+) -> Result<f32> {
+    let m = engine.manifest.clone();
+    let pre = pretrain::pretrained_default(engine, Task::Det, 300, 0.03, seed ^ 0xbeef)?;
+    let mut model = ModelState::from_theta(Task::Det, pre.theta);
+    let mut world = one_cam_world(mount, seed);
+    let mut teacher = Teacher::new(TeacherConfig::strong(), seed ^ 0x7ea);
+    let mut rng = Pcg32::new(seed, 0x515);
+    let window_secs = 60.0;
+    let mut buffer: Vec<(Frame, crate::scene::GroundTruth)> = Vec::new();
+
+    for w in 0..windows {
+        // Transport: fixed bitrate, adaptive compression.
+        let delivered_mbit = bitrate_mbps * window_secs;
+        let outcome = transport_window(config, window_secs, delivered_mbit);
+        // Spread captures across the window so fast scenes differ per frame.
+        let n = outcome.frames_delivered.min(400);
+        for i in 0..n {
+            world.advance(window_secs / n.max(1) as f64);
+            let mut frame = world.capture(0, config.res);
+            degrade(&mut frame.pixels, config.res, outcome.quality, seed + i as u64);
+            let labels = teacher.annotate(&frame.truth);
+            buffer.push((frame, labels));
+        }
+        if n == 0 {
+            world.advance(window_secs);
+        }
+        if buffer.len() > 512 {
+            let excess = buffer.len() - 512;
+            buffer.drain(..excess);
+        }
+        // GPU: budget_pps pixels/sec over the window.
+        let steps =
+            (budget_pps * window_secs / (config.res * config.res * m.train_batch) as f64) as usize;
+        if !buffer.is_empty() {
+            for _ in 0..steps {
+                let picks: Vec<usize> =
+                    (0..m.train_batch).map(|_| rng.index(buffer.len())).collect();
+                let frames: Vec<&Frame> = picks.iter().map(|&i| &buffer[i].0).collect();
+                let truths: Vec<_> = picks.iter().map(|&i| &buffer[i].1).collect();
+                let tb = batch::train_batch(
+                    Task::Det,
+                    &frames,
+                    &truths,
+                    m.train_batch,
+                    config.res,
+                    m.classes,
+                    m.grid,
+                );
+                engine.train_step(&mut model, &tb, 0.03)?;
+            }
+        }
+        let _ = w;
+    }
+    let eval = world.eval_frames(0, 32, 16, 0xe7a1);
+    eval_model(engine, Task::Det, &model.theta, &eval)
+}
+
+/// Fig. 5: accuracy heatmap over (fps, res) for a static and mobile camera
+/// under a fixed GPU budget and 1 Mbps. Also writes the measured profile
+/// tables that `transmission::ProfileTable::from_measurements` consumes.
+pub fn fig5(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(4);
+    let budget = 10_000.0; // pixels/sec (BUDGET_LEVELS[2])
+    let mounts: Vec<(&str, Mount)> = vec![
+        ("static", Mount::StaticHigh),
+        (
+            "mobile",
+            Mount::Mobile {
+                waypoints: vec![(0.05, 0.4), (0.95, 0.4)],
+                speed: 0.002,
+            },
+        ),
+    ];
+    let mut all_rows = Vec::new();
+    for (mname, mount) in &mounts {
+        let mut rows = Vec::new();
+        let mut best: Option<(SamplingConfig, f32)> = None;
+        for &res in &RES_CHOICES {
+            let mut row = vec![format!("res {res}")];
+            for &fps in &FPS_CHOICES {
+                let c = SamplingConfig { fps, res };
+                let acc = if c.pixels_per_sec() > budget * 1.5 {
+                    f32::NAN // config can't even fit the budget
+                } else {
+                    // Two seeds per cell to tame eval noise.
+                    let a0 = retrain_with_config(
+                        engine, mount.clone(), c, budget, 1.0, windows, ctx.seed,
+                    )?;
+                    let a1 = retrain_with_config(
+                        engine, mount.clone(), c, budget, 1.0, windows, ctx.seed ^ 0xabcd,
+                    )?;
+                    (a0 + a1) / 2.0
+                };
+                if !acc.is_nan() && best.map(|(_, b)| acc > b).unwrap_or(true) {
+                    best = Some((c, acc));
+                }
+                row.push(if acc.is_nan() {
+                    "-".into()
+                } else {
+                    format!("{acc:.3}")
+                });
+            }
+            rows.push(row);
+        }
+        let mut hdr = vec!["".to_string()];
+        hdr.extend(FPS_CHOICES.iter().map(|f| format!("{f} fps")));
+        let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
+        print_table(
+            &format!("Fig 5 ({mname} camera): mAP per sampling config, {budget} px/s, 1 Mbps"),
+            &hdr_refs,
+            &rows,
+        );
+        let (bc, ba) = best.unwrap();
+        println!("best for {mname}: {bc:?} at {ba:.3}");
+        all_rows.push((mname.to_string(), rows, bc, ba));
+    }
+    println!(
+        "shape: paper finds static favours resolution, mobile favours frame rate — got static=res{}, mobile fps {}",
+        all_rows[0].2.res, all_rows[1].2.fps
+    );
+    ctx.save(
+        "fig5",
+        &obj(vec![
+            ("experiment", s("fig5")),
+            ("budget_pps", num(budget)),
+            (
+                "best",
+                arr(all_rows
+                    .iter()
+                    .map(|(n, _, c, a)| {
+                        obj(vec![
+                            ("camera", s(n)),
+                            ("fps", num(c.fps as f64)),
+                            ("res", num(c.res as f64)),
+                            ("acc", num(*a as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// Table 1: equal vs GPU-proportional bandwidth with a 30/70 GPU split.
+pub fn tab1(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(4);
+    let total_bw = 0.8; // Mbps shared uplink (constrained, as in the paper)
+    let gpu_pps = 10_000.0;
+    let shares = [0.3, 0.7];
+    // Camera A static (starts better), camera B mobile (hit harder and
+    // given the larger GPU share to catch up, as in the paper's setup).
+    let mounts = [
+        Mount::StaticHigh,
+        Mount::Mobile {
+            waypoints: vec![(0.05, 0.4), (0.95, 0.4)],
+            speed: 0.002,
+        },
+    ];
+    let schemes: [(&str, [f64; 2]); 2] = [
+        ("equal", [1.0, 1.0]),
+        ("proportional", [shares[0], shares[1]]),
+    ];
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for (scheme, alphas) in &schemes {
+        // Net: both cameras share the uplink; GAIMD alphas per scheme.
+        let mut net = NetSim::star(&[50.0, 50.0], total_bw);
+        let fa = net.add_camera_flow(0, alphas[0], 0.5)?;
+        let fb = net.add_camera_flow(1, alphas[1], 0.5)?;
+        net.run(30.0); // converge
+        net.reset_delivered();
+        net.run(60.0 * windows as f64);
+        let delivered = [
+            net.delivered_mbit(fa) / windows as f64,
+            net.delivered_mbit(fb) / windows as f64,
+        ];
+        // Retrain each camera with its GPU share and measured bandwidth
+        // (two seeds per cell: the effect must clear the eval noise floor).
+        let mut accs = Vec::new();
+        for i in 0..2 {
+            let budget = shares[i] * gpu_pps;
+            // Optimal config for the budget from the camera-type heuristic.
+            let table = crate::transmission::ProfileTable::heuristic(&mounts[i]);
+            let config = table.lookup(budget);
+            let mut acc = 0.0;
+            for r in 0..2u64 {
+                acc += retrain_with_config(
+                    engine,
+                    mounts[i].clone(),
+                    config,
+                    budget,
+                    delivered[i] / 60.0,
+                    windows,
+                    ctx.seed + i as u64 + r * 0x9111,
+                )? / 2.0;
+            }
+            accs.push(acc);
+        }
+        let overall = (accs[0] + accs[1]) / 2.0;
+        rows.push(vec![
+            scheme.to_string(),
+            format!("{:.1}/{:.1} Mbps", delivered[0] / 60.0, delivered[1] / 60.0),
+            format!("{:.3}", accs[0]),
+            format!("{:.3}", accs[1]),
+            format!("{overall:.3}"),
+        ]);
+        results.push((scheme.to_string(), accs[0], accs[1], overall));
+    }
+    print_table(
+        "Table 1: retraining accuracy, equal vs GPU-proportional bandwidth",
+        &["scheme", "bw split", "cam A mAP", "cam B mAP", "overall"],
+        &rows,
+    );
+    println!(
+        "shape: paper has proportional > equal overall and B(high-GPU) gains most — got overall {} and B {}",
+        if results[1].3 >= results[0].3 { "higher ✓" } else { "LOWER ✗" },
+        if results[1].2 >= results[0].2 { "higher ✓" } else { "LOWER ✗" },
+    );
+    ctx.save(
+        "tab1",
+        &obj(vec![
+            ("experiment", s("tab1")),
+            (
+                "schemes",
+                arr(results
+                    .iter()
+                    .map(|(n, a, b, o)| {
+                        obj(vec![
+                            ("scheme", s(n)),
+                            ("camA", num(*a as f64)),
+                            ("camB", num(*b as f64)),
+                            ("overall", num(*o as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]),
+    )?;
+    let _ = BUDGET_LEVELS;
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Fig. 8 (impact of camera similarity on group retraining) and Fig. 9
+//! (dynamic grouping timeline with a diverging mobile camera).
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Task};
+use crate::scene::scenario;
+use crate::server::{Policy, System, SystemConfig, TransmissionKind};
+use crate::util::json::{arr, f32s, num, obj, s};
+
+use super::common::{print_table, ExpContext};
+
+/// Fig. 8: manually-formed groups at three similarity levels; group
+/// retraining vs independent retraining with equal resources.
+pub fn fig8(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    let windows = ctx.windows(6);
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for level in 0..3usize {
+        let mut accs = Vec::new();
+        for grouped in [true, false] {
+            let (sc, names) = scenario::similarity_triads(20.0, ctx.seed);
+            let triad = sc.groups[level].clone();
+            let n_world = sc.world.cameras.len();
+            let mut policy = if grouped {
+                let mut p = Policy::ecco();
+                // Grouping module disabled (manual groups), per the paper.
+                p.transmission = TransmissionKind::Fixed { fps: 4.0, res: 32 };
+                p
+            } else {
+                let mut p = Policy::ekya();
+                p.transmission = TransmissionKind::Fixed { fps: 4.0, res: 32 };
+                p
+            };
+            policy.name = if grouped { "group" } else { "independent" };
+            let mut cfg = SystemConfig::new(Task::Det, policy);
+            cfg.gpus = 3.0;
+            cfg.seed = ctx.seed;
+            cfg.auto_request = false;
+            cfg.auto_regroup = false;
+            // Ample bandwidth: similarity (not data volume) is the variable
+            // under study; the paper's 3 Mbps maps to a non-binding uplink
+            // at our proxy scale for these sampling configs.
+            let mut sys = System::new(cfg, sc.world, &vec![20.0; n_world], 12.0, engine)?;
+            if grouped {
+                sys.force_group(&triad)?;
+            } else {
+                for &cam in &triad {
+                    sys.force_group(&[cam])?;
+                }
+            }
+            sys.run_windows(windows)?;
+            // Accuracy over the triad only (other cameras are idle).
+            let acc: f32 = triad
+                .iter()
+                .map(|&c| sys.cams[c].last_acc)
+                .sum::<f32>()
+                / triad.len() as f32;
+            accs.push(acc);
+            json_rows.push(obj(vec![
+                ("similarity", s(names[level])),
+                ("mode", s(if grouped { "group" } else { "independent" })),
+                ("mAP", num(acc as f64)),
+            ]));
+        }
+        let gain = accs[0] - accs[1];
+        rows.push(vec![
+            ["high", "medium", "low"][level].to_string(),
+            format!("{:.3}", accs[0]),
+            format!("{:.3}", accs[1]),
+            format!("{gain:+.3}"),
+        ]);
+    }
+    print_table(
+        "Fig 8: group vs independent retraining by camera similarity (3 GPUs)",
+        &["similarity", "group mAP", "indep mAP", "group gain"],
+        &rows,
+    );
+    println!("shape: paper has the gain shrinking from high to low similarity");
+    ctx.save(
+        "fig8",
+        &obj(vec![("experiment", s("fig8")), ("rows", arr(json_rows))]),
+    )?;
+    Ok(())
+}
+
+/// Fig. 9: dynamic grouping on a route split — camera 2 drives into a
+/// tunnel at t=300s and must be evicted and re-grouped.
+pub fn fig9(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+    // The route geometry needs ~10 windows regardless of fast mode: the
+    // split camera reaches the tunnel around t=320s (window 6).
+    let windows = ctx.windows(10).max(10);
+    let sc = scenario::route_split(2, 240.0, ctx.seed);
+    let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+    cfg.seed = ctx.seed;
+    // 1 GPU: the shared model cannot master two diverged distributions at
+    // once, so the tunnel camera's accuracy genuinely collapses (paper
+    // regime). A slightly tighter eviction threshold matches the paper's
+    // prompt regrouping.
+    cfg.gpus = 1.0;
+    cfg.grouping.drop_threshold = 0.12;
+    let mut sys = System::new(cfg, sc.world, &[10.0; 3], 10.0, engine)?;
+
+    println!("\n== Fig 9: dynamic grouping timeline (camera 2 turns off at t=240s) ==");
+    println!("window |  t(s) | cam0  cam1  cam2 | groups (job: members)");
+    let mut acc_series: Vec<Vec<f32>> = vec![Vec::new(); 3];
+    let mut membership_series = Vec::new();
+    for w in 0..windows {
+        sys.run_window()?;
+        let accs: Vec<f32> = sys.cams.iter().map(|c| c.last_acc).collect();
+        for (i, &a) in accs.iter().enumerate() {
+            acc_series[i].push(a);
+        }
+        let groups: Vec<String> = sys
+            .jobs
+            .iter()
+            .map(|j| format!("{}:{:?}", j.id, j.members))
+            .collect();
+        membership_series.push(
+            sys.jobs
+                .iter()
+                .map(|j| (j.id, j.members.clone()))
+                .collect::<Vec<_>>(),
+        );
+        println!(
+            "{:>6} | {:>5.0} | {:.3} {:.3} {:.3} | {}",
+            w,
+            sys.now(),
+            accs[0],
+            accs[1],
+            accs[2],
+            groups.join("  ")
+        );
+    }
+    // Shape check: at some window cam2 must be in a different job from cam0.
+    let split_observed = membership_series.iter().any(|groups| {
+        let job_of = |cam: usize| groups.iter().find(|(_, m)| m.contains(&cam)).map(|(id, _)| *id);
+        job_of(0).is_some() && job_of(2).is_some() && job_of(0) != job_of(2)
+    });
+    let merged_initially = membership_series.first().map(|g| g.len() == 1).unwrap_or(false);
+    println!(
+        "shape: initially one group: {merged_initially}; cam2 split into its own job later: {split_observed}"
+    );
+    ctx.save(
+        "fig9",
+        &obj(vec![
+            ("experiment", s("fig9")),
+            (
+                "cam_acc",
+                arr(acc_series.iter().map(|c| f32s(c)).collect()),
+            ),
+            (
+                "membership",
+                arr(membership_series
+                    .iter()
+                    .map(|groups| {
+                        arr(groups
+                            .iter()
+                            .map(|(id, m)| {
+                                obj(vec![
+                                    ("job", num(*id as f64)),
+                                    (
+                                        "members",
+                                        arr(m.iter().map(|&c| num(c as f64)).collect()),
+                                    ),
+                                ])
+                            })
+                            .collect())
+                    })
+                    .collect()),
+            ),
+            ("split_observed", num(split_observed as u8 as f64)),
+        ]),
+    )?;
+    Ok(())
+}

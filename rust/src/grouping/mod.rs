@@ -1,0 +1,419 @@
+//! Dynamic camera grouping — the paper's Algorithm 2.
+//!
+//! Grouping has two stages, both implemented here as *pure* bookkeeping
+//! with the accuracy evaluation injected as a closure (the server wires it
+//! to real PJRT inference on the request's sample frames):
+//!
+//! * [`group_request`] — initial grouping: metadata pre-filter (request
+//!   time within `time_eps` AND location within `loc_delta` of *every*
+//!   member of a candidate job), then a performance check: the new camera
+//!   joins the correlated job whose model scores best on its sampled
+//!   frames, provided that beats the camera's own current accuracy.
+//! * [`update_grouping`] — periodic re-evaluation at window end: a member
+//!   whose accuracy under the group model dropped by more than fraction
+//!   `drop_threshold` relative to the previous window is evicted and
+//!   re-enters the pipeline as a fresh request.
+
+use std::collections::BTreeMap;
+
+/// Metadata of a retraining request (Alg. 2's r.t / r.loc / r.acc).
+#[derive(Debug, Clone)]
+pub struct RequestMeta {
+    pub cam: usize,
+    /// Request (or re-request) time, simulated seconds.
+    pub time: f64,
+    /// Camera location at request time (normalised map units).
+    pub loc: (f32, f32),
+    /// The camera's current model accuracy on its own recent frames — the
+    /// bar a group model must beat for admission.
+    pub acc: f32,
+}
+
+/// One retraining job's grouping state.
+#[derive(Debug, Clone)]
+pub struct GroupJob {
+    pub id: usize,
+    pub members: Vec<RequestMeta>,
+    /// Per-camera accuracy at the end of the previous window (r.acc_{n-1}).
+    pub prev_acc: BTreeMap<usize, f32>,
+}
+
+impl GroupJob {
+    pub fn new(id: usize, first: RequestMeta) -> GroupJob {
+        GroupJob {
+            id,
+            members: vec![first],
+            prev_acc: BTreeMap::new(),
+        }
+    }
+
+    pub fn cams(&self) -> Vec<usize> {
+        self.members.iter().map(|m| m.cam).collect()
+    }
+}
+
+/// Grouping policy knobs.
+#[derive(Debug, Clone)]
+pub struct GroupingPolicy {
+    /// Alg. 2 epsilon: max request-time gap to every member (seconds).
+    pub time_eps: f64,
+    /// Alg. 2 delta: max location distance to every member.
+    pub loc_delta: f32,
+    /// Alg. 2 p: relative accuracy drop that triggers eviction.
+    pub drop_threshold: f32,
+    /// Ablation switch: disable the metadata pre-filter (every job becomes
+    /// a candidate and must be eval'd — the expensive path §3.3 avoids).
+    pub metadata_filter: bool,
+}
+
+impl Default for GroupingPolicy {
+    fn default() -> Self {
+        GroupingPolicy {
+            time_eps: 240.0,
+            loc_delta: 0.2,
+            drop_threshold: 0.25,
+            metadata_filter: true,
+        }
+    }
+}
+
+/// Outcome of initial grouping for one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Joined an existing job.
+    Joined(usize),
+    /// No correlated job (or none beat the camera's own model): new job id.
+    NewJob(usize),
+}
+
+fn loc_dist(a: (f32, f32), b: (f32, f32)) -> f32 {
+    ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt()
+}
+
+/// Does `req` pass the metadata correlation filter against job `j`?
+pub fn metadata_correlated(policy: &GroupingPolicy, job: &GroupJob, req: &RequestMeta) -> bool {
+    job.members.iter().all(|r| {
+        (r.time - req.time).abs() <= policy.time_eps
+            && loc_dist(r.loc, req.loc) <= policy.loc_delta
+    })
+}
+
+/// Alg. 2 `GroupRequest`. `eval(job_id)` must return the accuracy of that
+/// job's current model on the request's sampled frames; it is only invoked
+/// for jobs passing the metadata filter (the whole point of the filter).
+pub fn group_request<F: FnMut(usize) -> f32>(
+    jobs: &mut Vec<GroupJob>,
+    next_job_id: &mut usize,
+    policy: &GroupingPolicy,
+    req: RequestMeta,
+    mut eval: F,
+) -> Decision {
+    let mut best: Option<(usize, f32)> = None;
+    for job in jobs.iter() {
+        if policy.metadata_filter && !metadata_correlated(policy, job, &req) {
+            continue;
+        }
+        let acc = eval(job.id);
+        if acc >= req.acc {
+            // Performance check passed: candidate.
+            if best.map(|(_, a)| acc > a).unwrap_or(true) {
+                best = Some((job.id, acc));
+            }
+        }
+    }
+    match best {
+        Some((job_id, _)) => {
+            let job = jobs.iter_mut().find(|j| j.id == job_id).unwrap();
+            job.members.push(req);
+            Decision::Joined(job_id)
+        }
+        None => {
+            let id = *next_job_id;
+            *next_job_id += 1;
+            jobs.push(GroupJob::new(id, req));
+            Decision::NewJob(id)
+        }
+    }
+}
+
+/// One eviction produced by [`update_grouping`].
+#[derive(Debug, Clone)]
+pub struct Eviction {
+    pub job_id: usize,
+    pub meta: RequestMeta,
+}
+
+/// Alg. 2 `UpdateGrouping`, run at the end of each retraining window.
+/// `eval(job_id, cam)` returns the group model's current accuracy on that
+/// camera's fresh subsamples. Members whose accuracy fell by more than
+/// `drop_threshold` (relative) are removed and returned; empty jobs are
+/// dropped. Callers re-submit evictions through [`group_request`] with
+/// refreshed metadata.
+pub fn update_grouping<F: FnMut(usize, usize) -> f32>(
+    jobs: &mut Vec<GroupJob>,
+    policy: &GroupingPolicy,
+    now: f64,
+    loc_of: impl Fn(usize) -> (f32, f32),
+    mut eval: F,
+) -> Vec<Eviction> {
+    let mut evicted = Vec::new();
+    for job in jobs.iter_mut() {
+        let mut keep = Vec::with_capacity(job.members.len());
+        for member in job.members.drain(..) {
+            let acc_now = eval(job.id, member.cam);
+            let verdict = match job.prev_acc.get(&member.cam) {
+                Some(&prev) if prev > 1e-6 => (acc_now - prev) / prev >= -policy.drop_threshold,
+                _ => true, // no baseline yet: keep and record
+            };
+            if verdict {
+                job.prev_acc.insert(member.cam, acc_now);
+                keep.push(member);
+            } else {
+                job.prev_acc.remove(&member.cam);
+                evicted.push(Eviction {
+                    job_id: job.id,
+                    meta: RequestMeta {
+                        cam: member.cam,
+                        time: now,
+                        loc: loc_of(member.cam),
+                        acc: acc_now,
+                    },
+                });
+            }
+        }
+        job.members = keep;
+    }
+    jobs.retain(|j| !j.members.is_empty());
+    evicted
+}
+
+/// Invariant checker used by tests and debug assertions: every camera
+/// appears in at most one job.
+pub fn is_partition(jobs: &[GroupJob]) -> bool {
+    let mut seen = std::collections::BTreeSet::new();
+    for j in jobs {
+        for m in &j.members {
+            if !seen.insert(m.cam) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn req(cam: usize, time: f64, loc: (f32, f32), acc: f32) -> RequestMeta {
+        RequestMeta {
+            cam,
+            time,
+            loc,
+            acc,
+        }
+    }
+
+    #[test]
+    fn first_request_creates_job() {
+        let mut jobs = Vec::new();
+        let mut next = 0;
+        let d = group_request(
+            &mut jobs,
+            &mut next,
+            &GroupingPolicy::default(),
+            req(0, 10.0, (0.1, 0.1), 0.15),
+            |_| unreachable!("no jobs to eval"),
+        );
+        assert_eq!(d, Decision::NewJob(0));
+        assert_eq!(jobs.len(), 1);
+    }
+
+    #[test]
+    fn correlated_request_joins_best_job() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![
+            GroupJob::new(0, req(0, 10.0, (0.1, 0.1), 0.2)),
+            GroupJob::new(1, req(1, 12.0, (0.15, 0.1), 0.2)),
+        ];
+        let mut next = 2;
+        // Both jobs pass metadata; job 1's model is better on the request.
+        let d = group_request(
+            &mut jobs,
+            &mut next,
+            &policy,
+            req(2, 15.0, (0.12, 0.12), 0.1),
+            |job_id| if job_id == 1 { 0.3 } else { 0.2 },
+        );
+        assert_eq!(d, Decision::Joined(1));
+        assert_eq!(jobs[1].members.len(), 2);
+        assert!(is_partition(&jobs));
+    }
+
+    #[test]
+    fn metadata_filter_blocks_distant_requests() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![GroupJob::new(0, req(0, 10.0, (0.1, 0.1), 0.2))];
+        let mut next = 1;
+        let mut evals = 0;
+        // Far away in space: must NOT be eval'd, must start a new job.
+        let d = group_request(
+            &mut jobs,
+            &mut next,
+            &policy,
+            req(1, 11.0, (0.9, 0.9), 0.1),
+            |_| {
+                evals += 1;
+                0.9
+            },
+        );
+        assert_eq!(d, Decision::NewJob(1));
+        assert_eq!(evals, 0, "metadata filter must avoid the eval");
+        // Far away in time likewise.
+        let d2 = group_request(
+            &mut jobs,
+            &mut next,
+            &policy,
+            req(2, 10_000.0, (0.1, 0.1), 0.1),
+            |_| {
+                evals += 1;
+                0.9
+            },
+        );
+        assert_eq!(d2, Decision::NewJob(2));
+        assert_eq!(evals, 0);
+    }
+
+    #[test]
+    fn performance_check_rejects_worse_models() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![GroupJob::new(0, req(0, 10.0, (0.1, 0.1), 0.2))];
+        let mut next = 1;
+        // Correlated, but the group model (0.1) is worse than the camera's
+        // own accuracy (0.25): start a new job.
+        let d = group_request(
+            &mut jobs,
+            &mut next,
+            &policy,
+            req(1, 12.0, (0.12, 0.1), 0.25),
+            |_| 0.1,
+        );
+        assert_eq!(d, Decision::NewJob(1));
+    }
+
+    #[test]
+    fn disabled_filter_evals_everything() {
+        let policy = GroupingPolicy {
+            metadata_filter: false,
+            ..GroupingPolicy::default()
+        };
+        let mut jobs = vec![GroupJob::new(0, req(0, 10.0, (0.1, 0.1), 0.2))];
+        let mut next = 1;
+        let mut evals = 0;
+        group_request(
+            &mut jobs,
+            &mut next,
+            &policy,
+            req(1, 10_000.0, (0.9, 0.9), 0.1),
+            |_| {
+                evals += 1;
+                0.05
+            },
+        );
+        assert_eq!(evals, 1);
+    }
+
+    #[test]
+    fn update_grouping_evicts_on_drop() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![GroupJob::new(0, req(0, 0.0, (0.1, 0.1), 0.2))];
+        jobs[0].members.push(req(1, 1.0, (0.1, 0.12), 0.2));
+        // Window 1: establish baselines (0.4 both).
+        let ev1 = update_grouping(&mut jobs, &policy, 100.0, |_| (0.5, 0.5), |_, _| 0.4);
+        assert!(ev1.is_empty());
+        // Window 2: camera 1 collapses to 0.2 (-50% < -15%).
+        let ev2 = update_grouping(
+            &mut jobs,
+            &policy,
+            200.0,
+            |_| (0.5, 0.5),
+            |_, cam| if cam == 1 { 0.2 } else { 0.42 },
+        );
+        assert_eq!(ev2.len(), 1);
+        assert_eq!(ev2[0].meta.cam, 1);
+        assert_eq!(ev2[0].meta.time, 200.0);
+        assert!((ev2[0].meta.acc - 0.2).abs() < 1e-6);
+        assert_eq!(jobs[0].members.len(), 1);
+        assert!(is_partition(&jobs));
+    }
+
+    #[test]
+    fn update_grouping_drops_empty_jobs() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![GroupJob::new(0, req(0, 0.0, (0.1, 0.1), 0.2))];
+        update_grouping(&mut jobs, &policy, 100.0, |_| (0.0, 0.0), |_, _| 0.4);
+        let ev = update_grouping(&mut jobs, &policy, 200.0, |_| (0.0, 0.0), |_, _| 0.01);
+        assert_eq!(ev.len(), 1);
+        assert!(jobs.is_empty(), "empty job must be removed");
+    }
+
+    #[test]
+    fn small_fluctuations_do_not_evict() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![GroupJob::new(0, req(0, 0.0, (0.1, 0.1), 0.2))];
+        update_grouping(&mut jobs, &policy, 100.0, |_| (0.0, 0.0), |_, _| 0.40);
+        let ev = update_grouping(&mut jobs, &policy, 200.0, |_| (0.0, 0.0), |_, _| 0.37);
+        assert!(ev.is_empty(), "-7.5% is within the 15% tolerance");
+    }
+
+    #[test]
+    fn prop_partition_invariant_under_random_churn() {
+        prop::check("grouping-partition", 40, |g| {
+            let policy = GroupingPolicy::default();
+            let mut jobs: Vec<GroupJob> = Vec::new();
+            let mut next = 0usize;
+            let n_cams = g.usize(2, 10);
+            // Random request storm.
+            for cam in 0..n_cams {
+                let r = req(
+                    cam,
+                    g.f32(0.0, 100.0) as f64,
+                    (g.f32(0.0, 1.0), g.f32(0.0, 1.0)),
+                    g.f32(0.0, 0.4),
+                );
+                let acc = g.f32(0.0, 0.6);
+                group_request(&mut jobs, &mut next, &policy, r, |_| acc);
+                if !is_partition(&jobs) {
+                    return Err("partition violated after request".to_string());
+                }
+            }
+            // Random churn: evict some, re-request them.
+            for round in 0..3 {
+                let flaky = g.usize(0, n_cams.saturating_sub(1));
+                let evs = update_grouping(
+                    &mut jobs,
+                    &policy,
+                    1000.0 + round as f64,
+                    |_| (0.5, 0.5),
+                    |_, cam| if cam == flaky { 0.01 } else { 0.5 },
+                );
+                if !is_partition(&jobs) {
+                    return Err("partition violated after update".to_string());
+                }
+                for ev in evs {
+                    group_request(&mut jobs, &mut next, &policy, ev.meta, |_| 0.0);
+                }
+                if !is_partition(&jobs) {
+                    return Err("partition violated after re-request".to_string());
+                }
+            }
+            // Every camera still present exactly once.
+            let total: usize = jobs.iter().map(|j| j.members.len()).sum();
+            if total != n_cams {
+                return Err(format!("lost cameras: {total} != {n_cams}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! # ECCO — cross-camera correlated continuous learning
+//!
+//! A full-system reproduction of *"ECCO: Leveraging Cross-Camera
+//! Correlations for Efficient Live Video Continuous Learning"* (He,
+//! Kossmann, Seshan, Steenkiste, 2025) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1 (build time)** — `python/compile/kernels/`: the fused-matmul
+//!   Pallas kernel every convolution lowers to, plus the patch-statistics
+//!   kernel behind drift/grouping descriptors.
+//! * **L2 (build time)** — `python/compile/model.py`: the student detector
+//!   / segmenter, its SGD train step, inference and feature programs,
+//!   AOT-lowered to HLO text in `artifacts/` by `python/compile/aot.py`.
+//! * **L3 (this crate)** — the ECCO coordinator and every evaluation
+//!   substrate the paper relies on. Python never runs at request time: the
+//!   [`runtime`] module loads the HLO artifacts via PJRT (CPU) and all
+//!   retraining happens through compiled executables.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`runtime`] | PJRT engine: artifact manifest, executable cache, train/infer/features |
+//! | [`scene`] | drifting-world simulator (CityFlow/MDOT/CARLA substitute) |
+//! | [`video`] | sampling configs + encoder model (FFmpeg substitute) |
+//! | [`net`] | fluid GAIMD network simulator (NS-3 substitute) |
+//! | [`teacher`] | oracle-with-noise annotator (YOLO11x substitute) |
+//! | [`metrics`] | cell-level mAP / mask-mAP, response-time tracking |
+//! | [`alloc`] | Alg. 1 GPU allocator + Ekya/RECL/naive baselines |
+//! | [`grouping`] | Alg. 2 dynamic camera grouping |
+//! | [`transmission`] | §3.2 sampling-config tables + GAIMD parameterisation |
+//! | [`zoo`] | RECL-style model zoo |
+//! | [`server`] | retraining jobs, micro-window scheduler, the [`server::System`] loop |
+//! | [`exp`] | one runner per paper table/figure (`ecco exp <id>`) |
+//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness |
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts                      # AOT-lower the models (python, once)
+//! cargo run --release --example quickstart
+//! cargo run --release --bin ecco -- exp all   # regenerate every table/figure
+//! ```
+pub mod alloc;
+pub mod exp;
+pub mod grouping;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod scene;
+pub mod server;
+pub mod teacher;
+pub mod transmission;
+pub mod util;
+pub mod video;
+pub mod zoo;

@@ -1,0 +1,129 @@
+//! `ecco` — CLI for the ECCO reproduction.
+//!
+//! Subcommands:
+//!   run        — run one system policy on a scenario and print the
+//!                accuracy timeline (quick interactive driver)
+//!   exp <id>   — regenerate a paper table/figure
+//!                (fig2c fig5 tab1 fig6det fig6seg fig7 fig8 fig9 fig10
+//!                 fig11 fig12 fig13, or `all`)
+//!   info       — print manifest / artifact inventory
+//!
+//! Common options: --task det|seg --gpus N --bw MBPS --windows N --seed N
+//!                 --out results/   (JSON results directory)
+
+use anyhow::{bail, Result};
+use ecco::exp;
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::{Policy, System, SystemConfig};
+use ecco::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: ecco <run|exp|info> [options]\n\
+                 \n\
+                 ecco run [--policy ecco|naive|ekya|recl] [--task det|seg]\n\
+                 \x20        [--cams N] [--gpus G] [--bw MBPS] [--windows N] [--seed S]\n\
+                 ecco exp <fig2c|fig5|tab1|fig6det|fig6seg|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>\n\
+                 \x20        [--out results] [--fast]\n\
+                 ecco info"
+            );
+            bail!("missing or unknown subcommand");
+        }
+    }
+}
+
+fn policy_by_name(name: &str) -> Result<Policy> {
+    Ok(match name {
+        "ecco" => Policy::ecco(),
+        "ecco+recl" => Policy::ecco_recl(),
+        "naive" => Policy::naive(),
+        "ekya" => Policy::ekya(),
+        "recl" => Policy::recl(),
+        _ => bail!("unknown policy {name:?}"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let task = Task::parse(&args.str_or("task", "det"))?;
+    let policy = policy_by_name(&args.str_or("policy", "ecco"))?;
+    let cams = args.usize_or("cams", 6)?;
+    let gpus = args.f64_or("gpus", 2.0)?;
+    let bw = args.f64_or("bw", 6.0)?;
+    let windows = args.usize_or("windows", 8)?;
+    let seed = args.u64_or("seed", 7)?;
+
+    let mut engine = Engine::open_default()?;
+    let sc = scenario::grouped_static(&[cams / 2, cams - cams / 2], 0.06, 30.0, seed);
+    let mut cfg = SystemConfig::new(task, policy);
+    cfg.gpus = gpus;
+    cfg.seed = seed;
+    let local: Vec<f64> = vec![20.0; cams];
+    let mut system = System::new(cfg, sc.world, &local, bw, &mut engine)?;
+
+    println!("# window t mean_mAP jobs per_cam...");
+    for w in 0..windows {
+        system.run_window()?;
+        let per: Vec<String> = system
+            .cams
+            .iter()
+            .map(|c| format!("{:.3}", c.last_acc))
+            .collect();
+        println!(
+            "{w} {:.0} {:.3} {} {}",
+            system.now(),
+            system.mean_accuracy(),
+            system.jobs.len(),
+            per.join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.first() else {
+        bail!("exp requires an experiment id (or `all`)");
+    };
+    let out_dir = args.str_or("out", "results");
+    std::fs::create_dir_all(&out_dir)?;
+    let fast = args.flag("fast");
+    let seed = args.u64_or("seed", 7)?;
+    let mut engine = Engine::open_default()?;
+    let ctx = exp::ExpContext {
+        out_dir,
+        fast,
+        seed,
+    };
+    exp::run_experiment(&mut engine, id, &ctx)
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::open_default()?;
+    let m = &engine.manifest;
+    println!("artifacts dir: {:?}", m.dir);
+    println!(
+        "tasks: det ({} params), seg ({} params)",
+        m.tasks["det"].param_count, m.tasks["seg"].param_count
+    );
+    println!("resolutions: {:?}", m.resolutions);
+    println!(
+        "batches: train {}, infer {}; grid {}, classes {}",
+        m.train_batch, m.infer_batch, m.grid, m.classes
+    );
+    println!("{} artifacts:", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<18} {} inputs, {} outputs, {:?}",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file.file_name().unwrap()
+        );
+    }
+    Ok(())
+}

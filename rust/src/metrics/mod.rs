@@ -1,0 +1,434 @@
+//! Accuracy metrics: mAP for detection, mask-mAP for segmentation, plus
+//! response-time tracking.
+//!
+//! Detection AP is computed at grid-cell granularity (the student predicts
+//! per-cell objectness + class): for each class, every (frame, cell) pair
+//! is a candidate detection scored `obj_prob * cls_prob`, positive when the
+//! ground truth places an object of that class in the cell. AP uses
+//! PASCAL-style 11-point interpolation; mAP averages classes that appear in
+//! the ground truth. Segmentation uses the same machinery over mask cells
+//! with score `prob[class]`.
+//!
+//! This is the cell-level analogue of the paper's IoU-threshold mAP: it
+//! preserves the precision/recall semantics and is monotone in detection
+//! quality, which is what every comparison in the evaluation consumes.
+
+use crate::runtime::{DetPred, SegPred};
+use crate::scene::GroundTruth;
+
+/// A scored binary candidate (one class's detection).
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    score: f32,
+    positive: bool,
+}
+
+/// Detection confidence floor: cells scored below this are "not detected"
+/// for the class (without it, a zero-score ground-truth cell would still be
+/// ranked and could fake perfect recall).
+const MIN_SCORE: f32 = 0.01;
+
+/// 11-point interpolated average precision.
+fn average_precision(mut cands: Vec<Candidate>, n_positive: usize) -> f32 {
+    if n_positive == 0 {
+        return f32::NAN; // class absent from GT: skipped by the caller
+    }
+    cands.retain(|c| c.score >= MIN_SCORE);
+    cands.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    // Precision/recall curve.
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut prec = Vec::with_capacity(cands.len());
+    let mut rec = Vec::with_capacity(cands.len());
+    for c in &cands {
+        if c.positive {
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+        prec.push(tp as f32 / (tp + fp) as f32);
+        rec.push(tp as f32 / n_positive as f32);
+    }
+    // 11-point interpolation: max precision at recall >= t.
+    let mut ap = 0.0f32;
+    for i in 0..=10 {
+        let t = i as f32 / 10.0;
+        let p = prec
+            .iter()
+            .zip(&rec)
+            .filter(|(_, &r)| r >= t)
+            .map(|(&p, _)| p)
+            .fold(0.0f32, f32::max);
+        ap += p / 11.0;
+    }
+    ap.clamp(0.0, 1.0)
+}
+
+/// Detection mAP over `n` frames of predictions vs ground truths.
+/// `preds` covers at least `n` batch slots; `truths.len() == n`.
+pub fn det_map(preds: &DetPred, truths: &[&GroundTruth], n: usize) -> f32 {
+    assert!(n <= preds.batch && n <= truths.len());
+    let k = preds.classes;
+    let g = preds.grid;
+    let mut aps = Vec::new();
+    for class in 0..k {
+        let mut cands = Vec::with_capacity(n * g * g);
+        let mut n_pos = 0usize;
+        for (b, truth) in truths.iter().enumerate().take(n) {
+            let (og, cg) = truth.det_grids();
+            for gy in 0..g {
+                for gx in 0..g {
+                    let positive = og[gy][gx] > 0.0 && cg[gy][gx] == class;
+                    if positive {
+                        n_pos += 1;
+                    }
+                    let score = preds.obj_at(b, gy, gx) * preds.cls_at(b, gy, gx)[class];
+                    cands.push(Candidate { score, positive });
+                }
+            }
+        }
+        let ap = average_precision(cands, n_pos);
+        if !ap.is_nan() {
+            aps.push(ap);
+        }
+    }
+    if aps.is_empty() {
+        return 0.0;
+    }
+    aps.iter().sum::<f32>() / aps.len() as f32
+}
+
+/// Segmentation mask-mAP over `n` frames (cell-level AP per foreground
+/// class, averaged).
+pub fn seg_map(preds: &SegPred, truths: &[&GroundTruth], n: usize) -> f32 {
+    assert!(n <= preds.batch && n <= truths.len());
+    let s = preds.side;
+    let k = preds.classes - 1; // foreground classes
+    let mut aps = Vec::new();
+    for class in 0..k {
+        let mut cands = Vec::with_capacity(n * s * s);
+        let mut n_pos = 0usize;
+        for (b, truth) in truths.iter().enumerate().take(n) {
+            let mask = truth.mask_grid(s);
+            for sy in 0..s {
+                for sx in 0..s {
+                    let positive = mask[sy * s + sx] == class;
+                    if positive {
+                        n_pos += 1;
+                    }
+                    let score = preds.probs_at(b, sy, sx)[class];
+                    cands.push(Candidate { score, positive });
+                }
+            }
+        }
+        let ap = average_precision(cands, n_pos);
+        if !ap.is_nan() {
+            aps.push(ap);
+        }
+    }
+    if aps.is_empty() {
+        return 0.0;
+    }
+    aps.iter().sum::<f32>() / aps.len() as f32
+}
+
+/// Tracks when each camera's accuracy first crosses a threshold after its
+/// retraining request — the paper's "response time" metric.
+#[derive(Debug, Clone)]
+pub struct ResponseTracker {
+    threshold: f32,
+    /// Per camera: (request time, reach time).
+    requests: Vec<(usize, f64, Option<f64>)>,
+}
+
+impl ResponseTracker {
+    pub fn new(threshold: f32) -> ResponseTracker {
+        ResponseTracker {
+            threshold,
+            requests: Vec::new(),
+        }
+    }
+
+    /// Register a retraining request from `cam` at simulated time `t`.
+    pub fn request(&mut self, cam: usize, t: f64) {
+        self.requests.push((cam, t, None));
+    }
+
+    /// Report camera accuracy at time `t`; fills open requests that reached
+    /// the threshold.
+    pub fn observe(&mut self, cam: usize, t: f64, acc: f32) {
+        if acc < self.threshold {
+            return;
+        }
+        for r in &mut self.requests {
+            if r.0 == cam && r.2.is_none() && t >= r.1 {
+                r.2 = Some(t);
+            }
+        }
+    }
+
+    /// Mean response time over satisfied requests; unresolved requests are
+    /// counted at `horizon` (pessimistic completion), matching how capped
+    /// measurements are usually reported.
+    pub fn mean_response(&self, horizon: f64) -> f64 {
+        if self.requests.is_empty() {
+            return f64::NAN;
+        }
+        let total: f64 = self
+            .requests
+            .iter()
+            .map(|&(_, t0, t1)| t1.unwrap_or(horizon) - t0)
+            .sum();
+        total / self.requests.len() as f64
+    }
+
+    pub fn satisfied(&self) -> usize {
+        self.requests.iter().filter(|r| r.2.is_some()).count()
+    }
+
+    pub fn total(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Accuracy history per camera: (time, mAP) samples for plotting/series.
+#[derive(Debug, Clone, Default)]
+pub struct AccuracyHistory {
+    pub series: Vec<Vec<(f64, f32)>>,
+}
+
+impl AccuracyHistory {
+    pub fn new(n_cams: usize) -> AccuracyHistory {
+        AccuracyHistory {
+            series: vec![Vec::new(); n_cams],
+        }
+    }
+
+    pub fn push(&mut self, cam: usize, t: f64, acc: f32) {
+        self.series[cam].push((t, acc));
+    }
+
+    /// Mean accuracy across cameras over the last `frac` of samples
+    /// (steady-state average, skipping warm-up).
+    pub fn steady_mean(&self, frac: f64) -> f32 {
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for s in &self.series {
+            if s.is_empty() {
+                continue;
+            }
+            let start = ((1.0 - frac) * s.len() as f64) as usize;
+            for &(_, a) in &s[start.min(s.len() - 1)..] {
+                total += a as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            (total / n as f64) as f32
+        }
+    }
+
+    /// Mean accuracy across cameras at the final sample.
+    pub fn final_mean(&self) -> f32 {
+        let finals: Vec<f32> = self
+            .series
+            .iter()
+            .filter_map(|s| s.last().map(|&(_, a)| a))
+            .collect();
+        if finals.is_empty() {
+            0.0
+        } else {
+            finals.iter().sum::<f32>() / finals.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::Obj;
+
+    fn truth_with(objects: Vec<Obj>) -> GroundTruth {
+        GroundTruth { objects }
+    }
+
+    /// Build a DetPred from explicit per-cell (obj, class) assignments.
+    fn pred_from(
+        n: usize,
+        cells: &[(usize, usize, usize, usize, f32)], // (frame, gy, gx, class, score)
+    ) -> DetPred {
+        let (g, k) = (4usize, 4usize);
+        let mut obj = vec![0.0f32; n * g * g];
+        let mut cls = vec![1.0f32 / k as f32; n * g * g * k];
+        for &(b, gy, gx, class, score) in cells {
+            obj[(b * g + gy) * g + gx] = score;
+            let off = ((b * g + gy) * g + gx) * k;
+            for c in 0..k {
+                cls[off + c] = if c == class { 0.97 } else { 0.01 };
+            }
+        }
+        DetPred {
+            batch: n,
+            grid: g,
+            classes: k,
+            obj,
+            cls,
+        }
+    }
+
+    #[test]
+    fn perfect_predictions_score_one() {
+        let truths = vec![truth_with(vec![
+            Obj { class: 1, cx: 0.12, cy: 0.12, radius: 0.05 },
+            Obj { class: 2, cx: 0.9, cy: 0.9, radius: 0.05 },
+        ])];
+        let pred = pred_from(1, &[(0, 0, 0, 1, 0.99), (0, 3, 3, 2, 0.98)]);
+        let trefs: Vec<&GroundTruth> = truths.iter().collect();
+        let m = det_map(&pred, &trefs, 1);
+        assert!(m > 0.99, "perfect predictions should give mAP ~1: {m}");
+    }
+
+    #[test]
+    fn wrong_class_scores_poorly() {
+        let truths = vec![truth_with(vec![Obj {
+            class: 1,
+            cx: 0.12,
+            cy: 0.12,
+            radius: 0.05,
+        }])];
+        let pred = pred_from(1, &[(0, 0, 0, 3, 0.99)]); // wrong class
+        let trefs: Vec<&GroundTruth> = truths.iter().collect();
+        let m = det_map(&pred, &trefs, 1);
+        assert!(m < 0.3, "wrong class should score low: {m}");
+    }
+
+    #[test]
+    fn missed_objects_reduce_map() {
+        let truths = vec![truth_with(vec![
+            Obj { class: 0, cx: 0.12, cy: 0.12, radius: 0.05 },
+            Obj { class: 0, cx: 0.9, cy: 0.9, radius: 0.05 },
+        ])];
+        // Only one of two found.
+        let pred = pred_from(1, &[(0, 0, 0, 0, 0.99)]);
+        let trefs: Vec<&GroundTruth> = truths.iter().collect();
+        let m = det_map(&pred, &trefs, 1);
+        assert!(m > 0.3 && m < 0.8, "half recall should be mid-range: {m}");
+    }
+
+    #[test]
+    fn uniform_noise_scores_low() {
+        let truths = vec![truth_with(vec![Obj {
+            class: 2,
+            cx: 0.6,
+            cy: 0.6,
+            radius: 0.05,
+        }])];
+        // All cells weakly predicted with the right class -> low precision.
+        let mut cells = Vec::new();
+        for gy in 0..4 {
+            for gx in 0..4 {
+                cells.push((0usize, gy, gx, 2usize, 0.5f32));
+            }
+        }
+        let pred = pred_from(1, &cells);
+        let trefs: Vec<&GroundTruth> = truths.iter().collect();
+        let m = det_map(&pred, &trefs, 1);
+        assert!(m < 0.5, "indiscriminate predictions should score low: {m}");
+    }
+
+    #[test]
+    fn map_in_unit_interval_randomized() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..20 {
+            let truths = vec![truth_with(vec![Obj {
+                class: rng.index(4),
+                cx: rng.range(0.05, 0.95),
+                cy: rng.range(0.05, 0.95),
+                radius: 0.05,
+            }])];
+            let mut obj = vec![0.0f32; 16];
+            let mut cls = vec![0.25f32; 64];
+            for v in obj.iter_mut() {
+                *v = rng.f32();
+            }
+            for v in cls.iter_mut() {
+                *v = rng.f32();
+            }
+            let pred = DetPred {
+                batch: 1,
+                grid: 4,
+                classes: 4,
+                obj,
+                cls,
+            };
+            let trefs: Vec<&GroundTruth> = truths.iter().collect();
+            let m = det_map(&pred, &trefs, 1);
+            assert!((0.0..=1.0).contains(&m));
+        }
+    }
+
+    #[test]
+    fn seg_map_perfect_and_inverted() {
+        let truth = truth_with(vec![Obj {
+            class: 0,
+            cx: 0.5,
+            cy: 0.5,
+            radius: 0.25,
+        }]);
+        let s = 8usize;
+        let mask = truth.mask_grid(s);
+        let mut probs = vec![0.0f32; s * s * 5];
+        for (i, &m) in mask.iter().enumerate() {
+            probs[i * 5 + m] = 1.0;
+        }
+        let pred = SegPred {
+            batch: 1,
+            side: s,
+            classes: 5,
+            probs: probs.clone(),
+        };
+        let m_perfect = seg_map(&pred, &[&truth], 1);
+        assert!(m_perfect > 0.99, "{m_perfect}");
+        // Inverted: background where object is.
+        let mut inv = vec![0.0f32; s * s * 5];
+        for (i, &m) in mask.iter().enumerate() {
+            inv[i * 5 + (if m == 0 { 4 } else { 0 })] = 1.0;
+        }
+        let pred_bad = SegPred {
+            batch: 1,
+            side: s,
+            classes: 5,
+            probs: inv,
+        };
+        let m_bad = seg_map(&pred_bad, &[&truth], 1);
+        assert!(m_bad < 0.2, "{m_bad}");
+    }
+
+    #[test]
+    fn response_tracker_flow() {
+        let mut rt = ResponseTracker::new(0.35);
+        rt.request(0, 100.0);
+        rt.observe(0, 150.0, 0.2); // below threshold
+        rt.observe(0, 200.0, 0.4); // crosses
+        rt.request(1, 100.0); // never satisfied
+        assert_eq!(rt.satisfied(), 1);
+        assert_eq!(rt.total(), 2);
+        let mean = rt.mean_response(500.0);
+        assert!((mean - (100.0 + 400.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_history_steady_mean() {
+        let mut h = AccuracyHistory::new(2);
+        for i in 0..10 {
+            h.push(0, i as f64, if i < 5 { 0.1 } else { 0.5 });
+            h.push(1, i as f64, if i < 5 { 0.2 } else { 0.6 });
+        }
+        let sm = h.steady_mean(0.5);
+        assert!((sm - 0.55).abs() < 1e-5, "{sm}");
+        assert!((h.final_mean() - 0.55).abs() < 1e-5);
+    }
+}

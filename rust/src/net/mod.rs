@@ -1,0 +1,339 @@
+//! Fluid-flow network simulator — the NS-3 substitute.
+//!
+//! Models the paper's transport setting (§3.2.2): every camera sends its
+//! frame stream to the server over an *access link* (its own uplink, which
+//! may be weak for mobile cameras) followed by a *shared bottleneck*.
+//! Flows run GAIMD congestion control: additive increase `alpha` per RTT,
+//! multiplicative decrease `beta` on congestion, giving the steady-state
+//! throughput law  rate ∝ alpha / (1 - beta)  (Yang & Lam 2000) that
+//! ECCO's transmission controller exploits by setting `alpha = p_j / n_j`,
+//! `beta = 0.5`.
+//!
+//! The simulation is deterministic fluid dynamics at a fixed tick: each
+//! tick rates grow additively (unless app-limited), then every saturated
+//! link triggers a synchronized multiplicative back-off of the flows
+//! crossing it (with a one-RTT cooldown, as real AIMD reacts at most once
+//! per window). Delivered bytes integrate the *goodput*: the flow's rate
+//! scaled down by each link's overload factor.
+
+pub mod trace;
+
+use anyhow::{bail, Result};
+
+/// Default simulation tick (seconds).
+pub const DEFAULT_TICK: f64 = 0.02;
+/// Default flow RTT (seconds).
+pub const DEFAULT_RTT: f64 = 0.05;
+
+/// A network link with fixed capacity in Mbit/s.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub capacity_mbps: f64,
+    pub name: String,
+}
+
+/// One GAIMD flow (camera -> server).
+#[derive(Debug, Clone)]
+pub struct Flow {
+    /// Additive increase in Mbit/s per RTT.
+    pub alpha: f64,
+    /// Multiplicative decrease factor in (0,1).
+    pub beta: f64,
+    pub rtt: f64,
+    /// Current sending rate (Mbit/s).
+    pub rate: f64,
+    /// Application-limited ceiling (Mbit/s); INFINITY = unlimited.
+    pub app_limit: f64,
+    /// Links this flow traverses (indices into `NetSim::links`).
+    pub path: Vec<usize>,
+    /// Accumulated delivered volume (Mbit).
+    pub delivered_mbit: f64,
+    /// Seconds until this flow reacts to congestion again.
+    cooldown: f64,
+}
+
+/// Handle for a flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowId(pub usize);
+
+/// The fluid network simulator.
+pub struct NetSim {
+    pub links: Vec<Link>,
+    pub flows: Vec<Flow>,
+    pub time: f64,
+    tick: f64,
+    recorder: Option<trace::TraceRecorder>,
+}
+
+impl NetSim {
+    pub fn new(links: Vec<Link>) -> NetSim {
+        NetSim {
+            links,
+            flows: Vec::new(),
+            time: 0.0,
+            tick: DEFAULT_TICK,
+            recorder: None,
+        }
+    }
+
+    /// Star topology: `local_caps[i]` is camera i's uplink; all cameras then
+    /// share one bottleneck of `shared_mbps`. Returns the sim; camera i's
+    /// flow path is `[i, n]`.
+    pub fn star(local_caps: &[f64], shared_mbps: f64) -> NetSim {
+        let mut links: Vec<Link> = local_caps
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Link {
+                capacity_mbps: c,
+                name: format!("uplink{i}"),
+            })
+            .collect();
+        links.push(Link {
+            capacity_mbps: shared_mbps,
+            name: "shared".to_string(),
+        });
+        NetSim::new(links)
+    }
+
+    /// Add a flow; starts at a small initial rate.
+    pub fn add_flow(&mut self, path: Vec<usize>, alpha: f64, beta: f64) -> Result<FlowId> {
+        for &l in &path {
+            if l >= self.links.len() {
+                bail!("flow path references unknown link {l}");
+            }
+        }
+        if !(0.0 < beta && beta < 1.0) {
+            bail!("beta must be in (0,1), got {beta}");
+        }
+        if alpha <= 0.0 {
+            bail!("alpha must be positive, got {alpha}");
+        }
+        self.flows.push(Flow {
+            alpha,
+            beta,
+            rtt: DEFAULT_RTT,
+            rate: 0.1,
+            app_limit: f64::INFINITY,
+            path,
+            delivered_mbit: 0.0,
+            cooldown: 0.0,
+        });
+        Ok(FlowId(self.flows.len() - 1))
+    }
+
+    /// Camera flow in a star topology (uplink i -> shared bottleneck).
+    pub fn add_camera_flow(&mut self, cam: usize, alpha: f64, beta: f64) -> Result<FlowId> {
+        let shared = self.links.len() - 1;
+        self.add_flow(vec![cam, shared], alpha, beta)
+    }
+
+    /// Update GAIMD parameters mid-run (server pushed a new GPU share).
+    pub fn set_params(&mut self, id: FlowId, alpha: f64, beta: f64) {
+        let f = &mut self.flows[id.0];
+        f.alpha = alpha.max(1e-4);
+        f.beta = beta.clamp(0.05, 0.95);
+    }
+
+    /// Cap a flow at its application sending rate.
+    pub fn set_app_limit(&mut self, id: FlowId, limit_mbps: f64) {
+        self.flows[id.0].app_limit = limit_mbps.max(0.0);
+    }
+
+    /// Attach a rate-trace recorder sampling every `sample_dt` seconds.
+    pub fn record(&mut self, sample_dt: f64) {
+        self.recorder = Some(trace::TraceRecorder::new(sample_dt, self.flows.len()));
+    }
+
+    pub fn take_traces(&mut self) -> Option<trace::Traces> {
+        self.recorder.take().map(|r| r.finish())
+    }
+
+    pub fn rate(&self, id: FlowId) -> f64 {
+        self.flows[id.0].rate
+    }
+
+    pub fn delivered_mbit(&self, id: FlowId) -> f64 {
+        self.flows[id.0].delivered_mbit
+    }
+
+    /// Reset delivery counters (e.g. at a window boundary).
+    pub fn reset_delivered(&mut self) {
+        for f in &mut self.flows {
+            f.delivered_mbit = 0.0;
+        }
+    }
+
+    /// Run the simulation for `duration` seconds.
+    pub fn run(&mut self, duration: f64) {
+        let end = self.time + duration;
+        while self.time < end - 1e-9 {
+            let dt = self.tick.min(end - self.time);
+            self.step(dt);
+        }
+    }
+
+    fn step(&mut self, dt: f64) {
+        // 1. Additive increase (up to the app limit).
+        for f in &mut self.flows {
+            f.cooldown = (f.cooldown - dt).max(0.0);
+            f.rate = (f.rate + f.alpha * dt / f.rtt).min(f.app_limit.max(0.01));
+        }
+        // 2. Congestion detection per link; synchronized multiplicative
+        //    decrease for flows crossing a saturated link (once per RTT).
+        let mut overload = vec![1.0f64; self.links.len()];
+        for (li, link) in self.links.iter().enumerate() {
+            let demand: f64 = self
+                .flows
+                .iter()
+                .filter(|f| f.path.contains(&li))
+                .map(|f| f.rate)
+                .sum();
+            if demand > link.capacity_mbps {
+                overload[li] = link.capacity_mbps / demand;
+                for f in &mut self.flows {
+                    if f.path.contains(&li) && f.cooldown <= 0.0 {
+                        f.rate *= f.beta;
+                        f.cooldown = f.rtt;
+                    }
+                }
+            }
+        }
+        // 3. Goodput integration: rate scaled by the worst overload factor
+        //    along the path (fluid approximation of queue drops).
+        for f in &mut self.flows {
+            let scale = f
+                .path
+                .iter()
+                .map(|&l| overload[l])
+                .fold(1.0f64, f64::min);
+            f.delivered_mbit += f.rate * scale * dt;
+        }
+        self.time += dt;
+        if let Some(rec) = &mut self.recorder {
+            rec.sample(self.time, &self.flows);
+        }
+    }
+}
+
+/// The GAIMD steady-state throughput weight: alpha / (1 - beta).
+pub fn gaimd_weight(alpha: f64, beta: f64) -> f64 {
+    alpha / (1.0 - beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_rate_over(sim: &mut NetSim, id: FlowId, secs: f64) -> f64 {
+        sim.reset_delivered();
+        sim.run(secs);
+        sim.delivered_mbit(id) / secs
+    }
+
+    #[test]
+    fn single_flow_fills_link() {
+        let mut sim = NetSim::star(&[100.0], 10.0);
+        let f = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        sim.run(30.0); // converge
+        let avg = mean_rate_over(&mut sim, f, 30.0);
+        // AIMD with beta=.5 oscillates between C/2-ish and C: average ~0.75C.
+        assert!(avg > 6.0 && avg <= 10.0, "avg={avg}");
+    }
+
+    #[test]
+    fn equal_flows_share_equally() {
+        let mut sim = NetSim::star(&[100.0, 100.0], 8.0);
+        let a = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        let b = sim.add_camera_flow(1, 1.0, 0.5).unwrap();
+        sim.run(40.0);
+        let ra = mean_rate_over(&mut sim, a, 40.0);
+        sim.reset_delivered();
+        sim.run(40.0);
+        let rb = sim.delivered_mbit(b) / 40.0;
+        assert!((ra / rb - 1.0).abs() < 0.25, "ra={ra} rb={rb}");
+    }
+
+    #[test]
+    fn gaimd_shares_proportional_to_weight() {
+        // alpha 2:1 with equal beta -> ~2:1 bandwidth share.
+        let mut sim = NetSim::star(&[100.0, 100.0], 9.0);
+        let a = sim.add_camera_flow(0, 2.0, 0.5).unwrap();
+        let b = sim.add_camera_flow(1, 1.0, 0.5).unwrap();
+        sim.run(60.0);
+        sim.reset_delivered();
+        sim.run(60.0);
+        let ra = sim.delivered_mbit(a) / 60.0;
+        let rb = sim.delivered_mbit(b) / 60.0;
+        let ratio = ra / rb;
+        assert!(
+            (1.6..=2.5).contains(&ratio),
+            "expected ~2.0 share ratio, got {ratio} ({ra} vs {rb})"
+        );
+    }
+
+    #[test]
+    fn local_uplink_caps_flow_and_leaves_shared_for_others() {
+        // Camera 0 capped at 1 Mbps locally; camera 1 should get the rest.
+        let mut sim = NetSim::star(&[1.0, 100.0], 9.0);
+        let a = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        let b = sim.add_camera_flow(1, 1.0, 0.5).unwrap();
+        sim.run(60.0);
+        sim.reset_delivered();
+        sim.run(60.0);
+        let ra = sim.delivered_mbit(a) / 60.0;
+        let rb = sim.delivered_mbit(b) / 60.0;
+        assert!(ra <= 1.05, "capped flow exceeded uplink: {ra}");
+        assert!(rb > 5.0, "uncapped flow should use leftover: {rb}");
+    }
+
+    #[test]
+    fn app_limit_respected() {
+        let mut sim = NetSim::star(&[100.0], 50.0);
+        let f = sim.add_camera_flow(0, 2.0, 0.5).unwrap();
+        sim.set_app_limit(f, 3.0);
+        sim.run(30.0);
+        assert!(sim.rate(f) <= 3.0 + 1e-6);
+    }
+
+    #[test]
+    fn goodput_never_exceeds_capacity() {
+        let mut sim = NetSim::star(&[100.0, 100.0, 100.0], 6.0);
+        let ids: Vec<FlowId> = (0..3)
+            .map(|i| sim.add_camera_flow(i, 1.0, 0.5).unwrap())
+            .collect();
+        sim.run(20.0);
+        sim.reset_delivered();
+        sim.run(30.0);
+        let total: f64 = ids.iter().map(|&i| sim.delivered_mbit(i)).sum();
+        assert!(total / 30.0 <= 6.0 + 1e-6, "goodput {} > capacity", total / 30.0);
+    }
+
+    #[test]
+    fn param_update_shifts_share() {
+        let mut sim = NetSim::star(&[100.0, 100.0], 9.0);
+        let a = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        let b = sim.add_camera_flow(1, 1.0, 0.5).unwrap();
+        sim.run(40.0);
+        sim.set_params(a, 3.0, 0.5);
+        sim.run(40.0); // re-converge
+        sim.reset_delivered();
+        sim.run(60.0);
+        let ra = sim.delivered_mbit(a) / 60.0;
+        let rb = sim.delivered_mbit(b) / 60.0;
+        assert!(ra / rb > 2.0, "after alpha bump expected >2x: {ra} vs {rb}");
+    }
+
+    #[test]
+    fn rejects_invalid_flows() {
+        let mut sim = NetSim::star(&[10.0], 5.0);
+        assert!(sim.add_flow(vec![7], 1.0, 0.5).is_err());
+        assert!(sim.add_flow(vec![0], 1.0, 1.5).is_err());
+        assert!(sim.add_flow(vec![0], -1.0, 0.5).is_err());
+    }
+
+    #[test]
+    fn gaimd_weight_law() {
+        assert_eq!(gaimd_weight(1.0, 0.5), 2.0);
+        assert!((gaimd_weight(0.31, 0.875) - 2.48).abs() < 1e-9);
+    }
+}

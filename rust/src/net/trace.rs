@@ -1,0 +1,122 @@
+//! Per-flow rate traces (the NS-3 "bandwidth trace" equivalent, consumed
+//! by the Fig. 11 experiment and by tests).
+
+use super::Flow;
+
+/// Recorded rate samples for every flow.
+#[derive(Debug, Clone)]
+pub struct Traces {
+    /// Sample times (seconds).
+    pub times: Vec<f64>,
+    /// `rates[f][k]` = flow f's sending rate at `times[k]` (Mbit/s).
+    pub rates: Vec<Vec<f64>>,
+}
+
+impl Traces {
+    /// Mean rate of flow `f` over samples in [t0, t1].
+    pub fn mean_rate(&self, f: usize, t0: f64, t1: f64) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (k, &t) in self.times.iter().enumerate() {
+            if t >= t0 && t <= t1 {
+                sum += self.rates[f][k];
+                n += 1;
+            }
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Sum of groups of flows: returns one trace per group.
+    pub fn group_rates(&self, groups: &[Vec<usize>]) -> Vec<Vec<f64>> {
+        groups
+            .iter()
+            .map(|g| {
+                (0..self.times.len())
+                    .map(|k| g.iter().map(|&f| self.rates[f][k]).sum())
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug)]
+pub struct TraceRecorder {
+    sample_dt: f64,
+    next_sample: f64,
+    times: Vec<f64>,
+    rates: Vec<Vec<f64>>,
+}
+
+impl TraceRecorder {
+    pub fn new(sample_dt: f64, n_flows: usize) -> TraceRecorder {
+        TraceRecorder {
+            sample_dt,
+            next_sample: 0.0,
+            times: Vec::new(),
+            rates: vec![Vec::new(); n_flows],
+        }
+    }
+
+    pub fn sample(&mut self, time: f64, flows: &[Flow]) {
+        if time + 1e-12 < self.next_sample {
+            return;
+        }
+        self.next_sample = time + self.sample_dt;
+        self.times.push(time);
+        // Flows added after recording started get NaN backfill-free traces:
+        // extend the vector lazily.
+        while self.rates.len() < flows.len() {
+            let mut pad = Vec::with_capacity(self.times.len());
+            pad.resize(self.times.len() - 1, f64::NAN);
+            self.rates.push(pad);
+        }
+        for (i, f) in flows.iter().enumerate() {
+            self.rates[i].push(f.rate);
+        }
+    }
+
+    pub fn finish(self) -> Traces {
+        Traces {
+            times: self.times,
+            rates: self.rates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::net::{NetSim, };
+
+    #[test]
+    fn traces_capture_convergence() {
+        let mut sim = NetSim::star(&[100.0], 10.0);
+        sim.record(0.5);
+        let _f = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        sim.run(30.0);
+        let traces = sim.take_traces().unwrap();
+        assert!(!traces.times.is_empty());
+        assert_eq!(traces.rates.len(), 1);
+        let early = traces.mean_rate(0, 0.0, 3.0);
+        let late = traces.mean_rate(0, 20.0, 30.0);
+        assert!(late > early, "rate should ramp up: {early} -> {late}");
+    }
+
+    #[test]
+    fn group_rates_sum_members() {
+        let mut sim = NetSim::star(&[100.0, 100.0], 10.0);
+        sim.record(0.5);
+        sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        sim.add_camera_flow(1, 1.0, 0.5).unwrap();
+        sim.run(10.0);
+        let traces = sim.take_traces().unwrap();
+        let grouped = traces.group_rates(&[vec![0, 1]]);
+        for k in 0..traces.times.len() {
+            let direct = traces.rates[0][k] + traces.rates[1][k];
+            assert!((grouped[0][k] - direct).abs() < 1e-9);
+        }
+    }
+}

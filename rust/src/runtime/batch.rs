@@ -1,0 +1,156 @@
+//! Batch assembly: frames + ground truth -> padded tensors for the engine.
+//!
+//! The AOT artifacts have fixed batch sizes (8 train / 16 infer), so
+//! partial batches are padded by cycling earlier frames; for inference the
+//! caller should ignore outputs past the real count (helpers here track it).
+
+use crate::scene::{Frame, GroundTruth};
+
+use super::engine::{Labels, TrainBatch};
+use super::manifest::Task;
+
+/// Flatten and pad frame pixels into a `[B,r,r,3]` tensor.
+/// Panics if `frames` is empty or resolutions mismatch.
+pub fn pixel_tensor(frames: &[&Frame], batch: usize, res: usize) -> Vec<f32> {
+    assert!(!frames.is_empty(), "cannot build a batch from zero frames");
+    let mut out = Vec::with_capacity(batch * res * res * 3);
+    for i in 0..batch {
+        let f = frames[i % frames.len()];
+        assert_eq!(f.res, res, "frame resolution mismatch");
+        out.extend_from_slice(&f.pixels);
+    }
+    out
+}
+
+/// Detection labels from ground truths (teacher output), padded to `batch`.
+pub fn det_labels(truths: &[&GroundTruth], batch: usize, grid: usize, classes: usize) -> Labels {
+    let mut obj = Vec::with_capacity(batch * grid * grid);
+    let mut cls = Vec::with_capacity(batch * grid * grid * classes);
+    for i in 0..batch {
+        let t = truths[i % truths.len()];
+        let (og, cg) = t.det_grids();
+        for gy in 0..grid {
+            for gx in 0..grid {
+                obj.push(og[gy][gx]);
+                for c in 0..classes {
+                    cls.push(if cg[gy][gx] == c && og[gy][gx] > 0.0 {
+                        1.0
+                    } else {
+                        0.0
+                    });
+                }
+            }
+        }
+    }
+    Labels::Det { obj, cls }
+}
+
+/// Segmentation labels (one-hot masks at side `s = res/4`), padded.
+pub fn seg_labels(truths: &[&GroundTruth], batch: usize, side: usize, classes: usize) -> Labels {
+    let bg = classes; // background channel index
+    let mut mask = Vec::with_capacity(batch * side * side * (classes + 1));
+    for i in 0..batch {
+        let t = truths[i % truths.len()];
+        let grid = t.mask_grid(side);
+        for &cell in &grid {
+            for c in 0..=bg {
+                mask.push(if cell == c { 1.0 } else { 0.0 });
+            }
+        }
+    }
+    Labels::Seg { mask }
+}
+
+/// Build a full training batch for `task` from labelled frames.
+pub fn train_batch(
+    task: Task,
+    frames: &[&Frame],
+    truths: &[&GroundTruth],
+    batch: usize,
+    res: usize,
+    classes: usize,
+    grid: usize,
+) -> TrainBatch {
+    assert_eq!(frames.len(), truths.len());
+    let pixels = pixel_tensor(frames, batch, res);
+    let labels = match task {
+        Task::Det => det_labels(truths, batch, grid, classes),
+        Task::Seg => seg_labels(truths, batch, res / 4, classes),
+    };
+    TrainBatch {
+        res,
+        pixels,
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::{render, SceneState};
+
+    fn mk_frames(n: usize, res: usize) -> Vec<Frame> {
+        let s = SceneState::default_day();
+        (0..n).map(|i| render(&s, res, 1000 + i as u64)).collect()
+    }
+
+    #[test]
+    fn pixel_tensor_pads_by_cycling() {
+        let frames = mk_frames(3, 16);
+        let refs: Vec<&Frame> = frames.iter().collect();
+        let t = pixel_tensor(&refs, 8, 16);
+        assert_eq!(t.len(), 8 * 16 * 16 * 3);
+        let fsz = 16 * 16 * 3;
+        // Slot 3 should repeat frame 0.
+        assert_eq!(&t[3 * fsz..4 * fsz], &t[0..fsz]);
+    }
+
+    #[test]
+    fn det_labels_one_hot_when_present() {
+        let frames = mk_frames(2, 32);
+        let truths: Vec<&GroundTruth> = frames.iter().map(|f| &f.truth).collect();
+        match det_labels(&truths, 4, 4, 4) {
+            Labels::Det { obj, cls } => {
+                assert_eq!(obj.len(), 4 * 16);
+                assert_eq!(cls.len(), 4 * 16 * 4);
+                for (i, &o) in obj.iter().enumerate() {
+                    let row: f32 = cls[i * 4..(i + 1) * 4].iter().sum();
+                    if o > 0.0 {
+                        assert_eq!(row, 1.0, "occupied cell must be one-hot");
+                    } else {
+                        assert_eq!(row, 0.0, "empty cell must be all-zero");
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn seg_labels_one_hot_everywhere() {
+        let frames = mk_frames(2, 32);
+        let truths: Vec<&GroundTruth> = frames.iter().map(|f| &f.truth).collect();
+        match seg_labels(&truths, 3, 8, 4) {
+            Labels::Seg { mask } => {
+                assert_eq!(mask.len(), 3 * 8 * 8 * 5);
+                for cell in mask.chunks(5) {
+                    assert_eq!(cell.iter().sum::<f32>(), 1.0);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn train_batch_shapes() {
+        let frames = mk_frames(5, 48);
+        let refs: Vec<&Frame> = frames.iter().collect();
+        let truths: Vec<&GroundTruth> = frames.iter().map(|f| &f.truth).collect();
+        let b = train_batch(Task::Seg, &refs, &truths, 8, 48, 4, 4);
+        assert_eq!(b.pixels.len(), 8 * 48 * 48 * 3);
+        match b.labels {
+            Labels::Seg { mask } => assert_eq!(mask.len(), 8 * 12 * 12 * 5),
+            _ => unreachable!(),
+        }
+    }
+}

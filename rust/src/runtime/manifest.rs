@@ -1,0 +1,260 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Vision task variants the AOT pipeline emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Det,
+    Seg,
+}
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Det => "det",
+            Task::Seg => "seg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Task> {
+        match s {
+            "det" => Ok(Task::Det),
+            "seg" => Ok(Task::Seg),
+            _ => bail!("unknown task {s:?} (expected det|seg)"),
+        }
+    }
+}
+
+/// Tensor spec (dtype is always f32 in this pipeline).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One HLO artifact: file plus input/output signatures.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Per-task metadata.
+#[derive(Debug, Clone)]
+pub struct TaskMeta {
+    pub param_count: usize,
+    pub head_out: usize,
+    pub init_file: PathBuf,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub classes: usize,
+    pub grid: usize,
+    pub resolutions: Vec<usize>,
+    pub train_batch: usize,
+    pub infer_batch: usize,
+    pub feature_res: usize,
+    pub embed_dim: usize,
+    pub init_seed: u64,
+    pub tasks: BTreeMap<&'static str, TaskMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let mut tasks = BTreeMap::new();
+        for task in [Task::Det, Task::Seg] {
+            let tj = j.get("tasks")?.get(task.name())?;
+            tasks.insert(
+                task.name(),
+                TaskMeta {
+                    param_count: tj.get("param_count")?.as_usize()?,
+                    head_out: tj.get("head_out")?.as_usize()?,
+                    init_file: dir.join(tj.get("init_file")?.as_str()?),
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in j.get("artifacts")?.as_obj()? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                aj.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|sj| {
+                        Ok(TensorSpec {
+                            shape: sj.get("shape")?.usize_array()?,
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(aj.get("file")?.as_str()?),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            classes: j.get("classes")?.as_usize()?,
+            grid: j.get("grid")?.as_usize()?,
+            resolutions: j.get("resolutions")?.usize_array()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            infer_batch: j.get("infer_batch")?.as_usize()?,
+            feature_res: j.get("feature_res")?.as_usize()?,
+            embed_dim: j.get("embed_dim")?.as_usize()?,
+            init_seed: j.get("init_seed")?.as_f64()? as u64,
+            tasks,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.classes == 0 || self.grid == 0 {
+            bail!("degenerate manifest: classes/grid zero");
+        }
+        for task in [Task::Det, Task::Seg] {
+            for &r in &self.resolutions {
+                for kind in ["train", "infer"] {
+                    let key = artifact_key(task, kind, r);
+                    let a = self
+                        .artifacts
+                        .get(&key)
+                        .with_context(|| format!("manifest missing artifact {key}"))?;
+                    if !a.file.exists() {
+                        bail!("artifact file missing: {:?}", a.file);
+                    }
+                }
+            }
+            let meta = &self.tasks[task.name()];
+            if !meta.init_file.exists() {
+                bail!("init params missing: {:?}", meta.init_file);
+            }
+        }
+        if !self.artifacts.contains_key("features_r32") {
+            bail!("manifest missing features_r32");
+        }
+        Ok(())
+    }
+
+    pub fn task(&self, task: Task) -> &TaskMeta {
+        &self.tasks[task.name()]
+    }
+
+    pub fn artifact(&self, task: Task, kind: &str, res: usize) -> Result<&ArtifactSpec> {
+        let key = artifact_key(task, kind, res);
+        self.artifacts
+            .get(&key)
+            .with_context(|| format!("no artifact {key} (resolutions: {:?})", self.resolutions))
+    }
+
+    /// Load a task's initial parameter vector (raw little-endian f32).
+    pub fn init_params(&self, task: Task) -> Result<Vec<f32>> {
+        let meta = self.task(task);
+        let bytes = std::fs::read(&meta.init_file)
+            .with_context(|| format!("reading {:?}", meta.init_file))?;
+        if bytes.len() != meta.param_count * 4 {
+            bail!(
+                "init file {:?} has {} bytes, expected {}",
+                meta.init_file,
+                bytes.len(),
+                meta.param_count * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Canonical artifact key, e.g. `det_train_r32`.
+pub fn artifact_key(task: Task, kind: &str, res: usize) -> String {
+    format!("{}_{}_r{}", task.name(), kind, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_and_validates_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.classes, 4);
+        assert_eq!(m.grid, 4);
+        assert_eq!(m.resolutions, vec![16, 32, 48]);
+        assert_eq!(m.train_batch, 8);
+        assert_eq!(m.infer_batch, 16);
+        assert_eq!(m.embed_dim, 96);
+        assert!(m.task(Task::Det).param_count > 5000);
+        assert_eq!(m.task(Task::Det).param_count, m.task(Task::Seg).param_count);
+    }
+
+    #[test]
+    fn artifact_signatures_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.artifact(Task::Det, "train", 32).unwrap();
+        // (theta, mom, x, y_obj, y_cls, lr)
+        assert_eq!(a.inputs.len(), 6);
+        assert_eq!(a.inputs[0].shape, vec![m.task(Task::Det).param_count]);
+        assert_eq!(a.inputs[2].shape, vec![m.train_batch, 32, 32, 3]);
+        assert_eq!(a.inputs[5].shape, Vec::<usize>::new());
+        // (theta', mom', loss)
+        assert_eq!(a.outputs.len(), 3);
+        let i = m.artifact(Task::Det, "infer", 48).unwrap();
+        assert_eq!(i.inputs.len(), 2);
+        assert_eq!(i.outputs.len(), 2);
+        let s = m.artifact(Task::Seg, "infer", 16).unwrap();
+        assert_eq!(s.outputs[0].shape, vec![m.infer_batch, 4, 4, m.classes + 1]);
+    }
+
+    #[test]
+    fn init_params_load() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let theta = m.init_params(Task::Det).unwrap();
+        assert_eq!(theta.len(), m.task(Task::Det).param_count);
+        // He-init weights: non-trivial spread, finite.
+        assert!(theta.iter().all(|v| v.is_finite()));
+        let nonzero = theta.iter().filter(|v| **v != 0.0).count();
+        assert!(nonzero > theta.len() / 2);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.artifact(Task::Det, "train", 99).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//! Python never runs here — the artifacts are the entire ML stack.
+
+pub mod batch;
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{DetPred, Engine, EngineStats, Labels, ModelState, SegPred, TrainBatch};
+pub use manifest::{artifact_key, Manifest, Task};

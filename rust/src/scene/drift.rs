@@ -1,0 +1,441 @@
+//! Latent scene state and its drift dynamics.
+//!
+//! Every camera's appearance distribution is governed by a [`SceneState`]:
+//! illumination, background palette/texture, weather, object-class mix,
+//! object scale and clutter. Data drift — the phenomenon ECCO exists to
+//! handle — is a trajectory through this state space: a slow
+//! Ornstein-Uhlenbeck wander plus discrete [`DriftEvent`]s (rain onset,
+//! lighting shifts, zone transitions).
+//!
+//! Cameras in the same *region* share one drift process (spatially
+//! correlated drift); each camera adds a small fixed offset so co-located
+//! cameras are similar but not identical. The offset magnitude is the
+//! similarity knob used by the Fig. 8 experiment.
+
+use crate::util::rng::Pcg32;
+
+/// Number of object classes (matches python/compile/model.py K).
+pub const K: usize = 4;
+/// Detection grid (matches model GRID).
+pub const GRID: usize = 4;
+
+/// The latent appearance distribution of a scene at an instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SceneState {
+    /// Global light level, ~0.25 (night) .. 1.4 (noon).
+    pub illumination: f32,
+    /// Background base colour (RGB, 0..1).
+    pub palette: [f32; 3],
+    /// Spatial frequency of background texture (1..8).
+    pub texture_freq: f32,
+    /// Texture contrast (0..1).
+    pub contrast: f32,
+    /// Rain intensity (0..1): darkens scene, adds streaks, blurs objects.
+    pub rain: f32,
+    /// Relative frequency of each object class (unnormalised, >= 0).
+    pub class_mix: [f32; K],
+    /// Object size relative to a grid cell (0.4..1.4).
+    pub obj_scale: f32,
+    /// Expected number of objects per frame (0.5..4).
+    pub clutter: f32,
+    /// Object brightness multiplier (0.4..1.5).
+    pub obj_brightness: f32,
+    /// Appearance shift in [0,1]: rotates object colours (sodium lighting,
+    /// sensor white-balance, novel object liveries). This is the drift
+    /// component that directly invalidates a student's class-colour
+    /// associations — the "new data patterns" axis of the paper's drift.
+    pub hue_shift: f32,
+}
+
+impl SceneState {
+    /// A neutral daytime suburban scene — the distribution the students are
+    /// pre-trained on.
+    pub fn default_day() -> SceneState {
+        SceneState {
+            illumination: 1.0,
+            palette: [0.45, 0.5, 0.42],
+            texture_freq: 3.0,
+            contrast: 0.5,
+            rain: 0.0,
+            class_mix: [1.0, 1.0, 1.0, 1.0],
+            obj_scale: 1.0,
+            clutter: 2.2,
+            obj_brightness: 1.0,
+            hue_shift: 0.0,
+        }
+    }
+
+    /// Clamp every component into its physical range.
+    pub fn clamp(&mut self) {
+        self.illumination = self.illumination.clamp(0.25, 1.4);
+        for c in &mut self.palette {
+            *c = c.clamp(0.05, 0.95);
+        }
+        self.texture_freq = self.texture_freq.clamp(1.0, 8.0);
+        self.contrast = self.contrast.clamp(0.05, 1.0);
+        self.rain = self.rain.clamp(0.0, 1.0);
+        for m in &mut self.class_mix {
+            *m = m.clamp(0.02, 4.0);
+        }
+        self.obj_scale = self.obj_scale.clamp(0.4, 1.4);
+        self.clutter = self.clutter.clamp(0.5, 4.0);
+        self.obj_brightness = self.obj_brightness.clamp(0.4, 1.5);
+        self.hue_shift = self.hue_shift.clamp(0.0, 1.0);
+    }
+
+    /// Weighted distance between two states — the "true" drift magnitude
+    /// (used by tests and as ground truth when validating grouping).
+    pub fn distance(&self, other: &SceneState) -> f32 {
+        let mut d = 0.0f32;
+        d += 2.0 * (self.illumination - other.illumination).powi(2);
+        for i in 0..3 {
+            d += 2.0 * (self.palette[i] - other.palette[i]).powi(2);
+        }
+        d += 0.05 * (self.texture_freq - other.texture_freq).powi(2);
+        d += (self.contrast - other.contrast).powi(2);
+        d += 2.0 * (self.rain - other.rain).powi(2);
+        for i in 0..K {
+            d += 0.25 * (self.class_mix[i] - other.class_mix[i]).powi(2);
+        }
+        d += (self.obj_scale - other.obj_scale).powi(2);
+        d += 0.1 * (self.clutter - other.clutter).powi(2);
+        d += (self.obj_brightness - other.obj_brightness).powi(2);
+        d += 3.0 * (self.hue_shift - other.hue_shift).powi(2);
+        d.sqrt()
+    }
+
+    /// Blend two states: `self*(1-w) + other*w`.
+    pub fn blend(&self, other: &SceneState, w: f32) -> SceneState {
+        let lerp = |a: f32, b: f32| a + (b - a) * w;
+        let mut out = SceneState {
+            illumination: lerp(self.illumination, other.illumination),
+            palette: [
+                lerp(self.palette[0], other.palette[0]),
+                lerp(self.palette[1], other.palette[1]),
+                lerp(self.palette[2], other.palette[2]),
+            ],
+            texture_freq: lerp(self.texture_freq, other.texture_freq),
+            contrast: lerp(self.contrast, other.contrast),
+            rain: lerp(self.rain, other.rain),
+            class_mix: [
+                lerp(self.class_mix[0], other.class_mix[0]),
+                lerp(self.class_mix[1], other.class_mix[1]),
+                lerp(self.class_mix[2], other.class_mix[2]),
+                lerp(self.class_mix[3], other.class_mix[3]),
+            ],
+            obj_scale: lerp(self.obj_scale, other.obj_scale),
+            clutter: lerp(self.clutter, other.clutter),
+            obj_brightness: lerp(self.obj_brightness, other.obj_brightness),
+            hue_shift: lerp(self.hue_shift, other.hue_shift),
+        };
+        out.clamp();
+        out
+    }
+
+    /// Compose this (region drift) state on top of a zone base: the zone
+    /// provides the absolute appearance, and this state's *delta from the
+    /// default day* rides on top. With a Suburban zone (== default day) the
+    /// result is exactly this state, so static and mobile cameras share
+    /// drift semantics; entering a tunnel shifts the whole operating point
+    /// while region-wide events (rain, appearance shifts) still apply fully.
+    pub fn compose_on(&self, zone_base: &SceneState) -> SceneState {
+        let d = SceneState::default_day();
+        let add = |z: f32, s: f32, r: f32| z + (s - r);
+        let mut out = SceneState {
+            illumination: add(zone_base.illumination, self.illumination, d.illumination),
+            palette: [
+                add(zone_base.palette[0], self.palette[0], d.palette[0]),
+                add(zone_base.palette[1], self.palette[1], d.palette[1]),
+                add(zone_base.palette[2], self.palette[2], d.palette[2]),
+            ],
+            texture_freq: add(zone_base.texture_freq, self.texture_freq, d.texture_freq),
+            contrast: add(zone_base.contrast, self.contrast, d.contrast),
+            rain: add(zone_base.rain, self.rain, d.rain),
+            class_mix: [
+                add(zone_base.class_mix[0], self.class_mix[0], d.class_mix[0]),
+                add(zone_base.class_mix[1], self.class_mix[1], d.class_mix[1]),
+                add(zone_base.class_mix[2], self.class_mix[2], d.class_mix[2]),
+                add(zone_base.class_mix[3], self.class_mix[3], d.class_mix[3]),
+            ],
+            obj_scale: add(zone_base.obj_scale, self.obj_scale, d.obj_scale),
+            clutter: add(zone_base.clutter, self.clutter, d.clutter),
+            obj_brightness: add(zone_base.obj_brightness, self.obj_brightness, d.obj_brightness),
+            hue_shift: add(zone_base.hue_shift, self.hue_shift, d.hue_shift),
+        };
+        out.clamp();
+        out
+    }
+
+    /// Apply a deterministic per-camera perturbation of magnitude `scale`.
+    pub fn with_offset(&self, seed: u64, scale: f32) -> SceneState {
+        let mut rng = Pcg32::new(seed, 17);
+        let mut s = self.clone();
+        s.illumination += scale * 0.15 * rng.normal();
+        for c in &mut s.palette {
+            *c += scale * 0.08 * rng.normal();
+        }
+        s.texture_freq += scale * 0.8 * rng.normal();
+        s.contrast += scale * 0.1 * rng.normal();
+        for m in &mut s.class_mix {
+            *m += scale * 0.4 * rng.normal();
+        }
+        s.obj_scale += scale * 0.12 * rng.normal();
+        s.clutter += scale * 0.5 * rng.normal();
+        s.obj_brightness += scale * 0.12 * rng.normal();
+        s.hue_shift += scale * 0.08 * rng.normal().abs();
+        s.clamp();
+        s
+    }
+}
+
+/// A discrete drift event applied to a region's state.
+#[derive(Debug, Clone)]
+pub enum DriftEvent {
+    /// Sudden rain with the given intensity (Fig. 8's weather drift).
+    Rain(f32),
+    /// Lighting change (e.g. dusk): multiplies illumination.
+    Lighting(f32),
+    /// Background palette shift towards a target colour.
+    Palette([f32; 3]),
+    /// Object class mix replacement (e.g. trucks appear).
+    ClassShift([f32; K]),
+    /// Composite urban transition (palette+texture+clutter), Fig. 9 style.
+    ZoneChange(Zone),
+    /// Object appearance shift (colour remap) of the given strength.
+    Appearance(f32),
+}
+
+/// Zone archetypes for the region map (mobile-camera scenarios).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Zone {
+    Suburban,
+    Urban,
+    Tunnel,
+    Park,
+    Highway,
+}
+
+impl Zone {
+    /// The base appearance of each zone archetype.
+    pub fn base_state(self) -> SceneState {
+        let mut s = SceneState::default_day();
+        match self {
+            Zone::Suburban => {}
+            Zone::Urban => {
+                s.palette = [0.55, 0.55, 0.6];
+                s.texture_freq = 6.0;
+                s.contrast = 0.75;
+                s.clutter = 3.2;
+                s.obj_scale = 0.8;
+                s.hue_shift = 0.3; // different vehicle liveries downtown
+                s.class_mix = [1.6, 0.7, 1.3, 0.4];
+            }
+            Zone::Tunnel => {
+                s.illumination = 0.28;
+                s.palette = [0.25, 0.22, 0.2];
+                s.texture_freq = 1.5;
+                s.contrast = 0.25;
+                s.clutter = 1.2;
+                s.obj_brightness = 0.5;
+                s.hue_shift = 0.8; // sodium tunnel lighting remaps colours
+                s.class_mix = [1.2, 1.2, 0.3, 0.3];
+            }
+            Zone::Park => {
+                s.palette = [0.3, 0.6, 0.3];
+                s.texture_freq = 4.5;
+                s.contrast = 0.6;
+                s.clutter = 1.5;
+                s.class_mix = [0.4, 1.8, 0.6, 1.2];
+            }
+            Zone::Highway => {
+                s.palette = [0.5, 0.5, 0.52];
+                s.texture_freq = 2.0;
+                s.clutter = 2.8;
+                s.obj_scale = 1.1;
+                s.class_mix = [2.0, 0.4, 1.2, 0.6];
+            }
+        }
+        s
+    }
+}
+
+/// Ornstein-Uhlenbeck drift around an anchor state plus event jumps.
+#[derive(Debug, Clone)]
+pub struct DriftProcess {
+    /// Current state.
+    pub state: SceneState,
+    /// Anchor the OU process reverts towards (events move the anchor).
+    pub anchor: SceneState,
+    /// Wander volatility (per sqrt-second).
+    pub volatility: f32,
+    /// Mean-reversion rate (per second).
+    pub reversion: f32,
+    rng: Pcg32,
+}
+
+impl DriftProcess {
+    pub fn new(initial: SceneState, volatility: f32, seed: u64) -> DriftProcess {
+        DriftProcess {
+            anchor: initial.clone(),
+            state: initial,
+            volatility,
+            reversion: 0.02,
+            rng: Pcg32::new(seed, 3),
+        }
+    }
+
+    /// Advance the process by `dt` seconds.
+    pub fn step(&mut self, dt: f64) {
+        let dt = dt as f32;
+        let sq = dt.sqrt() * self.volatility;
+        let rv = self.reversion * dt;
+        let mut n = |s: &mut f32, a: f32, w: f32| {
+            *s += (a - *s) * rv + sq * w * self.rng.normal();
+        };
+        let anchor = self.anchor.clone();
+        n(&mut self.state.illumination, anchor.illumination, 0.06);
+        for i in 0..3 {
+            n(&mut self.state.palette[i], anchor.palette[i], 0.03);
+        }
+        n(&mut self.state.texture_freq, anchor.texture_freq, 0.25);
+        n(&mut self.state.contrast, anchor.contrast, 0.04);
+        n(&mut self.state.rain, anchor.rain, 0.02);
+        for i in 0..K {
+            n(&mut self.state.class_mix[i], anchor.class_mix[i], 0.12);
+        }
+        n(&mut self.state.obj_scale, anchor.obj_scale, 0.04);
+        n(&mut self.state.clutter, anchor.clutter, 0.15);
+        n(&mut self.state.obj_brightness, anchor.obj_brightness, 0.04);
+        n(&mut self.state.hue_shift, anchor.hue_shift, 0.03);
+        self.state.clamp();
+    }
+
+    /// Apply an event: moves both anchor and current state (a jump the OU
+    /// wander then orbits).
+    pub fn apply(&mut self, event: &DriftEvent) {
+        match event {
+            DriftEvent::Rain(intensity) => {
+                self.anchor.rain = *intensity;
+                self.state.rain = *intensity;
+                self.anchor.illumination *= 1.0 - 0.35 * intensity;
+                self.state.illumination *= 1.0 - 0.35 * intensity;
+                self.anchor.contrast *= 1.0 - 0.3 * intensity;
+                self.state.contrast *= 1.0 - 0.3 * intensity;
+            }
+            DriftEvent::Lighting(mult) => {
+                self.anchor.illumination *= mult;
+                self.state.illumination *= mult;
+                self.anchor.obj_brightness *= mult.sqrt();
+                self.state.obj_brightness *= mult.sqrt();
+            }
+            DriftEvent::Palette(target) => {
+                self.anchor.palette = *target;
+                self.state.palette = *target;
+            }
+            DriftEvent::ClassShift(mix) => {
+                self.anchor.class_mix = *mix;
+                self.state.class_mix = *mix;
+            }
+            DriftEvent::Appearance(h) => {
+                self.anchor.hue_shift = *h;
+                self.state.hue_shift = *h;
+            }
+            DriftEvent::ZoneChange(zone) => {
+                let base = zone.base_state();
+                self.anchor = base.clone();
+                // The visible state snaps most of the way (drive into a
+                // tunnel: the change is fast), keeping a trace of history.
+                self.state = self.state.blend(&base, 0.85);
+            }
+        }
+        self.anchor.clamp();
+        self.state.clamp();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_state_within_ranges() {
+        let mut s = SceneState::default_day();
+        let before = s.clone();
+        s.clamp();
+        assert_eq!(s, before, "default state must already be in range");
+    }
+
+    #[test]
+    fn distance_zero_iff_same() {
+        let s = SceneState::default_day();
+        assert_eq!(s.distance(&s), 0.0);
+        let mut t = s.clone();
+        t.illumination = 0.5;
+        assert!(s.distance(&t) > 0.1);
+    }
+
+    #[test]
+    fn blend_endpoints() {
+        let a = SceneState::default_day();
+        let b = Zone::Tunnel.base_state();
+        assert!(a.blend(&b, 0.0).distance(&a) < 1e-6);
+        assert!(a.blend(&b, 1.0).distance(&b) < 1e-6);
+        let mid = a.blend(&b, 0.5);
+        assert!(mid.distance(&a) > 0.0 && mid.distance(&b) > 0.0);
+    }
+
+    #[test]
+    fn offsets_deterministic_and_scaled() {
+        let s = SceneState::default_day();
+        let a = s.with_offset(42, 0.2);
+        let b = s.with_offset(42, 0.2);
+        assert!(a.distance(&b) < 1e-6);
+        let small = s.distance(&s.with_offset(7, 0.05));
+        let large = s.distance(&s.with_offset(7, 0.8));
+        assert!(small < large, "offset scale must grow distance: {small} vs {large}");
+    }
+
+    #[test]
+    fn ou_wanders_but_reverts() {
+        let mut p = DriftProcess::new(SceneState::default_day(), 0.05, 1);
+        let anchor = p.anchor.clone();
+        for _ in 0..600 {
+            p.step(1.0);
+        }
+        // Should wander, but stay in the anchor's neighbourhood.
+        let d = p.state.distance(&anchor);
+        assert!(d > 0.0 && d < 1.5, "drifted too far or not at all: {d}");
+    }
+
+    #[test]
+    fn rain_event_darkens() {
+        let mut p = DriftProcess::new(SceneState::default_day(), 0.01, 2);
+        let before = p.state.illumination;
+        p.apply(&DriftEvent::Rain(0.9));
+        assert!(p.state.rain > 0.8);
+        assert!(p.state.illumination < before);
+    }
+
+    #[test]
+    fn zone_change_moves_towards_base() {
+        let mut p = DriftProcess::new(SceneState::default_day(), 0.01, 3);
+        let tunnel = Zone::Tunnel.base_state();
+        let before = p.state.distance(&tunnel);
+        p.apply(&DriftEvent::ZoneChange(Zone::Tunnel));
+        let after = p.state.distance(&tunnel);
+        assert!(after < before * 0.5, "{after} !< {before}");
+    }
+
+    #[test]
+    fn zones_are_mutually_distant() {
+        let zones = [Zone::Suburban, Zone::Urban, Zone::Tunnel, Zone::Park];
+        for (i, a) in zones.iter().enumerate() {
+            for b in zones.iter().skip(i + 1) {
+                assert!(
+                    a.base_state().distance(&b.base_state()) > 0.3,
+                    "{a:?} vs {b:?} too similar"
+                );
+            }
+        }
+    }
+}

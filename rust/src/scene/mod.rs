@@ -1,0 +1,346 @@
+//! Scene simulator: the dataset substrate.
+//!
+//! Replaces the paper's CityFlow / MDOT / CARLA footage with a synthetic
+//! world (see DESIGN.md §2 for the substitution argument): regions own
+//! drift processes, cameras (static or mobile) observe a region's state
+//! plus a per-camera offset, and [`render`] turns a state into pixels +
+//! ground truth. Mobile cameras traverse a zone map, so their appearance
+//! distribution changes with position — the Fig. 9 route-divergence
+//! scenario falls out of camera trajectories.
+
+pub mod drift;
+pub mod render;
+pub mod scenario;
+
+pub use drift::{DriftEvent, DriftProcess, SceneState, Zone, GRID, K};
+pub use render::{render, Frame, GroundTruth, Obj};
+
+use crate::util::rng::Pcg32;
+
+/// Camera mount type: governs both motion and appearance characteristics.
+#[derive(Debug, Clone)]
+pub enum Mount {
+    /// High pole/roof mount: small, distant objects (traffic cameras).
+    StaticHigh,
+    /// Low mount: larger objects.
+    StaticLow,
+    /// Vehicle/drone mount following waypoints (normalised map coords);
+    /// scene content shifts quickly with motion.
+    Mobile {
+        waypoints: Vec<(f32, f32)>,
+        /// Map units per second.
+        speed: f32,
+    },
+}
+
+/// A camera in the world.
+#[derive(Debug, Clone)]
+pub struct Camera {
+    pub id: usize,
+    /// Region whose drift process this camera observes.
+    pub region: usize,
+    /// Static position, or starting point for mobile cameras.
+    pub pos: (f32, f32),
+    pub mount: Mount,
+    /// Seed of the fixed per-camera appearance offset.
+    pub offset_seed: u64,
+    /// Magnitude of that offset: 0 = identical to region state. This is the
+    /// similarity knob (Fig. 8).
+    pub offset_scale: f32,
+}
+
+impl Camera {
+    /// Position at time `t` (static cameras never move).
+    pub fn position(&self, t: f64) -> (f32, f32) {
+        match &self.mount {
+            Mount::StaticHigh | Mount::StaticLow => self.pos,
+            Mount::Mobile { waypoints, speed } => {
+                if waypoints.len() < 2 {
+                    return self.pos;
+                }
+                let mut remaining = (*speed as f64 * t) as f32;
+                let mut prev = waypoints[0];
+                for &next in &waypoints[1..] {
+                    let seg = ((next.0 - prev.0).powi(2) + (next.1 - prev.1).powi(2)).sqrt();
+                    if remaining <= seg || seg == 0.0 {
+                        let w = if seg == 0.0 { 0.0 } else { remaining / seg };
+                        return (prev.0 + (next.0 - prev.0) * w, prev.1 + (next.1 - prev.1) * w);
+                    }
+                    remaining -= seg;
+                    prev = next;
+                }
+                *waypoints.last().unwrap()
+            }
+        }
+    }
+
+    fn mount_state(&self, mut state: SceneState) -> SceneState {
+        match self.mount {
+            Mount::StaticHigh => {
+                // High mounts see small, distant objects: resolution matters.
+                state.obj_scale *= 0.55;
+                state.clutter *= 1.2;
+            }
+            Mount::StaticLow => {}
+            Mount::Mobile { .. } => {
+                // Mobile mounts see nearer, larger objects.
+                state.obj_scale *= 1.15;
+            }
+        }
+        state.clamp();
+        state
+    }
+}
+
+/// A rectangular zone map for mobile scenarios (normalised [0,1)^2 coords).
+#[derive(Debug, Clone)]
+pub struct ZoneMap {
+    pub cells: Vec<Vec<Zone>>,
+}
+
+impl ZoneMap {
+    pub fn uniform(zone: Zone) -> ZoneMap {
+        ZoneMap {
+            cells: vec![vec![zone]],
+        }
+    }
+
+    /// Zone at a normalised position.
+    pub fn zone_at(&self, pos: (f32, f32)) -> Zone {
+        let rows = self.cells.len();
+        let cols = self.cells[0].len();
+        let iy = ((pos.1.clamp(0.0, 0.999)) * rows as f32) as usize;
+        let ix = ((pos.0.clamp(0.0, 0.999)) * cols as f32) as usize;
+        self.cells[iy.min(rows - 1)][ix.min(cols - 1)]
+    }
+}
+
+/// The simulated world: regions (drift processes), a zone map, cameras,
+/// and a schedule of drift events.
+pub struct World {
+    pub regions: Vec<DriftProcess>,
+    pub map: ZoneMap,
+    pub cameras: Vec<Camera>,
+    /// (time, region, event), sorted by time; applied during [`advance`].
+    pub events: Vec<(f64, usize, DriftEvent)>,
+    pub time: f64,
+    next_event: usize,
+    frame_counter: u64,
+}
+
+impl World {
+    pub fn new(regions: Vec<DriftProcess>, map: ZoneMap, cameras: Vec<Camera>) -> World {
+        World {
+            regions,
+            map,
+            cameras,
+            events: Vec::new(),
+            time: 0.0,
+            next_event: 0,
+            frame_counter: 0,
+        }
+    }
+
+    /// Schedule events (must be called before advancing past their times).
+    pub fn schedule(&mut self, mut events: Vec<(f64, usize, DriftEvent)>) {
+        self.events.append(&mut events);
+        self.events
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.next_event = self
+            .events
+            .iter()
+            .position(|(t, _, _)| *t >= self.time)
+            .unwrap_or(self.events.len());
+    }
+
+    /// Advance simulated time by `dt` seconds, stepping drift processes and
+    /// firing due events.
+    pub fn advance(&mut self, dt: f64) {
+        let target = self.time + dt;
+        while self.next_event < self.events.len() && self.events[self.next_event].0 <= target {
+            let (t, region, event) = self.events[self.next_event].clone();
+            // Step processes up to the event time first.
+            let step = t - self.time;
+            if step > 0.0 {
+                for r in &mut self.regions {
+                    r.step(step);
+                }
+                self.time = t;
+            }
+            self.regions[region].apply(&event);
+            self.next_event += 1;
+        }
+        let step = target - self.time;
+        if step > 0.0 {
+            for r in &mut self.regions {
+                r.step(step);
+            }
+        }
+        self.time = target;
+    }
+
+    /// The effective appearance distribution camera `cam` observes *now*.
+    pub fn camera_state(&self, cam: usize) -> SceneState {
+        let camera = &self.cameras[cam];
+        let mut state = self.regions[camera.region].state.clone();
+        if let Mount::Mobile { .. } = camera.mount {
+            // The zone under the camera sets the absolute operating point;
+            // the region's drift delta composes on top (see compose_on).
+            let zone = self.map.zone_at(camera.position(self.time));
+            state = state.compose_on(&zone.base_state());
+        }
+        let state = camera.mount_state(state);
+        state.with_offset(camera.offset_seed, camera.offset_scale)
+    }
+
+    /// Render one frame from camera `cam` at resolution `res`. Consecutive
+    /// calls produce distinct frames (fresh object populations) from the
+    /// current distribution.
+    pub fn capture(&mut self, cam: usize, res: usize) -> Frame {
+        let state = self.camera_state(cam);
+        self.frame_counter += 1;
+        let seed = frame_seed(cam as u64, self.time, self.frame_counter);
+        render(&state, res, seed)
+    }
+
+    /// Render an evaluation batch: `n` fresh frames from camera `cam`'s
+    /// *current* distribution, seeded independently of training captures so
+    /// eval data is held out.
+    pub fn eval_frames(&self, cam: usize, res: usize, n: usize, salt: u64) -> Vec<Frame> {
+        let state = self.camera_state(cam);
+        (0..n)
+            .map(|i| {
+                let seed = frame_seed(cam as u64 ^ 0xe7a1, self.time, salt.wrapping_add(i as u64));
+                render(&state, res, seed)
+            })
+            .collect()
+    }
+}
+
+fn frame_seed(cam: u64, t: f64, counter: u64) -> u64 {
+    let tq = (t * 10.0) as u64;
+    let mut h = cam
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(tq.wrapping_mul(0xbf58_476d_1ce4_e5b9))
+        .wrapping_add(counter.wrapping_mul(0x94d0_49bb_1331_11eb));
+    h ^= h >> 31;
+    h = h.wrapping_mul(0xd6e8_feb8_6659_fd93);
+    h ^= h >> 29;
+    h
+}
+
+/// Deterministic per-camera offset seed derived from a scenario seed.
+pub fn offset_seed(scenario_seed: u64, cam: usize) -> u64 {
+    let mut rng = Pcg32::new(scenario_seed, cam as u64 + 101);
+    rng.next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_region_world(n_cams: usize, offset_scale: f32) -> World {
+        let region = DriftProcess::new(SceneState::default_day(), 0.02, 5);
+        let cameras = (0..n_cams)
+            .map(|id| Camera {
+                id,
+                region: 0,
+                pos: (0.5, 0.5),
+                mount: Mount::StaticHigh,
+                offset_seed: offset_seed(1, id),
+                offset_scale,
+            })
+            .collect();
+        World::new(vec![region], ZoneMap::uniform(Zone::Suburban), cameras)
+    }
+
+    #[test]
+    fn colocated_cameras_correlate() {
+        let mut w = one_region_world(3, 0.08);
+        w.schedule(vec![(10.0, 0, DriftEvent::Rain(0.8))]);
+        w.advance(20.0);
+        let s0 = w.camera_state(0);
+        let s1 = w.camera_state(1);
+        // Both cameras must see the rain event.
+        assert!(s0.rain > 0.5 && s1.rain > 0.5);
+        assert!(s0.distance(&s1) < 0.6, "offsets too large");
+    }
+
+    #[test]
+    fn offset_scale_controls_similarity() {
+        let w_tight = one_region_world(2, 0.03);
+        let w_loose = one_region_world(2, 0.9);
+        let d_tight = w_tight.camera_state(0).distance(&w_tight.camera_state(1));
+        let d_loose = w_loose.camera_state(0).distance(&w_loose.camera_state(1));
+        assert!(d_tight < d_loose, "{d_tight} !< {d_loose}");
+    }
+
+    #[test]
+    fn events_fire_in_order() {
+        let mut w = one_region_world(1, 0.0);
+        w.schedule(vec![
+            (30.0, 0, DriftEvent::Lighting(0.5)),
+            (10.0, 0, DriftEvent::Rain(1.0)),
+        ]);
+        w.advance(15.0);
+        assert!(w.camera_state(0).rain > 0.6, "rain due at t=10");
+        let illum_before = w.regions[0].anchor.illumination;
+        w.advance(20.0);
+        assert!(w.regions[0].anchor.illumination < illum_before);
+    }
+
+    #[test]
+    fn mobile_camera_moves_and_changes_zone() {
+        let map = ZoneMap {
+            cells: vec![vec![Zone::Suburban, Zone::Urban]],
+        };
+        let region = DriftProcess::new(SceneState::default_day(), 0.0, 6);
+        let cam = Camera {
+            id: 0,
+            region: 0,
+            pos: (0.1, 0.5),
+            mount: Mount::Mobile {
+                waypoints: vec![(0.1, 0.5), (0.9, 0.5)],
+                speed: 0.01,
+            },
+            offset_seed: 3,
+            offset_scale: 0.0,
+        };
+        let mut w = World::new(vec![region], map, vec![cam]);
+        let early = w.camera_state(0);
+        w.advance(70.0); // moved 0.7 across the map: now in Urban half
+        let late = w.camera_state(0);
+        assert!(w.cameras[0].position(w.time).0 > 0.6);
+        assert!(early.distance(&late) > 0.2, "zone change must shift state");
+    }
+
+    #[test]
+    fn capture_produces_labelled_frames() {
+        let mut w = one_region_world(1, 0.0);
+        let f = w.capture(0, 32);
+        assert_eq!(f.pixels.len(), 32 * 32 * 3);
+        // Default clutter ~2 objects on average; over 20 frames some objects
+        // must appear.
+        let total: usize = (0..20).map(|_| w.capture(0, 32).truth.objects.len()).sum();
+        assert!(total > 5);
+    }
+
+    #[test]
+    fn eval_frames_are_heldout_and_fresh() {
+        let mut w = one_region_world(1, 0.0);
+        let train = w.capture(0, 32);
+        let evals = w.eval_frames(0, 32, 4, 42);
+        assert_eq!(evals.len(), 4);
+        assert_ne!(evals[0].pixels, train.pixels);
+        assert_ne!(evals[0].pixels, evals[1].pixels);
+        // Same salt regenerates identical eval set (needed for fair A/B).
+        let again = w.eval_frames(0, 32, 4, 42);
+        assert_eq!(evals[0].pixels, again[0].pixels);
+    }
+
+    #[test]
+    fn static_camera_never_moves() {
+        let w = one_region_world(1, 0.0);
+        assert_eq!(w.cameras[0].position(0.0), w.cameras[0].position(1e4));
+    }
+}

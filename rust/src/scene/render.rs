@@ -1,0 +1,453 @@
+//! Frame renderer: SceneState -> pixels + ground truth.
+//!
+//! Frames are HWC f32 tensors in [0,1] at any of the supported resolutions.
+//! The renderer is deterministic in `(scene state, frame seed)` so a video
+//! "frame" can be regenerated for teacher labelling, training, and held-out
+//! evaluation without storing pixels.
+//!
+//! Object classes are distinguishable by shape AND colour:
+//!   0 = square (warm red), 1 = disc (green), 2 = triangle (blue),
+//!   3 = cross (yellow).
+//! Illumination / palette / rain modulate both background and objects, so a
+//! student fit on one SceneState degrades under another — the drift signal
+//! the whole system runs on.
+
+use super::drift::{SceneState, GRID, K};
+use crate::util::rng::Pcg32;
+
+/// Base (pre-illumination) colour of each object class.
+pub const CLASS_COLORS: [[f32; 3]; K] = [
+    [0.85, 0.25, 0.2],
+    [0.2, 0.8, 0.3],
+    [0.25, 0.35, 0.9],
+    [0.9, 0.85, 0.2],
+];
+
+/// One rendered object instance.
+#[derive(Debug, Clone)]
+pub struct Obj {
+    /// Class index in 0..K.
+    pub class: usize,
+    /// Centre in normalised [0,1) frame coordinates.
+    pub cx: f32,
+    pub cy: f32,
+    /// Radius in normalised units.
+    pub radius: f32,
+}
+
+impl Obj {
+    /// Grid cell containing the object centre.
+    pub fn cell(&self) -> (usize, usize) {
+        let gy = ((self.cy * GRID as f32) as usize).min(GRID - 1);
+        let gx = ((self.cx * GRID as f32) as usize).min(GRID - 1);
+        (gy, gx)
+    }
+
+    /// Signed membership test in normalised coordinates.
+    pub fn contains(&self, x: f32, y: f32) -> bool {
+        let dx = x - self.cx;
+        let dy = y - self.cy;
+        let r = self.radius;
+        match self.class {
+            0 => dx.abs() < r * 0.85 && dy.abs() < r * 0.85,
+            1 => dx * dx + dy * dy < r * r,
+            2 => {
+                // Upward triangle: apex at cy-r, base at cy+r.
+                dy > -r && dy < r && dx.abs() < (dy + r) * 0.5
+            }
+            _ => (dx.abs() < r * 0.35 && dy.abs() < r) || (dy.abs() < r * 0.35 && dx.abs() < r),
+        }
+    }
+}
+
+/// Ground truth attached to a frame.
+#[derive(Debug, Clone)]
+pub struct GroundTruth {
+    pub objects: Vec<Obj>,
+}
+
+impl GroundTruth {
+    /// Detection labels: objectness [GRID][GRID] and class grid.
+    /// When multiple objects land in one cell the larger one wins.
+    pub fn det_grids(&self) -> ([[f32; GRID]; GRID], [[usize; GRID]; GRID]) {
+        let mut obj = [[0.0f32; GRID]; GRID];
+        let mut cls = [[0usize; GRID]; GRID];
+        let mut best = [[0.0f32; GRID]; GRID];
+        for o in &self.objects {
+            let (gy, gx) = o.cell();
+            if o.radius > best[gy][gx] {
+                best[gy][gx] = o.radius;
+                obj[gy][gx] = 1.0;
+                cls[gy][gx] = o.class;
+            }
+        }
+        (obj, cls)
+    }
+
+    /// Segmentation label grid at an s x s resolution: class K = background,
+    /// otherwise the class of the topmost object covering the cell centre.
+    pub fn mask_grid(&self, s: usize) -> Vec<usize> {
+        let mut mask = vec![K; s * s];
+        for iy in 0..s {
+            for ix in 0..s {
+                let x = (ix as f32 + 0.5) / s as f32;
+                let y = (iy as f32 + 0.5) / s as f32;
+                for o in self.objects.iter().rev() {
+                    if o.contains(x, y) {
+                        mask[iy * s + ix] = o.class;
+                        break;
+                    }
+                }
+            }
+        }
+        mask
+    }
+}
+
+/// A rendered frame: pixels (HWC, res*res*3) + truth + provenance.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub res: usize,
+    pub pixels: Vec<f32>,
+    pub truth: GroundTruth,
+}
+
+impl Frame {
+    /// Raw byte size of this frame before encoding (3 channels, 1 byte per
+    /// channel as a camera would capture).
+    pub fn raw_bytes(&self) -> usize {
+        self.res * self.res * 3
+    }
+}
+
+/// Sample the object population for one frame from the scene state.
+pub fn sample_objects(state: &SceneState, rng: &mut Pcg32) -> Vec<Obj> {
+    // Object count: clutter +- 1, at least 0, at most GRID*GRID/2.
+    let base = state.clutter;
+    let n = (base + rng.range(-1.0, 1.0)).round().max(0.0) as usize;
+    let n = n.min(GRID * GRID / 2);
+    let mut cells: Vec<usize> = (0..GRID * GRID).collect();
+    rng.shuffle(&mut cells);
+    let mut objs = Vec::with_capacity(n);
+    for &cell in cells.iter().take(n) {
+        let gy = cell / GRID;
+        let gx = cell % GRID;
+        let class = rng.weighted(&state.class_mix);
+        let jitter = 0.25 / GRID as f32;
+        let cx = (gx as f32 + 0.5) / GRID as f32 + rng.range(-jitter, jitter);
+        let cy = (gy as f32 + 0.5) / GRID as f32 + rng.range(-jitter, jitter);
+        let radius = state.obj_scale * rng.range(0.28, 0.44) / GRID as f32;
+        objs.push(Obj {
+            class,
+            cx: cx.clamp(0.02, 0.98),
+            cy: cy.clamp(0.02, 0.98),
+            radius,
+        });
+    }
+    objs
+}
+
+/// Sample unlabeled distractor shapes: background furniture (signage,
+/// shadows, vegetation blobs) that shares geometry with real classes but is
+/// NOT ground truth. Distractors are what keeps the detection task honest —
+/// a student must learn appearance, not "any blob is an object".
+pub fn sample_distractors(state: &SceneState, rng: &mut Pcg32) -> Vec<Obj> {
+    let n = (state.clutter * 0.9 + rng.range(0.0, 1.5)) as usize;
+    (0..n)
+        .map(|_| Obj {
+            class: rng.index(K),
+            cx: rng.range(0.05, 0.95),
+            cy: rng.range(0.05, 0.95),
+            radius: state.obj_scale * rng.range(0.2, 0.45) / GRID as f32,
+        })
+        .collect()
+}
+
+/// Render a frame at `res` from `state`, deterministically in `seed`.
+pub fn render(state: &SceneState, res: usize, seed: u64) -> Frame {
+    let mut rng = Pcg32::new(seed, 11);
+    // Per-frame exposure wobble: consecutive frames of the same scene are
+    // not identical, so a student needs more data to generalise (and frame
+    // rate genuinely buys information).
+    let mut frame_state = state.clone();
+    frame_state.illumination = (state.illumination * rng.range(0.82, 1.18)).clamp(0.2, 1.5);
+    let objects = sample_objects(&frame_state, &mut rng);
+    let distractors = sample_distractors(&frame_state, &mut rng);
+    let pixels = rasterize(&frame_state, &objects, &distractors, res, seed);
+    Frame {
+        res,
+        pixels,
+        truth: GroundTruth { objects },
+    }
+}
+
+/// Rasterize background + distractors + objects into an HWC buffer.
+pub fn rasterize(
+    state: &SceneState,
+    objects: &[Obj],
+    distractors: &[Obj],
+    res: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let mut px = vec![0.0f32; res * res * 3];
+    let noise_seed = (seed ^ 0x5eed_ba5e) as u32;
+    let inv = 1.0 / res as f32;
+    let rain_seed = (seed ^ 0x4a1d_5eed) as u32;
+    for iy in 0..res {
+        let y = (iy as f32 + 0.5) * inv;
+        for ix in 0..res {
+            let x = (ix as f32 + 0.5) * inv;
+            // Background: palette * illumination, textured by value noise.
+            let n = value_noise(
+                x * state.texture_freq,
+                y * state.texture_freq,
+                noise_seed,
+            );
+            let tex = 1.0 + state.contrast * 0.6 * (n - 0.5);
+            let mut c = [
+                state.palette[0] * state.illumination * tex,
+                state.palette[1] * state.illumination * tex,
+                state.palette[2] * state.illumination * tex,
+            ];
+            // Rain: darken + vertical streaks.
+            if state.rain > 0.0 {
+                let streak = value_noise(x * 40.0, y * 4.0, rain_seed);
+                let wet = 1.0 - 0.35 * state.rain;
+                for ch in &mut c {
+                    *ch *= wet;
+                }
+                if streak > 1.0 - 0.15 * state.rain {
+                    for ch in &mut c {
+                        *ch = (*ch + 0.25).min(1.0);
+                    }
+                }
+            }
+            // Distractors first (under real objects): class-shaped and
+            // class-coloured but dimmer/washed-out — the false-positive bait
+            // that keeps the task from saturating. Only brightness and a
+            // palette wash distinguish them from real objects.
+            for (di, d) in distractors.iter().enumerate() {
+                if d.contains(x, y) {
+                    let base = shifted_color(CLASS_COLORS[d.class], state.hue_shift);
+                    let lum = state.obj_brightness * (0.6 + 0.4 * state.illumination);
+                    // Brightness range overlaps the real objects' (0.72-1.18)
+                    // so the task has irreducible ambiguity at the margin.
+                    let dim = 0.55 + 0.08 * ((di % 5) as f32);
+                    for ch in 0..3 {
+                        let ghost = base[ch] * lum * dim + state.palette[ch] * 0.2;
+                        c[ch] = c[ch] * 0.2 + ghost * 0.8;
+                    }
+                }
+            }
+            // Real objects (topmost last), with deterministic per-object
+            // brightness variation.
+            for o in objects {
+                if o.contains(x, y) {
+                    let base = shifted_color(CLASS_COLORS[o.class], state.hue_shift);
+                    let ob = 0.72
+                        + 0.46
+                            * hash2(
+                                (o.cx * 4096.0) as i32,
+                                (o.cy * 4096.0) as i32,
+                                noise_seed ^ 0xb0b,
+                            );
+                    let lum = ob * state.obj_brightness * (0.6 + 0.4 * state.illumination);
+                    let blur = if state.rain > 0.5 { 0.75 } else { 1.0 };
+                    for ch in 0..3 {
+                        c[ch] = c[ch] * (1.0 - blur) + base[ch] * lum * blur;
+                    }
+                }
+            }
+            // Sensor noise: a floor plus a dark-scene term (tunnel/rain
+            // drift is genuinely harder, as for real cameras at night).
+            let noise_std = 0.025 + 0.06 * (1.0 - state.illumination).max(0.0);
+            let off = (iy * res + ix) * 3;
+            for ch in 0..3 {
+                let n = noise_std * gauss_hash(ix as u32, iy as u32, ch as u32, noise_seed);
+                px[off + ch] = (c[ch] + n).clamp(0.0, 1.0);
+            }
+        }
+    }
+    px
+}
+
+/// Object colour under an appearance shift: rotates RGB towards the
+/// channel-permuted colour as `hue_shift` grows (sodium lamps, white
+/// balance, new liveries). At shift 1.0 the colour is fully permuted, so a
+/// class's colour identity is completely remapped.
+#[inline]
+pub fn shifted_color(base: [f32; 3], hue_shift: f32) -> [f32; 3] {
+    let rot = [base[1], base[2], base[0]];
+    [
+        base[0] + (rot[0] - base[0]) * hue_shift,
+        base[1] + (rot[1] - base[1]) * hue_shift,
+        base[2] + (rot[2] - base[2]) * hue_shift,
+    ]
+}
+
+/// Cheap deterministic approximately-gaussian noise in ~[-2.2, 2.2]:
+/// sum of three independent uniforms, centred (Irwin-Hall n=3).
+#[inline]
+fn gauss_hash(ix: u32, iy: u32, ch: u32, seed: u32) -> f32 {
+    let mut acc = 0.0f32;
+    for s in 0..3u32 {
+        acc += hash2(
+            (ix.wrapping_mul(3).wrapping_add(s)) as i32,
+            (iy.wrapping_mul(5).wrapping_add(ch)) as i32,
+            seed.wrapping_add(s.wrapping_mul(0x9e37)),
+        );
+    }
+    (acc - 1.5) * 2.0
+}
+
+#[inline]
+fn hash2(ix: i32, iy: i32, seed: u32) -> f32 {
+    let mut h = (ix as u32).wrapping_mul(0x85eb_ca6b)
+        ^ (iy as u32).wrapping_mul(0xc2b2_ae35)
+        ^ seed.wrapping_mul(0x27d4_eb2f);
+    h ^= h >> 15;
+    h = h.wrapping_mul(0x2c1b_3c6d);
+    h ^= h >> 12;
+    h = h.wrapping_mul(0x297a_2d39);
+    h ^= h >> 15;
+    (h & 0x00ff_ffff) as f32 / 16_777_216.0
+}
+
+/// Bilinear value noise in [0,1].
+pub fn value_noise(x: f32, y: f32, seed: u32) -> f32 {
+    let ix = x.floor() as i32;
+    let iy = y.floor() as i32;
+    let fx = x - ix as f32;
+    let fy = y - iy as f32;
+    let sx = fx * fx * (3.0 - 2.0 * fx);
+    let sy = fy * fy * (3.0 - 2.0 * fy);
+    let v00 = hash2(ix, iy, seed);
+    let v10 = hash2(ix + 1, iy, seed);
+    let v01 = hash2(ix, iy + 1, seed);
+    let v11 = hash2(ix + 1, iy + 1, seed);
+    let a = v00 + (v10 - v00) * sx;
+    let b = v01 + (v11 - v01) * sx;
+    a + (b - a) * sy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::drift::SceneState;
+
+    #[test]
+    fn render_deterministic() {
+        let s = SceneState::default_day();
+        let a = render(&s, 32, 99);
+        let b = render(&s, 32, 99);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.truth.objects.len(), b.truth.objects.len());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let s = SceneState::default_day();
+        let a = render(&s, 32, 1);
+        let b = render(&s, 32, 2);
+        assert_ne!(a.pixels, b.pixels);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let s = SceneState::default_day();
+        let f = render(&s, 48, 5);
+        assert_eq!(f.pixels.len(), 48 * 48 * 3);
+        assert!(f.pixels.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn illumination_changes_brightness() {
+        let mut bright = SceneState::default_day();
+        bright.illumination = 1.3;
+        let mut dark = bright.clone();
+        dark.illumination = 0.3;
+        let fb = rasterize(&bright, &[], &[], 32, 7);
+        let fd = rasterize(&dark, &[], &[], 32, 7);
+        let mb: f32 = fb.iter().sum::<f32>() / fb.len() as f32;
+        let md: f32 = fd.iter().sum::<f32>() / fd.len() as f32;
+        assert!(mb > md * 1.8, "bright {mb} vs dark {md}");
+    }
+
+    #[test]
+    fn objects_visible_in_pixels() {
+        let s = SceneState::default_day();
+        let obj = Obj {
+            class: 0,
+            cx: 0.5,
+            cy: 0.5,
+            radius: 0.12,
+        };
+        let with = rasterize(&s, std::slice::from_ref(&obj), &[], 32, 7);
+        let without = rasterize(&s, &[], &[], 32, 7);
+        let diff: f32 = with
+            .iter()
+            .zip(&without)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1.0, "object did not change pixels: {diff}");
+    }
+
+    #[test]
+    fn det_grids_mark_object_cells() {
+        let truth = GroundTruth {
+            objects: vec![
+                Obj { class: 2, cx: 0.1, cy: 0.1, radius: 0.05 },
+                Obj { class: 1, cx: 0.9, cy: 0.6, radius: 0.05 },
+            ],
+        };
+        let (obj, cls) = truth.det_grids();
+        assert_eq!(obj[0][0], 1.0);
+        assert_eq!(cls[0][0], 2);
+        assert_eq!(obj[2][3], 1.0);
+        assert_eq!(cls[2][3], 1);
+        let total: f32 = obj.iter().flatten().sum();
+        assert_eq!(total, 2.0);
+    }
+
+    #[test]
+    fn mask_grid_covers_object() {
+        let truth = GroundTruth {
+            objects: vec![Obj { class: 1, cx: 0.5, cy: 0.5, radius: 0.2 }],
+        };
+        let mask = truth.mask_grid(8);
+        assert_eq!(mask[4 * 8 + 4], 1, "centre cell must be class 1");
+        assert_eq!(mask[0], K, "corner must be background");
+        let covered = mask.iter().filter(|&&m| m == 1).count();
+        assert!(covered >= 4, "disc should cover several cells: {covered}");
+    }
+
+    #[test]
+    fn class_mix_biases_sampling() {
+        let mut s = SceneState::default_day();
+        s.class_mix = [4.0, 0.02, 0.02, 0.02];
+        s.clutter = 4.0;
+        let mut rng = Pcg32::seeded(1);
+        let mut counts = [0usize; K];
+        for _ in 0..200 {
+            for o in sample_objects(&s, &mut rng) {
+                counts[o.class] += 1;
+            }
+        }
+        assert!(
+            counts[0] > 10 * (counts[1] + 1),
+            "class 0 should dominate: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn value_noise_smooth_and_bounded() {
+        for i in 0..100 {
+            let v = value_noise(i as f32 * 0.13, i as f32 * 0.07, 9);
+            assert!((0.0..=1.0).contains(&v));
+        }
+        // Smoothness: adjacent samples close.
+        let a = value_noise(1.50, 2.50, 9);
+        let b = value_noise(1.51, 2.50, 9);
+        assert!((a - b).abs() < 0.1);
+    }
+}

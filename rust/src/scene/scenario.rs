@@ -1,0 +1,364 @@
+//! Prebuilt worlds for the paper's experiments.
+//!
+//! Each builder returns a [`World`] plus the experiment-relevant structure
+//! (which cameras are truly correlated), so experiment runners and tests
+//! can validate behaviour against ground truth.
+
+use super::drift::{DriftEvent, DriftProcess, SceneState, Zone};
+use super::{offset_seed, Camera, Mount, World, ZoneMap};
+
+/// Default OU volatility for ambient drift: high enough that the
+/// distribution keeps moving within an experiment, so sustained accuracy
+/// requires sustained retraining throughput (the paper's operating regime).
+pub const AMBIENT_VOL: f32 = 0.04;
+
+/// A scenario: a world plus ground-truth correlation structure.
+pub struct Scenario {
+    pub world: World,
+    /// Ground-truth grouping: `groups[g]` lists camera ids that share a
+    /// region (and therefore drift together).
+    pub groups: Vec<Vec<usize>>,
+}
+
+/// N static cameras split into correlated groups; `cams_per_group[i]`
+/// cameras share region `i`. All groups get a synchronized drift event at
+/// `drift_at` seconds (each region gets its own flavour so groups remain
+/// mutually distinct).
+pub fn grouped_static(
+    cams_per_group: &[usize],
+    offset_scale: f32,
+    drift_at: f64,
+    seed: u64,
+) -> Scenario {
+    let mut regions = Vec::new();
+    let mut cameras = Vec::new();
+    let mut groups = Vec::new();
+    let mut id = 0;
+    for (g, &n) in cams_per_group.iter().enumerate() {
+        regions.push(DriftProcess::new(
+            SceneState::default_day().with_offset(seed ^ (g as u64 * 7 + 1), 0.25),
+            AMBIENT_VOL,
+            seed.wrapping_add(g as u64 * 131),
+        ));
+        let mut members = Vec::new();
+        for i in 0..n {
+            // Intersections are geographically separated (inter-group
+            // distance >= 0.3) while co-located cameras sit within ~0.16,
+            // so Alg. 2's location filter can actually discriminate.
+            cameras.push(Camera {
+                id,
+                region: g,
+                pos: (
+                    0.1 + 0.3 * (g % 3) as f32,
+                    0.12 + 0.3 * (g / 3) as f32 + 0.08 * i as f32,
+                ),
+                mount: Mount::StaticHigh,
+                offset_seed: offset_seed(seed, id),
+                offset_scale,
+            });
+            members.push(id);
+            id += 1;
+        }
+        groups.push(members);
+    }
+    let mut world = World::new(regions, ZoneMap::uniform(Zone::Suburban), cameras);
+    if drift_at >= 0.0 {
+        // Each region gets a composite drift: an appearance remap (the
+        // component that truly breaks the student) plus a region-specific
+        // environmental change.
+        let mut events = Vec::new();
+        for g in 0..cams_per_group.len() {
+            let hue = 0.5 + 0.12 * ((g % 4) as f32);
+            events.push((drift_at, g, DriftEvent::Appearance(hue)));
+            let env = match g % 4 {
+                0 => DriftEvent::Rain(0.85),
+                1 => DriftEvent::Lighting(0.4),
+                2 => DriftEvent::Palette([0.66, 0.48, 0.3]),
+                _ => DriftEvent::ClassShift([2.4, 0.2, 1.8, 0.2]),
+            };
+            events.push((drift_at, g, env));
+        }
+        world.schedule(events);
+    }
+    Scenario { world, groups }
+}
+
+/// The Fig. 2(c) motivation scenario: three mobile cameras "flying in
+/// formation" (one shared region, small offsets), drift event at t=0+eps.
+pub fn convoy(n: usize, seed: u64) -> Scenario {
+    let region = DriftProcess::new(SceneState::default_day(), AMBIENT_VOL, seed);
+    let waypoints = vec![(0.05, 0.5), (0.95, 0.5)];
+    let cameras = (0..n)
+        .map(|id| Camera {
+            id,
+            region: 0,
+            pos: waypoints[0],
+            mount: Mount::Mobile {
+                waypoints: waypoints.clone(),
+                speed: 0.001,
+            },
+            offset_seed: offset_seed(seed, id),
+            offset_scale: 0.06,
+        })
+        .collect();
+    let map = ZoneMap {
+        cells: vec![vec![Zone::Suburban, Zone::Suburban, Zone::Urban, Zone::Urban]],
+    };
+    let mut world = World::new(vec![region], map, cameras);
+    world.schedule(vec![
+        (1.0, 0, DriftEvent::Appearance(0.55)),
+        (1.0, 0, DriftEvent::Palette([0.6, 0.45, 0.3])),
+    ]);
+    Scenario {
+        world,
+        groups: vec![(0..n).collect()],
+    }
+}
+
+/// Fig. 8 similarity scenario: three groups of three cameras each at
+/// high / medium / low similarity, rain event at `drift_at`.
+/// Returns (scenario, group names).
+pub fn similarity_triads(drift_at: f64, seed: u64) -> (Scenario, Vec<&'static str>) {
+    // Build three regions; camera triads differ in offset scale AND in how
+    // far apart their regions sit (low similarity = distinct regions).
+    let mut regions = Vec::new();
+    let mut cameras = Vec::new();
+    let mut groups = Vec::new();
+    let specs: [(&str, f32, bool); 3] = [
+        ("high", 0.04, false),  // shared region, tiny offsets
+        ("medium", 0.28, false), // shared region, medium offsets
+        ("low", 0.12, true),    // three DIFFERENT regions
+    ];
+    let mut id = 0;
+    for (g, (_, offset, distinct_regions)) in specs.iter().enumerate() {
+        let mut members = Vec::new();
+        if *distinct_regions {
+            for i in 0..3 {
+                let ridx = regions.len();
+                // Visually similar starting points (small offsets) that will
+                // drift to CONFLICTING appearance mappings: the shared model
+                // cannot disambiguate by background context, which is what
+                // makes low-similarity grouping genuinely unprofitable.
+                regions.push(DriftProcess::new(
+                    SceneState::default_day()
+                        .with_offset(seed ^ (0xd00d + g as u64 * 31 + i as u64), 0.3),
+                    AMBIENT_VOL,
+                    seed.wrapping_add(900 + g as u64 * 13 + i as u64),
+                ));
+                cameras.push(Camera {
+                    id,
+                    region: ridx,
+                    pos: (0.06 * id as f32, 0.8),
+                    mount: Mount::StaticHigh,
+                    offset_seed: offset_seed(seed, id),
+                    offset_scale: *offset,
+                });
+                members.push(id);
+                id += 1;
+            }
+        } else {
+            let ridx = regions.len();
+            regions.push(DriftProcess::new(
+                SceneState::default_day().with_offset(seed ^ (g as u64 + 5), 0.2),
+                AMBIENT_VOL,
+                seed.wrapping_add(g as u64 * 17),
+            ));
+            for _ in 0..3 {
+                cameras.push(Camera {
+                    id,
+                    region: ridx,
+                    pos: (0.06 * id as f32, 0.2),
+                    mount: Mount::StaticHigh,
+                    offset_seed: offset_seed(seed, id),
+                    offset_scale: *offset,
+                });
+                members.push(id);
+                id += 1;
+            }
+        }
+        groups.push(members);
+    }
+    let n_regions = regions.len();
+    let mut world = World::new(regions, ZoneMap::uniform(Zone::Suburban), cameras);
+    // Weather (rain) hits the whole area; but the appearance response is
+    // scene-specific: shared-region triads drift identically, while the
+    // low-similarity triad's three distinct scenes drift to DIFFERENT
+    // appearance points (different materials/liveries under the same
+    // weather) — so one shared model must fit conflicting mappings.
+    let mut weather: Vec<(f64, usize, DriftEvent)> = Vec::new();
+    for r in 0..n_regions {
+        weather.push((drift_at, r, DriftEvent::Rain(0.85)));
+        let hue = if r < 2 { 0.5 } else { 0.2 + 0.35 * (r - 2) as f32 };
+        weather.push((drift_at, r, DriftEvent::Appearance(hue)));
+        if r >= 2 {
+            let mixes = [
+                [2.5, 0.2, 1.5, 0.2],
+                [0.2, 2.5, 0.2, 1.5],
+                [1.5, 0.2, 0.2, 2.5],
+            ];
+            weather.push((drift_at, r, DriftEvent::ClassShift(mixes[(r - 2) % 3])));
+        }
+    }
+    world.schedule(weather);
+    (
+        Scenario {
+            world,
+            groups,
+        },
+        specs.iter().map(|(n, _, _)| *n).collect(),
+    )
+}
+
+/// Fig. 9 dynamic-grouping scenario: three mobile cameras drive
+/// suburban -> urban together; at `split_t`, camera `split_cam` diverges
+/// into a tunnel zone while the others continue on the city road.
+pub fn route_split(split_cam: usize, split_t: f64, seed: u64) -> Scenario {
+    let map = ZoneMap {
+        cells: vec![
+            // Row 0: the city road (suburban then urban).
+            vec![Zone::Suburban, Zone::Suburban, Zone::Urban, Zone::Urban],
+            // Row 1: the tunnel branch.
+            vec![Zone::Suburban, Zone::Tunnel, Zone::Tunnel, Zone::Tunnel],
+        ],
+    };
+    let region = DriftProcess::new(SceneState::default_day(), AMBIENT_VOL, seed);
+    let speed = 0.0025f32;
+    let cameras = (0..3)
+        .map(|id| {
+            // All start on the road; the split camera's waypoints dip into
+            // row 1 (the tunnel) at split progress.
+            let split_x = ((speed as f64 * split_t) as f32).clamp(0.1, 0.8);
+            let waypoints = if id == split_cam {
+                // Turn off the road at the split point and descend into the
+                // tunnel row of the zone map.
+                vec![
+                    (0.05, 0.25),
+                    (split_x, 0.25),
+                    (split_x, 0.75),
+                    (0.95, 0.75),
+                ]
+            } else {
+                vec![(0.05, 0.25), (0.95, 0.25)]
+            };
+            Camera {
+                id,
+                region: 0,
+                pos: (0.05, 0.25),
+                mount: Mount::Mobile {
+                    waypoints,
+                    speed,
+                },
+                offset_seed: offset_seed(seed, id),
+                offset_scale: 0.05,
+            }
+        })
+        .collect();
+    let world = World::new(vec![region], map, cameras);
+    Scenario {
+        world,
+        groups: vec![vec![0, 1, 2]],
+    }
+}
+
+/// Fig. 10 allocator scenario: two groups — three co-located drones plus one
+/// distant loner — hit by the SAME drift flavour at t≈0 (so per-model
+/// learning dynamics are comparable and the allocator is the only variable).
+pub fn three_plus_one(seed: u64) -> Scenario {
+    let mut sc = grouped_static(&[3, 1], 0.06, -1.0, seed);
+    let mut events = Vec::new();
+    for r in 0..2 {
+        events.push((1.0, r, DriftEvent::Appearance(0.5)));
+        events.push((1.0, r, DriftEvent::Rain(0.85)));
+    }
+    sc.world.schedule(events);
+    sc
+}
+
+/// Fig. 7 scalability scenario: `n` static cameras spread over a town with
+/// one region per intersection (pairs of cameras share a region), all hit
+/// by a city-wide lighting + weather change.
+pub fn town(n: usize, seed: u64) -> Scenario {
+    let per_region = 2;
+    let n_regions = n.div_ceil(per_region);
+    let sizes: Vec<usize> = (0..n_regions)
+        .map(|r| per_region.min(n - r * per_region))
+        .collect();
+    grouped_static(&sizes, 0.07, 1.0, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_static_structure() {
+        let s = grouped_static(&[3, 2, 1], 0.1, 5.0, 42);
+        assert_eq!(s.world.cameras.len(), 6);
+        assert_eq!(s.groups, vec![vec![0, 1, 2], vec![3, 4], vec![5]]);
+        assert_eq!(s.world.regions.len(), 3);
+    }
+
+    #[test]
+    fn intra_group_more_similar_than_inter() {
+        let mut s = grouped_static(&[3, 3], 0.06, 1.0, 7);
+        s.world.advance(30.0);
+        let d_intra = s.world.camera_state(0).distance(&s.world.camera_state(1));
+        let d_inter = s.world.camera_state(0).distance(&s.world.camera_state(3));
+        assert!(
+            d_intra < d_inter,
+            "intra {d_intra} should be < inter {d_inter}"
+        );
+    }
+
+    #[test]
+    fn similarity_triads_ordering() {
+        let (mut s, names) = similarity_triads(1.0, 11);
+        assert_eq!(names, vec!["high", "medium", "low"]);
+        s.world.advance(30.0);
+        let mean_intra = |ids: &[usize]| {
+            let mut total = 0.0;
+            let mut cnt = 0;
+            for (i, &a) in ids.iter().enumerate() {
+                for &b in ids.iter().skip(i + 1) {
+                    total += s.world.camera_state(a).distance(&s.world.camera_state(b));
+                    cnt += 1;
+                }
+            }
+            total / cnt as f32
+        };
+        let hi = mean_intra(&s.groups[0]);
+        let md = mean_intra(&s.groups[1]);
+        let lo = mean_intra(&s.groups[2]);
+        assert!(hi < md, "high {hi} !< medium {md}");
+        assert!(md < lo, "medium {md} !< low {lo}");
+    }
+
+    #[test]
+    fn route_split_diverges_after_split() {
+        let mut s = route_split(2, 300.0, 3);
+        s.world.advance(100.0);
+        let early = s.world.camera_state(2).distance(&s.world.camera_state(0));
+        s.world.advance(400.0); // past the split
+        let late = s.world.camera_state(2).distance(&s.world.camera_state(0));
+        assert!(
+            late > early + 0.2,
+            "cam 2 should diverge: early {early}, late {late}"
+        );
+        // The two cameras on the road stay close.
+        let road = s.world.camera_state(0).distance(&s.world.camera_state(1));
+        assert!(road < late * 0.7, "road pair {road} vs split {late}");
+    }
+
+    #[test]
+    fn town_scales() {
+        let s = town(22, 9);
+        assert_eq!(s.world.cameras.len(), 22);
+        assert_eq!(s.groups.iter().map(|g| g.len()).sum::<usize>(), 22);
+    }
+
+    #[test]
+    fn convoy_shares_one_region() {
+        let s = convoy(3, 1);
+        assert!(s.world.cameras.iter().all(|c| c.region == 0));
+    }
+}

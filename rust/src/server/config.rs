@@ -1,0 +1,215 @@
+//! System configuration and the policy presets for ECCO and its baselines.
+
+use crate::alloc::AllocKind;
+use crate::grouping::GroupingPolicy;
+use crate::runtime::Task;
+use crate::teacher::TeacherConfig;
+
+/// How cameras pick sampling configs and congestion-control parameters.
+#[derive(Debug, Clone)]
+pub enum TransmissionKind {
+    /// ECCO's resource-aware controller (§3.2): profile-table sampling +
+    /// GPU-share-weighted GAIMD.
+    Ecco,
+    /// Fixed sampling config + plain AIMD (Naive / Ekya): the paper's
+    /// "5 FPS at 960p" default maps to our top resolution tier.
+    Fixed { fps: f32, res: usize },
+    /// AMS-style content-adaptive frame rate (RECL), plain AIMD.
+    Ams { base_fps: f32, res: usize },
+}
+
+/// A complete system policy: which of the paper's systems this run is.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// Group retraining (ECCO) vs independent retraining (all baselines).
+    pub group_retraining: bool,
+    pub alloc: AllocKind,
+    pub transmission: TransmissionKind,
+    /// RECL-style model-zoo warm start for new jobs.
+    pub zoo_warm_start: bool,
+    /// Human-readable system name for reports.
+    pub name: &'static str,
+}
+
+impl Policy {
+    /// ECCO (the paper's system).
+    pub fn ecco() -> Policy {
+        Policy {
+            group_retraining: true,
+            alloc: AllocKind::Ecco,
+            transmission: TransmissionKind::Ecco,
+            zoo_warm_start: false,
+            name: "ecco",
+        }
+    }
+
+    /// ECCO + RECL model reuse (§5.5).
+    pub fn ecco_recl() -> Policy {
+        Policy {
+            zoo_warm_start: true,
+            name: "ecco+recl",
+            ..Policy::ecco()
+        }
+    }
+
+    /// Naive baseline: independent retraining, uniform GPU, fixed sampling,
+    /// equal bandwidth sharing.
+    pub fn naive() -> Policy {
+        Policy {
+            group_retraining: false,
+            alloc: AllocKind::Uniform,
+            transmission: TransmissionKind::Fixed { fps: 5.0, res: 48 },
+            zoo_warm_start: false,
+            name: "naive",
+        }
+    }
+
+    /// Ekya: independent retraining with utility-based GPU scheduling.
+    pub fn ekya() -> Policy {
+        Policy {
+            group_retraining: false,
+            alloc: AllocKind::Utility,
+            transmission: TransmissionKind::Fixed { fps: 5.0, res: 48 },
+            zoo_warm_start: false,
+            name: "ekya",
+        }
+    }
+
+    /// RECL: Ekya's allocator + model zoo + AMS sampling adaptation.
+    pub fn recl() -> Policy {
+        Policy {
+            group_retraining: false,
+            alloc: AllocKind::Utility,
+            transmission: TransmissionKind::Ams {
+                base_fps: 5.0,
+                res: 48,
+            },
+            zoo_warm_start: true,
+            name: "recl",
+        }
+    }
+}
+
+/// Full system configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub task: Task,
+    /// Number of (simulated) GPUs at the edge server.
+    pub gpus: f64,
+    /// Training throughput of one GPU in pixels/second (§3.2's capacity
+    /// unit). Default calibrated so a handful of GPUs retrains our student
+    /// within a few windows — the same relative regime as the paper's
+    /// 4090s vs YOLO11n.
+    pub gpu_pps: f64,
+    /// Retraining window length ||T|| (simulated seconds).
+    pub window_secs: f64,
+    /// Micro-windows per window (Alg. 1's W).
+    pub micro_windows: usize,
+    /// Eval frames per camera (<= infer batch).
+    pub eval_frames: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Max retained training frames per job.
+    pub buffer_cap: usize,
+    pub policy: Policy,
+    pub teacher: TeacherConfig,
+    pub grouping: GroupingPolicy,
+    /// Camera-side drift detector threshold (embedding L2 distance).
+    pub drift_threshold: f32,
+    /// mAP threshold for the response-time metric.
+    pub response_threshold: f32,
+    /// Pretraining steps for the initial student (before deployment).
+    pub pretrain_steps: usize,
+    /// RECL zoo maintenance cadence: retrained checkpoints are pushed to the
+    /// zoo every this many windows (the paper notes zoo updates carry real
+    /// overhead; RECL does not refresh continuously).
+    pub zoo_update_interval: usize,
+    /// Camera-side automatic drift detection issues retraining requests.
+    /// Disable for experiments that script requests manually (Fig. 12) or
+    /// force a fixed grouping (Fig. 8).
+    pub auto_request: bool,
+    /// Periodic regrouping at window boundaries (Alg. 2 UpdateGrouping).
+    pub auto_regroup: bool,
+    pub seed: u64,
+}
+
+impl SystemConfig {
+    pub fn new(task: Task, policy: Policy) -> SystemConfig {
+        SystemConfig {
+            task,
+            gpus: 1.0,
+            gpu_pps: 10_000.0,
+            window_secs: 60.0,
+            micro_windows: 6,
+            eval_frames: 16,
+            lr: 0.03,
+            buffer_cap: 512,
+            policy,
+            teacher: TeacherConfig::strong(),
+            grouping: GroupingPolicy::default(),
+            drift_threshold: 0.055,
+            response_threshold: 0.35,
+            pretrain_steps: 300,
+            zoo_update_interval: 2,
+            auto_request: true,
+            auto_regroup: true,
+            seed: 7,
+        }
+    }
+
+    /// Micro-window duration (seconds) at the configured baseline W.
+    pub fn mw_secs(&self) -> f64 {
+        self.window_secs / self.micro_windows as f64
+    }
+
+    /// Effective micro-windows for a window with `n_jobs` active jobs:
+    /// Alg. 1's per-window initial pass must not consume the whole budget,
+    /// so W grows with the job count (total GPU-time is unchanged — the
+    /// micro-windows just get shorter).
+    pub fn effective_micro_windows(&self, n_jobs: usize) -> usize {
+        self.micro_windows.max(2 * n_jobs.max(1))
+    }
+
+    /// SGD steps all G GPUs can run in a micro-window of `mw_secs` seconds
+    /// at training resolution `res`.
+    pub fn steps_for(&self, res: usize, train_batch: usize, mw_secs: f64) -> usize {
+        let pixels = self.gpus * self.gpu_pps * mw_secs;
+        let per_step = (res * res * train_batch) as f64;
+        (pixels / per_step).floor().max(1.0) as usize
+    }
+
+    /// SGD steps per baseline micro-window (convenience for tests/benches).
+    pub fn steps_per_mw(&self, res: usize, train_batch: usize) -> usize {
+        self.steps_for(res, train_batch, self.mw_secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_distinct() {
+        assert!(Policy::ecco().group_retraining);
+        assert!(!Policy::ekya().group_retraining);
+        assert!(Policy::recl().zoo_warm_start);
+        assert!(!Policy::naive().zoo_warm_start);
+        assert_eq!(Policy::naive().alloc, AllocKind::Uniform);
+        assert_eq!(Policy::ekya().alloc, AllocKind::Utility);
+        assert_eq!(Policy::ecco().alloc, AllocKind::Ecco);
+    }
+
+    #[test]
+    fn steps_budget_scales() {
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        cfg.gpus = 1.0;
+        cfg.gpu_pps = 10_000.0;
+        cfg.window_secs = 60.0;
+        cfg.micro_windows = 6;
+        let s32 = cfg.steps_per_mw(32, 8);
+        let s48 = cfg.steps_per_mw(48, 8);
+        assert!(s32 > s48, "higher res must cost steps: {s32} vs {s48}");
+        cfg.gpus = 4.0;
+        assert!(cfg.steps_per_mw(32, 8) >= s32 * 3, "4 GPUs ~4x steps");
+    }
+}

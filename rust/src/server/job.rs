@@ -1,0 +1,243 @@
+//! A retraining job: one group's shared student model plus its training
+//! data buffer and accuracy bookkeeping.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::runtime::{batch, Engine, ModelState, Task, TrainBatch};
+use crate::scene::{Frame, GroundTruth};
+use crate::util::rng::Pcg32;
+
+/// One buffered training sample: a delivered (possibly degraded) frame plus
+/// the teacher's labels for it.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub frame: Frame,
+    pub labels: GroundTruth,
+    /// Camera that contributed the sample.
+    pub cam: usize,
+}
+
+/// A retraining job (Fig. 3: one per camera group).
+pub struct Job {
+    pub id: usize,
+    pub members: Vec<usize>,
+    pub model: ModelState,
+    /// Ring buffer of recent training samples from all members.
+    pub buffer: VecDeque<Sample>,
+    pub buffer_cap: usize,
+    /// Latest evaluated accuracy (mean over members).
+    pub acc: f32,
+    /// Accuracy delta over the job's last trained micro-window.
+    pub acc_gain: f32,
+    /// Micro-windows received in the current retraining window.
+    pub micro_windows: usize,
+    /// Micro-windows received over the job's lifetime.
+    pub lifetime_mw: usize,
+    /// Total SGD steps over the job's lifetime.
+    pub total_steps: u64,
+    /// Simulated time the job was created (for response tracking).
+    pub created_at: f64,
+}
+
+impl Job {
+    pub fn new(id: usize, cam: usize, model: ModelState, buffer_cap: usize, now: f64) -> Job {
+        Job {
+            id,
+            members: vec![cam],
+            model,
+            buffer: VecDeque::new(),
+            buffer_cap,
+            acc: 0.0,
+            acc_gain: 0.0,
+            micro_windows: 0,
+            lifetime_mw: 0,
+            total_steps: 0,
+            created_at: now,
+        }
+    }
+
+    pub fn n_cams(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Append a sample, evicting the oldest past capacity.
+    pub fn push_sample(&mut self, sample: Sample) {
+        self.buffer.push_back(sample);
+        while self.buffer.len() > self.buffer_cap {
+            self.buffer.pop_front();
+        }
+    }
+
+    /// Remove a member and its buffered samples (Alg. 2 eviction).
+    pub fn remove_member(&mut self, cam: usize) {
+        self.members.retain(|&c| c != cam);
+        self.buffer.retain(|s| s.cam != cam);
+    }
+
+    /// Merge another camera's request into this job: membership only; the
+    /// caller moves any sample frames.
+    pub fn add_member(&mut self, cam: usize) {
+        if !self.members.contains(&cam) {
+            self.members.push(cam);
+        }
+    }
+
+    /// The resolution this job trains at: the modal resolution of its
+    /// buffer (samples of other resolutions are skipped when batching).
+    pub fn train_res(&self) -> Option<usize> {
+        if self.buffer.is_empty() {
+            return None;
+        }
+        let mut counts: Vec<(usize, usize)> = Vec::new();
+        for s in &self.buffer {
+            match counts.iter_mut().find(|(r, _)| *r == s.frame.res) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((s.frame.res, 1)),
+            }
+        }
+        counts.into_iter().max_by_key(|&(_, c)| c).map(|(r, _)| r)
+    }
+
+    /// Run `steps` SGD steps on batches sampled uniformly from the buffer
+    /// (at the modal resolution). Returns the mean loss, or None when the
+    /// buffer has no usable data.
+    pub fn train(
+        &mut self,
+        engine: &mut Engine,
+        steps: usize,
+        lr: f32,
+        rng: &mut Pcg32,
+    ) -> Result<Option<f32>> {
+        let res = match self.train_res() {
+            Some(r) => r,
+            None => return Ok(None),
+        };
+        let usable: Vec<usize> = (0..self.buffer.len())
+            .filter(|&i| self.buffer[i].frame.res == res)
+            .collect();
+        if usable.is_empty() {
+            return Ok(None);
+        }
+        let m = engine.manifest.clone();
+        let task = self.model.task;
+        let mut loss_sum = 0.0f32;
+        let mut n = 0usize;
+        for _ in 0..steps {
+            let picks: Vec<usize> = (0..m.train_batch)
+                .map(|_| usable[rng.index(usable.len())])
+                .collect();
+            let frames: Vec<&Frame> = picks.iter().map(|&i| &self.buffer[i].frame).collect();
+            let truths: Vec<&GroundTruth> =
+                picks.iter().map(|&i| &self.buffer[i].labels).collect();
+            let tb: TrainBatch = batch::train_batch(
+                task,
+                &frames,
+                &truths,
+                m.train_batch,
+                res,
+                m.classes,
+                m.grid,
+            );
+            loss_sum += engine.train_step(&mut self.model, &tb, lr)?;
+            n += 1;
+            self.total_steps += 1;
+        }
+        Ok(if n == 0 { None } else { Some(loss_sum / n as f32) })
+    }
+}
+
+/// Evaluate a model (by flat theta) on labelled eval frames: returns mAP.
+/// Frames beyond the engine's infer batch are evaluated in chunks.
+pub fn eval_model(
+    engine: &mut Engine,
+    task: Task,
+    theta: &[f32],
+    frames: &[Frame],
+) -> Result<f32> {
+    if frames.is_empty() {
+        return Ok(0.0);
+    }
+    let m = engine.manifest.clone();
+    let res = frames[0].res;
+    let mut maps = Vec::new();
+    for chunk in frames.chunks(m.infer_batch) {
+        let refs: Vec<&Frame> = chunk.iter().collect();
+        let pixels = batch::pixel_tensor(&refs, m.infer_batch, res);
+        let truths: Vec<&GroundTruth> = chunk.iter().map(|f| &f.truth).collect();
+        let v = match task {
+            Task::Det => {
+                let pred = engine.infer_det(theta, res, &pixels)?;
+                crate::metrics::det_map(&pred, &truths, chunk.len())
+            }
+            Task::Seg => {
+                let pred = engine.infer_seg(theta, res, &pixels)?;
+                crate::metrics::seg_map(&pred, &truths, chunk.len())
+            }
+        };
+        maps.push(v);
+    }
+    Ok(maps.iter().sum::<f32>() / maps.len() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelState;
+    use crate::scene::{render, SceneState};
+
+    fn dummy_model() -> ModelState {
+        ModelState::from_theta(Task::Det, vec![0.0; 10])
+    }
+
+    fn sample(res: usize, cam: usize, seed: u64) -> Sample {
+        let f = render(&SceneState::default_day(), res, seed);
+        let labels = f.truth.clone();
+        Sample {
+            frame: f,
+            labels,
+            cam,
+        }
+    }
+
+    #[test]
+    fn buffer_caps_and_evicts_fifo() {
+        let mut j = Job::new(0, 0, dummy_model(), 3, 0.0);
+        for i in 0..5 {
+            j.push_sample(sample(32, 0, i));
+        }
+        assert_eq!(j.buffer.len(), 3);
+    }
+
+    #[test]
+    fn remove_member_purges_samples() {
+        let mut j = Job::new(0, 0, dummy_model(), 10, 0.0);
+        j.add_member(1);
+        j.push_sample(sample(32, 0, 1));
+        j.push_sample(sample(32, 1, 2));
+        j.push_sample(sample(32, 1, 3));
+        j.remove_member(1);
+        assert_eq!(j.members, vec![0]);
+        assert!(j.buffer.iter().all(|s| s.cam == 0));
+        assert_eq!(j.buffer.len(), 1);
+    }
+
+    #[test]
+    fn train_res_is_modal() {
+        let mut j = Job::new(0, 0, dummy_model(), 10, 0.0);
+        assert_eq!(j.train_res(), None);
+        j.push_sample(sample(16, 0, 1));
+        j.push_sample(sample(32, 0, 2));
+        j.push_sample(sample(32, 0, 3));
+        assert_eq!(j.train_res(), Some(32));
+    }
+
+    #[test]
+    fn add_member_idempotent() {
+        let mut j = Job::new(0, 0, dummy_model(), 10, 0.0);
+        j.add_member(2);
+        j.add_member(2);
+        assert_eq!(j.members, vec![0, 2]);
+    }
+}

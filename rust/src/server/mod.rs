@@ -1,0 +1,12 @@
+//! Server-side assembly: retraining jobs, the micro-window scheduler, and
+//! the end-to-end [`system::System`] that ties cameras, network, teacher,
+//! allocator and grouping together.
+
+pub mod config;
+pub mod job;
+pub mod pretrain;
+pub mod system;
+
+pub use config::{Policy, SystemConfig, TransmissionKind};
+pub use job::{eval_model, Job, Sample};
+pub use system::{CamAgent, System};

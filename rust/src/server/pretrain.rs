@@ -1,0 +1,75 @@
+//! Student pretraining: the "representative initial data" fit every camera
+//! ships with (§2.1). Results are cached on disk keyed by the recipe so
+//! repeated experiment runs skip the work.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::runtime::{batch, Engine, ModelState, Task};
+use crate::scene::{render, SceneState};
+use crate::teacher::{Teacher, TeacherConfig};
+use crate::util::rng::Pcg32;
+
+/// Pretrain a student on a scene distribution for `steps` SGD steps at
+/// resolution 32; deterministic in `seed`.
+pub fn pretrain_on(
+    engine: &mut Engine,
+    task: Task,
+    state0: &SceneState,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<ModelState> {
+    let m = engine.manifest.clone();
+    let mut model = engine.init_model(task)?;
+    let mut teacher = Teacher::new(TeacherConfig::oracle(), seed);
+    let mut rng = Pcg32::new(seed, 55);
+    let res = 32;
+    // A modest pool of frames re-sampled into batches (mimics a recorded
+    // representative dataset rather than infinite fresh data).
+    let pool: Vec<_> = (0..96)
+        .map(|i| render(state0, res, seed.wrapping_mul(31).wrapping_add(i)))
+        .collect();
+    let labels: Vec<_> = pool.iter().map(|f| teacher.annotate(&f.truth)).collect();
+    for _ in 0..steps {
+        let picks: Vec<usize> = (0..m.train_batch).map(|_| rng.index(pool.len())).collect();
+        let frames: Vec<_> = picks.iter().map(|&i| &pool[i]).collect();
+        let truths: Vec<_> = picks.iter().map(|&i| &labels[i]).collect();
+        let tb = batch::train_batch(task, &frames, &truths, m.train_batch, res, m.classes, m.grid);
+        engine.train_step(&mut model, &tb, lr)?;
+    }
+    Ok(model)
+}
+
+fn cache_path(engine: &Engine, task: Task, steps: usize, seed: u64) -> PathBuf {
+    engine
+        .manifest
+        .dir
+        .join(format!("cache_pretrain_{}_{steps}_{seed}.bin", task.name()))
+}
+
+/// Pretrain on the default-day distribution with a disk cache.
+pub fn pretrained_default(
+    engine: &mut Engine,
+    task: Task,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<ModelState> {
+    let path = cache_path(engine, task, steps, seed);
+    let count = engine.manifest.task(task).param_count;
+    if let Ok(bytes) = std::fs::read(&path) {
+        if bytes.len() == count * 4 {
+            let theta: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            return Ok(ModelState::from_theta(task, theta));
+        }
+    }
+    let model = pretrain_on(engine, task, &SceneState::default_day(), steps, lr, seed)?;
+    let bytes: Vec<u8> = model.theta.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let _ = std::fs::write(&path, bytes); // cache failure is non-fatal
+    Ok(model)
+}

@@ -1,0 +1,735 @@
+//! The end-to-end system: cameras + network + teacher + retraining jobs +
+//! GPU allocator + grouping, driven in retraining windows (Fig. 3/4).
+//!
+//! One [`System`] instance is one run of a policy (ECCO or a baseline) on a
+//! scenario world. The simulation is faithful to the paper's structure:
+//!
+//! * time advances in retraining windows split into `W` micro-windows;
+//! * within each micro-window the network simulator delivers frame data,
+//!   cameras detect drift and issue retraining requests, and exactly one
+//!   job trains on all GPUs (Alg. 1 time-sharing);
+//! * at window boundaries groups are re-evaluated (Alg. 2), models are
+//!   published to devices, and the next window's GPU-share estimates are
+//!   pushed to the transmission controllers (§3.2).
+//!
+//! All retraining is *real*: SGD steps through the AOT-compiled PJRT
+//! executables on frames rendered by the scene simulator and degraded by
+//! the encoder model.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::alloc::{Allocator, JobView};
+use crate::grouping::{self, Decision, GroupJob, RequestMeta};
+use crate::metrics::{AccuracyHistory, ResponseTracker};
+use crate::net::{FlowId, NetSim};
+use crate::runtime::{batch, Engine, ModelState};
+use crate::scene::{Frame, World};
+use crate::teacher::Teacher;
+use crate::transmission::{baseline_plan, ams_plan, Controller, GpuAllocationInfo, TransmissionPlan};
+use crate::util::rng::Pcg32;
+use crate::util::stats::l2;
+use crate::video::{degrade, transport_window};
+use crate::zoo::{mean_embedding, ModelZoo};
+
+use super::config::{SystemConfig, TransmissionKind};
+use super::job::{eval_model, Job, Sample};
+use super::pretrain::pretrained_default;
+
+/// Maximum frames ingested per camera per micro-window (safety bound).
+const MAX_FRAMES_PER_MW: usize = 150;
+
+/// One window's group-membership snapshot: (job id, member cameras).
+pub type MembershipSnapshot = Vec<(usize, Vec<usize>)>;
+/// Evaluation resolution (the device's live stream).
+const EVAL_RES: usize = 32;
+
+/// Camera-side agent state.
+pub struct CamAgent {
+    pub id: usize,
+    pub flow: FlowId,
+    pub controller: Controller,
+    /// The device's current local model (flat params).
+    pub theta: Vec<f32>,
+    /// Active retraining job, if any.
+    pub job: Option<usize>,
+    pub plan: TransmissionPlan,
+    /// Embedding of the distribution the current model was trained for.
+    ref_embed: Option<Vec<f32>>,
+    /// Previous window's embedding (for AMS scene dynamics).
+    last_embed: Option<Vec<f32>>,
+    /// Scene dynamics estimate in [0,1] (AMS baseline).
+    pub dynamics: f32,
+    pub last_acc: f32,
+    delivered_prev: f64,
+    last_request_t: f64,
+}
+
+/// A full system run.
+pub struct System<'e> {
+    pub cfg: SystemConfig,
+    pub world: World,
+    pub engine: &'e mut Engine,
+    pub net: NetSim,
+    pub teacher: Teacher,
+    pub jobs: Vec<Job>,
+    /// Grouping bookkeeping, parallel to `jobs` by id.
+    pub group_meta: Vec<GroupJob>,
+    next_job_id: usize,
+    pub cams: Vec<CamAgent>,
+    pub zoo: ModelZoo,
+    pub tracker: ResponseTracker,
+    pub history: AccuracyHistory,
+    pub window_idx: usize,
+    allocator: Box<dyn Allocator>,
+    /// Last window's GPU-share estimates per job id (p_j).
+    pub shares: BTreeMap<usize, f64>,
+    /// (window, micro-window, job) allocation log (Fig. 10's one-hot bars).
+    pub alloc_log: Vec<(usize, usize, usize)>,
+    /// Per-window group membership snapshots (Fig. 9's grouping bars).
+    pub membership_log: Vec<(usize, MembershipSnapshot)>,
+    rng: Pcg32,
+    pretrained: Vec<f32>,
+}
+
+impl<'e> System<'e> {
+    /// Build a system over a scenario world. `local_caps[i]` is camera i's
+    /// uplink (Mbit/s); `shared_mbps` the common bottleneck.
+    pub fn new(
+        cfg: SystemConfig,
+        world: World,
+        local_caps: &[f64],
+        shared_mbps: f64,
+        engine: &'e mut Engine,
+    ) -> Result<System<'e>> {
+        assert_eq!(local_caps.len(), world.cameras.len());
+        let pretrained = pretrained_default(
+            engine,
+            cfg.task,
+            cfg.pretrain_steps,
+            cfg.lr,
+            cfg.seed ^ 0xbeef,
+        )?
+        .theta;
+        let mut net = NetSim::star(local_caps, shared_mbps);
+        let mut cams = Vec::new();
+        for cam in &world.cameras {
+            let flow = net.add_camera_flow(cam.id, 1.0, 0.5)?;
+            net.set_app_limit(flow, 0.05); // idle until retraining starts
+            cams.push(CamAgent {
+                id: cam.id,
+                flow,
+                controller: Controller::for_mount(&cam.mount),
+                theta: pretrained.clone(),
+                job: None,
+                plan: baseline_plan(1.0, EVAL_RES),
+                ref_embed: None,
+                last_embed: None,
+                dynamics: 0.5,
+                last_acc: 0.0,
+                delivered_prev: 0.0,
+                last_request_t: f64::NEG_INFINITY,
+            });
+        }
+        let allocator = cfg.policy.alloc.build();
+        let n_cams = cams.len();
+        Ok(System {
+            teacher: Teacher::new(cfg.teacher.clone(), cfg.seed ^ 0x7ea),
+            tracker: ResponseTracker::new(cfg.response_threshold),
+            history: AccuracyHistory::new(n_cams),
+            rng: Pcg32::new(cfg.seed, 0xa110c),
+            zoo: ModelZoo::new(64),
+            cfg,
+            world,
+            engine,
+            net,
+            jobs: Vec::new(),
+            group_meta: Vec::new(),
+            next_job_id: 0,
+            cams,
+            window_idx: 0,
+            allocator,
+            shares: BTreeMap::new(),
+            alloc_log: Vec::new(),
+            membership_log: Vec::new(),
+            pretrained,
+        })
+    }
+
+    pub fn now(&self) -> f64 {
+        self.world.time
+    }
+
+    fn job_index(&self, id: usize) -> Option<usize> {
+        self.jobs.iter().position(|j| j.id == id)
+    }
+
+    // ------------------------------------------------------------------
+    // Probing, drift detection, requests
+    // ------------------------------------------------------------------
+
+    /// Render a probe batch from the camera's current distribution and
+    /// return (frames, mean embedding).
+    fn probe(&mut self, cam: usize, salt: u64) -> Result<(Vec<Frame>, Vec<f32>)> {
+        let m = self.engine.manifest.clone();
+        let frames = self
+            .world
+            .eval_frames(cam, m.feature_res, m.infer_batch, salt);
+        let refs: Vec<&Frame> = frames.iter().collect();
+        let pixels = batch::pixel_tensor(&refs, m.infer_batch, m.feature_res);
+        let emb = self.engine.features(&pixels)?;
+        let mean = mean_embedding(&emb, m.embed_dim);
+        Ok((frames, mean))
+    }
+
+    /// Camera-side drift check; issues a retraining request when the
+    /// embedding moved beyond the threshold (or on the very first probe
+    /// after deployment when accuracy already collapsed).
+    fn detect_and_request(&mut self) -> Result<()> {
+        if !self.cfg.auto_request {
+            return Ok(());
+        }
+        let n_cams = self.cams.len();
+        for cam in 0..n_cams {
+            if self.cams[cam].job.is_some() {
+                continue; // already retraining
+            }
+            if self.now() - self.cams[cam].last_request_t < self.cfg.window_secs * 0.5 {
+                continue; // debounce
+            }
+            let salt = (self.window_idx as u64) * 7919 + cam as u64 * 131 + 1;
+            let (frames, emb) = self.probe(cam, salt)?;
+            let drifted = match &self.cams[cam].ref_embed {
+                None => {
+                    self.cams[cam].ref_embed = Some(emb.clone());
+                    false
+                }
+                Some(r) => l2(r, &emb) > self.cfg.drift_threshold,
+            };
+            self.update_dynamics(cam, &emb);
+            if drifted {
+                self.issue_request(cam, frames, emb)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn update_dynamics(&mut self, cam: usize, emb: &[f32]) {
+        let c = &mut self.cams[cam];
+        if let Some(prev) = &c.last_embed {
+            let d = l2(prev, emb);
+            // Map embedding motion to [0,1] dynamics with a soft scale.
+            let inst = (d / 0.08).clamp(0.0, 1.0);
+            c.dynamics = 0.5 * c.dynamics + 0.5 * inst;
+        }
+        c.last_embed = Some(emb.to_vec());
+    }
+
+    /// Process a retraining request (Alg. 2 GroupRequest).
+    fn issue_request(&mut self, cam: usize, frames: Vec<Frame>, emb: Vec<f32>) -> Result<()> {
+        let now = self.now();
+        let loc = self.world.cameras[cam].position(now);
+        // The admission bar: the camera's own model accuracy on the probe.
+        let own_acc = eval_model(self.engine, self.cfg.task, &self.cams[cam].theta, &frames)?;
+        let meta = RequestMeta {
+            cam,
+            time: now,
+            loc,
+            acc: own_acc,
+        };
+        self.cams[cam].last_request_t = now;
+        self.tracker.request(cam, now);
+        self.place_request(meta, frames, emb)
+    }
+
+    /// Shared by fresh requests and Alg. 2 evictions.
+    fn place_request(&mut self, meta: RequestMeta, frames: Vec<Frame>, emb: Vec<f32>) -> Result<()> {
+        let cam = meta.cam;
+        let decision = if self.cfg.policy.group_retraining {
+            // Evaluate candidate jobs' models on the request subsamples.
+            // With the metadata filter on, only correlated jobs pay the
+            // eval (the whole point of §3.3's pre-filtering); the ablation
+            // switch makes EVERY job a candidate and pays for it.
+            let mut evals: BTreeMap<usize, f32> = BTreeMap::new();
+            for job in &self.group_meta {
+                let candidate = !self.cfg.grouping.metadata_filter
+                    || grouping::metadata_correlated(&self.cfg.grouping, job, &meta);
+                if candidate {
+                    if let Some(idx) = self.job_index(job.id) {
+                        let theta = self.jobs[idx].model.theta.clone();
+                        let acc = eval_model(self.engine, self.cfg.task, &theta, &frames)?;
+                        evals.insert(job.id, acc);
+                    }
+                }
+            }
+            grouping::group_request(
+                &mut self.group_meta,
+                &mut self.next_job_id,
+                &self.cfg.grouping,
+                meta.clone(),
+                |job_id| evals.get(&job_id).copied().unwrap_or(0.0),
+            )
+        } else {
+            // Independent retraining: always a fresh job.
+            let id = self.next_job_id;
+            self.next_job_id += 1;
+            self.group_meta.push(GroupJob::new(id, meta.clone()));
+            Decision::NewJob(id)
+        };
+
+        match decision {
+            Decision::Joined(job_id) => {
+                let idx = self.job_index(job_id).expect("meta/job desync");
+                self.jobs[idx].add_member(cam);
+                self.cams[cam].job = Some(job_id);
+                self.push_probe_samples(idx, cam, frames);
+                crate::util::logger::log(
+                    crate::util::logger::Level::Debug,
+                    module_path!(),
+                    &format!("cam {cam} joined job {job_id}"),
+                );
+            }
+            Decision::NewJob(job_id) => {
+                // Starting point: the device's own model, or a zoo match.
+                let mut theta = self.cams[cam].theta.clone();
+                if self.cfg.policy.zoo_warm_start {
+                    if let Some(entry) = self.zoo.select(&emb, 0.6) {
+                        theta = entry.theta.clone();
+                    }
+                }
+                let model = ModelState::from_theta(self.cfg.task, theta);
+                let job = Job::new(job_id, cam, model, self.cfg.buffer_cap, self.now());
+                self.jobs.push(job);
+                let idx = self.jobs.len() - 1;
+                self.cams[cam].job = Some(job_id);
+                self.push_probe_samples(idx, cam, frames);
+                crate::util::logger::log(
+                    crate::util::logger::Level::Debug,
+                    module_path!(),
+                    &format!("cam {cam} started job {job_id}"),
+                );
+            }
+        }
+        // The model will be retrained for the *current* distribution.
+        self.cams[cam].ref_embed = Some(emb);
+        Ok(())
+    }
+
+    /// Seed a job's buffer with the request's sampled frames.
+    fn push_probe_samples(&mut self, job_idx: usize, cam: usize, frames: Vec<Frame>) {
+        for f in frames {
+            let labels = self.teacher.annotate(&f.truth);
+            self.jobs[job_idx].push_sample(Sample {
+                frame: f,
+                labels,
+                cam,
+            });
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Transmission
+    // ------------------------------------------------------------------
+
+    /// Push GPU allocation info to cameras and (re)configure their flows
+    /// for the coming window.
+    fn apply_transmission_plans(&mut self) {
+        let n_jobs = self.jobs.len().max(1);
+        for cam in 0..self.cams.len() {
+            let Some(job_id) = self.cams[cam].job else {
+                let flow = self.cams[cam].flow;
+                self.net.set_app_limit(flow, 0.05);
+                continue;
+            };
+            let job_idx = self.job_index(job_id).unwrap();
+            let n_members = self.jobs[job_idx].n_cams();
+            let plan = match &self.cfg.policy.transmission {
+                TransmissionKind::Ecco => {
+                    let p_j = *self
+                        .shares
+                        .get(&job_id)
+                        .unwrap_or(&(1.0 / n_jobs as f64));
+                    let budget_pps = p_j * self.cfg.gpus * self.cfg.gpu_pps;
+                    self.cams[cam].controller.plan(GpuAllocationInfo {
+                        group_budget_pps: budget_pps,
+                        share_weight: p_j,
+                        group_size: n_members,
+                    })
+                }
+                TransmissionKind::Fixed { fps, res } => baseline_plan(*fps, *res),
+                TransmissionKind::Ams { base_fps, res } => {
+                    ams_plan(*base_fps, *res, self.cams[cam].dynamics)
+                }
+            };
+            let flow = self.cams[cam].flow;
+            self.net.set_params(flow, plan.gaimd_alpha, plan.gaimd_beta);
+            self.net.set_app_limit(flow, plan.app_limit_mbps);
+            self.cams[cam].plan = plan;
+        }
+    }
+
+    /// Ingest the frames each camera's delivered bandwidth paid for.
+    fn collect_data(&mut self, mw_secs: f64) -> Result<()> {
+        for cam in 0..self.cams.len() {
+            let Some(job_id) = self.cams[cam].job else {
+                continue;
+            };
+            let flow = self.cams[cam].flow;
+            let total = self.net.delivered_mbit(flow);
+            let delta = (total - self.cams[cam].delivered_prev).max(0.0);
+            self.cams[cam].delivered_prev = total;
+            let plan = self.cams[cam].plan;
+            let outcome = transport_window(plan.config, mw_secs, delta);
+            let n = outcome.frames_delivered.min(MAX_FRAMES_PER_MW);
+            if n == 0 {
+                continue;
+            }
+            let job_idx = self.job_index(job_id).unwrap();
+            for i in 0..n {
+                let mut frame = self.world.capture(cam, plan.config.res);
+                let seed = self
+                    .rng
+                    .next_u64()
+                    .wrapping_add(i as u64);
+                degrade(&mut frame.pixels, plan.config.res, outcome.quality, seed);
+                let labels = self.teacher.annotate(&frame.truth);
+                self.jobs[job_idx].push_sample(Sample {
+                    frame,
+                    labels,
+                    cam,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // GPU micro-window scheduling (Alg. 1)
+    // ------------------------------------------------------------------
+
+    fn eval_job(&mut self, job_idx: usize) -> Result<f32> {
+        let members = self.jobs[job_idx].members.clone();
+        let theta = self.jobs[job_idx].model.theta.clone();
+        let mut total = 0.0f32;
+        for &cam in &members {
+            let salt = (self.window_idx as u64) * 104_729 + cam as u64 * 7 + 3;
+            let frames = self
+                .world
+                .eval_frames(cam, EVAL_RES, self.cfg.eval_frames, salt);
+            total += eval_model(self.engine, self.cfg.task, &theta, &frames)?;
+        }
+        Ok(total / members.len().max(1) as f32)
+    }
+
+    fn job_views(&self) -> Vec<JobView> {
+        self.jobs
+            .iter()
+            .map(|j| JobView {
+                id: j.id,
+                n_cams: j.n_cams(),
+                acc: j.acc,
+                acc_gain: j.acc_gain,
+                micro_windows: j.micro_windows,
+                lifetime_mw: j.lifetime_mw,
+            })
+            .collect()
+    }
+
+    /// One micro-window: pick a job, train it on all GPUs, re-evaluate
+    /// (Alg. 1 MicroRetraining).
+    fn train_micro_window(&mut self, mw: usize, mw_secs: f64) -> Result<()> {
+        if self.jobs.is_empty() {
+            return Ok(());
+        }
+        let views = self.job_views();
+        let pick_id = self.allocator.pick(&views);
+        let job_idx = self.job_index(pick_id).expect("allocator picked unknown job");
+        self.alloc_log.push((self.window_idx, mw, pick_id));
+
+        let acc_i = self.eval_job(job_idx)?;
+        let res = self.jobs[job_idx].train_res().unwrap_or(EVAL_RES);
+        let m = self.engine.manifest.clone();
+        let steps = self.cfg.steps_for(res, m.train_batch, mw_secs);
+        let lr = self.cfg.lr;
+        let mut rng = self.rng.fork(pick_id as u64);
+        self.jobs[job_idx].train(self.engine, steps, lr, &mut rng)?;
+        let acc_f = self.eval_job(job_idx)?;
+        let job = &mut self.jobs[job_idx];
+        job.acc = acc_f;
+        job.acc_gain = acc_f - acc_i;
+        job.micro_windows += 1;
+        job.lifetime_mw += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Window boundary
+    // ------------------------------------------------------------------
+
+    fn end_window(&mut self) -> Result<()> {
+        let now = self.now();
+        // Publish updated models to member devices.
+        for job in &self.jobs {
+            for &cam in &job.members {
+                self.cams[cam].theta = job.model.theta.clone();
+            }
+        }
+        // Per-camera accuracy measurement (live model on live stream).
+        for cam in 0..self.cams.len() {
+            let salt = (self.window_idx as u64) * 31_337 + cam as u64;
+            let frames = self
+                .world
+                .eval_frames(cam, EVAL_RES, self.cfg.eval_frames, salt);
+            let theta = self.cams[cam].theta.clone();
+            let acc = eval_model(self.engine, self.cfg.task, &theta, &frames)?;
+            self.cams[cam].last_acc = acc;
+            self.history.push(cam, now, acc);
+            self.tracker.observe(cam, now, acc);
+        }
+        // RECL zoo maintenance: store retrained models with signatures
+        // (periodically — zoo updates carry overhead, §5.1).
+        if self.cfg.policy.zoo_warm_start
+            && self.window_idx.is_multiple_of(self.cfg.zoo_update_interval)
+        {
+            for j in 0..self.jobs.len() {
+                if self.jobs[j].micro_windows == 0 {
+                    continue;
+                }
+                let cam0 = self.jobs[j].members[0];
+                let salt = (self.window_idx as u64) * 977 + cam0 as u64;
+                let (_, emb) = self.probe(cam0, salt)?;
+                let theta = self.jobs[j].model.theta.clone();
+                let label = format!("job{}-w{}", self.jobs[j].id, self.window_idx);
+                self.zoo.insert(theta, emb, &label);
+            }
+        }
+        // Membership snapshot for timeline plots.
+        let snapshot: MembershipSnapshot = self
+            .jobs
+            .iter()
+            .map(|j| (j.id, j.members.clone()))
+            .collect();
+        self.membership_log.push((self.window_idx, snapshot));
+        // Periodic regrouping (Alg. 2 UpdateGrouping).
+        if self.cfg.policy.group_retraining && self.cfg.auto_regroup {
+            self.regroup()?;
+        }
+        // GPU-share estimates for the coming window (Alg. 1 line 15), with
+        // a small uniform floor: a group estimated at ~zero share would get
+        // ~zero bandwidth, hence zero data, hence zero measured gain — a
+        // starvation feedback loop the best-effort controller must avoid.
+        if !self.jobs.is_empty() {
+            let views = self.job_views();
+            let shares = self.allocator.share_estimates(&views);
+            let n = views.len() as f64;
+            let mut next = BTreeMap::new();
+            for (v, p) in views.iter().zip(shares) {
+                let fresh = 0.8 * p + 0.2 / n;
+                // EWMA across windows: single-window gain estimates are
+                // noisy, and bandwidth plans should not whipsaw.
+                let prev = self.shares.get(&v.id).copied().unwrap_or(1.0 / n);
+                next.insert(v.id, 0.5 * prev + 0.5 * fresh);
+            }
+            // Renormalise (membership may have changed).
+            let total: f64 = next.values().sum();
+            if total > 0.0 {
+                for p in next.values_mut() {
+                    *p /= total;
+                }
+            }
+            self.shares = next;
+        }
+        // Reset per-window counters.
+        for j in &mut self.jobs {
+            j.micro_windows = 0;
+        }
+        Ok(())
+    }
+
+    fn regroup(&mut self) -> Result<()> {
+        // Evaluate every (job, member) pair on fresh member data.
+        let mut evals: BTreeMap<(usize, usize), f32> = BTreeMap::new();
+        for j in 0..self.jobs.len() {
+            let theta = self.jobs[j].model.theta.clone();
+            for &cam in &self.jobs[j].members.clone() {
+                let salt = (self.window_idx as u64) * 523 + cam as u64 * 11;
+                let frames = self
+                    .world
+                    .eval_frames(cam, EVAL_RES, self.cfg.eval_frames, salt);
+                let acc = eval_model(self.engine, self.cfg.task, &theta, &frames)?;
+                evals.insert((self.jobs[j].id, cam), acc);
+            }
+        }
+        let now = self.now();
+        let world = &self.world;
+        let evicted = grouping::update_grouping(
+            &mut self.group_meta,
+            &self.cfg.grouping,
+            now,
+            |cam| world.cameras[cam].position(now),
+            |job_id, cam| evals.get(&(job_id, cam)).copied().unwrap_or(0.0),
+        );
+        for ev in evicted {
+            let cam = ev.meta.cam;
+            if let Some(idx) = self.job_index(ev.job_id) {
+                self.jobs[idx].remove_member(cam);
+            }
+            self.cams[cam].job = None;
+            self.cams[cam].last_request_t = now;
+            crate::util::logger::log(
+                crate::util::logger::Level::Debug,
+                module_path!(),
+                &format!("cam {cam} evicted from job {}", ev.job_id),
+            );
+            // Re-enter the grouping pipeline as a fresh request.
+            let salt = (self.window_idx as u64) * 6151 + cam as u64 * 13 + 9;
+            let (frames, emb) = self.probe(cam, salt)?;
+            self.tracker.request(cam, now);
+            self.place_request(ev.meta, frames, emb)?;
+        }
+        // Drop empty jobs.
+        self.jobs.retain(|j| !j.members.is_empty());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Public driver
+    // ------------------------------------------------------------------
+
+    /// Run one retraining window.
+    pub fn run_window(&mut self) -> Result<()> {
+        if self.window_idx == 0 {
+            // Establish the deployment-time drift references before any
+            // simulated time passes (the pretraining distribution).
+            self.detect_and_request()?;
+        }
+        self.apply_transmission_plans();
+        // Alg. 1: W micro-windows per window; W scales with the job count so
+        // the initial training pass leaves room for greedy allocation.
+        let w_eff = self.cfg.effective_micro_windows(self.jobs.len());
+        let mw_secs = self.cfg.window_secs / w_eff as f64;
+        for mw in 0..w_eff {
+            self.net.run(mw_secs);
+            self.world.advance(mw_secs);
+            self.collect_data(mw_secs)?;
+            self.detect_and_request()?;
+            self.train_micro_window(mw, mw_secs)?;
+        }
+        self.end_window()?;
+        self.window_idx += 1;
+        Ok(())
+    }
+
+    /// Run `n` retraining windows.
+    pub fn run_windows(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.run_window()?;
+        }
+        Ok(())
+    }
+
+    /// Mean camera accuracy at the latest window.
+    pub fn mean_accuracy(&self) -> f32 {
+        self.history.final_mean()
+    }
+
+    /// The pretrained deployment model (for tests and warm-zoo setup).
+    pub fn pretrained_theta(&self) -> &[f32] {
+        &self.pretrained
+    }
+
+    /// Populate the model zoo RECL-style: fine-tune the pretrained student
+    /// briefly on each camera's *initial* distribution and store it.
+    pub fn populate_zoo_from_initial(&mut self, steps: usize) -> Result<()> {
+        for cam in 0..self.cams.len() {
+            let state0 = self.world.camera_state(cam);
+            let mut model = ModelState::from_theta(self.cfg.task, self.pretrained.clone());
+            let m = self.engine.manifest.clone();
+            let mut rng = Pcg32::new(self.cfg.seed ^ 0x200, cam as u64);
+            let pool: Vec<Frame> = (0..32)
+                .map(|i| crate::scene::render(&state0, EVAL_RES, 0x900d + cam as u64 * 97 + i))
+                .collect();
+            let labels: Vec<_> = pool
+                .iter()
+                .map(|f| self.teacher.annotate(&f.truth))
+                .collect();
+            for _ in 0..steps {
+                let picks: Vec<usize> =
+                    (0..m.train_batch).map(|_| rng.index(pool.len())).collect();
+                let frames: Vec<&Frame> = picks.iter().map(|&i| &pool[i]).collect();
+                let truths: Vec<_> = picks.iter().map(|&i| &labels[i]).collect();
+                let tb = batch::train_batch(
+                    self.cfg.task,
+                    &frames,
+                    &truths,
+                    m.train_batch,
+                    EVAL_RES,
+                    m.classes,
+                    m.grid,
+                );
+                self.engine.train_step(&mut model, &tb, self.cfg.lr)?;
+            }
+            let salt = 0xf00d + cam as u64;
+            let (_, emb) = self.probe(cam, salt)?;
+            self.zoo.insert(model.theta, emb, &format!("init-cam{cam}"));
+        }
+        Ok(())
+    }
+
+    /// Swap the GPU allocator (ablation experiments).
+    pub fn set_allocator(&mut self, allocator: Box<dyn Allocator>) {
+        self.allocator = allocator;
+    }
+
+    /// Scripted retraining request (Fig. 12-style experiments with
+    /// `auto_request = false`): probe the camera now and run it through the
+    /// normal grouping pipeline.
+    pub fn request_now(&mut self, cam: usize) -> Result<()> {
+        if self.cams[cam].job.is_some() {
+            return Ok(());
+        }
+        let salt = (self.window_idx as u64) * 7919 + cam as u64 * 131 + 0x5c71;
+        let (frames, emb) = self.probe(cam, salt)?;
+        self.issue_request(cam, frames, emb)
+    }
+
+    /// Create a job with a fixed membership (Fig. 8's manual groups),
+    /// bypassing Alg. 2. The job starts from the first member's model.
+    pub fn force_group(&mut self, cams: &[usize]) -> Result<usize> {
+        assert!(!cams.is_empty());
+        let id = self.next_job_id;
+        self.next_job_id += 1;
+        let now = self.now();
+        let model = ModelState::from_theta(self.cfg.task, self.cams[cams[0]].theta.clone());
+        let mut job = Job::new(id, cams[0], model, self.cfg.buffer_cap, now);
+        let mut meta_job: Option<GroupJob> = None;
+        for &cam in cams {
+            job.add_member(cam);
+            self.cams[cam].job = Some(id);
+            self.tracker.request(cam, now);
+            let loc = self.world.cameras[cam].position(now);
+            let meta = RequestMeta {
+                cam,
+                time: now,
+                loc,
+                acc: 0.0,
+            };
+            match &mut meta_job {
+                None => meta_job = Some(GroupJob::new(id, meta)),
+                Some(g) => g.members.push(meta),
+            }
+        }
+        // Seed the buffer with a probe from each member.
+        self.jobs.push(job);
+        let idx = self.jobs.len() - 1;
+        for &cam in cams {
+            let salt = 0xf0_6ce + cam as u64;
+            let (frames, emb) = self.probe(cam, salt)?;
+            self.push_probe_samples(idx, cam, frames);
+            self.cams[cam].ref_embed = Some(emb);
+        }
+        self.group_meta.push(meta_job.unwrap());
+        Ok(id)
+    }
+}

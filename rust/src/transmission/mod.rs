@@ -1,0 +1,336 @@
+//! Resource-aware transmission control (§3.2).
+//!
+//! Two halves, exactly as in the paper:
+//!
+//! 1. **Sampling configuration** (§3.2.1): each camera owns a profiled
+//!    lookup table mapping a GPU budget (pixels/second the group may
+//!    consume) to the accuracy-optimal (frame rate, resolution) pair. At
+//!    runtime the camera looks up its group's estimated budget `c_j`,
+//!    scales the frame rate by `1/n_j` to balance member contributions,
+//!    and keeps the resolution.
+//! 2. **GAIMD parameterisation** (§3.2.2): bandwidth competition
+//!    aggressiveness is tied to the GPU share: `beta = 0.5`,
+//!    `alpha = p_j / n_j`, yielding steady-state throughput proportional
+//!    to the group's GPU share (throughput ∝ alpha/(1-beta)).
+//!
+//! Profile tables come either from the Fig. 5 offline profiling experiment
+//! (`ProfileTable::from_measurements`) or from the camera-type heuristic
+//! the profiling reproduces: static high mounts favour resolution (small
+//! distant objects), mobile mounts favour frame rate (fast scene change).
+
+use crate::scene::Mount;
+use crate::video::{SamplingConfig, BPP_LOSSLESS, FPS_CHOICES, RES_CHOICES};
+
+/// GPU budget levels (pixels/second) the table is indexed by. Retraining
+/// windows are discretised into micro-windows, so only a handful of levels
+/// occur (§3.2.1); intermediate budgets use the nearest lower level.
+pub const BUDGET_LEVELS: [f64; 6] = [2_000.0, 5_000.0, 10_000.0, 20_000.0, 40_000.0, 80_000.0];
+
+/// Offline-profiled budget -> best sampling configuration map.
+#[derive(Debug, Clone)]
+pub struct ProfileTable {
+    /// `entries[i]` is the best config for `BUDGET_LEVELS[i]`.
+    pub entries: Vec<SamplingConfig>,
+}
+
+impl ProfileTable {
+    /// Build from measured (budget level, config, accuracy) triples — the
+    /// output of the Fig. 5 profiling sweep.
+    pub fn from_measurements(measured: &[(usize, SamplingConfig, f32)]) -> ProfileTable {
+        let mut entries = Vec::with_capacity(BUDGET_LEVELS.len());
+        for level in 0..BUDGET_LEVELS.len() {
+            let best = measured
+                .iter()
+                .filter(|(l, _, _)| *l == level)
+                .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+                .map(|(_, c, _)| *c)
+                .unwrap_or(SamplingConfig { fps: 1.0, res: 32 });
+            entries.push(best);
+        }
+        ProfileTable { entries }
+    }
+
+    /// Camera-type heuristic capturing the Fig. 5 finding: under a pixel
+    /// budget, static high-mounted cameras spend it on resolution, mobile
+    /// cameras on frame rate. Greedy: pick the config fitting the budget
+    /// with the preferred dimension maximised first.
+    pub fn heuristic(mount: &Mount) -> ProfileTable {
+        let prefer_res = !matches!(mount, Mount::Mobile { .. });
+        let mut entries = Vec::with_capacity(BUDGET_LEVELS.len());
+        for &budget in &BUDGET_LEVELS {
+            let mut best: Option<SamplingConfig> = None;
+            for &res in &RES_CHOICES {
+                for &fps in &FPS_CHOICES {
+                    let c = SamplingConfig { fps, res };
+                    if c.pixels_per_sec() > budget {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            if prefer_res {
+                                (c.res, c.pixels_per_sec() as u64)
+                                    > (b.res, b.pixels_per_sec() as u64)
+                            } else {
+                                (ordf(c.fps), c.pixels_per_sec() as u64)
+                                    > (ordf(b.fps), b.pixels_per_sec() as u64)
+                            }
+                        }
+                    };
+                    if better {
+                        best = Some(c);
+                    }
+                }
+            }
+            entries.push(best.unwrap_or(SamplingConfig {
+                fps: FPS_CHOICES[0],
+                res: RES_CHOICES[0],
+            }));
+        }
+        ProfileTable { entries }
+    }
+
+    /// Look up the best configuration for a raw budget in pixels/second.
+    /// Uses the nearest lower profiled level, then downgrades further if
+    /// that entry still exceeds the actual budget (budgets below the lowest
+    /// level occur when many groups share few GPUs).
+    pub fn lookup(&self, budget_pps: f64) -> SamplingConfig {
+        let mut idx = 0;
+        for (i, &lvl) in BUDGET_LEVELS.iter().enumerate() {
+            if budget_pps >= lvl {
+                idx = i;
+            }
+        }
+        let mut cfg = self.entries[idx];
+        while cfg.pixels_per_sec() > budget_pps && idx > 0 {
+            idx -= 1;
+            cfg = self.entries[idx];
+        }
+        if cfg.pixels_per_sec() > budget_pps {
+            // Below every profiled level: fall back to the cheapest config.
+            cfg = SamplingConfig {
+                fps: FPS_CHOICES[0],
+                res: RES_CHOICES[0],
+            };
+        }
+        cfg
+    }
+}
+
+fn ordf(f: f32) -> u32 {
+    (f * 1000.0) as u32
+}
+
+/// GPU allocation information the server pushes to a camera each window
+/// (§3.1 "GPU allocation estimation for transmission control").
+#[derive(Debug, Clone, Copy)]
+pub struct GpuAllocationInfo {
+    /// Estimated GPU resource for the camera's group over the window,
+    /// expressed as training pixels/second (`c_j`).
+    pub group_budget_pps: f64,
+    /// Normalised GPU share weight of the group (`p_j`, sums to 1).
+    pub share_weight: f64,
+    /// Number of cameras in the group (`n_j`).
+    pub group_size: usize,
+}
+
+/// What the camera-side controller decides for a window.
+#[derive(Debug, Clone, Copy)]
+pub struct TransmissionPlan {
+    /// Per-camera sampling configuration (f*/n_j, q*).
+    pub config: SamplingConfig,
+    /// GAIMD additive-increase parameter.
+    pub gaimd_alpha: f64,
+    /// GAIMD multiplicative-decrease parameter.
+    pub gaimd_beta: f64,
+    /// Application-level rate cap (Mbit/s): no point sending more bits
+    /// than lossless encoding of the sampled stream.
+    pub app_limit_mbps: f64,
+}
+
+/// ECCO's per-camera transmission controller.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    pub table: ProfileTable,
+}
+
+impl Controller {
+    pub fn new(table: ProfileTable) -> Controller {
+        Controller { table }
+    }
+
+    pub fn for_mount(mount: &Mount) -> Controller {
+        Controller::new(ProfileTable::heuristic(mount))
+    }
+
+    /// Compute the window plan from the server's allocation info (§3.2).
+    pub fn plan(&self, info: GpuAllocationInfo) -> TransmissionPlan {
+        let group_cfg = self.table.lookup(info.group_budget_pps);
+        let n = info.group_size.max(1) as f32;
+        let config = SamplingConfig {
+            fps: group_cfg.fps / n,
+            res: group_cfg.res,
+        };
+        let alpha = (info.share_weight / n as f64).max(1e-3);
+        let app_limit_mbps =
+            config.pixels_per_sec() * 3.0 * BPP_LOSSLESS / 1e6; // channel-pixels
+        TransmissionPlan {
+            config,
+            gaimd_alpha: alpha,
+            gaimd_beta: 0.5,
+            app_limit_mbps,
+        }
+    }
+}
+
+/// The fixed-configuration baseline (Naive/Ekya): constant sampling, plain
+/// AIMD (alpha=1), no coupling to the GPU share.
+pub fn baseline_plan(fps: f32, res: usize) -> TransmissionPlan {
+    let config = SamplingConfig { fps, res };
+    TransmissionPlan {
+        config,
+        gaimd_alpha: 1.0,
+        gaimd_beta: 0.5,
+        app_limit_mbps: config.pixels_per_sec() * 3.0 * BPP_LOSSLESS / 1e6,
+    }
+}
+
+/// AMS-style content-driven frame-rate adaptation used by the RECL
+/// baseline: scales a base frame rate by observed scene dynamics (mean
+/// embedding change between windows), ignoring GPU allocation entirely.
+pub fn ams_plan(base_fps: f32, res: usize, scene_dynamics: f32) -> TransmissionPlan {
+    // dynamics in [0,1]: 0 = static scene, 1 = rapidly changing.
+    let fps = (base_fps * (0.3 + 0.7 * scene_dynamics.clamp(0.0, 1.0))).max(0.25);
+    let config = SamplingConfig { fps, res };
+    TransmissionPlan {
+        config,
+        gaimd_alpha: 1.0,
+        gaimd_beta: 0.5,
+        app_limit_mbps: config.pixels_per_sec() * 3.0 * BPP_LOSSLESS / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::Mount;
+
+    #[test]
+    fn heuristic_static_prefers_resolution() {
+        let t = ProfileTable::heuristic(&Mount::StaticHigh);
+        // At a generous budget a static camera should pick max resolution.
+        let c = t.lookup(80_000.0);
+        assert_eq!(c.res, 48);
+        // At a tight budget it still holds the largest feasible resolution.
+        let tight = t.lookup(2_000.0);
+        assert!(tight.pixels_per_sec() <= 2_000.0);
+        assert!(tight.res >= 32, "static should trade fps for res: {tight:?}");
+    }
+
+    #[test]
+    fn heuristic_mobile_prefers_fps() {
+        let t = ProfileTable::heuristic(&Mount::Mobile {
+            waypoints: vec![],
+            speed: 0.0,
+        });
+        let tight = t.lookup(5_000.0);
+        assert!(tight.fps >= 4.0, "mobile should trade res for fps: {tight:?}");
+        assert!(tight.pixels_per_sec() <= 5_000.0);
+    }
+
+    #[test]
+    fn lookup_uses_nearest_lower_level() {
+        let t = ProfileTable::heuristic(&Mount::StaticHigh);
+        assert_eq!(t.lookup(5_500.0), t.entries[1]);
+        assert_eq!(t.lookup(1e9), t.entries[5]);
+    }
+
+    #[test]
+    fn lookup_downgrades_below_lowest_level() {
+        // A budget below even the cheapest profiled entry must fall back to
+        // a config that fits (ultimately the minimum config).
+        let t = ProfileTable::heuristic(&Mount::StaticHigh);
+        let tiny = t.lookup(200.0);
+        assert!(tiny.pixels_per_sec() <= 200.0 || tiny == SamplingConfig {
+            fps: FPS_CHOICES[0],
+            res: RES_CHOICES[0],
+        });
+        let zero = t.lookup(0.0);
+        assert_eq!(
+            zero,
+            SamplingConfig { fps: FPS_CHOICES[0], res: RES_CHOICES[0] }
+        );
+    }
+
+    #[test]
+    fn from_measurements_picks_argmax() {
+        let measured = vec![
+            (0, SamplingConfig { fps: 1.0, res: 16 }, 0.2),
+            (0, SamplingConfig { fps: 0.5, res: 32 }, 0.3),
+            (1, SamplingConfig { fps: 2.0, res: 32 }, 0.4),
+        ];
+        let t = ProfileTable::from_measurements(&measured);
+        assert_eq!(t.entries[0], SamplingConfig { fps: 0.5, res: 32 });
+        assert_eq!(t.entries[1], SamplingConfig { fps: 2.0, res: 32 });
+    }
+
+    #[test]
+    fn plan_scales_fps_by_group_size_and_alpha_by_share() {
+        let ctl = Controller::for_mount(&Mount::StaticHigh);
+        let info1 = GpuAllocationInfo {
+            group_budget_pps: 40_000.0,
+            share_weight: 0.6,
+            group_size: 1,
+        };
+        let info3 = GpuAllocationInfo {
+            group_size: 3,
+            ..info1
+        };
+        let p1 = ctl.plan(info1);
+        let p3 = ctl.plan(info3);
+        assert!((p1.config.fps / p3.config.fps - 3.0).abs() < 1e-5);
+        assert_eq!(p1.config.res, p3.config.res);
+        assert!((p1.gaimd_alpha / p3.gaimd_alpha - 3.0).abs() < 1e-5);
+        assert_eq!(p1.gaimd_beta, 0.5);
+    }
+
+    #[test]
+    fn gaimd_weights_proportional_to_group_share() {
+        // Two groups with shares 0.75/0.25, sizes 3/1: per-camera weights
+        // alpha/(1-beta) must make GROUP totals proportional to shares.
+        let ctl = Controller::for_mount(&Mount::StaticHigh);
+        let pa = ctl.plan(GpuAllocationInfo {
+            group_budget_pps: 1e4,
+            share_weight: 0.75,
+            group_size: 3,
+        });
+        let pb = ctl.plan(GpuAllocationInfo {
+            group_budget_pps: 1e4,
+            share_weight: 0.25,
+            group_size: 1,
+        });
+        let group_a = 3.0 * pa.gaimd_alpha / (1.0 - pa.gaimd_beta);
+        let group_b = 1.0 * pb.gaimd_alpha / (1.0 - pb.gaimd_beta);
+        assert!((group_a / group_b - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn app_limit_covers_lossless_stream() {
+        let ctl = Controller::for_mount(&Mount::StaticHigh);
+        let p = ctl.plan(GpuAllocationInfo {
+            group_budget_pps: 20_000.0,
+            share_weight: 0.5,
+            group_size: 2,
+        });
+        let need = p.config.pixels_per_sec() * 3.0 * BPP_LOSSLESS / 1e6;
+        assert!((p.app_limit_mbps - need).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ams_plan_tracks_dynamics() {
+        let slow = ams_plan(5.0, 32, 0.0);
+        let fast = ams_plan(5.0, 32, 1.0);
+        assert!(fast.config.fps > slow.config.fps * 2.0);
+        assert_eq!(fast.gaimd_alpha, 1.0, "AMS does not touch CC params");
+    }
+}

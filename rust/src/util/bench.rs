@@ -1,0 +1,142 @@
+//! Hand-rolled microbenchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `[[bench]]` target with `harness = false`:
+//! ```ignore
+//! let mut b = BenchSuite::new("coordinator");
+//! b.bench("alloc_step", || { ...workload... });
+//! b.finish();
+//! ```
+//! Reports mean / p50 / p99 wall-time per iteration plus throughput, with a
+//! calibration phase that picks an iteration count targeting ~200ms per
+//! measurement batch.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+pub use std::hint::black_box;
+
+const TARGET_BATCH: Duration = Duration::from_millis(200);
+const SAMPLES: usize = 12;
+
+pub struct BenchSuite {
+    name: String,
+    results: Vec<(String, f64, f64, f64)>, // (name, mean_ns, p50_ns, p99_ns)
+    filter: Option<String>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        // `cargo bench -- <filter>` passes the filter as an argument.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        println!("\n== bench suite: {name} ==");
+        BenchSuite {
+            name: name.to_string(),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Benchmark a closure; its return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Calibrate: how many iterations fit in TARGET_BATCH?
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= Duration::from_millis(20) || iters >= 1 << 24 {
+                let per = dt.as_nanos().max(1) as f64 / iters as f64;
+                iters = ((TARGET_BATCH.as_nanos() as f64 / per).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 4;
+        }
+        // Measure.
+        let mut samples = Vec::with_capacity(SAMPLES);
+        for _ in 0..SAMPLES {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = percentile(&samples, 0.5);
+        let p99 = percentile(&samples, 0.99);
+        println!(
+            "{:<40} {:>12}  p50 {:>12}  p99 {:>12}  ({} iters/sample)",
+            name,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p99),
+            iters
+        );
+        self.results.push((name.to_string(), mean, p50, p99));
+    }
+
+    /// Benchmark with explicit per-iteration timing (for workloads that need
+    /// per-iteration setup excluded from the measurement).
+    pub fn bench_timed<F: FnMut() -> Duration>(&mut self, name: &str, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        let mut samples = Vec::with_capacity(SAMPLES);
+        for _ in 0..SAMPLES {
+            samples.push(f().as_nanos() as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = percentile(&samples, 0.5);
+        let p99 = percentile(&samples, 0.99);
+        println!(
+            "{:<40} {:>12}  p50 {:>12}  p99 {:>12}  (timed)",
+            name,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p99)
+        );
+        self.results.push((name.to_string(), mean, p50, p99));
+    }
+
+    /// Print a summary table; call at the end of the bench main().
+    pub fn finish(self) {
+        println!("-- {} done: {} benchmarks --\n", self.name, self.results.len());
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+}

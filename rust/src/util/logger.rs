@@ -1,0 +1,101 @@
+//! Leveled stderr logger, controlled by the `ECCO_LOG` env var
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == 255 {
+        let lvl = std::env::var("ECCO_LOG")
+            .map(|v| Level::from_str(&v))
+            .unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        return lvl;
+    }
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn log(lvl: Level, module: &str, msg: &str) {
+    if lvl <= level() {
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {} {module}] {msg}", lvl.tag());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_and_get() {
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,141 @@
+//! Hand-rolled property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` seeded inputs; on failure it retries
+//! with progressively simpler generated cases ("shrink by regeneration at
+//! smaller size") and reports the failing seed so the case can be replayed
+//! deterministically in a unit test.
+
+use super::rng::Pcg32;
+
+/// Context handed to generators: a seeded RNG plus a size hint in [0,1]
+/// that grows over the run (small cases first, as shrunk replays stay small).
+pub struct Gen {
+    pub rng: Pcg32,
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] scaled by current size (at least lo+1 range).
+    pub fn int_scaled(&mut self, lo: usize, hi: usize) -> usize {
+        let span = ((hi - lo) as f64 * self.size).ceil().max(1.0) as usize;
+        lo + self.rng.index(span.min(hi - lo) + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (test failure) with the
+/// failing seed and message on the first violated case.
+pub fn check<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let mut g = Gen {
+            rng: Pcg32::new(seed, case as u64),
+            size: ((case + 1) as f64 / cases as f64).min(1.0),
+        };
+        if let Err(msg) = prop(&mut g) {
+            // Attempt a simpler reproduction at reduced size for the report.
+            let mut simplest: Option<(u32, String)> = None;
+            for retry in 0..16u32 {
+                let rseed = seed.wrapping_add(retry as u64 + 1);
+                let mut rg = Gen {
+                    rng: Pcg32::new(rseed, retry as u64),
+                    size: 0.1,
+                };
+                if let Err(rmsg) = prop(&mut rg) {
+                    simplest = Some((retry, rmsg));
+                    break;
+                }
+            }
+            match simplest {
+                Some((retry, rmsg)) => panic!(
+                    "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
+                     simpler repro (size=0.1, retry {retry}): {rmsg}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (case {case}, seed {seed:#x}): {msg}"
+                ),
+            }
+        }
+    }
+}
+
+/// Replay a specific failing seed (paste from the failure message).
+pub fn replay<F>(seed: u64, size: f64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen {
+        rng: Pcg32::new(seed, 0),
+        size,
+    };
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |g| {
+            let a = g.f32(-10.0, 10.0);
+            let b = g.f32(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn generators_honour_bounds() {
+        check("gen-bounds", 100, |g| {
+            let n = g.usize(3, 9);
+            if !(3..=9).contains(&n) {
+                return Err(format!("usize out of bounds: {n}"));
+            }
+            let v = g.vec_f32(n, -1.0, 1.0);
+            if v.len() != n || v.iter().any(|x| !(-1.0..1.0).contains(x)) {
+                return Err("vec_f32 out of bounds".to_string());
+            }
+            Ok(())
+        });
+    }
+}

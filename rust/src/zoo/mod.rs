@@ -1,0 +1,143 @@
+//! RECL-style model zoo: a store of historical student checkpoints plus a
+//! selector that warm-starts retraining from the best-matching one.
+//!
+//! RECL's zoo is keyed by a learned model selector; here each checkpoint
+//! carries the mean feature embedding of the data it was trained on, and
+//! selection is nearest-neighbour (cosine) between the retraining request's
+//! sample embedding and the stored signatures — the same "pick the
+//! historical model that matches the current distribution" role.
+
+use crate::util::stats::cosine;
+
+/// One stored checkpoint.
+#[derive(Debug, Clone)]
+pub struct ZooEntry {
+    /// Flat parameter vector of the student.
+    pub theta: Vec<f32>,
+    /// Mean (unit-norm) feature embedding of its training data.
+    pub signature: Vec<f32>,
+    /// Provenance label (camera id, scenario tag, ...).
+    pub label: String,
+}
+
+/// The model zoo.
+#[derive(Debug, Clone, Default)]
+pub struct ModelZoo {
+    pub entries: Vec<ZooEntry>,
+    /// Maximum retained entries (RECL prunes its zoo; we keep it simple
+    /// with FIFO eviction past the cap).
+    pub capacity: usize,
+}
+
+impl ModelZoo {
+    pub fn new(capacity: usize) -> ModelZoo {
+        ModelZoo {
+            entries: Vec::new(),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert a checkpoint; evicts the oldest entry past capacity.
+    pub fn insert(&mut self, theta: Vec<f32>, signature: Vec<f32>, label: &str) {
+        self.entries.push(ZooEntry {
+            theta,
+            signature,
+            label: label.to_string(),
+        });
+        if self.capacity > 0 && self.entries.len() > self.capacity {
+            self.entries.remove(0);
+        }
+    }
+
+    /// Select the entry whose signature best matches `query` (cosine).
+    /// Returns `None` when empty or the best match is below `min_sim`.
+    pub fn select(&self, query: &[f32], min_sim: f32) -> Option<&ZooEntry> {
+        self.entries
+            .iter()
+            .map(|e| (e, cosine(&e.signature, query)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .filter(|(_, sim)| *sim >= min_sim)
+            .map(|(e, _)| e)
+    }
+}
+
+/// Mean of embedding rows (each `dim` long), re-normalised to unit norm.
+pub fn mean_embedding(rows: &[f32], dim: usize) -> Vec<f32> {
+    assert!(dim > 0 && rows.len().is_multiple_of(dim));
+    let n = rows.len() / dim;
+    let mut mean = vec![0.0f32; dim];
+    for row in rows.chunks(dim) {
+        for (m, v) in mean.iter_mut().zip(row) {
+            *m += v / n as f32;
+        }
+    }
+    let norm = mean.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-8);
+    for m in &mut mean {
+        *m /= norm;
+    }
+    mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(dir: usize, dim: usize) -> Vec<f32> {
+        let mut v = vec![0.0; dim];
+        v[dir] = 1.0;
+        v
+    }
+
+    #[test]
+    fn selects_nearest_signature() {
+        let mut zoo = ModelZoo::new(8);
+        zoo.insert(vec![1.0], sig(0, 4), "a");
+        zoo.insert(vec![2.0], sig(1, 4), "b");
+        let mut q = sig(1, 4);
+        q[0] = 0.2;
+        let best = zoo.select(&q, 0.0).unwrap();
+        assert_eq!(best.label, "b");
+    }
+
+    #[test]
+    fn respects_min_similarity() {
+        let mut zoo = ModelZoo::new(8);
+        zoo.insert(vec![1.0], sig(0, 4), "a");
+        assert!(zoo.select(&sig(1, 4), 0.5).is_none());
+        assert!(zoo.select(&sig(0, 4), 0.5).is_some());
+    }
+
+    #[test]
+    fn fifo_eviction_past_capacity() {
+        let mut zoo = ModelZoo::new(2);
+        zoo.insert(vec![1.0], sig(0, 4), "a");
+        zoo.insert(vec![2.0], sig(1, 4), "b");
+        zoo.insert(vec![3.0], sig(2, 4), "c");
+        assert_eq!(zoo.len(), 2);
+        assert!(zoo.select(&sig(0, 4), 0.9).is_none(), "oldest evicted");
+        assert_eq!(zoo.select(&sig(2, 4), 0.9).unwrap().label, "c");
+    }
+
+    #[test]
+    fn empty_zoo_selects_nothing() {
+        let zoo = ModelZoo::new(4);
+        assert!(zoo.select(&sig(0, 4), 0.0).is_none());
+    }
+
+    #[test]
+    fn mean_embedding_unit_norm() {
+        let rows = vec![1.0, 0.0, 0.0, 1.0]; // two 2-d rows
+        let m = mean_embedding(&rows, 2);
+        let norm: f32 = m.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        assert!((m[0] - m[1]).abs() < 1e-6, "symmetric rows -> diagonal");
+    }
+}

@@ -1,0 +1,202 @@
+//! Integration test: the Rust PJRT runtime reproduces the numerics that
+//! jax computed at AOT time (artifacts/golden.json).
+//!
+//! Inputs are regenerated with the shared LCG (see aot.py `lcg_array` and
+//! util::rng::GoldenLcg), so any disagreement isolates a runtime bug, a
+//! manifest mismatch, or an artifact/text-roundtrip problem.
+
+use std::path::PathBuf;
+
+use ecco::runtime::{Engine, Labels, Task, TrainBatch};
+use ecco::util::json::Json;
+use ecco::util::rng::GoldenLcg;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn lcg(n: usize, seed: u32) -> Vec<f32> {
+    GoldenLcg::new(seed).fill(n)
+}
+
+fn one_hot(idx: &[usize], k: usize) -> Vec<f32> {
+    let mut out = vec![0.0; idx.len() * k];
+    for (i, &c) in idx.iter().enumerate() {
+        out[i * k + c % k] = 1.0;
+    }
+    out
+}
+
+fn golden() -> Json {
+    let text = std::fs::read_to_string(artifacts_dir().join("golden.json"))
+        .expect("golden.json missing — run `make artifacts`");
+    Json::parse(&text).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol + tol * w.abs(),
+            "{what}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn det_train_matches_jax() {
+    let g = golden();
+    let case = g.get("cases").unwrap().get("det").unwrap();
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let m = engine.manifest.clone();
+    let (b, r, grid, k) = (m.train_batch, 32usize, m.grid, m.classes);
+
+    let mut state = engine.init_model(Task::Det).unwrap();
+    let x = lcg(b * r * r * 3, 7);
+    let obj: Vec<f32> = lcg(b * grid * grid, 11)
+        .into_iter()
+        .map(|v| if v > 0.7 { 1.0 } else { 0.0 })
+        .collect();
+    let cls_idx: Vec<usize> = lcg(b * grid * grid, 13)
+        .into_iter()
+        .map(|v| (v * k as f32) as usize)
+        .collect();
+    let cls = one_hot(&cls_idx, k);
+    let batch = TrainBatch {
+        res: r,
+        pixels: x,
+        labels: Labels::Det { obj, cls },
+    };
+
+    let want_losses = case.get("losses").unwrap().f32_array().unwrap();
+    let mut got_losses = Vec::new();
+    for _ in 0..3 {
+        got_losses.push(engine.train_step(&mut state, &batch, 0.05).unwrap());
+    }
+    assert_close(&got_losses, &want_losses, 2e-4, "det losses");
+
+    let want_theta = case.get("theta_head8").unwrap().f32_array().unwrap();
+    assert_close(&state.theta[..8], &want_theta, 2e-4, "det theta head");
+    assert_eq!(state.steps, 3);
+}
+
+#[test]
+fn seg_train_matches_jax() {
+    let g = golden();
+    let case = g.get("cases").unwrap().get("seg").unwrap();
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let m = engine.manifest.clone();
+    let (b, r, k) = (m.train_batch, 32usize, m.classes);
+    let s = r / 4;
+
+    let mut state = engine.init_model(Task::Seg).unwrap();
+    let x = lcg(b * r * r * 3, 7);
+    let mask_idx: Vec<usize> = lcg(b * s * s, 17)
+        .into_iter()
+        .map(|v| (v * (k + 1) as f32) as usize)
+        .collect();
+    let mask = one_hot(&mask_idx, k + 1);
+    let batch = TrainBatch {
+        res: r,
+        pixels: x,
+        labels: Labels::Seg { mask },
+    };
+
+    let want_losses = case.get("losses").unwrap().f32_array().unwrap();
+    let mut got_losses = Vec::new();
+    for _ in 0..3 {
+        got_losses.push(engine.train_step(&mut state, &batch, 0.05).unwrap());
+    }
+    assert_close(&got_losses, &want_losses, 2e-4, "seg losses");
+}
+
+#[test]
+fn det_infer_matches_jax() {
+    let g = golden();
+    let case = g.get("cases").unwrap().get("det").unwrap();
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let m = engine.manifest.clone();
+    let (b, r) = (m.infer_batch, 32usize);
+
+    let state = engine.init_model(Task::Det).unwrap();
+    let x = lcg(b * r * r * 3, 23);
+    let pred = engine.infer_det(&state.theta, r, &x).unwrap();
+
+    let want = case.get("infer_head8").unwrap().as_arr().unwrap();
+    let want_obj = want[0].f32_array().unwrap();
+    let want_cls = want[1].f32_array().unwrap();
+    assert_close(&pred.obj[..8], &want_obj, 1e-4, "det infer obj");
+    assert_close(&pred.cls[..8], &want_cls, 1e-4, "det infer cls");
+    // Probabilities must be valid.
+    assert!(pred.obj.iter().all(|p| (0.0..=1.0).contains(p)));
+    for bidx in 0..pred.batch {
+        let row: f32 = pred.cls_at(bidx, 0, 0).iter().sum();
+        assert!((row - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn seg_infer_matches_jax() {
+    let g = golden();
+    let case = g.get("cases").unwrap().get("seg").unwrap();
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let m = engine.manifest.clone();
+    let (b, r) = (m.infer_batch, 32usize);
+
+    let state = engine.init_model(Task::Seg).unwrap();
+    let x = lcg(b * r * r * 3, 23);
+    let pred = engine.infer_seg(&state.theta, r, &x).unwrap();
+    let want = case.get("infer_head8").unwrap().as_arr().unwrap()[0]
+        .f32_array()
+        .unwrap();
+    assert_close(&pred.probs[..8], &want, 1e-4, "seg infer");
+    let row: f32 = pred.probs_at(0, 0, 0).iter().sum();
+    assert!((row - 1.0).abs() < 1e-4);
+}
+
+#[test]
+fn features_match_jax() {
+    let g = golden();
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let m = engine.manifest.clone();
+    let x = lcg(m.infer_batch * 32 * 32 * 3, 29);
+    let emb = engine.features(&x).unwrap();
+    assert_eq!(emb.len(), m.infer_batch * m.embed_dim);
+    let want = g.get("features").unwrap().get("head8").unwrap().f32_array().unwrap();
+    assert_close(&emb[..8], &want, 1e-4, "features");
+    // Unit norm per row.
+    let norm: f32 = emb[..m.embed_dim].iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3, "norm={norm}");
+}
+
+#[test]
+fn all_resolution_variants_execute() {
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let m = engine.manifest.clone();
+    for task in [Task::Det, Task::Seg] {
+        for &r in &m.resolutions.clone() {
+            let mut state = engine.init_model(task).unwrap();
+            let x = lcg(m.train_batch * r * r * 3, 31);
+            let labels = match task {
+                Task::Det => Labels::Det {
+                    obj: vec![0.0; m.train_batch * m.grid * m.grid],
+                    cls: vec![0.0; m.train_batch * m.grid * m.grid * m.classes],
+                },
+                Task::Seg => {
+                    let s = r / 4;
+                    let idx: Vec<usize> = vec![m.classes; m.train_batch * s * s];
+                    Labels::Seg {
+                        mask: one_hot(&idx, m.classes + 1),
+                    }
+                }
+            };
+            let batch = TrainBatch {
+                res: r,
+                pixels: x,
+                labels,
+            };
+            let loss = engine.train_step(&mut state, &batch, 0.01).unwrap();
+            assert!(loss.is_finite(), "{task:?} r{r} loss not finite");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Cross-module property tests (hand-rolled harness in `util::prop`):
+//! randomized sweeps over the substrate invariants the coordinator relies
+//! on. Each property prints a replayable seed on failure.
+
+use ecco::net::{gaimd_weight, NetSim};
+use ecco::scene::{render, SceneState};
+use ecco::util::prop;
+use ecco::video::{transport_window, SamplingConfig, BPP_FLOOR, BPP_LOSSLESS};
+
+#[test]
+fn prop_gaimd_share_follows_alpha_over_one_minus_beta() {
+    // Two flows with random GAIMD parameters on a shared bottleneck:
+    // delivered-rate ratio tracks the weight law within a tolerance band.
+    prop::check("gaimd-share-law", 12, |g| {
+        let cap = g.f32(4.0, 20.0) as f64;
+        let a1 = g.f32(0.5, 3.0) as f64;
+        let a2 = g.f32(0.5, 3.0) as f64;
+        let b = 0.5f64;
+        let mut sim = NetSim::star(&[1e3, 1e3], cap);
+        let f1 = sim.add_camera_flow(0, a1, b).map_err(|e| e.to_string())?;
+        let f2 = sim.add_camera_flow(1, a2, b).map_err(|e| e.to_string())?;
+        sim.run(80.0); // converge
+        sim.reset_delivered();
+        sim.run(120.0);
+        let r1 = sim.delivered_mbit(f1);
+        let r2 = sim.delivered_mbit(f2);
+        let got = r1 / r2;
+        let want = gaimd_weight(a1, b) / gaimd_weight(a2, b);
+        let ratio = got / want;
+        if !(0.55..=1.8).contains(&ratio) {
+            return Err(format!(
+                "share ratio {got:.2} vs law {want:.2} (x{ratio:.2}) a=({a1:.2},{a2:.2}) cap={cap:.1}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_goodput_bounded_by_every_link() {
+    prop::check("goodput-capacity", 15, |g| {
+        let n = g.usize(1, 5);
+        let shared = g.f32(1.0, 10.0) as f64;
+        let locals: Vec<f64> = (0..n).map(|_| g.f32(0.3, 8.0) as f64).collect();
+        let mut sim = NetSim::star(&locals, shared);
+        let ids: Vec<_> = (0..n)
+            .map(|i| {
+                sim.add_camera_flow(i, g.f32(0.3, 2.0) as f64, 0.5)
+                    .unwrap()
+            })
+            .collect();
+        sim.run(30.0);
+        sim.reset_delivered();
+        let dur = 40.0;
+        sim.run(dur);
+        let mut total = 0.0;
+        for (i, &id) in ids.iter().enumerate() {
+            let rate = sim.delivered_mbit(id) / dur;
+            if rate > locals[i] * 1.02 {
+                return Err(format!("flow {i} beat its uplink: {rate} > {}", locals[i]));
+            }
+            total += rate;
+        }
+        if total > shared * 1.02 {
+            return Err(format!("aggregate {total} beat shared {shared}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transport_conserves_frames_and_bits() {
+    prop::check("transport-conservation", 60, |g| {
+        let cfg = SamplingConfig {
+            fps: g.f32(0.25, 12.0),
+            res: [16, 32, 48][g.usize(0, 2)],
+        };
+        let secs = g.f32(5.0, 120.0) as f64;
+        let mbit = g.f32(0.0, 200.0) as f64;
+        let out = transport_window(cfg, secs, mbit);
+        if out.frames_delivered > out.frames_sampled {
+            return Err("delivered > sampled".into());
+        }
+        if !(0.0..=1.0).contains(&out.quality) {
+            return Err(format!("quality out of range: {}", out.quality));
+        }
+        if out.frames_delivered > 0 {
+            if out.bpp < BPP_FLOOR - 1e-9 || out.bpp > BPP_LOSSLESS + 1e-9 {
+                return Err(format!("bpp out of range: {}", out.bpp));
+            }
+            // Bits used cannot exceed bits delivered.
+            let used =
+                out.bpp * (cfg.res * cfg.res * 3) as f64 * out.frames_delivered as f64;
+            if used > mbit * 1e6 + 1.0 {
+                return Err(format!("used {used} > delivered {}", mbit * 1e6));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_render_deterministic_and_bounded() {
+    prop::check("render-determinism", 25, |g| {
+        let mut state = SceneState::default_day();
+        state.illumination = g.f32(0.25, 1.4);
+        state.rain = g.f32(0.0, 1.0);
+        state.hue_shift = g.f32(0.0, 1.0);
+        state.clutter = g.f32(0.5, 4.0);
+        state.clamp();
+        let res = [16usize, 32, 48][g.usize(0, 2)];
+        let seed = g.rng.next_u64();
+        let a = render(&state, res, seed);
+        let b = render(&state, res, seed);
+        if a.pixels != b.pixels {
+            return Err("same seed produced different pixels".into());
+        }
+        if a.pixels.iter().any(|&p| !(0.0..=1.0).contains(&p)) {
+            return Err("pixel out of [0,1]".into());
+        }
+        if a.truth.objects.len() != b.truth.objects.len() {
+            return Err("nondeterministic object population".into());
+        }
+        for o in &a.truth.objects {
+            if o.class >= 4 || !(0.0..=1.0).contains(&o.cx) {
+                return Err("invalid object".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mask_grid_consistent_with_contains() {
+    prop::check("mask-contains-consistency", 25, |g| {
+        let state = SceneState::default_day();
+        let f = render(&state, 32, g.rng.next_u64());
+        let s = 8;
+        let mask = f.truth.mask_grid(s);
+        for iy in 0..s {
+            for ix in 0..s {
+                let x = (ix as f32 + 0.5) / s as f32;
+                let y = (iy as f32 + 0.5) / s as f32;
+                let covered = f.truth.objects.iter().any(|o| o.contains(x, y));
+                let labelled = mask[iy * s + ix] != 4;
+                if covered != labelled {
+                    return Err(format!("cell ({iy},{ix}): covered={covered} labelled={labelled}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
