@@ -1,5 +1,9 @@
 //! Diagnostic: how much does each drift flavour hurt the pretrained
 //! student, and how much headroom does retraining recover?
+//!
+//! This probe deliberately drives the engine below the `ecco::api` façade
+//! (no `Session`): it measures raw model/drift interactions, not system
+//! behaviour. Full-system drivers should start from `ecco::api::RunSpec`.
 use anyhow::Result;
 use ecco::runtime::{Engine, Task};
 use ecco::scene::{DriftEvent, DriftProcess, SceneState, Zone};

@@ -1,20 +1,21 @@
-//! End-to-end driver: the full ECCO stack on a realistic small workload.
+//! End-to-end driver: the full ECCO stack on a realistic small workload,
+//! driven entirely through the `ecco::api` façade.
 //!
 //! Eight cameras at three intersections (3+3+2 correlated groups) hit by
 //! staggered drift events; ECCO and the Naive baseline run side by side on
 //! identical worlds with 2 simulated GPUs and a 8 Mbit/s shared uplink.
 //! Every layer is exercised: scene rendering -> encoder/network simulation
 //! (GAIMD) -> teacher labelling -> grouping (Alg. 2) -> GPU allocation
-//! (Alg. 1) -> real SGD through the AOT-compiled PJRT executables ->
-//! mAP evaluation.
+//! (Alg. 1) -> real SGD through the engine backend -> mAP evaluation.
 //!
 //! Run with: `cargo run --release --example end_to_end`
 //! (record the output in EXPERIMENTS.md §End-to-end.)
 
 use anyhow::Result;
+use ecco::api::{RunSpec, Session};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
-use ecco::server::{Policy, System, SystemConfig};
+use ecco::server::Policy;
 
 const WINDOWS: usize = 10;
 const CAMS: usize = 8;
@@ -33,45 +34,39 @@ fn main() -> Result<()> {
     for policy in [Policy::ecco(), Policy::naive()] {
         let name = policy.name;
         println!("\n=== running {name} ({CAMS} cameras, 2 GPUs, 8 Mbps shared) ===");
-        let sc = scenario::grouped_static(&[3, 3, 2], 0.06, 45.0, 1234);
-        let mut cfg = SystemConfig::new(Task::Det, policy);
-        cfg.gpus = 2.0;
-        cfg.seed = 1234;
-        let mut sys = System::new(cfg, sc.world, &[20.0; CAMS], 8.0, &mut engine)?;
+        let spec = RunSpec::new(Task::Det, policy)
+            .scenario(scenario::grouped_static(&[3, 3, 2], 0.06, 45.0, 1234))
+            .gpus(2.0)
+            .shared_mbps(8.0)
+            .uplink_mbps(20.0)
+            .windows(WINDOWS)
+            .seed(1234);
+        let mut session = Session::new(&mut engine, spec)?;
 
         println!("window |  t(s) | jobs | mean mAP | min mAP | engine train-steps");
-        for w in 0..WINDOWS {
-            sys.run_window()?;
-            let min = sys
-                .cams
-                .iter()
-                .map(|c| c.last_acc)
-                .fold(f32::INFINITY, f32::min);
+        for _ in 0..WINDOWS {
+            let w = session.step_window()?;
+            let min = w.cam_acc.iter().cloned().fold(f32::INFINITY, f32::min);
             println!(
                 "{:>6} | {:>5.0} | {:>4} |  {:.3}   |  {:.3}  | {}",
-                w,
-                sys.now(),
-                sys.jobs.len(),
-                sys.mean_accuracy(),
+                w.window,
+                w.time,
+                w.jobs,
+                w.mean_acc,
                 min,
-                sys.engine.stats.train_steps
+                session.engine_stats().train_steps
             );
         }
-        let horizon = sys.now();
         println!(
             "{name}: steady mAP {:.3}, response {:.0}s ({}/{} satisfied), {} jobs, teacher labels {}",
-            sys.history.steady_mean(0.4),
-            sys.tracker.mean_response(horizon),
-            sys.tracker.satisfied(),
-            sys.tracker.total(),
-            sys.jobs.len(),
-            sys.teacher.annotated,
+            session.steady_mean(0.4),
+            session.mean_response(),
+            session.requests_satisfied(),
+            session.requests_total(),
+            session.jobs(),
+            session.teacher_annotated(),
         );
-        summary.push((
-            name,
-            sys.history.steady_mean(0.4),
-            sys.tracker.mean_response(horizon),
-        ));
+        summary.push((name, session.steady_mean(0.4), session.mean_response()));
     }
 
     let stats = &engine.stats;
@@ -86,7 +81,7 @@ fn main() -> Result<()> {
         (es - bs) * 100.0
     );
     println!(
-        "engine totals: {} train steps, {} infer calls, {:.1}s inside PJRT, wall {:.0}s",
+        "engine totals: {} train steps, {} infer calls, {:.1}s inside the engine, wall {:.0}s",
         stats.train_steps,
         stats.infer_calls,
         stats.exec_nanos as f64 / 1e9,

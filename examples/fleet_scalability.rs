@@ -1,9 +1,12 @@
 //! Compare ECCO vs baselines on a 6-camera fleet (two correlated triples)
-//! under a constrained GPU + bandwidth budget — the Fig. 6 setting, small.
+//! under a constrained GPU + bandwidth budget — the Fig. 6 setting, small —
+//! via the `ecco::api` façade (zoo warm-start policies are prefilled
+//! automatically by `Session::new`).
 use anyhow::Result;
+use ecco::api::{RunSpec, Session};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
-use ecco::server::{Policy, System, SystemConfig};
+use ecco::server::Policy;
 
 fn main() -> Result<()> {
     let mut engine = Engine::open_default()?;
@@ -13,25 +16,21 @@ fn main() -> Result<()> {
     println!("fleet: 6 cams (3+3 correlated), {gpus} GPUs, {bw} Mbps shared, {windows} windows");
     for policy in [Policy::ecco(), Policy::recl(), Policy::ekya(), Policy::naive()] {
         let name = policy.name;
-        let sc = scenario::grouped_static(&[3, 3], 0.06, 30.0, 42);
-        let mut cfg = SystemConfig::new(Task::Det, policy);
-        cfg.gpus = gpus;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 6], bw, &mut engine)?;
-        if sys.cfg.policy.zoo_warm_start {
-            sys.populate_zoo_from_initial(40)?;
-        }
+        let spec = RunSpec::new(Task::Det, policy)
+            .scenario(scenario::grouped_static(&[3, 3], 0.06, 30.0, 42))
+            .gpus(gpus)
+            .shared_mbps(bw)
+            .uplink_mbps(20.0)
+            .windows(windows);
         let t0 = std::time::Instant::now();
-        let mut series = Vec::new();
-        for _ in 0..windows {
-            sys.run_window()?;
-            series.push(format!("{:.3}", sys.mean_accuracy()));
-        }
+        let report = Session::new(&mut engine, spec)?.run()?;
+        let series: Vec<String> = report.window_acc.iter().map(|a| format!("{a:.3}")).collect();
         println!(
             "{name:<8} steady={:.3} final={:.3} resp={:.0}s jobs={} [{}] ({:.0}s wall)",
-            sys.history.steady_mean(0.4),
-            sys.mean_accuracy(),
-            sys.tracker.mean_response(windows as f64 * 60.0),
-            sys.jobs.len(),
+            report.steady,
+            report.final_acc,
+            report.response_s,
+            report.jobs,
             series.join(" "),
             t0.elapsed().as_secs_f64()
         );

@@ -1,49 +1,47 @@
 //! Quickstart: three correlated cameras hit by a drift event; ECCO groups
 //! them into one retraining job and recovers accuracy with 1 simulated GPU.
 //!
+//! The documented code path is the `ecco::api` façade: build a [`RunSpec`],
+//! open a [`Session`], step windows, read [`WindowReport`]s.
+//!
 //! Run with: `cargo run --release --example quickstart`
 
 use anyhow::Result;
+use ecco::api::{RunSpec, Session};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
-use ecco::server::{Policy, System, SystemConfig};
+use ecco::server::Policy;
 
 fn main() -> Result<()> {
     let mut engine = Engine::open_default()?;
     println!("loaded {} artifacts", engine.manifest.artifacts.len());
 
     // Three static cameras in one region (correlated drift at t=30s).
-    let scenario = scenario::grouped_static(&[3], 0.06, 30.0, 42);
-    let cfg = SystemConfig::new(Task::Det, Policy::ecco());
-    let mut system = System::new(
-        cfg,
-        scenario.world,
-        &[20.0, 20.0, 20.0], // uplinks (Mbit/s)
-        6.0,                 // shared bottleneck
-        &mut engine,
-    )?;
+    let spec = RunSpec::new(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[3], 0.06, 30.0, 42))
+        .uplink_mbps(20.0) // per-camera uplinks (Mbit/s)
+        .shared_mbps(6.0) // shared bottleneck
+        .windows(8)
+        .seed(42);
+    let mut session = Session::new(&mut engine, spec)?;
 
     println!("window |  t(s) | jobs | mean mAP | per-camera mAP");
-    for w in 0..8 {
-        system.run_window()?;
-        let accs: Vec<String> = system
-            .cams
-            .iter()
-            .map(|c| format!("{:.3}", c.last_acc))
-            .collect();
+    for _ in 0..8 {
+        let w = session.step_window()?;
+        let accs: Vec<String> = w.cam_acc.iter().map(|a| format!("{a:.3}")).collect();
         println!(
             "{:>6} | {:>5.0} | {:>4} |   {:.3}  | {}",
-            w,
-            system.now(),
-            system.jobs.len(),
-            system.mean_accuracy(),
+            w.window,
+            w.time,
+            w.jobs,
+            w.mean_acc,
             accs.join(" ")
         );
     }
 
-    let stats = &system.engine.stats;
+    let stats = session.engine_stats();
     println!(
-        "\nengine: {} train steps, {} infer calls, {} feature calls, {:.2}s in PJRT",
+        "\nengine: {} train steps, {} infer calls, {} feature calls, {:.2}s in the engine",
         stats.train_steps,
         stats.infer_calls,
         stats.feature_calls,
@@ -51,9 +49,9 @@ fn main() -> Result<()> {
     );
     println!(
         "teacher annotated {} frames; response: {}/{} requests satisfied",
-        system.teacher.annotated,
-        system.tracker.satisfied(),
-        system.tracker.total()
+        session.teacher_annotated(),
+        session.requests_satisfied(),
+        session.requests_total()
     );
     Ok(())
 }

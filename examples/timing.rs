@@ -1,3 +1,7 @@
+//! Raw engine-call latency probe (train/infer/features per resolution).
+//! Like `drift_playground`, this sits below the `ecco::api` façade on
+//! purpose: it times bare engine calls. System runs go through
+//! `ecco::api::RunSpec` / `Session`.
 use ecco::runtime::{Engine, Task, TrainBatch, Labels};
 use std::time::Instant;
 fn main() -> anyhow::Result<()> {

@@ -6,10 +6,11 @@
 //! Run: `cargo bench --bench coordinator`
 
 use ecco::alloc::{Allocator, EccoAllocator, JobView, UniformAllocator, UtilityAllocator};
+use ecco::api::{RunSpec, Session};
 use ecco::grouping::{group_request, metadata_correlated, GroupJob, GroupingPolicy, RequestMeta};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
-use ecco::server::{Policy, System, SystemConfig};
+use ecco::server::Policy;
 use ecco::util::bench::{black_box, BenchSuite};
 
 fn jobs(n: usize) -> Vec<JobView> {
@@ -83,19 +84,24 @@ fn main() {
     });
     gjobs.truncate(64);
 
-    // End-to-end: one full retraining window of the real system (PJRT
-    // training, network sim, teacher, metrics) at the Fig. 6 scale.
-    let mut engine = Engine::open_default().expect("run `make artifacts` first");
+    // End-to-end: one full retraining window of the real system (engine
+    // training, network sim, teacher, metrics) at the Fig. 6 scale,
+    // assembled through the api façade.
+    let mut engine = Engine::open_default().expect("engine should open");
     b.bench_timed("e2e_window_6cams_ecco", || {
-        let sc = scenario::grouped_static(&[3, 3], 0.06, 10.0, 42);
-        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
-        cfg.gpus = 2.0;
-        cfg.pretrain_steps = 120;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 6], 6.0, &mut engine).unwrap();
+        let spec = RunSpec::new(Task::Det, Policy::ecco())
+            .scenario(scenario::grouped_static(&[3, 3], 0.06, 10.0, 42))
+            .gpus(2.0)
+            .shared_mbps(6.0)
+            .uplink_mbps(20.0)
+            .windows(1)
+            .seed(42)
+            .configure(|cfg| cfg.pretrain_steps = 120);
+        let mut session = Session::new(&mut engine, spec).unwrap();
         let t0 = std::time::Instant::now();
-        sys.run_window().unwrap();
+        let report = session.step_window().unwrap();
         let dt = t0.elapsed();
-        black_box(sys.mean_accuracy());
+        black_box(report.mean_acc);
         dt
     });
 

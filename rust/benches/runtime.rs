@@ -8,7 +8,7 @@ use ecco::runtime::{Engine, Labels, Task, TrainBatch};
 use ecco::util::bench::BenchSuite;
 
 fn main() {
-    let mut engine = Engine::open_default().expect("run `make artifacts` first");
+    let mut engine = Engine::open_default().expect("engine should open");
     let m = engine.manifest.clone();
     let mut b = BenchSuite::new("runtime");
 

@@ -1,0 +1,407 @@
+//! The typed event stream: every observable state change the system makes
+//! during a run, delivered to pluggable [`EventSink`]s.
+//!
+//! This replaces field scraping (`sys.alloc_log`, `sys.membership_log`,
+//! `sys.cams[i].last_acc`, …) as the observation surface: the [`System`]
+//! loop emits an [`Event`] at each decision point, a [`RecordingSink`] is
+//! always attached so [`super::Session`] can rebuild reports and the
+//! legacy log shapes, and a [`JsonlSink`] streams the same events to disk
+//! for `scripts/render_results.py`-style offline analysis.
+//!
+//! [`System`]: crate::server::system::System
+
+use std::io::Write;
+
+use crate::server::system::MembershipSnapshot;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One observable state change during a run.
+///
+/// `window` is the retraining-window index the event occurred in; `time`
+/// is simulated seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A camera issued a retraining request (drift detected, scripted, or
+    /// an Alg. 2 eviction re-entering the pipeline).
+    RetrainRequest {
+        time: f64,
+        window: usize,
+        cam: usize,
+        /// The camera's own-model accuracy on the request probe.
+        acc: f32,
+    },
+    /// A new retraining job was created with `cam` as its first member.
+    GroupFormed {
+        time: f64,
+        window: usize,
+        job: usize,
+        cam: usize,
+    },
+    /// A camera's request was merged into an existing job (Alg. 2).
+    GroupJoined {
+        time: f64,
+        window: usize,
+        job: usize,
+        cam: usize,
+    },
+    /// A camera was evicted from its job at a regrouping boundary.
+    GroupSplit {
+        time: f64,
+        window: usize,
+        job: usize,
+        cam: usize,
+    },
+    /// Alg. 1 granted a micro-window's GPUs to `job` (Fig. 10's one-hot
+    /// bars are exactly this stream).
+    Alloc {
+        window: usize,
+        micro_window: usize,
+        job: usize,
+    },
+    /// A job's retrained model was pushed to its member devices.
+    ModelPublished {
+        time: f64,
+        window: usize,
+        job: usize,
+        cams: Vec<usize>,
+    },
+    /// A retraining window finished: per-camera live accuracy and the
+    /// pre-regroup membership snapshot (Fig. 9's grouping bars).
+    WindowClosed {
+        time: f64,
+        window: usize,
+        mean_acc: f32,
+        cam_acc: Vec<f32>,
+        membership: MembershipSnapshot,
+    },
+}
+
+impl Event {
+    /// Stable machine-readable event name.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RetrainRequest { .. } => "retrain_request",
+            Event::GroupFormed { .. } => "group_formed",
+            Event::GroupJoined { .. } => "group_joined",
+            Event::GroupSplit { .. } => "group_split",
+            Event::Alloc { .. } => "alloc",
+            Event::ModelPublished { .. } => "model_published",
+            Event::WindowClosed { .. } => "window_closed",
+        }
+    }
+
+    /// The window index the event belongs to.
+    pub fn window(&self) -> usize {
+        match self {
+            Event::RetrainRequest { window, .. }
+            | Event::GroupFormed { window, .. }
+            | Event::GroupJoined { window, .. }
+            | Event::GroupSplit { window, .. }
+            | Event::Alloc { window, .. }
+            | Event::ModelPublished { window, .. }
+            | Event::WindowClosed { window, .. } => *window,
+        }
+    }
+
+    /// JSON representation (one object per event; `type` discriminates).
+    pub fn to_json(&self) -> Json {
+        let membership_json = |m: &MembershipSnapshot| {
+            arr(m
+                .iter()
+                .map(|(job, members)| {
+                    obj(vec![
+                        ("job", num(*job as f64)),
+                        (
+                            "members",
+                            arr(members.iter().map(|&c| num(c as f64)).collect()),
+                        ),
+                    ])
+                })
+                .collect())
+        };
+        match self {
+            Event::RetrainRequest {
+                time,
+                window,
+                cam,
+                acc,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("cam", num(*cam as f64)),
+                ("acc", num(*acc as f64)),
+            ]),
+            Event::GroupFormed {
+                time,
+                window,
+                job,
+                cam,
+            }
+            | Event::GroupJoined {
+                time,
+                window,
+                job,
+                cam,
+            }
+            | Event::GroupSplit {
+                time,
+                window,
+                job,
+                cam,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("job", num(*job as f64)),
+                ("cam", num(*cam as f64)),
+            ]),
+            Event::Alloc {
+                window,
+                micro_window,
+                job,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("window", num(*window as f64)),
+                ("micro_window", num(*micro_window as f64)),
+                ("job", num(*job as f64)),
+            ]),
+            Event::ModelPublished {
+                time,
+                window,
+                job,
+                cams,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("job", num(*job as f64)),
+                ("cams", arr(cams.iter().map(|&c| num(c as f64)).collect())),
+            ]),
+            Event::WindowClosed {
+                time,
+                window,
+                mean_acc,
+                cam_acc,
+                membership,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("mean_acc", num(*mean_acc as f64)),
+                (
+                    "cam_acc",
+                    arr(cam_acc.iter().map(|&a| num(a as f64)).collect()),
+                ),
+                ("membership", membership_json(membership)),
+            ]),
+        }
+    }
+}
+
+/// Extract `(window, micro_window, job)` GPU-grant triples from a slice of
+/// events (the old `alloc_log` shape). Shared by [`RecordingSink`] and the
+/// per-window report assembly so the two can never drift.
+pub fn alloc_triples(events: &[Event]) -> Vec<(usize, usize, usize)> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Alloc {
+                window,
+                micro_window,
+                job,
+            } => Some((*window, *micro_window, *job)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// A consumer of the event stream. Sinks must not assume any buffering:
+/// events arrive in emission order, during the run.
+pub trait EventSink {
+    fn on_event(&mut self, event: &Event);
+}
+
+/// Accumulates the full event stream in memory; reconstructs the legacy
+/// log shapes the experiment runners used to scrape off `System`.
+#[derive(Debug, Clone, Default)]
+pub struct RecordingSink {
+    pub events: Vec<Event>,
+}
+
+impl RecordingSink {
+    pub fn new() -> RecordingSink {
+        RecordingSink::default()
+    }
+
+    /// `(window, micro_window, job)` triples — the old `sys.alloc_log`.
+    pub fn alloc_log(&self) -> Vec<(usize, usize, usize)> {
+        alloc_triples(&self.events)
+    }
+
+    /// Per-window membership snapshots — the old `sys.membership_log`.
+    pub fn membership_log(&self) -> Vec<(usize, MembershipSnapshot)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                Event::WindowClosed {
+                    window, membership, ..
+                } => Some((*window, membership.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Mean camera accuracy per closed window.
+    pub fn window_acc(&self) -> Vec<f32> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                Event::WindowClosed { mean_acc, .. } => Some(*mean_acc),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+impl EventSink for RecordingSink {
+    fn on_event(&mut self, event: &Event) {
+        self.events.push(event.clone());
+    }
+}
+
+/// Streams events as JSON Lines to any writer (a file for offline
+/// analysis, a buffer for tests). Flushes on drop.
+pub struct JsonlSink<W: Write> {
+    out: Option<W>,
+}
+
+impl JsonlSink<std::io::BufWriter<std::fs::File>> {
+    /// Create (truncate) a `.jsonl` file sink at `path`.
+    pub fn create(path: &str) -> anyhow::Result<Self> {
+        let file = std::fs::File::create(path)?;
+        Ok(JsonlSink::new(std::io::BufWriter::new(file)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> Self {
+        JsonlSink { out: Some(out) }
+    }
+
+    /// Flush and hand back the underlying writer.
+    pub fn into_inner(mut self) -> W {
+        let mut out = self.out.take().expect("writer present until into_inner");
+        let _ = out.flush();
+        out
+    }
+}
+
+impl<W: Write> EventSink for JsonlSink<W> {
+    fn on_event(&mut self, event: &Event) {
+        // A sink write failure must not kill the simulation; drop the line.
+        if let Some(out) = &mut self.out {
+            let _ = writeln!(out, "{}", event.to_json().to_string_compact());
+        }
+    }
+}
+
+impl<W: Write> Drop for JsonlSink<W> {
+    fn drop(&mut self) {
+        if let Some(out) = &mut self.out {
+            let _ = out.flush();
+        }
+    }
+}
+
+/// The system-side fan-out point: an always-on [`RecordingSink`] (reports
+/// are built from it) plus any user-attached sinks.
+#[derive(Default)]
+pub(crate) struct EventBus {
+    pub(crate) record: RecordingSink,
+    pub(crate) sinks: Vec<Box<dyn EventSink>>,
+}
+
+impl EventBus {
+    pub(crate) fn new() -> EventBus {
+        EventBus::default()
+    }
+
+    pub(crate) fn emit(&mut self, event: Event) {
+        for sink in &mut self.sinks {
+            sink.on_event(&event);
+        }
+        self.record.on_event(&event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RetrainRequest {
+                time: 1.0,
+                window: 0,
+                cam: 2,
+                acc: 0.12,
+            },
+            Event::GroupFormed {
+                time: 1.0,
+                window: 0,
+                job: 0,
+                cam: 2,
+            },
+            Event::Alloc {
+                window: 0,
+                micro_window: 3,
+                job: 0,
+            },
+            Event::WindowClosed {
+                time: 60.0,
+                window: 0,
+                mean_acc: 0.4,
+                cam_acc: vec![0.4, 0.4],
+                membership: vec![(0, vec![2])],
+            },
+        ]
+    }
+
+    #[test]
+    fn recording_sink_rebuilds_logs() {
+        let mut sink = RecordingSink::new();
+        for e in sample_events() {
+            sink.on_event(&e);
+        }
+        assert_eq!(sink.alloc_log(), vec![(0, 3, 0)]);
+        assert_eq!(sink.membership_log(), vec![(0, vec![(0, vec![2])])]);
+        assert_eq!(sink.window_acc(), vec![0.4]);
+        assert_eq!(sink.events.len(), 4);
+    }
+
+    #[test]
+    fn jsonl_sink_emits_parseable_lines() {
+        let mut sink = JsonlSink::new(Vec::new());
+        for e in sample_events() {
+            sink.on_event(&e);
+        }
+        let buf = sink.into_inner();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("type").unwrap().as_str().is_ok());
+        }
+        assert!(lines[0].contains("retrain_request"));
+        assert!(lines[3].contains("window_closed"));
+    }
+
+    #[test]
+    fn event_window_accessor() {
+        for e in sample_events() {
+            assert_eq!(e.window(), 0);
+        }
+    }
+}

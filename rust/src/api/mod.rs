@@ -1,0 +1,43 @@
+//! `ecco::api` — the public entry point for running the system.
+//!
+//! Three pieces replace the old positional `System::new` + field-scraping
+//! pattern:
+//!
+//! * [`RunSpec`] — a validated builder for one run: task + policy, the
+//!   resource envelope (GPUs, shared bandwidth, per-camera uplinks), the
+//!   horizon, seed, and scenario.
+//! * [`Session`] — the live handle: [`Session::run`] for a whole horizon,
+//!   or [`Session::step_window`] with scripted control
+//!   ([`Session::request_now`], [`Session::force_group`]) in between.
+//! * the typed event stream — [`Event`]s delivered to [`EventSink`]s; the
+//!   always-on [`RecordingSink`] backs [`WindowReport`] / [`RunReport`],
+//!   and [`JsonlSink`] streams the run to disk.
+//!
+//! ```no_run
+//! use ecco::api::{RunSpec, Session};
+//! use ecco::runtime::{Engine, Task};
+//! use ecco::server::Policy;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let mut engine = Engine::open_default()?;
+//!     let spec = RunSpec::new(Task::Det, Policy::ecco())
+//!         .cams(6)
+//!         .gpus(2.0)
+//!         .shared_mbps(6.0)
+//!         .windows(8)
+//!         .seed(7);
+//!     let report = Session::new(&mut engine, spec)?.run()?;
+//!     println!("steady mAP {:.3}", report.steady);
+//!     Ok(())
+//! }
+//! ```
+
+pub mod event;
+pub mod report;
+pub mod session;
+pub mod spec;
+
+pub use event::{Event, EventSink, JsonlSink, RecordingSink};
+pub use report::{RunReport, WindowReport};
+pub use session::Session;
+pub use spec::{RunSpec, SpecError};

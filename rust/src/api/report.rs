@@ -1,0 +1,75 @@
+//! Typed run results: [`WindowReport`] per stepped window, [`RunReport`]
+//! for a whole run. Both are rebuilt from the event stream plus the
+//! session's trackers — no field scraping.
+
+use crate::api::event::Event;
+use crate::server::system::MembershipSnapshot;
+use crate::util::json::{arr, f32s, num, obj, s, Json};
+
+/// What one retraining window produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowReport {
+    /// Zero-based window index.
+    pub window: usize,
+    /// Simulated time at the window boundary (seconds).
+    pub time: f64,
+    /// Active retraining jobs after the window (post-regroup).
+    pub jobs: usize,
+    /// Mean live-model accuracy across cameras.
+    pub mean_acc: f32,
+    /// Per-camera live-model accuracy.
+    pub cam_acc: Vec<f32>,
+    /// Post-window group membership: (job id, member cameras).
+    pub membership: MembershipSnapshot,
+    /// `(window, micro_window, job)` GPU grants made during this window.
+    pub allocs: Vec<(usize, usize, usize)>,
+}
+
+/// Aggregate results of a full run (the JSON shape matches what the
+/// experiment runners have always written to `results/*.json`).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Policy name (report label).
+    pub name: String,
+    /// Mean accuracy per window (over cameras).
+    pub window_acc: Vec<f32>,
+    /// Per-camera accuracy series: `cam_acc[cam][window]`.
+    pub cam_acc: Vec<Vec<f32>>,
+    /// Steady-state mean accuracy (last 40% of windows).
+    pub steady: f32,
+    pub final_acc: f32,
+    /// Mean response time (seconds; unresolved counted at horizon).
+    pub response_s: f64,
+    pub satisfied: usize,
+    pub requests: usize,
+    /// Final number of retraining jobs.
+    pub jobs: usize,
+    /// `(window, micro-window, job id)` allocation log (Fig. 10's bars).
+    pub alloc_log: Vec<(usize, usize, usize)>,
+    /// Pre-regroup membership snapshots per window (Fig. 9's bars).
+    pub membership: Vec<(usize, MembershipSnapshot)>,
+    /// The full typed event stream the run emitted.
+    pub events: Vec<Event>,
+    pub wall_secs: f64,
+}
+
+impl RunReport {
+    /// The legacy results-JSON shape (`scripts/render_results.py` input).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("window_acc", f32s(&self.window_acc)),
+            (
+                "cam_acc",
+                arr(self.cam_acc.iter().map(|c| f32s(c)).collect()),
+            ),
+            ("steady", num(self.steady as f64)),
+            ("final", num(self.final_acc as f64)),
+            ("response_s", num(self.response_s)),
+            ("satisfied", num(self.satisfied as f64)),
+            ("requests", num(self.requests as f64)),
+            ("jobs", num(self.jobs as f64)),
+            ("wall_secs", num(self.wall_secs)),
+        ])
+    }
+}

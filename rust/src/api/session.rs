@@ -1,0 +1,267 @@
+//! [`Session`]: a running system behind a typed handle.
+//!
+//! `Session::new(engine, spec)` validates the spec, builds the world and
+//! the [`System`], and wires the event stream. Drivers then either call
+//! [`Session::run`] for the whole horizon or [`Session::step_window`] in a
+//! loop (scripted experiments interleave [`Session::request_now`] /
+//! [`Session::force_group`] calls between windows). All observation goes
+//! through [`WindowReport`] / [`RunReport`] / the event stream — `System`
+//! internals are `pub(crate)` and no longer reachable from drivers.
+
+use anyhow::Result;
+
+use crate::alloc::Allocator;
+use crate::api::event::{self, Event, EventSink};
+use crate::api::report::{RunReport, WindowReport};
+use crate::api::spec::RunSpec;
+use crate::net::trace::Traces;
+use crate::runtime::{Engine, EngineStats};
+use crate::server::system::{MembershipSnapshot, System};
+use crate::server::SystemConfig;
+
+/// A live run: owns the [`System`] and the engine borrow for its lifetime.
+pub struct Session<'e> {
+    sys: System<'e>,
+    name: String,
+    windows: usize,
+    stepped: usize,
+    t0: std::time::Instant,
+}
+
+impl<'e> Session<'e> {
+    /// Validate `spec` and assemble the system (pretraining the deployment
+    /// student, prefilling the model zoo for zoo-warm-start policies).
+    pub fn new(engine: &'e mut Engine, spec: RunSpec) -> Result<Session<'e>> {
+        spec.validate()?;
+        let (sc, uplinks, rest) = spec.into_parts();
+        let mut cfg = SystemConfig::new(rest.task, rest.policy);
+        cfg.gpus = rest.gpus;
+        cfg.seed = rest.seed;
+        for hook in &rest.hooks {
+            hook(&mut cfg);
+        }
+        let name = cfg.policy.name.to_string();
+        let zoo_prefill = cfg.policy.zoo_warm_start && rest.zoo_init_steps > 0;
+        let mut sys = System::new(cfg, sc.world, &uplinks, rest.shared_mbps, engine)?;
+        if zoo_prefill {
+            sys.populate_zoo_from_initial(rest.zoo_init_steps)?;
+        }
+        Ok(Session {
+            sys,
+            name,
+            windows: rest.windows,
+            stepped: 0,
+            t0: std::time::Instant::now(),
+        })
+    }
+
+    /// Attach an additional [`EventSink`] (e.g. a
+    /// [`JsonlSink`](crate::api::event::JsonlSink)); the built-in recorder
+    /// keeps running regardless.
+    pub fn add_sink(&mut self, sink: Box<dyn EventSink>) {
+        self.sys.events.sinks.push(sink);
+    }
+
+    /// Run one retraining window and report what it produced.
+    pub fn step_window(&mut self) -> Result<WindowReport> {
+        let events_before = self.sys.events.record.events.len();
+        self.sys.run_window()?;
+        let window = self.stepped;
+        self.stepped += 1;
+        let allocs = event::alloc_triples(&self.sys.events.record.events[events_before..]);
+        Ok(WindowReport {
+            window,
+            time: self.sys.now(),
+            jobs: self.sys.jobs.len(),
+            mean_acc: self.sys.mean_accuracy(),
+            cam_acc: self.camera_accuracies(),
+            membership: self.membership(),
+            allocs,
+        })
+    }
+
+    /// Run any remaining windows of the planned horizon and aggregate the
+    /// full report.
+    pub fn run(mut self) -> Result<RunReport> {
+        while self.stepped < self.windows {
+            self.step_window()?;
+        }
+        Ok(self.into_report())
+    }
+
+    /// Aggregate whatever has run so far into a [`RunReport`] (used by
+    /// step-driven experiments; [`Session::run`] completes the horizon
+    /// first).
+    pub fn into_report(self) -> RunReport {
+        let horizon = self.sys.now();
+        let record = &self.sys.events.record;
+        let cam_acc: Vec<Vec<f32>> = self
+            .sys
+            .history
+            .series
+            .iter()
+            .map(|series| series.iter().map(|&(_, a)| a).collect())
+            .collect();
+        RunReport {
+            name: self.name.clone(),
+            window_acc: record.window_acc(),
+            cam_acc,
+            steady: self.sys.history.steady_mean(0.4),
+            final_acc: self.sys.mean_accuracy(),
+            response_s: self.sys.tracker.mean_response(horizon),
+            satisfied: self.sys.tracker.satisfied(),
+            requests: self.sys.tracker.total(),
+            jobs: self.sys.jobs.len(),
+            alloc_log: record.alloc_log(),
+            membership: record.membership_log(),
+            events: record.events.clone(),
+            wall_secs: self.t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Scripted control (Figs. 8, 10, 11, 12 and the ablations)
+    // ------------------------------------------------------------------
+
+    /// Scripted retraining request from `cam` (requires
+    /// `auto_request = false` setups to do anything interesting).
+    pub fn request_now(&mut self, cam: usize) -> Result<()> {
+        self.sys.request_now(cam)
+    }
+
+    /// Create a job with fixed membership, bypassing Alg. 2; returns the
+    /// job id.
+    pub fn force_group(&mut self, cams: &[usize]) -> Result<usize> {
+        self.sys.force_group(cams)
+    }
+
+    /// Swap the GPU allocator (ablation experiments).
+    pub fn set_allocator(&mut self, allocator: Box<dyn Allocator>) {
+        self.sys.set_allocator(allocator);
+    }
+
+    /// Start recording per-flow bandwidth traces at `sample_dt` seconds.
+    pub fn record_net(&mut self, sample_dt: f64) {
+        self.sys.net.record(sample_dt);
+    }
+
+    /// Stop recording and take the collected bandwidth traces.
+    pub fn take_net_traces(&mut self) -> Option<Traces> {
+        self.sys.net.take_traces()
+    }
+
+    // ------------------------------------------------------------------
+    // Observation
+    // ------------------------------------------------------------------
+
+    /// Simulated time (seconds).
+    pub fn now(&self) -> f64 {
+        self.sys.now()
+    }
+
+    /// Windows stepped so far.
+    pub fn windows_run(&self) -> usize {
+        self.stepped
+    }
+
+    /// Mean camera accuracy at the latest window.
+    pub fn mean_accuracy(&self) -> f32 {
+        self.sys.mean_accuracy()
+    }
+
+    /// Steady-state mean accuracy over the last `frac` of windows.
+    pub fn steady_mean(&self, frac: f64) -> f32 {
+        self.sys.history.steady_mean(frac)
+    }
+
+    /// Live accuracy of one camera (as of the last window boundary).
+    pub fn camera_accuracy(&self, cam: usize) -> f32 {
+        self.sys.cams[cam].last_acc
+    }
+
+    /// Live accuracy of every camera.
+    pub fn camera_accuracies(&self) -> Vec<f32> {
+        self.sys.cams.iter().map(|c| c.last_acc).collect()
+    }
+
+    /// Number of active retraining jobs.
+    pub fn jobs(&self) -> usize {
+        self.sys.jobs.len()
+    }
+
+    /// Current group membership: (job id, member cameras).
+    pub fn membership(&self) -> MembershipSnapshot {
+        self.sys
+            .jobs
+            .iter()
+            .map(|j| (j.id, j.members.clone()))
+            .collect()
+    }
+
+    /// Whether the grouping bookkeeping is a valid partition (each camera
+    /// in at most one job) — an invariant check for tests.
+    pub fn is_partition(&self) -> bool {
+        crate::grouping::is_partition(&self.sys.group_meta)
+    }
+
+    /// Last window's GPU-share estimate per active job, in job order;
+    /// jobs with no estimate yet get the uniform share.
+    pub fn job_shares(&self) -> Vec<(usize, f64)> {
+        let n = self.sys.jobs.len().max(1);
+        self.sys
+            .jobs
+            .iter()
+            .map(|j| {
+                (
+                    j.id,
+                    self.sys
+                        .shares
+                        .get(&j.id)
+                        .copied()
+                        .unwrap_or(1.0 / n as f64),
+                )
+            })
+            .collect()
+    }
+
+    /// Retraining requests issued so far.
+    pub fn requests_total(&self) -> usize {
+        self.sys.tracker.total()
+    }
+
+    /// Requests whose camera re-crossed the accuracy threshold.
+    pub fn requests_satisfied(&self) -> usize {
+        self.sys.tracker.satisfied()
+    }
+
+    /// Mean response time with unresolved requests counted at the current
+    /// horizon.
+    pub fn mean_response(&self) -> f64 {
+        self.sys.tracker.mean_response(self.sys.now())
+    }
+
+    /// Frames the teacher has annotated.
+    pub fn teacher_annotated(&self) -> u64 {
+        self.sys.teacher.annotated
+    }
+
+    /// Model-zoo entry count (RECL-style policies).
+    pub fn zoo_len(&self) -> usize {
+        self.sys.zoo.len()
+    }
+
+    /// Snapshot of the engine's execution statistics.
+    pub fn engine_stats(&self) -> EngineStats {
+        self.sys.engine.stats.clone()
+    }
+
+    /// Events recorded so far (the built-in recorder's stream).
+    pub fn events(&self) -> &[Event] {
+        &self.sys.events.record.events
+    }
+
+    /// `(window, micro_window, job)` GPU grants recorded so far.
+    pub fn alloc_log(&self) -> Vec<(usize, usize, usize)> {
+        self.sys.events.record.alloc_log()
+    }
+}

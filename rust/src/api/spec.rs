@@ -1,0 +1,333 @@
+//! [`RunSpec`]: the validated description of one system run.
+//!
+//! A spec is (task, policy) plus the resource envelope (GPUs, shared
+//! bottleneck, per-camera uplinks), the horizon in retraining windows, the
+//! seed, and the scenario world. [`super::Session::new`] consumes a spec;
+//! validation happens before any engine work, so malformed sweeps fail
+//! fast with a typed [`SpecError`].
+
+use std::fmt;
+
+use crate::runtime::Task;
+use crate::scene::scenario::{self, Scenario};
+use crate::server::{Policy, SystemConfig};
+
+/// A validation failure in a [`RunSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// The run must cover at least one retraining window.
+    NoWindows,
+    /// GPU count must be positive and finite.
+    NonPositiveGpus(f64),
+    /// The shared bottleneck bandwidth must be positive and finite.
+    NonPositiveBandwidth(f64),
+    /// A per-camera uplink must be positive and finite.
+    NonPositiveUplink { cam: usize, mbps: f64 },
+    /// Explicit per-camera uplinks must match the camera count.
+    UplinkCountMismatch { cams: usize, uplinks: usize },
+    /// The scenario (or default-world camera count) has no cameras.
+    NoCameras,
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::NoWindows => write!(f, "run spec: windows must be >= 1"),
+            SpecError::NonPositiveGpus(g) => {
+                write!(f, "run spec: gpus must be positive, got {g}")
+            }
+            SpecError::NonPositiveBandwidth(b) => {
+                write!(f, "run spec: shared bandwidth must be positive, got {b} Mbps")
+            }
+            SpecError::NonPositiveUplink { cam, mbps } => {
+                write!(f, "run spec: camera {cam} uplink must be positive, got {mbps} Mbps")
+            }
+            SpecError::UplinkCountMismatch { cams, uplinks } => write!(
+                f,
+                "run spec: {uplinks} uplinks for {cams} cameras (counts must match)"
+            ),
+            SpecError::NoCameras => write!(f, "run spec: scenario has no cameras"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Per-camera uplink capacities.
+enum Uplinks {
+    /// Every camera gets the same uplink (Mbit/s).
+    Uniform(f64),
+    /// Explicit per-camera uplinks; length must match the camera count.
+    PerCamera(Vec<f64>),
+}
+
+/// Builder for one system run. Defaults mirror the quick-driver CLI:
+/// 6 cameras in two correlated triples, 1 GPU, 6 Mbps shared / 20 Mbps
+/// uplinks, 8 windows, seed 7.
+pub struct RunSpec {
+    pub(crate) task: Task,
+    pub(crate) policy: Policy,
+    pub(crate) cams: usize,
+    pub(crate) gpus: f64,
+    pub(crate) shared_mbps: f64,
+    uplinks: Uplinks,
+    pub(crate) windows: usize,
+    pub(crate) seed: u64,
+    pub(crate) scenario: Option<Scenario>,
+    /// Zoo-prefill fine-tune steps when the policy warm-starts from a zoo.
+    pub(crate) zoo_init_steps: usize,
+    /// Config hooks, applied in order after the built-in knobs.
+    #[allow(clippy::type_complexity)]
+    pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
+}
+
+impl RunSpec {
+    pub fn new(task: Task, policy: Policy) -> RunSpec {
+        RunSpec {
+            task,
+            policy,
+            cams: 6,
+            gpus: 1.0,
+            shared_mbps: 6.0,
+            uplinks: Uplinks::Uniform(20.0),
+            windows: 8,
+            seed: 7,
+            scenario: None,
+            zoo_init_steps: 40,
+            hooks: Vec::new(),
+        }
+    }
+
+    /// Camera count for the default scenario (ignored with an explicit
+    /// [`RunSpec::scenario`]).
+    pub fn cams(mut self, n: usize) -> Self {
+        self.cams = n;
+        self
+    }
+
+    /// Simulated edge GPUs.
+    pub fn gpus(mut self, gpus: f64) -> Self {
+        self.gpus = gpus;
+        self
+    }
+
+    /// Shared bottleneck bandwidth (Mbit/s).
+    pub fn shared_mbps(mut self, mbps: f64) -> Self {
+        self.shared_mbps = mbps;
+        self
+    }
+
+    /// One uplink capacity (Mbit/s) for every camera.
+    pub fn uplink_mbps(mut self, mbps: f64) -> Self {
+        self.uplinks = Uplinks::Uniform(mbps);
+        self
+    }
+
+    /// Explicit per-camera uplinks (Mbit/s); length must match the camera
+    /// count or validation fails.
+    pub fn uplinks(mut self, mbps: Vec<f64>) -> Self {
+        self.uplinks = Uplinks::PerCamera(mbps);
+        self
+    }
+
+    /// Horizon in retraining windows.
+    pub fn windows(mut self, n: usize) -> Self {
+        self.windows = n;
+        self
+    }
+
+    /// Seed for the scenario, system, and all simulators.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run on an explicit scenario world instead of the default
+    /// two-triple static world.
+    pub fn scenario(mut self, sc: Scenario) -> Self {
+        self.scenario = Some(sc);
+        self
+    }
+
+    /// Override the zoo-prefill fine-tune steps (0 disables the prefill;
+    /// only relevant when the policy has `zoo_warm_start`).
+    pub fn zoo_init_steps(mut self, steps: usize) -> Self {
+        self.zoo_init_steps = steps;
+        self
+    }
+
+    /// Arbitrary [`SystemConfig`] tweak, applied after the built-in knobs
+    /// (gpus/seed); hooks run in registration order.
+    pub fn configure<F: Fn(&mut SystemConfig) + 'static>(mut self, hook: F) -> Self {
+        self.hooks.push(Box::new(hook));
+        self
+    }
+
+    /// Camera count this spec will run with.
+    pub fn n_cams(&self) -> usize {
+        match &self.scenario {
+            Some(sc) => sc.world.cameras.len(),
+            None => self.cams,
+        }
+    }
+
+    /// Check the spec without building anything.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.windows == 0 {
+            return Err(SpecError::NoWindows);
+        }
+        if !(self.gpus.is_finite() && self.gpus > 0.0) {
+            return Err(SpecError::NonPositiveGpus(self.gpus));
+        }
+        if !(self.shared_mbps.is_finite() && self.shared_mbps > 0.0) {
+            return Err(SpecError::NonPositiveBandwidth(self.shared_mbps));
+        }
+        let n = self.n_cams();
+        if n == 0 {
+            return Err(SpecError::NoCameras);
+        }
+        if let Uplinks::PerCamera(ups) = &self.uplinks {
+            if ups.len() != n {
+                return Err(SpecError::UplinkCountMismatch {
+                    cams: n,
+                    uplinks: ups.len(),
+                });
+            }
+        }
+        let check = |cam: usize, mbps: f64| -> Result<(), SpecError> {
+            if !(mbps.is_finite() && mbps > 0.0) {
+                return Err(SpecError::NonPositiveUplink { cam, mbps });
+            }
+            Ok(())
+        };
+        match &self.uplinks {
+            Uplinks::Uniform(mbps) => check(0, *mbps)?,
+            Uplinks::PerCamera(ups) => {
+                for (cam, &mbps) in ups.iter().enumerate() {
+                    check(cam, mbps)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve the scenario (building the default world if none was set)
+    /// and the per-camera uplink vector. Call after [`RunSpec::validate`].
+    pub(crate) fn into_parts(self) -> (Scenario, Vec<f64>, RunSpecRest) {
+        let sc = self.scenario.unwrap_or_else(|| {
+            let split = if self.cams < 2 {
+                vec![self.cams]
+            } else {
+                vec![self.cams / 2, self.cams - self.cams / 2]
+            };
+            scenario::grouped_static(&split, 0.06, 30.0, self.seed)
+        });
+        let n = sc.world.cameras.len();
+        let uplinks = match self.uplinks {
+            Uplinks::Uniform(mbps) => vec![mbps; n],
+            Uplinks::PerCamera(ups) => ups,
+        };
+        (
+            sc,
+            uplinks,
+            RunSpecRest {
+                task: self.task,
+                policy: self.policy,
+                gpus: self.gpus,
+                shared_mbps: self.shared_mbps,
+                windows: self.windows,
+                seed: self.seed,
+                zoo_init_steps: self.zoo_init_steps,
+                hooks: self.hooks,
+            },
+        )
+    }
+}
+
+/// The non-world remainder of a consumed [`RunSpec`].
+pub(crate) struct RunSpecRest {
+    pub(crate) task: Task,
+    pub(crate) policy: Policy,
+    pub(crate) gpus: f64,
+    pub(crate) shared_mbps: f64,
+    pub(crate) windows: usize,
+    pub(crate) seed: u64,
+    pub(crate) zoo_init_steps: usize,
+    #[allow(clippy::type_complexity)]
+    pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> RunSpec {
+        RunSpec::new(Task::Det, Policy::ecco())
+    }
+
+    #[test]
+    fn defaults_validate() {
+        assert_eq!(base().validate(), Ok(()));
+    }
+
+    #[test]
+    fn rejects_zero_windows() {
+        assert_eq!(base().windows(0).validate(), Err(SpecError::NoWindows));
+    }
+
+    #[test]
+    fn rejects_bad_resources() {
+        assert_eq!(
+            base().gpus(0.0).validate(),
+            Err(SpecError::NonPositiveGpus(0.0))
+        );
+        assert_eq!(
+            base().shared_mbps(-1.0).validate(),
+            Err(SpecError::NonPositiveBandwidth(-1.0))
+        );
+        assert_eq!(
+            base().uplink_mbps(0.0).validate(),
+            Err(SpecError::NonPositiveUplink { cam: 0, mbps: 0.0 })
+        );
+    }
+
+    #[test]
+    fn rejects_mismatched_uplinks() {
+        assert_eq!(
+            base().cams(3).uplinks(vec![10.0, 10.0]).validate(),
+            Err(SpecError::UplinkCountMismatch {
+                cams: 3,
+                uplinks: 2
+            })
+        );
+        assert_eq!(base().cams(2).uplinks(vec![10.0, 5.0]).validate(), Ok(()));
+    }
+
+    #[test]
+    fn uplink_count_checked_against_explicit_scenario() {
+        let sc = scenario::grouped_static(&[3], 0.06, 10.0, 1);
+        let spec = base().scenario(sc).uplinks(vec![20.0; 5]);
+        assert_eq!(
+            spec.validate(),
+            Err(SpecError::UplinkCountMismatch {
+                cams: 3,
+                uplinks: 5
+            })
+        );
+    }
+
+    #[test]
+    fn rejects_zero_cameras() {
+        assert_eq!(base().cams(0).validate(), Err(SpecError::NoCameras));
+    }
+
+    #[test]
+    fn errors_display_readably() {
+        let msg = SpecError::UplinkCountMismatch {
+            cams: 4,
+            uplinks: 2,
+        }
+        .to_string();
+        assert!(msg.contains("4 cameras") || msg.contains("2 uplinks"), "{msg}");
+    }
+}

@@ -10,10 +10,11 @@
 
 use anyhow::Result;
 
-use crate::alloc::{AllocKind, EccoAllocator};
+use crate::alloc::EccoAllocator;
+use crate::api::{RunSpec, Session};
 use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
-use crate::server::{Policy, System, SystemConfig};
+use crate::server::Policy;
 use crate::teacher::TeacherConfig;
 use crate::util::json::{arr, num, obj, s};
 
@@ -36,20 +37,28 @@ pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
     for (alpha, beta) in combos {
-        let sc = scenario::three_plus_one(ctx.seed);
-        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
-        cfg.gpus = 1.0;
-        cfg.seed = ctx.seed;
-        cfg.auto_request = false;
-        cfg.auto_regroup = false;
-        cfg.micro_windows = 8;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 4], 12.0, engine)?;
-        sys.force_group(&[0, 1, 2])?;
-        sys.force_group(&[3])?;
-        sys.set_allocator(Box::new(EccoAllocator { alpha, beta }));
-        sys.run_windows(windows)?;
-        let g1: f32 = (0..3).map(|c| sys.cams[c].last_acc).sum::<f32>() / 3.0;
-        let g2 = sys.cams[3].last_acc;
+        let spec = RunSpec::new(Task::Det, Policy::ecco())
+            .scenario(scenario::three_plus_one(ctx.seed))
+            .gpus(1.0)
+            .shared_mbps(12.0)
+            .uplink_mbps(20.0)
+            .windows(windows)
+            .seed(ctx.seed)
+            .configure(|cfg| {
+                cfg.auto_request = false;
+                cfg.auto_regroup = false;
+                cfg.micro_windows = 8;
+            });
+        let mut session = Session::new(engine, spec)?;
+        session.force_group(&[0, 1, 2])?;
+        session.force_group(&[3])?;
+        session.set_allocator(Box::new(EccoAllocator { alpha, beta }));
+        for _ in 0..windows {
+            session.step_window()?;
+        }
+        let accs = session.camera_accuracies();
+        let g1: f32 = accs[..3].iter().sum::<f32>() / 3.0;
+        let g2 = accs[3];
         rows.push(vec![
             format!("a={alpha} b={beta}"),
             format!("{g1:.3}"),
@@ -83,17 +92,22 @@ pub fn filter(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
     for enabled in [true, false] {
-        let sc = scenario::town(8, ctx.seed);
-        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
-        cfg.gpus = 2.0;
-        cfg.seed = ctx.seed;
-        cfg.grouping.metadata_filter = enabled;
         let infer_before = engine.stats.infer_calls;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 8], 10.0, engine)?;
-        sys.run_windows(windows)?;
-        let acc = sys.history.steady_mean(0.4);
-        let jobs = sys.jobs.len();
-        let evals = sys.engine.stats.infer_calls - infer_before;
+        let spec = RunSpec::new(Task::Det, Policy::ecco())
+            .scenario(scenario::town(8, ctx.seed))
+            .gpus(2.0)
+            .shared_mbps(10.0)
+            .uplink_mbps(20.0)
+            .windows(windows)
+            .seed(ctx.seed)
+            .configure(move |cfg| cfg.grouping.metadata_filter = enabled);
+        let mut session = Session::new(engine, spec)?;
+        for _ in 0..windows {
+            session.step_window()?;
+        }
+        let acc = session.steady_mean(0.4);
+        let jobs = session.jobs();
+        let evals = session.engine_stats().infer_calls - infer_before;
         rows.push(vec![
             if enabled { "with filter" } else { "no filter" }.into(),
             format!("{acc:.3}"),
@@ -130,14 +144,19 @@ pub fn teacher(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
         ("strong", TeacherConfig::strong()),
         ("noisy", TeacherConfig::noisy()),
     ] {
-        let sc = scenario::grouped_static(&[3], 0.06, 20.0, ctx.seed);
-        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
-        cfg.gpus = 2.0;
-        cfg.seed = ctx.seed;
-        cfg.teacher = tc;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 3], 10.0, engine)?;
-        sys.run_windows(windows)?;
-        let acc = sys.history.steady_mean(0.4);
+        let spec = RunSpec::new(Task::Det, Policy::ecco())
+            .scenario(scenario::grouped_static(&[3], 0.06, 20.0, ctx.seed))
+            .gpus(2.0)
+            .shared_mbps(10.0)
+            .uplink_mbps(20.0)
+            .windows(windows)
+            .seed(ctx.seed)
+            .configure(move |cfg| cfg.teacher = tc.clone());
+        let mut session = Session::new(engine, spec)?;
+        for _ in 0..windows {
+            session.step_window()?;
+        }
+        let acc = session.steady_mean(0.4);
         rows.push(vec![name.to_string(), format!("{acc:.3}")]);
         json_rows.push(obj(vec![("teacher", s(name)), ("steady", num(acc as f64))]));
     }

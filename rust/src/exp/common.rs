@@ -1,12 +1,11 @@
-//! Shared experiment infrastructure: standard run wrapper, result
-//! containers, table printing, and JSON output.
+//! Shared experiment infrastructure: the standard run wrapper over
+//! [`crate::api`], table printing, and JSON output.
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, Task};
-use crate::scene::World;
-use crate::server::{Policy, System, SystemConfig};
-use crate::util::json::{arr, f32s, num, obj, s, Json};
+use crate::api::{RunReport, RunSpec, Session};
+use crate::runtime::Engine;
+use crate::util::json::Json;
 
 /// Experiment context from the CLI.
 #[derive(Debug, Clone)]
@@ -34,109 +33,15 @@ impl ExpContext {
     }
 }
 
-/// Everything an experiment typically needs from one system run.
-pub struct RunOutcome {
-    pub name: String,
-    /// Mean accuracy per window (over cameras).
-    pub window_acc: Vec<f32>,
-    /// Per-camera accuracy series: `cam_acc[cam][window]`.
-    pub cam_acc: Vec<Vec<f32>>,
-    /// Steady-state mean accuracy (last 40% of windows).
-    pub steady: f32,
-    pub final_acc: f32,
-    /// Mean response time (seconds; unresolved counted at horizon).
-    pub response: f64,
-    pub satisfied: usize,
-    pub requests: usize,
-    /// Final number of retraining jobs.
-    pub jobs: usize,
-    /// (window, micro-window, job id) allocation log.
-    pub alloc_log: Vec<(usize, usize, usize)>,
-    /// Membership snapshots per window.
-    pub membership: Vec<(usize, crate::server::system::MembershipSnapshot)>,
-    pub wall_secs: f64,
-}
-
-impl RunOutcome {
-    pub fn to_json(&self) -> Json {
-        obj(vec![
-            ("name", s(&self.name)),
-            ("window_acc", f32s(&self.window_acc)),
-            (
-                "cam_acc",
-                arr(self.cam_acc.iter().map(|c| f32s(c)).collect()),
-            ),
-            ("steady", num(self.steady as f64)),
-            ("final", num(self.final_acc as f64)),
-            ("response_s", num(self.response)),
-            ("satisfied", num(self.satisfied as f64)),
-            ("requests", num(self.requests as f64)),
-            ("jobs", num(self.jobs as f64)),
-            ("wall_secs", num(self.wall_secs)),
-        ])
-    }
-}
-
-/// Build-config hook so experiments can tweak SystemConfig uniformly.
-pub type CfgHook<'a> = &'a dyn Fn(&mut SystemConfig);
-
-/// Run one policy on one world for `windows` retraining windows.
-#[allow(clippy::too_many_arguments)]
-pub fn run_policy(
-    engine: &mut Engine,
-    world: World,
-    task: Task,
-    policy: Policy,
-    gpus: f64,
-    shared_bw: f64,
-    local_bw: &[f64],
-    windows: usize,
-    seed: u64,
-    hook: Option<CfgHook>,
-) -> Result<RunOutcome> {
-    let name = policy.name.to_string();
-    let zoo = policy.zoo_warm_start;
-    let mut cfg = SystemConfig::new(task, policy);
-    cfg.gpus = gpus;
-    cfg.seed = seed;
-    if let Some(h) = hook {
-        h(&mut cfg);
-    }
-    let t0 = std::time::Instant::now();
-    let mut sys = System::new(cfg, world, local_bw, shared_bw, engine)?;
-    if zoo {
-        sys.populate_zoo_from_initial(40)?;
-    }
-    let mut window_acc = Vec::with_capacity(windows);
-    for _ in 0..windows {
-        sys.run_window()?;
-        window_acc.push(sys.mean_accuracy());
-    }
-    let horizon = sys.now();
-    let cam_acc: Vec<Vec<f32>> = sys
-        .history
-        .series
-        .iter()
-        .map(|series| series.iter().map(|&(_, a)| a).collect())
-        .collect();
-    Ok(RunOutcome {
-        name,
-        steady: sys.history.steady_mean(0.4),
-        final_acc: sys.mean_accuracy(),
-        window_acc,
-        cam_acc,
-        response: sys.tracker.mean_response(horizon),
-        satisfied: sys.tracker.satisfied(),
-        requests: sys.tracker.total(),
-        jobs: sys.jobs.len(),
-        alloc_log: sys.alloc_log.clone(),
-        membership: sys.membership_log.clone(),
-        wall_secs: t0.elapsed().as_secs_f64(),
-    })
+/// Run one spec to completion: the standard one-call wrapper every sweep
+/// runner uses (replaces the old 10-argument `run_policy`).
+pub fn run(engine: &mut Engine, spec: RunSpec) -> Result<RunReport> {
+    Session::new(engine, spec)?.run()
 }
 
 /// The four systems of the end-to-end comparison, in report order.
-pub fn headline_policies() -> Vec<Policy> {
+pub fn headline_policies() -> Vec<crate::server::Policy> {
+    use crate::server::Policy;
     vec![
         Policy::ecco(),
         Policy::recl(),

@@ -3,11 +3,12 @@
 
 use anyhow::Result;
 
+use crate::api::RunSpec;
 use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
 use crate::util::json::{arr, num, obj, s};
 
-use super::common::{f3, headline_policies, print_table, run_policy, ExpContext};
+use super::common::{f3, headline_policies, print_table, run, ExpContext};
 
 /// Fig. 6 for one task: two sweeps (GPUs at fixed bandwidth; bandwidth at
 /// fixed GPUs) across the four systems.
@@ -37,19 +38,14 @@ pub fn fig6(engine: &mut Engine, ctx: &ExpContext, task: Task) -> Result<()> {
                 } else {
                     (fixed_gpus, x)
                 };
-                let sc = scenario::grouped_static(&[3, 3], 0.06, 30.0, ctx.seed);
-                let out = run_policy(
-                    engine,
-                    sc.world,
-                    task,
-                    policy.clone(),
-                    gpus,
-                    bw,
-                    &[20.0; 6],
-                    windows,
-                    ctx.seed,
-                    None,
-                )?;
+                let spec = RunSpec::new(task, policy.clone())
+                    .scenario(scenario::grouped_static(&[3, 3], 0.06, 30.0, ctx.seed))
+                    .gpus(gpus)
+                    .shared_mbps(bw)
+                    .uplink_mbps(20.0)
+                    .windows(windows)
+                    .seed(ctx.seed);
+                let out = run(engine, spec)?;
                 row.push(f3(out.steady));
                 json_rows.push(obj(vec![
                     ("sweep", s(sweep_name)),
@@ -57,7 +53,7 @@ pub fn fig6(engine: &mut Engine, ctx: &ExpContext, task: Task) -> Result<()> {
                     ("policy", s(policy.name)),
                     ("steady", num(out.steady as f64)),
                     ("final", num(out.final_acc as f64)),
-                    ("response_s", num(out.response)),
+                    ("response_s", num(out.response_s)),
                 ]));
             }
             rows.push(row);
@@ -108,26 +104,21 @@ pub fn fig7(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
         let mut acc_row = vec![policy.name.to_string()];
         let mut resp_row = vec![policy.name.to_string()];
         for &n in &cams_sweep {
-            let sc = scenario::town(n, ctx.seed);
-            let out = run_policy(
-                engine,
-                sc.world,
-                Task::Det,
-                policy.clone(),
-                4.0,
-                50.0,
-                &vec![20.0; n],
-                windows,
-                ctx.seed,
-                None,
-            )?;
+            let spec = RunSpec::new(Task::Det, policy.clone())
+                .scenario(scenario::town(n, ctx.seed))
+                .gpus(4.0)
+                .shared_mbps(50.0)
+                .uplink_mbps(20.0)
+                .windows(windows)
+                .seed(ctx.seed);
+            let out = run(engine, spec)?;
             acc_row.push(f3(out.steady));
-            resp_row.push(format!("{:.0}", out.response));
+            resp_row.push(format!("{:.0}", out.response_s));
             json_rows.push(obj(vec![
                 ("cams", num(n as f64)),
                 ("policy", s(policy.name)),
                 ("steady", num(out.steady as f64)),
-                ("response_s", num(out.response)),
+                ("response_s", num(out.response_s)),
                 ("satisfied", num(out.satisfied as f64)),
                 ("requests", num(out.requests as f64)),
             ]));

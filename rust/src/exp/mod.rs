@@ -51,7 +51,7 @@ pub fn run_experiment(engine: &mut Engine, id: &str, ctx: &ExpContext) -> Result
             }
             Ok(())
         }
-        "fig2c" => motivation::run(engine, ctx),
+        "fig2c" => motivation::fig2c(engine, ctx),
         "fig5" => profiling::fig5(engine, ctx),
         "tab1" => profiling::tab1(engine, ctx),
         "fig6det" => endtoend::fig6(engine, ctx, Task::Det),

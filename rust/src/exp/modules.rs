@@ -4,9 +4,10 @@
 use anyhow::Result;
 
 use crate::alloc::AllocKind;
+use crate::api::{RunSpec, Session};
 use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
-use crate::server::{Policy, System, SystemConfig, TransmissionKind};
+use crate::server::{Policy, TransmissionKind};
 use crate::util::json::{arr, f32s, num, obj, s};
 
 use super::common::{print_table, ExpContext};
@@ -23,40 +24,44 @@ pub fn fig10(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             AllocKind::Utility => "recl-allocator",
             AllocKind::Uniform => unreachable!(),
         };
-        let sc = scenario::three_plus_one(ctx.seed);
         let mut policy = Policy::ecco();
         policy.alloc = alloc;
         policy.name = name;
-        let mut cfg = SystemConfig::new(Task::Det, policy);
-        cfg.gpus = 1.0;
-        cfg.seed = ctx.seed;
-        cfg.auto_request = false;
-        cfg.auto_regroup = false;
-        cfg.eval_frames = 32; // low-noise gain estimates isolate the policy
-        // Finer micro-windows than the default so the greedy phase (after
-        // the per-window initial pass) dominates the allocation pattern.
-        cfg.micro_windows = 8;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 4], 12.0, engine)?;
-        let g1 = sys.force_group(&[0, 1, 2])?;
-        let g2 = sys.force_group(&[3])?;
+        // Low-noise gain estimates isolate the policy; finer micro-windows
+        // than the default so the greedy phase (after the per-window
+        // initial pass) dominates the allocation pattern.
+        let spec = RunSpec::new(Task::Det, policy)
+            .scenario(scenario::three_plus_one(ctx.seed))
+            .gpus(1.0)
+            .shared_mbps(12.0)
+            .uplink_mbps(20.0)
+            .windows(windows)
+            .seed(ctx.seed)
+            .configure(|cfg| {
+                cfg.auto_request = false;
+                cfg.auto_regroup = false;
+                cfg.eval_frames = 32;
+                cfg.micro_windows = 8;
+            });
+        let mut session = Session::new(engine, spec)?;
+        let g1 = session.force_group(&[0, 1, 2])?;
+        let _g2 = session.force_group(&[3])?;
 
         let mut acc_g1 = Vec::new();
         let mut acc_g2 = Vec::new();
         for _ in 0..windows {
-            sys.run_window()?;
-            acc_g1.push(
-                (0..3).map(|c| sys.cams[c].last_acc).sum::<f32>() / 3.0,
-            );
-            acc_g2.push(sys.cams[3].last_acc);
+            let w = session.step_window()?;
+            acc_g1.push(w.cam_acc[..3].iter().sum::<f32>() / 3.0);
+            acc_g2.push(w.cam_acc[3]);
         }
         // One-hot GPU bars: which job got each micro-window.
-        let bars: String = sys
-            .alloc_log
+        let alloc_log = session.alloc_log();
+        let bars: String = alloc_log
             .iter()
             .map(|&(_, _, job)| if job == g1 { '1' } else { '2' })
             .collect();
-        let g1_share = sys.alloc_log.iter().filter(|&&(_, _, j)| j == g1).count() as f32
-            / sys.alloc_log.len().max(1) as f32;
+        let g1_share = alloc_log.iter().filter(|&&(_, _, j)| j == g1).count() as f32
+            / alloc_log.len().max(1) as f32;
         let max_gap = acc_g1
             .iter()
             .zip(&acc_g2)
@@ -83,7 +88,6 @@ pub fn fig10(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             ("max_gap", num(max_gap as f64)),
             ("g1_share", num(g1_share as f64)),
         ]));
-        let _ = g2;
     }
     print_table(
         "Fig 10: allocator comparison (groups of 3 vs 1 camera, 1 GPU)",
@@ -108,7 +112,7 @@ pub fn fig11(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     } else {
         vec![3.0, 6.0, 9.0, 12.0, 15.0]
     };
-    let local = [1.0, 1.0, 20.0, 20.0, 20.0, 20.0]; // group A capped
+    let local = vec![1.0, 1.0, 20.0, 20.0, 20.0, 20.0]; // group A capped
     let groups: [Vec<usize>; 3] = [vec![0, 1], vec![2, 3], vec![4, 5]];
 
     let mut rows = Vec::new();
@@ -118,27 +122,34 @@ pub fn fig11(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
         let name = if ablated { "fixed+AIMD" } else { "ecco-controller" };
         let mut row = vec![name.to_string()];
         for &bw in &bw_sweep {
-            let sc = scenario::grouped_static(&[2, 2, 2], 0.06, 20.0, ctx.seed);
             let mut policy = Policy::ecco();
             if ablated {
                 policy.transmission = TransmissionKind::Fixed { fps: 5.0, res: 48 };
             }
             policy.name = name;
-            let mut cfg = SystemConfig::new(Task::Det, policy);
-            cfg.gpus = 2.0;
-            cfg.seed = ctx.seed;
-            cfg.auto_request = false;
-            cfg.auto_regroup = false;
-            let mut sys = System::new(cfg, sc.world, &local, bw, engine)?;
+            let spec = RunSpec::new(Task::Det, policy)
+                .scenario(scenario::grouped_static(&[2, 2, 2], 0.06, 20.0, ctx.seed))
+                .gpus(2.0)
+                .shared_mbps(bw)
+                .uplinks(local.clone())
+                .windows(windows)
+                .seed(ctx.seed)
+                .configure(|cfg| {
+                    cfg.auto_request = false;
+                    cfg.auto_regroup = false;
+                });
+            let mut session = Session::new(engine, spec)?;
             for g in &groups {
-                sys.force_group(g)?;
+                session.force_group(g)?;
             }
             let record_traces = (bw - 9.0).abs() < 1e-9;
             if record_traces {
-                sys.net.record(1.0);
+                session.record_net(1.0);
             }
-            sys.run_windows(windows)?;
-            let acc = sys.mean_accuracy();
+            for _ in 0..windows {
+                session.step_window()?;
+            }
+            let acc = session.mean_accuracy();
             row.push(format!("{acc:.3}"));
             json_rows.push(obj(vec![
                 ("mode", s(name)),
@@ -146,9 +157,9 @@ pub fn fig11(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
                 ("mAP", num(acc as f64)),
             ]));
             if record_traces {
-                if let Some(traces) = sys.net.take_traces() {
+                if let Some(traces) = session.take_net_traces() {
                     // Mean per-group bandwidth over the last two windows.
-                    let t1 = sys.now();
+                    let t1 = session.now();
                     let t0 = t1 - 2.0 * 60.0;
                     let group_bw: Vec<f64> = groups
                         .iter()
@@ -157,11 +168,8 @@ pub fn fig11(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
                         })
                         .collect();
                     // GPU-share targets from the allocator estimates.
-                    let shares: Vec<f64> = sys
-                        .jobs
-                        .iter()
-                        .map(|j| *sys.shares.get(&j.id).unwrap_or(&(1.0 / 3.0)))
-                        .collect();
+                    let shares: Vec<f64> =
+                        session.job_shares().iter().map(|&(_, p)| p).collect();
                     println!(
                         "[{name} @9Mbps] group bw A/B/C = {:.2}/{:.2}/{:.2} Mbps; GPU shares {:?}",
                         group_bw[0],

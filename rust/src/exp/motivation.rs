@@ -4,14 +4,15 @@
 
 use anyhow::Result;
 
+use crate::api::RunSpec;
 use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
 use crate::server::{Policy, TransmissionKind};
-use crate::util::json::{arr, f32s, obj, s, Json};
+use crate::util::json::{arr, f32s, obj, s};
 
-use super::common::{f3, print_table, run_policy, ExpContext};
+use super::common::{f3, print_table, run, ExpContext};
 
-pub fn run(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn fig2c(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(8);
     // All settings share the fixed transmission pipeline so the comparison
     // isolates the retraining strategy, exactly as the paper's case study.
@@ -29,20 +30,14 @@ pub fn run(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     let settings = [(indep, 3.0), (group3, 3.0), (group1, 1.0)];
     let mut outcomes = Vec::new();
     for (policy, gpus) in settings {
-        let sc = scenario::convoy(3, ctx.seed);
-        let out = run_policy(
-            engine,
-            sc.world,
-            Task::Det,
-            policy,
-            gpus,
-            30.0,
-            &[10.0; 3],
-            windows,
-            ctx.seed,
-            None,
-        )?;
-        outcomes.push(out);
+        let spec = RunSpec::new(Task::Det, policy)
+            .scenario(scenario::convoy(3, ctx.seed))
+            .gpus(gpus)
+            .shared_mbps(30.0)
+            .uplink_mbps(10.0)
+            .windows(windows)
+            .seed(ctx.seed);
+        outcomes.push(run(engine, spec)?);
     }
 
     let header: Vec<String> = (0..windows).map(|w| format!("w{w}")).collect();
@@ -55,7 +50,7 @@ pub fn run(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             let mut row = vec![
                 o.name.clone(),
                 f3(o.steady),
-                format!("{:.0}", o.response),
+                format!("{:.0}", o.response_s),
             ];
             row.extend(o.window_acc.iter().map(|&a| f3(a)));
             row
@@ -90,6 +85,5 @@ pub fn run(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             ),
         ]),
     )?;
-    let _ = Json::Null;
     Ok(())
 }

@@ -43,18 +43,29 @@ fn one_cam_world(mount: Mount, seed: u64) -> World {
     world
 }
 
-/// Retrain one camera under a fixed pixel budget and bitrate with a forced
-/// sampling config; returns final mAP.
-#[allow(clippy::too_many_arguments)]
-fn retrain_with_config(
-    engine: &mut Engine,
+/// One single-camera retraining condition: the mount under test, the
+/// forced sampling config, and the resource envelope.
+#[derive(Clone)]
+struct RetrainSetup {
     mount: Mount,
     config: SamplingConfig,
     budget_pps: f64,
     bitrate_mbps: f64,
     windows: usize,
     seed: u64,
-) -> Result<f32> {
+}
+
+/// Retrain one camera under a fixed pixel budget and bitrate with a forced
+/// sampling config; returns final mAP.
+fn retrain_with_config(engine: &mut Engine, setup: &RetrainSetup) -> Result<f32> {
+    let RetrainSetup {
+        mount,
+        config,
+        budget_pps,
+        bitrate_mbps,
+        windows,
+        seed,
+    } = setup.clone();
     let m = engine.manifest.clone();
     let pre = pretrain::pretrained_default(engine, Task::Det, 300, 0.03, seed ^ 0xbeef)?;
     let mut model = ModelState::from_theta(Task::Det, pre.theta);
@@ -139,11 +150,21 @@ pub fn fig5(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
                     f32::NAN // config can't even fit the budget
                 } else {
                     // Two seeds per cell to tame eval noise.
-                    let a0 = retrain_with_config(
-                        engine, mount.clone(), c, budget, 1.0, windows, ctx.seed,
-                    )?;
+                    let setup = RetrainSetup {
+                        mount: mount.clone(),
+                        config: c,
+                        budget_pps: budget,
+                        bitrate_mbps: 1.0,
+                        windows,
+                        seed: ctx.seed,
+                    };
+                    let a0 = retrain_with_config(engine, &setup)?;
                     let a1 = retrain_with_config(
-                        engine, mount.clone(), c, budget, 1.0, windows, ctx.seed ^ 0xabcd,
+                        engine,
+                        &RetrainSetup {
+                            seed: ctx.seed ^ 0xabcd,
+                            ..setup
+                        },
                     )?;
                     (a0 + a1) / 2.0
                 };
@@ -241,15 +262,15 @@ pub fn tab1(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             let config = table.lookup(budget);
             let mut acc = 0.0;
             for r in 0..2u64 {
-                acc += retrain_with_config(
-                    engine,
-                    mounts[i].clone(),
+                let setup = RetrainSetup {
+                    mount: mounts[i].clone(),
                     config,
-                    budget,
-                    delivered[i] / 60.0,
+                    budget_pps: budget,
+                    bitrate_mbps: delivered[i] / 60.0,
                     windows,
-                    ctx.seed + i as u64 + r * 0x9111,
-                )? / 2.0;
+                    seed: ctx.seed + i as u64 + r * 0x9111,
+                };
+                acc += retrain_with_config(engine, &setup)? / 2.0;
             }
             accs.push(acc);
         }

@@ -3,12 +3,13 @@
 
 use anyhow::Result;
 
+use crate::api::{RunSpec, Session};
 use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
-use crate::server::{Policy, System, SystemConfig};
+use crate::server::Policy;
 use crate::util::json::{arr, f32s, num, obj, s};
 
-use super::common::{print_table, run_policy, ExpContext};
+use super::common::{print_table, run, ExpContext};
 
 /// Fig. 12: three cameras of one correlated group issue staggered
 /// retraining requests (windows 0 / 2 / 4). Later cameras should start
@@ -22,27 +23,26 @@ pub fn fig12(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     let mut json_runs = Vec::new();
     for policy in [Policy::ecco(), Policy::recl(), Policy::ecco_recl()] {
         let name = policy.name;
-        let zoo = policy.zoo_warm_start;
-        let sc = scenario::grouped_static(&[3], 0.05, 5.0, ctx.seed);
-        let mut cfg = SystemConfig::new(Task::Det, policy);
-        cfg.gpus = 2.0;
-        cfg.seed = ctx.seed;
-        cfg.auto_request = false; // scripted joins
-        let mut sys = System::new(cfg, sc.world, &[20.0; 3], 12.0, engine)?;
-        if zoo {
-            sys.populate_zoo_from_initial(40)?;
-        }
+        let spec = RunSpec::new(Task::Det, policy)
+            .scenario(scenario::grouped_static(&[3], 0.05, 5.0, ctx.seed))
+            .gpus(2.0)
+            .shared_mbps(12.0)
+            .uplink_mbps(20.0)
+            .windows(windows)
+            .seed(ctx.seed)
+            .configure(|cfg| cfg.auto_request = false); // scripted joins
+        let mut session = Session::new(engine, spec)?;
         let mut initial_acc = vec![f32::NAN; 3];
         let mut series: Vec<Vec<f32>> = vec![Vec::new(); 3];
         for w in 0..windows {
             for (cam, &jw) in join_at.iter().enumerate() {
                 if w == jw {
-                    sys.request_now(cam)?;
+                    session.request_now(cam)?;
                 }
             }
-            sys.run_window()?;
+            let report = session.step_window()?;
             for cam in 0..3 {
-                let acc = sys.cams[cam].last_acc;
+                let acc = report.cam_acc[cam];
                 series[cam].push(acc);
                 if w == join_at[cam] {
                     initial_acc[cam] = acc; // accuracy right after joining
@@ -94,24 +94,20 @@ pub fn fig13(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     for policy in policies {
         let mut row = vec![policy.name.to_string()];
         for &up in &uplinks {
-            let sc = scenario::grouped_static(&[3], 0.05, 10.0, ctx.seed);
-            let out = run_policy(
-                engine,
-                sc.world,
-                Task::Det,
-                policy.clone(),
-                2.0,
-                50.0, // shared link is NOT the constraint here
-                &[up; 3],
-                windows,
-                ctx.seed,
-                Some(&|cfg| cfg.response_threshold = 0.45),
-            )?;
-            row.push(format!("{:.0}", out.response));
+            let spec = RunSpec::new(Task::Det, policy.clone())
+                .scenario(scenario::grouped_static(&[3], 0.05, 10.0, ctx.seed))
+                .gpus(2.0)
+                .shared_mbps(50.0) // shared link is NOT the constraint here
+                .uplink_mbps(up)
+                .windows(windows)
+                .seed(ctx.seed)
+                .configure(|cfg| cfg.response_threshold = 0.45);
+            let out = run(engine, spec)?;
+            row.push(format!("{:.0}", out.response_s));
             json_rows.push(obj(vec![
                 ("policy", s(policy.name)),
                 ("uplink", num(up)),
-                ("response_s", num(out.response)),
+                ("response_s", num(out.response_s)),
                 ("satisfied", num(out.satisfied as f64)),
             ]));
         }

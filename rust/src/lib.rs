@@ -13,14 +13,16 @@
 //!   AOT-lowered to HLO text in `artifacts/` by `python/compile/aot.py`.
 //! * **L3 (this crate)** — the ECCO coordinator and every evaluation
 //!   substrate the paper relies on. Python never runs at request time: the
-//!   [`runtime`] module loads the HLO artifacts via PJRT (CPU) and all
-//!   retraining happens through compiled executables.
+//!   [`runtime`] module executes the model programs either through the
+//!   pure-Rust reference backend (default, no artifacts needed) or through
+//!   PJRT-compiled HLO artifacts (`--features pjrt`).
 //!
 //! ## Module map
 //!
 //! | module | role |
 //! |--------|------|
-//! | [`runtime`] | PJRT engine: artifact manifest, executable cache, train/infer/features |
+//! | [`api`] | **the public entry point**: [`api::RunSpec`] builder, [`api::Session`] handle, typed [`api::Event`] stream |
+//! | [`runtime`] | engine backends (native reference / PJRT), artifact manifest, train/infer/features |
 //! | [`scene`] | drifting-world simulator (CityFlow/MDOT/CARLA substitute) |
 //! | [`video`] | sampling configs + encoder model (FFmpeg substitute) |
 //! | [`net`] | fluid GAIMD network simulator (NS-3 substitute) |
@@ -30,18 +32,49 @@
 //! | [`grouping`] | Alg. 2 dynamic camera grouping |
 //! | [`transmission`] | §3.2 sampling-config tables + GAIMD parameterisation |
 //! | [`zoo`] | RECL-style model zoo |
-//! | [`server`] | retraining jobs, micro-window scheduler, the [`server::System`] loop |
+//! | [`server`] | retraining jobs, micro-window scheduler, the (crate-private) `System` loop |
 //! | [`exp`] | one runner per paper table/figure (`ecco exp <id>`) |
 //! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness |
 //!
 //! ## Quick start
 //!
+//! Every run goes through [`api::RunSpec`] and [`api::Session`]:
+//!
+//! ```no_run
+//! use ecco::api::{RunSpec, Session};
+//! use ecco::runtime::{Engine, Task};
+//! use ecco::server::Policy;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut engine = Engine::open_default()?;
+//! let spec = RunSpec::new(Task::Det, Policy::ecco())
+//!     .cams(6)
+//!     .gpus(2.0)
+//!     .shared_mbps(6.0)
+//!     .windows(8)
+//!     .seed(7);
+//! let mut session = Session::new(&mut engine, spec)?;
+//! for _ in 0..8 {
+//!     let w = session.step_window()?;
+//!     println!("window {}: mean mAP {:.3}, {} jobs", w.window, w.mean_acc, w.jobs);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Or from the shell:
+//!
 //! ```bash
-//! make artifacts                      # AOT-lower the models (python, once)
 //! cargo run --release --example quickstart
+//! cargo run --release --bin ecco -- run --policy ecco --cams 6 --windows 8
 //! cargo run --release --bin ecco -- exp all   # regenerate every table/figure
 //! ```
+//!
+//! Generated artifacts (`make artifacts`, python + jax) are only needed
+//! for the PJRT backend and the golden-numerics tests; the default native
+//! backend runs everywhere.
 pub mod alloc;
+pub mod api;
 pub mod exp;
 pub mod grouping;
 pub mod metrics;

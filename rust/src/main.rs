@@ -1,8 +1,8 @@
 //! `ecco` — CLI for the ECCO reproduction.
 //!
 //! Subcommands:
-//!   run        — run one system policy on a scenario and print the
-//!                accuracy timeline (quick interactive driver)
+//!   run        — run one policy on a scenario via the `ecco::api` façade
+//!                and print the accuracy timeline (quick interactive driver)
 //!   exp <id>   — regenerate a paper table/figure
 //!                (fig2c fig5 tab1 fig6det fig6seg fig7 fig8 fig9 fig10
 //!                 fig11 fig12 fig13, or `all`)
@@ -10,12 +10,13 @@
 //!
 //! Common options: --task det|seg --gpus N --bw MBPS --windows N --seed N
 //!                 --out results/   (JSON results directory)
+//! Unknown options are rejected with a "did you mean" hint.
 
 use anyhow::{bail, Result};
+use ecco::api::{JsonlSink, RunSpec, Session};
 use ecco::exp;
 use ecco::runtime::{Engine, Task};
-use ecco::scene::scenario;
-use ecco::server::{Policy, System, SystemConfig};
+use ecco::server::Policy;
 use ecco::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -23,15 +24,16 @@ fn main() -> Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
-        Some("info") => cmd_info(),
+        Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
                 "usage: ecco <run|exp|info> [options]\n\
                  \n\
                  ecco run [--policy ecco|naive|ekya|recl] [--task det|seg]\n\
                  \x20        [--cams N] [--gpus G] [--bw MBPS] [--windows N] [--seed S]\n\
+                 \x20        [--events run.jsonl]\n\
                  ecco exp <fig2c|fig5|tab1|fig6det|fig6seg|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>\n\
-                 \x20        [--out results] [--fast]\n\
+                 \x20        [--out results] [--seed S] [--fast]\n\
                  ecco info"
             );
             bail!("missing or unknown subcommand");
@@ -51,35 +53,37 @@ fn policy_by_name(name: &str) -> Result<Policy> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    args.reject_unknown(
+        &["policy", "task", "cams", "gpus", "bw", "windows", "seed", "events"],
+        &[],
+    )?;
     let task = Task::parse(&args.str_or("task", "det"))?;
     let policy = policy_by_name(&args.str_or("policy", "ecco"))?;
-    let cams = args.usize_or("cams", 6)?;
-    let gpus = args.f64_or("gpus", 2.0)?;
-    let bw = args.f64_or("bw", 6.0)?;
     let windows = args.usize_or("windows", 8)?;
-    let seed = args.u64_or("seed", 7)?;
 
     let mut engine = Engine::open_default()?;
-    let sc = scenario::grouped_static(&[cams / 2, cams - cams / 2], 0.06, 30.0, seed);
-    let mut cfg = SystemConfig::new(task, policy);
-    cfg.gpus = gpus;
-    cfg.seed = seed;
-    let local: Vec<f64> = vec![20.0; cams];
-    let mut system = System::new(cfg, sc.world, &local, bw, &mut engine)?;
+    let spec = RunSpec::new(task, policy)
+        .cams(args.usize_or("cams", 6)?)
+        .gpus(args.f64_or("gpus", 2.0)?)
+        .shared_mbps(args.f64_or("bw", 6.0)?)
+        .windows(windows)
+        .seed(args.u64_or("seed", 7)?);
+    let mut session = Session::new(&mut engine, spec)?;
+    if let Some(path) = args.get("events") {
+        session.add_sink(Box::new(JsonlSink::create(path)?));
+        println!("# streaming events to {path}");
+    }
 
     println!("# window t mean_mAP jobs per_cam...");
-    for w in 0..windows {
-        system.run_window()?;
-        let per: Vec<String> = system
-            .cams
-            .iter()
-            .map(|c| format!("{:.3}", c.last_acc))
-            .collect();
+    for _ in 0..windows {
+        let w = session.step_window()?;
+        let per: Vec<String> = w.cam_acc.iter().map(|a| format!("{a:.3}")).collect();
         println!(
-            "{w} {:.0} {:.3} {} {}",
-            system.now(),
-            system.mean_accuracy(),
-            system.jobs.len(),
+            "{} {:.0} {:.3} {} {}",
+            w.window,
+            w.time,
+            w.mean_acc,
+            w.jobs,
             per.join(" ")
         );
     }
@@ -87,6 +91,11 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
+    // `--fast` takes no value; recover a positional the parser may have
+    // bound to it (`ecco exp --fast fig6det`).
+    let mut args = args.clone();
+    args.normalize_flags(&["fast"]);
+    args.reject_unknown(&["out", "seed"], &["fast"])?;
     let Some(id) = args.positional.first() else {
         bail!("exp requires an experiment id (or `all`)");
     };
@@ -103,7 +112,8 @@ fn cmd_exp(args: &Args) -> Result<()> {
     exp::run_experiment(&mut engine, id, &ctx)
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown(&[], &[])?;
     let engine = Engine::open_default()?;
     let m = &engine.manifest;
     println!("artifacts dir: {:?}", m.dir);

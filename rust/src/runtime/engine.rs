@@ -1,23 +1,32 @@
-//! PJRT execution engine: loads the AOT HLO artifacts and runs them.
+//! Execution engine: the coordinator's only gateway to model compute.
 //!
-//! This is the only place the process touches XLA. Artifacts are compiled
-//! once per (task, kind, resolution) and cached; the coordinator then
-//! drives everything through three calls:
+//! Two interchangeable backends sit behind the same [`Engine`] API:
+//!
+//! * **native** (default) — the pure-Rust reference implementation in
+//!   [`super::native`]: the same trunk/head/loss/SGD math the AOT
+//!   artifacts encode, runnable anywhere with no artifacts on disk.
+//! * **pjrt** (`--features pjrt`) — the original PJRT/XLA path in
+//!   [`super::pjrt`], which loads `artifacts/*.hlo.txt` lowered by
+//!   `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!   It additionally needs the `xla` bindings crate (not available in the
+//!   offline build environment).
+//!
+//! The coordinator drives everything through three calls:
 //!
 //! * [`Engine::train_step`] — one SGD step on a model's flat params
 //! * [`Engine::infer_det`] / [`Engine::infer_seg`] — batched predictions
 //! * [`Engine::features`]  — drift/grouping descriptors
-//!
-//! Parameters are flat `Vec<f32>` host vectors (one per model); see
-//! EXPERIMENTS.md §Perf for the measured cost split between host<->device
-//! copies and compute at this model size.
 
-use std::collections::HashMap;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::{bail, Result};
+#[cfg(not(feature = "pjrt"))]
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
-use super::manifest::{Manifest, Task};
+#[cfg(not(feature = "pjrt"))]
+use super::manifest::Manifest;
+use super::manifest::Task;
+#[cfg(not(feature = "pjrt"))]
+use super::native;
 
 /// Mutable training state of one student model.
 #[derive(Debug, Clone)]
@@ -116,95 +125,63 @@ pub struct EngineStats {
     pub infer_nanos: u128,
 }
 
-/// The PJRT engine.
+/// The native (pure Rust) execution engine. With `--features pjrt` the
+/// [`super::pjrt::Engine`] replaces this type under the same name.
+#[cfg(not(feature = "pjrt"))]
 pub struct Engine {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
     pub stats: EngineStats,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl Engine {
-    /// Create an engine over an artifacts directory (compiles lazily).
+    /// Create an engine over an artifacts directory. When no generated
+    /// `manifest.json` exists the engine falls back to the synthetic
+    /// manifest (model.py's constants) — the native backend needs no
+    /// files. A manifest that exists but fails to load is still a hard
+    /// error: silently degrading to the synthetic constants would produce
+    /// results that don't correspond to the generated artifacts.
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = if artifacts_dir.join("manifest.json").exists() {
+            Manifest::load(artifacts_dir)?
+        } else {
+            crate::util::logger::log(
+                crate::util::logger::Level::Debug,
+                module_path!(),
+                &format!(
+                    "no artifacts at {artifacts_dir:?}; using the synthetic manifest \
+                     (native backend)"
+                ),
+            );
+            Manifest::synthetic(artifacts_dir)
+        };
         Ok(Engine {
-            client,
             manifest,
-            executables: HashMap::new(),
             stats: EngineStats::default(),
         })
     }
 
-    /// Default artifacts location (repo-root `artifacts/`).
+    /// Default artifacts location (crate-root `artifacts/`).
     pub fn open_default() -> Result<Engine> {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         Engine::new(&dir)
     }
 
-    /// Pre-compile every artifact (otherwise compilation is lazy).
+    /// No-op for the native backend (nothing to pre-compile).
     pub fn warmup(&mut self) -> Result<()> {
-        let keys: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
-        for key in keys {
-            self.executable(&key)?;
-        }
         Ok(())
     }
 
-    /// Fresh model state from the AOT init checkpoint.
+    /// Fresh model state: the AOT init checkpoint when present, otherwise
+    /// the deterministic native He init.
     pub fn init_model(&self, task: Task) -> Result<ModelState> {
-        let theta = self.manifest.init_params(task)?;
-        Ok(ModelState::from_theta(task, theta))
-    }
-
-    fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(key) {
-            let spec = self
-                .manifest
-                .artifacts
-                .get(key)
-                .with_context(|| format!("unknown artifact {key}"))?;
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.file
-                    .to_str()
-                    .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
-            )
-            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {key}"))?;
-            self.stats.compile_count += 1;
-            crate::util::logger::log(
-                crate::util::logger::Level::Debug,
-                module_path!(),
-                &format!("compiled artifact {key}"),
-            );
-            self.executables.insert(key.to_string(), exe);
-        }
-        Ok(&self.executables[key])
-    }
-
-    fn run(&mut self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let t0 = std::time::Instant::now();
-        let exe = self.executable(key)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {key}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching {key} result"))?;
-        let outs = tuple.to_tuple().context("decomposing result tuple")?;
-        let dt = t0.elapsed().as_nanos();
-        self.stats.exec_nanos += dt;
-        if key.contains("train") {
-            self.stats.train_nanos += dt;
+        let meta = self.manifest.task(task);
+        let theta = if meta.init_file.exists() {
+            self.manifest.init_params(task)?
         } else {
-            self.stats.infer_nanos += dt;
-        }
-        Ok(outs)
+            native::he_init(task, self.manifest.init_seed)
+        };
+        Ok(ModelState::from_theta(task, theta))
     }
 
     /// One SGD+momentum step; mutates `state` and returns the batch loss.
@@ -216,7 +193,7 @@ impl Engine {
     ) -> Result<f32> {
         let m = &self.manifest;
         let (b, g, k) = (m.train_batch, m.grid, m.classes);
-        let spec = m.artifact(state.task, "train", batch.res)?;
+        m.artifact(state.task, "train", batch.res)?; // resolution gate
         let expect_px = b * batch.res * batch.res * 3;
         if batch.pixels.len() != expect_px {
             bail!(
@@ -226,41 +203,27 @@ impl Engine {
                 batch.res
             );
         }
-        let key = spec.name.clone();
-
-        let theta = vec1(&state.theta, &[state.theta.len()])?;
-        let mom = vec1(&state.mom, &[state.mom.len()])?;
-        let x = vec1(&batch.pixels, &[b, batch.res, batch.res, 3])?;
-        let lr_lit = xla::Literal::scalar(lr);
-        let mut inputs = vec![theta, mom, x];
         match (&batch.labels, state.task) {
             (Labels::Det { obj, cls }, Task::Det) => {
                 if obj.len() != b * g * g || cls.len() != b * g * g * k {
                     bail!("det labels wrong size");
                 }
-                inputs.push(vec1(obj, &[b, g, g])?);
-                inputs.push(vec1(cls, &[b, g, g, k])?);
             }
             (Labels::Seg { mask }, Task::Seg) => {
                 let s = batch.res / 4;
                 if mask.len() != b * s * s * (k + 1) {
                     bail!("seg labels wrong size");
                 }
-                inputs.push(vec1(mask, &[b, s, s, k + 1])?);
             }
             _ => bail!("label kind does not match task {:?}", state.task),
         }
-        inputs.push(lr_lit);
-
-        let outs = self.run(&key, &inputs)?;
-        if outs.len() != 3 {
-            bail!("train artifact returned {} outputs, expected 3", outs.len());
-        }
-        state.theta = outs[0].to_vec::<f32>()?;
-        state.mom = outs[1].to_vec::<f32>()?;
+        let t0 = std::time::Instant::now();
+        let loss = native::train_step(state.task, &mut state.theta, &mut state.mom, batch, b, lr);
+        let dt = t0.elapsed().as_nanos();
+        self.stats.exec_nanos += dt;
+        self.stats.train_nanos += dt;
         state.steps += 1;
         self.stats.train_steps += 1;
-        let loss = outs[2].to_vec::<f32>()?[0];
         Ok(loss)
     }
 
@@ -268,20 +231,22 @@ impl Engine {
     pub fn infer_det(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
         let m = &self.manifest;
         let (b, g, k) = (m.infer_batch, m.grid, m.classes);
-        let spec = m.artifact(Task::Det, "infer", res)?;
+        m.artifact(Task::Det, "infer", res)?;
         if pixels.len() != b * res * res * 3 {
             bail!("infer batch pixels wrong size");
         }
-        let key = spec.name.clone();
-        let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
-        let outs = self.run(&key, &inputs)?;
+        let t0 = std::time::Instant::now();
+        let (obj, cls) = native::infer_det(theta, pixels, b, res);
+        let dt = t0.elapsed().as_nanos();
+        self.stats.exec_nanos += dt;
+        self.stats.infer_nanos += dt;
         self.stats.infer_calls += 1;
         Ok(DetPred {
             batch: b,
             grid: g,
             classes: k,
-            obj: outs[0].to_vec::<f32>()?,
-            cls: outs[1].to_vec::<f32>()?,
+            obj,
+            cls,
         })
     }
 
@@ -289,19 +254,21 @@ impl Engine {
     pub fn infer_seg(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
         let m = &self.manifest;
         let (b, k) = (m.infer_batch, m.classes);
-        let spec = m.artifact(Task::Seg, "infer", res)?;
+        m.artifact(Task::Seg, "infer", res)?;
         if pixels.len() != b * res * res * 3 {
             bail!("infer batch pixels wrong size");
         }
-        let key = spec.name.clone();
-        let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
-        let outs = self.run(&key, &inputs)?;
+        let t0 = std::time::Instant::now();
+        let probs = native::infer_seg(theta, pixels, b, res);
+        let dt = t0.elapsed().as_nanos();
+        self.stats.exec_nanos += dt;
+        self.stats.infer_nanos += dt;
         self.stats.infer_calls += 1;
         Ok(SegPred {
             batch: b,
             side: res / 4,
             classes: k + 1,
-            probs: outs[0].to_vec::<f32>()?,
+            probs,
         })
     }
 
@@ -312,15 +279,63 @@ impl Engine {
         if pixels.len() != b * r * r * 3 {
             bail!("feature batch pixels wrong size");
         }
-        let inputs = [vec1(pixels, &[b, r, r, 3])?];
-        let outs = self.run("features_r32", &inputs)?;
+        let t0 = std::time::Instant::now();
+        let emb = native::features(pixels, b, r);
+        let dt = t0.elapsed().as_nanos();
+        self.stats.exec_nanos += dt;
+        self.stats.infer_nanos += dt;
         self.stats.feature_calls += 1;
-        Ok(outs[0].to_vec::<f32>()?)
+        Ok(emb)
     }
 }
 
-fn vec1(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(data);
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_opens_without_artifacts() {
+        let mut e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
+        assert_eq!(e.manifest.classes, 4);
+        let mut state = e.init_model(Task::Det).unwrap();
+        assert_eq!(state.param_count(), e.manifest.task(Task::Det).param_count);
+        let m = e.manifest.clone();
+        let batch = TrainBatch {
+            res: 32,
+            pixels: vec![0.3; m.train_batch * 32 * 32 * 3],
+            labels: Labels::Det {
+                obj: vec![0.0; m.train_batch * m.grid * m.grid],
+                cls: vec![0.0; m.train_batch * m.grid * m.grid * m.classes],
+            },
+        };
+        let loss = e.train_step(&mut state, &batch, 0.01).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(e.stats.train_steps, 1);
+    }
+
+    #[test]
+    fn engine_rejects_bad_shapes() {
+        let mut e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
+        let mut state = e.init_model(Task::Det).unwrap();
+        let bad = TrainBatch {
+            res: 32,
+            pixels: vec![0.0; 7],
+            labels: Labels::Det {
+                obj: vec![],
+                cls: vec![],
+            },
+        };
+        assert!(e.train_step(&mut state, &bad, 0.01).is_err());
+        // Unsupported resolution is rejected via the manifest gate.
+        let m = e.manifest.clone();
+        let bad_res = TrainBatch {
+            res: 99,
+            pixels: vec![0.0; m.train_batch * 99 * 99 * 3],
+            labels: Labels::Det {
+                obj: vec![0.0; m.train_batch * 16],
+                cls: vec![0.0; m.train_batch * 64],
+            },
+        };
+        assert!(e.train_step(&mut state, &bad_res, 0.01).is_err());
+    }
 }

@@ -1,10 +1,23 @@
-//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
-//! Python never runs here — the artifacts are the entire ML stack.
+//! Model runtime: the student's train/infer/feature programs behind one
+//! [`Engine`] API.
+//!
+//! Default backend is [`native`] — a pure-Rust reference implementation of
+//! the exact math `python/compile/aot.py` lowers to HLO, so everything
+//! runs with no generated artifacts. With `--features pjrt` (and the `xla`
+//! bindings crate available) the [`pjrt`] backend loads
+//! `artifacts/*.hlo.txt` and executes them on the CPU PJRT client instead.
 
 pub mod batch;
 pub mod engine;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use engine::{DetPred, Engine, EngineStats, Labels, ModelState, SegPred, TrainBatch};
+#[cfg(not(feature = "pjrt"))]
+pub use engine::Engine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
+
+pub use engine::{DetPred, EngineStats, Labels, ModelState, SegPred, TrainBatch};
 pub use manifest::{artifact_key, Manifest, Task};

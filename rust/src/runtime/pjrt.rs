@@ -1,0 +1,225 @@
+//! PJRT execution engine (feature `pjrt`): loads the AOT HLO artifacts and
+//! runs them on the CPU PJRT client via the `xla` bindings crate.
+//!
+//! This is the only place the process touches XLA. Artifacts are compiled
+//! once per (task, kind, resolution) and cached. Enabling this feature
+//! requires an environment that provides the `xla` crate (see Cargo.toml);
+//! the default build uses the native reference backend instead, which
+//! implements identical math in pure Rust.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{DetPred, EngineStats, Labels, ModelState, SegPred, TrainBatch};
+use super::manifest::{Manifest, Task};
+
+/// The PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (compiles lazily).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Default artifacts location (crate-root `artifacts/`).
+    pub fn open_default() -> Result<Engine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Engine::new(&dir)
+    }
+
+    /// Pre-compile every artifact (otherwise compilation is lazy).
+    pub fn warmup(&mut self) -> Result<()> {
+        let keys: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for key in keys {
+            self.executable(&key)?;
+        }
+        Ok(())
+    }
+
+    /// Fresh model state from the AOT init checkpoint.
+    pub fn init_model(&self, task: Task) -> Result<ModelState> {
+        let theta = self.manifest.init_params(task)?;
+        Ok(ModelState::from_theta(task, theta))
+    }
+
+    fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(key) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(key)
+                .with_context(|| format!("unknown artifact {key}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?;
+            self.stats.compile_count += 1;
+            crate::util::logger::log(
+                crate::util::logger::Level::Debug,
+                module_path!(),
+                &format!("compiled artifact {key}"),
+            );
+            self.executables.insert(key.to_string(), exe);
+        }
+        Ok(&self.executables[key])
+    }
+
+    fn run(&mut self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(key)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {key}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {key} result"))?;
+        let outs = tuple.to_tuple().context("decomposing result tuple")?;
+        let dt = t0.elapsed().as_nanos();
+        self.stats.exec_nanos += dt;
+        if key.contains("train") {
+            self.stats.train_nanos += dt;
+        } else {
+            self.stats.infer_nanos += dt;
+        }
+        Ok(outs)
+    }
+
+    /// One SGD+momentum step; mutates `state` and returns the batch loss.
+    pub fn train_step(
+        &mut self,
+        state: &mut ModelState,
+        batch: &TrainBatch,
+        lr: f32,
+    ) -> Result<f32> {
+        let m = &self.manifest;
+        let (b, g, k) = (m.train_batch, m.grid, m.classes);
+        let spec = m.artifact(state.task, "train", batch.res)?;
+        let expect_px = b * batch.res * batch.res * 3;
+        if batch.pixels.len() != expect_px {
+            bail!(
+                "train batch pixels: got {}, expected {} (B={b}, r={})",
+                batch.pixels.len(),
+                expect_px,
+                batch.res
+            );
+        }
+        let key = spec.name.clone();
+
+        let theta = vec1(&state.theta, &[state.theta.len()])?;
+        let mom = vec1(&state.mom, &[state.mom.len()])?;
+        let x = vec1(&batch.pixels, &[b, batch.res, batch.res, 3])?;
+        let lr_lit = xla::Literal::scalar(lr);
+        let mut inputs = vec![theta, mom, x];
+        match (&batch.labels, state.task) {
+            (Labels::Det { obj, cls }, Task::Det) => {
+                if obj.len() != b * g * g || cls.len() != b * g * g * k {
+                    bail!("det labels wrong size");
+                }
+                inputs.push(vec1(obj, &[b, g, g])?);
+                inputs.push(vec1(cls, &[b, g, g, k])?);
+            }
+            (Labels::Seg { mask }, Task::Seg) => {
+                let s = batch.res / 4;
+                if mask.len() != b * s * s * (k + 1) {
+                    bail!("seg labels wrong size");
+                }
+                inputs.push(vec1(mask, &[b, s, s, k + 1])?);
+            }
+            _ => bail!("label kind does not match task {:?}", state.task),
+        }
+        inputs.push(lr_lit);
+
+        let outs = self.run(&key, &inputs)?;
+        if outs.len() != 3 {
+            bail!("train artifact returned {} outputs, expected 3", outs.len());
+        }
+        state.theta = outs[0].to_vec::<f32>()?;
+        state.mom = outs[1].to_vec::<f32>()?;
+        state.steps += 1;
+        self.stats.train_steps += 1;
+        let loss = outs[2].to_vec::<f32>()?[0];
+        Ok(loss)
+    }
+
+    /// Batched detection inference. `pixels` is `[B,r,r,3]`, B = infer_batch.
+    pub fn infer_det(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
+        let m = &self.manifest;
+        let (b, g, k) = (m.infer_batch, m.grid, m.classes);
+        let spec = m.artifact(Task::Det, "infer", res)?;
+        if pixels.len() != b * res * res * 3 {
+            bail!("infer batch pixels wrong size");
+        }
+        let key = spec.name.clone();
+        let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
+        let outs = self.run(&key, &inputs)?;
+        self.stats.infer_calls += 1;
+        Ok(DetPred {
+            batch: b,
+            grid: g,
+            classes: k,
+            obj: outs[0].to_vec::<f32>()?,
+            cls: outs[1].to_vec::<f32>()?,
+        })
+    }
+
+    /// Batched segmentation inference.
+    pub fn infer_seg(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
+        let m = &self.manifest;
+        let (b, k) = (m.infer_batch, m.classes);
+        let spec = m.artifact(Task::Seg, "infer", res)?;
+        if pixels.len() != b * res * res * 3 {
+            bail!("infer batch pixels wrong size");
+        }
+        let key = spec.name.clone();
+        let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
+        let outs = self.run(&key, &inputs)?;
+        self.stats.infer_calls += 1;
+        Ok(SegPred {
+            batch: b,
+            side: res / 4,
+            classes: k + 1,
+            probs: outs[0].to_vec::<f32>()?,
+        })
+    }
+
+    /// Drift/grouping descriptors for a `[B,32,32,3]` batch -> `[B,96]`.
+    pub fn features(&mut self, pixels: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let (b, r) = (m.infer_batch, m.feature_res);
+        if pixels.len() != b * r * r * 3 {
+            bail!("feature batch pixels wrong size");
+        }
+        let inputs = [vec1(pixels, &[b, r, r, 3])?];
+        let outs = self.run("features_r32", &inputs)?;
+        self.stats.feature_calls += 1;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+fn vec1(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}

@@ -1,6 +1,9 @@
 //! Server-side assembly: retraining jobs, the micro-window scheduler, and
-//! the end-to-end [`system::System`] that ties cameras, network, teacher,
-//! allocator and grouping together.
+//! the end-to-end [`system::System`] loop that ties cameras, network,
+//! teacher, allocator and grouping together.
+//!
+//! `System` itself is crate-private: drivers run it through
+//! [`crate::api::Session`] and observe it through the typed event stream.
 
 pub mod config;
 pub mod job;
@@ -9,4 +12,4 @@ pub mod system;
 
 pub use config::{Policy, SystemConfig, TransmissionKind};
 pub use job::{eval_model, Job, Sample};
-pub use system::{CamAgent, System};
+pub use system::MembershipSnapshot;

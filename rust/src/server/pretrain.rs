@@ -70,6 +70,15 @@ pub fn pretrained_default(
     }
     let model = pretrain_on(engine, task, &SceneState::default_day(), steps, lr, seed)?;
     let bytes: Vec<u8> = model.theta.iter().flat_map(|v| v.to_le_bytes()).collect();
-    let _ = std::fs::write(&path, bytes); // cache failure is non-fatal
+    // Cache failure is non-fatal; the directory may not exist yet when the
+    // native backend runs without generated artifacts. Write-then-rename so
+    // concurrent readers (parallel tests) never observe a torn file.
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    if std::fs::write(&tmp, bytes).is_ok() {
+        let _ = std::fs::rename(&tmp, &path);
+    }
     Ok(model)
 }

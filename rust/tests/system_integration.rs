@@ -1,50 +1,61 @@
 //! Integration tests over the full system: scene -> network -> teacher ->
-//! grouping -> allocation -> PJRT retraining -> metrics, at reduced scale.
+//! grouping -> allocation -> engine retraining -> metrics, at reduced
+//! scale, driven exclusively through the `ecco::api` façade (the `System`
+//! internals are crate-private).
 //!
 //! These are the "does the whole machine hold together" checks; the
 //! per-module behaviour is covered by unit tests, and the paper-shape
 //! results by `ecco exp ...`.
 
-use ecco::grouping::is_partition;
+use ecco::api::{RunSpec, Session};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
-use ecco::server::{Policy, System, SystemConfig};
+use ecco::server::Policy;
 
-fn small_cfg(task: Task, policy: Policy) -> SystemConfig {
-    let mut cfg = SystemConfig::new(task, policy);
-    cfg.gpus = 1.0;
-    cfg.micro_windows = 4;
-    cfg.window_secs = 40.0;
-    cfg.eval_frames = 8;
-    cfg.pretrain_steps = 120;
-    cfg.seed = 99;
-    cfg
+/// Reduced-scale config shared by every test (fast, deterministic).
+fn small_spec(task: Task, policy: Policy) -> RunSpec {
+    RunSpec::new(task, policy)
+        .gpus(1.0)
+        .shared_mbps(10.0)
+        .uplink_mbps(20.0)
+        .seed(99)
+        .configure(|cfg| {
+            cfg.micro_windows = 4;
+            cfg.window_secs = 40.0;
+            cfg.eval_frames = 8;
+            cfg.pretrain_steps = 120;
+        })
 }
 
 #[test]
 fn ecco_full_loop_groups_and_recovers() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[3], 0.05, 20.0, 5);
-    let cfg = small_cfg(Task::Det, Policy::ecco());
-    let mut sys = System::new(cfg, sc.world, &[20.0; 3], 10.0, &mut engine).unwrap();
-    sys.run_windows(5).unwrap();
+    let spec = small_spec(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[3], 0.05, 20.0, 5))
+        .windows(5);
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    let mut reports = Vec::new();
+    for _ in 0..5 {
+        reports.push(session.step_window().unwrap());
+    }
     // All cameras requested retraining (the drift event is strong); Alg. 2
     // churn may add re-requests on top.
-    assert!(sys.tracker.total() >= 3, "all cameras must request");
+    assert!(session.requests_total() >= 3, "all cameras must request");
     // Cross-camera correlation => few jobs covering all three cameras.
     assert!(
-        sys.jobs.len() <= 2,
+        session.jobs() <= 2,
         "correlated cameras must mostly group: {} jobs",
-        sys.jobs.len()
+        session.jobs()
     );
-    let members: usize = sys.jobs.iter().map(|j| j.members.len()).sum();
+    let membership = session.membership();
+    let members: usize = membership.iter().map(|(_, m)| m.len()).sum();
     assert_eq!(members, 3);
-    assert!(sys.jobs.iter().any(|j| j.members.len() >= 2));
-    assert!(is_partition(&sys.group_meta));
+    assert!(membership.iter().any(|(_, m)| m.len() >= 2));
+    assert!(session.is_partition());
     // Accuracy must be sane and improving from the immediate post-drift dip.
-    let acc = sys.mean_accuracy();
+    let acc = session.mean_accuracy();
     assert!((0.0..=1.0).contains(&acc));
-    let w0 = sys.history.series[0][0].1;
+    let w0 = reports[0].cam_acc[0];
     assert!(
         acc > w0,
         "retraining should improve accuracy: w0 {w0} -> final {acc}"
@@ -54,26 +65,35 @@ fn ecco_full_loop_groups_and_recovers() {
 #[test]
 fn independent_policy_never_groups() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[3], 0.05, 20.0, 6);
-    let cfg = small_cfg(Task::Det, Policy::ekya());
-    let mut sys = System::new(cfg, sc.world, &[20.0; 3], 10.0, &mut engine).unwrap();
-    sys.run_windows(4).unwrap();
-    assert_eq!(sys.jobs.len(), 3, "independent retraining: one job per camera");
-    for j in &sys.jobs {
-        assert_eq!(j.members.len(), 1);
+    let spec = small_spec(Task::Det, Policy::ekya())
+        .scenario(scenario::grouped_static(&[3], 0.05, 20.0, 6))
+        .windows(4);
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    for _ in 0..4 {
+        session.step_window().unwrap();
+    }
+    assert_eq!(session.jobs(), 3, "independent retraining: one job per camera");
+    for (_, members) in session.membership() {
+        assert_eq!(members.len(), 1);
     }
 }
 
 #[test]
 fn seg_task_runs_end_to_end() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[2], 0.05, 20.0, 7);
-    let cfg = small_cfg(Task::Seg, Policy::ecco());
-    let mut sys = System::new(cfg, sc.world, &[20.0; 2], 10.0, &mut engine).unwrap();
-    sys.run_windows(3).unwrap();
-    let acc = sys.mean_accuracy();
+    let spec = small_spec(Task::Seg, Policy::ecco())
+        .scenario(scenario::grouped_static(&[2], 0.05, 20.0, 7))
+        .windows(3);
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    for _ in 0..3 {
+        session.step_window().unwrap();
+    }
+    let acc = session.mean_accuracy();
     assert!((0.0..=1.0).contains(&acc));
-    assert!(sys.engine.stats.train_steps > 0, "seg training must run");
+    assert!(
+        session.engine_stats().train_steps > 0,
+        "seg training must run"
+    );
 }
 
 #[test]
@@ -81,13 +101,16 @@ fn gpu_budget_controls_training_volume() {
     let mut engine = Engine::open_default().unwrap();
     let mut steps = Vec::new();
     for gpus in [1.0, 4.0] {
-        let sc = scenario::grouped_static(&[2], 0.05, 10.0, 8);
-        let mut cfg = small_cfg(Task::Det, Policy::ecco());
-        cfg.gpus = gpus;
         let before = engine.stats.train_steps;
-        let mut sys = System::new(cfg, sc.world, &[20.0; 2], 10.0, &mut engine).unwrap();
-        sys.run_windows(3).unwrap();
-        steps.push(sys.engine.stats.train_steps - before);
+        let spec = small_spec(Task::Det, Policy::ecco())
+            .scenario(scenario::grouped_static(&[2], 0.05, 10.0, 8))
+            .gpus(gpus)
+            .windows(3);
+        let mut session = Session::new(&mut engine, spec).unwrap();
+        for _ in 0..3 {
+            session.step_window().unwrap();
+        }
+        steps.push(session.engine_stats().train_steps - before);
     }
     assert!(
         steps[1] > steps[0] * 2,
@@ -103,11 +126,16 @@ fn bandwidth_starvation_reduces_delivered_data() {
     // uplink is the only variable; count teacher annotations (the job
     // buffer is ring-capped so it can't be compared directly).
     for bw in [0.05, 20.0] {
-        let sc = scenario::grouped_static(&[2], 0.05, 10.0, 9);
-        let cfg = small_cfg(Task::Det, Policy::naive());
-        let mut sys = System::new(cfg, sc.world, &[bw; 2], 50.0, &mut engine).unwrap();
-        sys.run_windows(3).unwrap();
-        labelled.push(sys.teacher.annotated);
+        let spec = small_spec(Task::Det, Policy::naive())
+            .scenario(scenario::grouped_static(&[2], 0.05, 10.0, 9))
+            .uplink_mbps(bw)
+            .shared_mbps(50.0)
+            .windows(3);
+        let mut session = Session::new(&mut engine, spec).unwrap();
+        for _ in 0..3 {
+            session.step_window().unwrap();
+        }
+        labelled.push(session.teacher_annotated());
     }
     assert!(
         labelled[1] > labelled[0],
@@ -118,24 +146,30 @@ fn bandwidth_starvation_reduces_delivered_data() {
 #[test]
 fn forced_groups_and_scripted_requests() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[4], 0.05, 10.0, 10);
-    let mut cfg = small_cfg(Task::Det, Policy::ecco());
-    cfg.auto_request = false;
-    cfg.auto_regroup = false;
-    let mut sys = System::new(cfg, sc.world, &[20.0; 4], 10.0, &mut engine).unwrap();
+    let spec = small_spec(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[4], 0.05, 10.0, 10))
+        .windows(3)
+        .configure(|cfg| {
+            cfg.auto_request = false;
+            cfg.auto_regroup = false;
+        });
+    let mut session = Session::new(&mut engine, spec).unwrap();
     // Nothing happens without requests.
-    sys.run_windows(1).unwrap();
-    assert_eq!(sys.jobs.len(), 0);
+    session.step_window().unwrap();
+    assert_eq!(session.jobs(), 0);
     // Forced group of 3 + scripted request from a correlated camera: the
     // grouping pipeline should absorb it into the existing job.
-    sys.force_group(&[0, 1, 2]).unwrap();
-    sys.request_now(3).unwrap();
-    sys.run_windows(2).unwrap();
-    assert!(is_partition(&sys.group_meta));
-    let members: usize = sys.jobs.iter().map(|j| j.members.len()).sum();
+    session.force_group(&[0, 1, 2]).unwrap();
+    session.request_now(3).unwrap();
+    for _ in 0..2 {
+        session.step_window().unwrap();
+    }
+    assert!(session.is_partition());
+    let membership = session.membership();
+    let members: usize = membership.iter().map(|(_, m)| m.len()).sum();
     assert_eq!(members, 4);
     assert!(
-        sys.jobs.iter().any(|j| j.members.len() >= 3),
+        membership.iter().any(|(_, m)| m.len() >= 3),
         "the forced group must persist"
     );
 }
@@ -143,52 +177,67 @@ fn forced_groups_and_scripted_requests() {
 #[test]
 fn uncorrelated_request_starts_new_job() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[2, 1], 0.05, 10.0, 13);
-    let mut cfg = small_cfg(Task::Det, Policy::ecco());
-    cfg.auto_request = false;
-    cfg.auto_regroup = false;
     // Tight metadata policy: the second request arrives much later than the
     // first group's requests, so the time filter must reject it.
-    cfg.grouping.time_eps = 60.0;
-    let mut sys = System::new(cfg, sc.world, &[20.0; 3], 10.0, &mut engine).unwrap();
-    sys.force_group(&[0, 1]).unwrap();
-    sys.run_windows(3).unwrap(); // now > time_eps past the forced requests
-    sys.request_now(2).unwrap();
-    assert_eq!(sys.jobs.len(), 2, "stale-time request must start a new job");
-    assert!(is_partition(&sys.group_meta));
+    let spec = small_spec(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[2, 1], 0.05, 10.0, 13))
+        .windows(3)
+        .configure(|cfg| {
+            cfg.auto_request = false;
+            cfg.auto_regroup = false;
+            cfg.grouping.time_eps = 60.0;
+        });
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    session.force_group(&[0, 1]).unwrap();
+    for _ in 0..3 {
+        session.step_window().unwrap(); // now > time_eps past the forced requests
+    }
+    session.request_now(2).unwrap();
+    assert_eq!(session.jobs(), 2, "stale-time request must start a new job");
+    assert!(session.is_partition());
 }
 
 #[test]
 fn zoo_warm_start_populates_and_selects() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[2], 0.05, 20.0, 11);
-    let cfg = small_cfg(Task::Det, Policy::recl());
-    let mut sys = System::new(cfg, sc.world, &[20.0; 2], 10.0, &mut engine).unwrap();
-    sys.populate_zoo_from_initial(20).unwrap();
-    assert_eq!(sys.zoo.len(), 2);
-    sys.run_windows(3).unwrap();
+    let spec = small_spec(Task::Det, Policy::recl())
+        .scenario(scenario::grouped_static(&[2], 0.05, 20.0, 11))
+        .zoo_init_steps(20)
+        .windows(3);
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    // Session::new prefilled the zoo from each camera's initial
+    // distribution (the policy has zoo_warm_start).
+    assert_eq!(session.zoo_len(), 2);
+    for _ in 0..3 {
+        session.step_window().unwrap();
+    }
     // Retrained models are added back to the zoo each window.
-    assert!(sys.zoo.len() > 2, "zoo must grow with retrained checkpoints");
+    assert!(
+        session.zoo_len() > 2,
+        "zoo must grow with retrained checkpoints"
+    );
 }
 
 #[test]
 fn response_tracker_consistent_with_history() {
     let mut engine = Engine::open_default().unwrap();
-    let sc = scenario::grouped_static(&[3], 0.05, 20.0, 12);
-    let cfg = small_cfg(Task::Det, Policy::ecco());
-    let mut sys = System::new(cfg, sc.world, &[20.0; 3], 10.0, &mut engine).unwrap();
-    sys.run_windows(5).unwrap();
-    let horizon = sys.now();
-    let resp = sys.tracker.mean_response(horizon);
+    let spec = small_spec(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[3], 0.05, 20.0, 12))
+        .windows(5);
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    let mut reports = Vec::new();
+    for _ in 0..5 {
+        reports.push(session.step_window().unwrap());
+    }
+    let horizon = session.now();
+    let resp = session.mean_response();
     assert!(resp > 0.0 && resp <= horizon);
     // If any camera ever exceeded the threshold after its request, at least
     // one request must be satisfied.
-    let crossed = sys
-        .history
-        .series
+    let crossed = reports
         .iter()
-        .any(|s| s.iter().any(|&(_, a)| a >= 0.35));
+        .any(|w| w.cam_acc.iter().any(|&a| a >= 0.35));
     if crossed {
-        assert!(sys.tracker.satisfied() > 0);
+        assert!(session.requests_satisfied() > 0);
     }
 }

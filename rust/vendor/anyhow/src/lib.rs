@@ -1,0 +1,205 @@
+//! Offline shim of the `anyhow` API surface this workspace uses.
+//!
+//! The build environment has no crates.io access, so the real `anyhow`
+//! cannot be fetched. This vendored stand-in implements the subset the
+//! codebase relies on — `Result`, `Error`, `anyhow!`, `bail!`, and the
+//! `Context` extension trait — with the same semantics: an opaque error
+//! value carrying a display message and an optional chain of contexts.
+//!
+//! Like the real crate, [`Error`] deliberately does NOT implement
+//! `std::error::Error`; that is what allows the blanket
+//! `From<E: std::error::Error>` conversion used by `?`.
+
+use std::fmt;
+
+/// `Result` specialised to [`Error`], matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a message plus outer context frames (most recent first).
+pub struct Error {
+    /// Context chain: `chain[0]` is the outermost (most recently attached).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Outermost message (what `Display` leads with).
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    /// Sealed marker unifying "things that convert into [`Error`]" for the
+    /// [`Context`](super::Context) impls, mirroring anyhow's internal
+    /// `StdError` trait trick.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding context to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let text = std::fs::read_to_string("/definitely/not/a/real/path")
+            .context("reading config")?;
+        Ok(text)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(err.to_string(), "reading config");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(x: usize) -> Result<()> {
+            if x > 3 {
+                bail!("x too large: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(2).is_ok());
+        assert_eq!(f(9).unwrap_err().to_string(), "x too large: 9");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1");
+        assert!(format!("{e:?}").contains("inner"));
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
