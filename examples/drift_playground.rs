@@ -11,16 +11,16 @@ use ecco::server::{eval_model, pretrain};
 use ecco::util::rng::Pcg32;
 use ecco::scene::render;
 
-fn eval_on(engine: &mut Engine, theta: &[f32], s: &SceneState, salt: u64) -> Result<f32> {
+fn eval_on(engine: &Engine, theta: &[f32], s: &SceneState, salt: u64) -> Result<f32> {
     let frames: Vec<_> = (0..16).map(|i| render(s, 32, salt + i)).collect();
     eval_model(engine, Task::Det, theta, &frames)
 }
 
 fn main() -> Result<()> {
-    let mut engine = Engine::open_default()?;
-    let pre = pretrain::pretrained_default(&mut engine, Task::Det, 300, 0.03, 0x7 ^ 0xbeef)?;
+    let engine = Engine::open_default()?;
+    let pre = pretrain::pretrained_default(&engine, Task::Det, 300, 0.03, 0x7 ^ 0xbeef)?;
     let day = SceneState::default_day();
-    println!("pretrained on default_day: {:.3}", eval_on(&mut engine, &pre.theta, &day, 1000)?);
+    println!("pretrained on default_day: {:.3}", eval_on(&engine, &pre.theta, &day, 1000)?);
 
     let events: Vec<(&str, DriftEvent)> = vec![
         ("rain 0.85", DriftEvent::Rain(0.85)),
@@ -34,7 +34,7 @@ fn main() -> Result<()> {
         let mut p = DriftProcess::new(day.clone(), 0.015, 5);
         p.apply(&ev);
         let drifted = p.state.clone();
-        let acc0 = eval_on(&mut engine, &pre.theta, &drifted, 2000)?;
+        let acc0 = eval_on(&engine, &pre.theta, &drifted, 2000)?;
         // Retrain to convergence on the drifted distribution.
         let mut model = ecco::runtime::ModelState::from_theta(Task::Det, pre.theta.clone());
         let m = engine.manifest.clone();
@@ -47,11 +47,11 @@ fn main() -> Result<()> {
             let tb = ecco::runtime::batch::train_batch(Task::Det, &frames, &truths, m.train_batch, 32, m.classes, m.grid);
             engine.train_step(&mut model, &tb, 0.03)?;
             if step == 49 || step == 199 {
-                let a = eval_on(&mut engine, &model.theta, &drifted, 2000)?;
+                let a = eval_on(&engine, &model.theta, &drifted, 2000)?;
                 print!(" [{}st: {:.3}]", step + 1, a);
             }
         }
-        let acc_final = eval_on(&mut engine, &model.theta, &drifted, 2000)?;
+        let acc_final = eval_on(&engine, &model.theta, &drifted, 2000)?;
         println!("  {name:<16} drop-> {acc0:.3}, retrained(400)-> {acc_final:.3}");
     }
     Ok(())

@@ -22,7 +22,7 @@ const CAMS: usize = 8;
 
 fn main() -> Result<()> {
     let t_start = std::time::Instant::now();
-    let mut engine = Engine::open_default()?;
+    let engine = Engine::open_default()?;
     println!(
         "engine: {} artifacts, det params {}, seg params {}",
         engine.manifest.artifacts.len(),
@@ -41,7 +41,7 @@ fn main() -> Result<()> {
             .uplink_mbps(20.0)
             .windows(WINDOWS)
             .seed(1234);
-        let mut session = Session::new(&mut engine, spec)?;
+        let mut session = Session::new(&engine, spec)?;
 
         println!("window |  t(s) | jobs | mean mAP | min mAP | engine train-steps");
         for _ in 0..WINDOWS {
@@ -69,7 +69,7 @@ fn main() -> Result<()> {
         summary.push((name, session.steady_mean(0.4), session.mean_response()));
     }
 
-    let stats = &engine.stats;
+    let stats = engine.stats();
     println!("\n=== end-to-end summary ===");
     for (name, steady, resp) in &summary {
         println!("{name:<6} steady mAP {steady:.3}  mean response {resp:.0}s");

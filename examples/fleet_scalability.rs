@@ -1,39 +1,56 @@
 //! Compare ECCO vs baselines on a 6-camera fleet (two correlated triples)
 //! under a constrained GPU + bandwidth budget — the Fig. 6 setting, small —
-//! via the `ecco::api` façade (zoo warm-start policies are prefilled
-//! automatically by `Session::new`).
+//! via the `ecco::api` façade. The four policy arms run **concurrently**
+//! over one shared engine through `api::run_fleet`; reports come back in
+//! arm order, each identical to its sequential run.
 use anyhow::Result;
-use ecco::api::{RunSpec, Session};
+use ecco::api::{run_fleet, RunSpec};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
 use ecco::server::Policy;
+use ecco::util::pool;
 
 fn main() -> Result<()> {
-    let mut engine = Engine::open_default()?;
+    let engine = Engine::open_default()?;
     let gpus: f64 = std::env::args().nth(1).map(|s| s.parse().unwrap()).unwrap_or(2.0);
     let bw: f64 = std::env::args().nth(2).map(|s| s.parse().unwrap()).unwrap_or(6.0);
     let windows: usize = std::env::args().nth(3).map(|s| s.parse().unwrap()).unwrap_or(8);
-    println!("fleet: 6 cams (3+3 correlated), {gpus} GPUs, {bw} Mbps shared, {windows} windows");
-    for policy in [Policy::ecco(), Policy::recl(), Policy::ekya(), Policy::naive()] {
-        let name = policy.name;
-        let spec = RunSpec::new(Task::Det, policy)
-            .scenario(scenario::grouped_static(&[3, 3], 0.06, 30.0, 42))
-            .gpus(gpus)
-            .shared_mbps(bw)
-            .uplink_mbps(20.0)
-            .windows(windows);
-        let t0 = std::time::Instant::now();
-        let report = Session::new(&mut engine, spec)?.run()?;
+    let threads = pool::default_threads();
+    println!(
+        "fleet: 6 cams (3+3 correlated), {gpus} GPUs, {bw} Mbps shared, {windows} windows, \
+         {threads} concurrent runs"
+    );
+    let policies = [Policy::ecco(), Policy::recl(), Policy::ekya(), Policy::naive()];
+    let specs: Vec<RunSpec> = policies
+        .iter()
+        .map(|policy| {
+            RunSpec::new(Task::Det, policy.clone())
+                .scenario(scenario::grouped_static(&[3, 3], 0.06, 30.0, 42))
+                .gpus(gpus)
+                .shared_mbps(bw)
+                .uplink_mbps(20.0)
+                .windows(windows)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let reports = run_fleet(&engine, specs, threads)?;
+    for report in &reports {
         let series: Vec<String> = report.window_acc.iter().map(|a| format!("{a:.3}")).collect();
         println!(
-            "{name:<8} steady={:.3} final={:.3} resp={:.0}s jobs={} [{}] ({:.0}s wall)",
+            "{:<8} steady={:.3} final={:.3} resp={:.0}s jobs={} [{}]",
+            report.name,
             report.steady,
             report.final_acc,
             report.response_s,
             report.jobs,
             series.join(" "),
-            t0.elapsed().as_secs_f64()
         );
     }
+    println!(
+        "{} arms in {:.0}s wall on {} workers",
+        reports.len(),
+        t0.elapsed().as_secs_f64(),
+        threads
+    );
     Ok(())
 }

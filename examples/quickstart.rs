@@ -13,7 +13,7 @@ use ecco::scene::scenario;
 use ecco::server::Policy;
 
 fn main() -> Result<()> {
-    let mut engine = Engine::open_default()?;
+    let engine = Engine::open_default()?;
     println!("loaded {} artifacts", engine.manifest.artifacts.len());
 
     // Three static cameras in one region (correlated drift at t=30s).
@@ -23,7 +23,7 @@ fn main() -> Result<()> {
         .shared_mbps(6.0) // shared bottleneck
         .windows(8)
         .seed(42);
-    let mut session = Session::new(&mut engine, spec)?;
+    let mut session = Session::new(&engine, spec)?;
 
     println!("window |  t(s) | jobs | mean mAP | per-camera mAP");
     for _ in 0..8 {

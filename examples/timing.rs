@@ -5,7 +5,7 @@
 use ecco::runtime::{Engine, Task, TrainBatch, Labels};
 use std::time::Instant;
 fn main() -> anyhow::Result<()> {
-    let mut e = Engine::open_default()?;
+    let e = Engine::open_default()?;
     let m = e.manifest.clone();
     for &r in &[16usize, 32, 48] {
         let mut st = e.init_model(Task::Det)?;

@@ -87,7 +87,7 @@ fn main() {
     // End-to-end: one full retraining window of the real system (engine
     // training, network sim, teacher, metrics) at the Fig. 6 scale,
     // assembled through the api façade.
-    let mut engine = Engine::open_default().expect("engine should open");
+    let engine = Engine::open_default().expect("engine should open");
     b.bench_timed("e2e_window_6cams_ecco", || {
         let spec = RunSpec::new(Task::Det, Policy::ecco())
             .scenario(scenario::grouped_static(&[3, 3], 0.06, 10.0, 42))
@@ -97,7 +97,7 @@ fn main() {
             .windows(1)
             .seed(42)
             .configure(|cfg| cfg.pretrain_steps = 120);
-        let mut session = Session::new(&mut engine, spec).unwrap();
+        let mut session = Session::new(&engine, spec).unwrap();
         let t0 = std::time::Instant::now();
         let report = session.step_window().unwrap();
         let dt = t0.elapsed();

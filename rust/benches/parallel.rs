@@ -1,0 +1,78 @@
+//! Parallelism benchmarks: the per-window eval fan-out and the fleet
+//! driver at 1 vs N worker threads. The printed pair per workload is the
+//! number a deployment cares about — how much wall-clock the worker pool
+//! buys on this machine's cores (determinism is unaffected either way; see
+//! the threading notes in `ecco`'s crate docs).
+//!
+//! Run: `cargo bench --bench parallel`
+
+use ecco::api::{run_fleet, RunSpec};
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::{eval_model, Policy};
+use ecco::util::bench::{black_box, BenchSuite};
+use ecco::util::pool;
+
+fn main() {
+    let engine = Engine::open_default().expect("engine should open");
+    let mut b = BenchSuite::new("parallel");
+    let n_threads = pool::default_threads().max(2);
+
+    // Eval fan-out: one model evaluated on 16 cameras' held-out batches —
+    // the shape of the end-of-window per-camera pass.
+    let sc = scenario::town(16, 7);
+    let world = sc.world;
+    let model = engine.init_model(Task::Det).expect("init model");
+    let cams: Vec<usize> = (0..16).collect();
+    for threads in [1usize, n_threads] {
+        b.bench(&format!("eval_fanout_16cams_{threads}threads"), || {
+            pool::try_map(threads, &cams, |_, &cam| {
+                let frames = world.eval_frames(cam, 32, 16, 0xbe7 + cam as u64);
+                eval_model(&engine, Task::Det, &model.theta, &frames)
+            })
+            .expect("eval fan-out")
+        });
+    }
+
+    // Fleet driver: four policy arms of a small end-to-end run sharing the
+    // engine (the exp-runner sweep shape). Timed per fleet, not per run.
+    for threads in [1usize, n_threads] {
+        b.bench_timed(&format!("fleet_4runs_{threads}threads"), || {
+            let specs: Vec<RunSpec> = [
+                Policy::ecco(),
+                Policy::recl(),
+                Policy::ekya(),
+                Policy::naive(),
+            ]
+            .into_iter()
+            .map(|policy| {
+                // Pin each run to one eval worker so the 1-vs-N comparison
+                // isolates FLEET concurrency (run_fleet would otherwise
+                // redistribute the same cores to per-run eval workers and
+                // flatten the ratio).
+                RunSpec::new(Task::Det, policy)
+                    .scenario(scenario::grouped_static(&[2], 0.05, 20.0, 40))
+                    .gpus(1.0)
+                    .shared_mbps(10.0)
+                    .uplink_mbps(20.0)
+                    .windows(2)
+                    .seed(40)
+                    .eval_threads(1)
+                    .configure(|cfg| {
+                        cfg.micro_windows = 4;
+                        cfg.window_secs = 40.0;
+                        cfg.eval_frames = 8;
+                        cfg.pretrain_steps = 80;
+                    })
+            })
+            .collect();
+            let t0 = std::time::Instant::now();
+            let reports = run_fleet(&engine, specs, threads).expect("fleet");
+            let dt = t0.elapsed();
+            black_box(reports.len());
+            dt
+        });
+    }
+
+    b.finish();
+}

@@ -8,7 +8,7 @@ use ecco::runtime::{Engine, Labels, Task, TrainBatch};
 use ecco::util::bench::BenchSuite;
 
 fn main() {
-    let mut engine = Engine::open_default().expect("engine should open");
+    let engine = Engine::open_default().expect("engine should open");
     let m = engine.manifest.clone();
     let mut b = BenchSuite::new("runtime");
 
@@ -61,10 +61,11 @@ fn main() {
     b.bench("features_b16", || engine.features(&px).unwrap());
 
     b.finish();
+    let stats = engine.stats();
     println!(
-        "engine stats: {} train steps, {} infer calls, {:.2}s total in PJRT",
-        engine.stats.train_steps,
-        engine.stats.infer_calls,
-        engine.stats.exec_nanos as f64 / 1e9
+        "engine stats: {} train steps, {} infer calls, {:.2}s total in the engine",
+        stats.train_steps,
+        stats.infer_calls,
+        stats.exec_nanos as f64 / 1e9
     );
 }

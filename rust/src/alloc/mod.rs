@@ -63,11 +63,24 @@ fn initial_pass_pick(jobs: &[JobView]) -> Option<usize> {
         .map(|j| j.id)
 }
 
+/// NaN-safe ranking value: a NaN score (e.g. from a NaN `acc_gain` that an
+/// upstream bug let through) compares false against everything, which
+/// would silently freeze the argmax on `jobs[0]`. Rank it strictly below
+/// every real score instead, so a poisoned job can never win a
+/// micro-window and ties still break to the lowest id.
+fn rankable(s: f64) -> f64 {
+    if s.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        s
+    }
+}
+
 fn argmax_score<A: Allocator + ?Sized>(alloc: &A, jobs: &[JobView]) -> usize {
     let mut best = &jobs[0];
     let mut best_score = f64::NEG_INFINITY;
     for j in jobs {
-        let s = alloc.score(j, jobs);
+        let s = rankable(alloc.score(j, jobs));
         if s > best_score || (s == best_score && j.id < best.id) {
             best = j;
             best_score = s;
@@ -106,10 +119,20 @@ impl EccoAllocator {
         let size_weight_sum: f64 = all.iter().map(|j| (j.n_cams as f64).powf(self.beta)).sum();
         let w = (job.n_cams as f64).powf(self.beta) / size_weight_sum;
         let mut gain = self.alpha * w * job.acc_gain as f64;
-        // Fairness bonus for the lowest-accuracy job.
+        // Fairness bonus for the lowest-accuracy job. A NaN accuracy is
+        // mapped to +inf before comparing so a poisoned job can never claim
+        // the bonus (total_cmp alone is not enough: negative NaN — the
+        // default quiet NaN on x86 — sorts *below* -inf).
+        let acc_key = |j: &JobView| {
+            if j.acc.is_nan() {
+                f32::INFINITY
+            } else {
+                j.acc
+            }
+        };
         let min_id = all
             .iter()
-            .min_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap().then(a.id.cmp(&b.id)))
+            .min_by(|a, b| acc_key(*a).total_cmp(&acc_key(*b)).then(a.id.cmp(&b.id)))
             .map(|j| j.id);
         if Some(job.id) == min_id {
             gain += job.acc_gain as f64;
@@ -258,6 +281,41 @@ mod tests {
         let s1 = a.score(&jobs[1], &jobs);
         let plain = 1.0 * (1.0 / 5.0) * 0.1;
         assert!(s1 > plain, "fairness bonus missing: {s1} vs {plain}");
+    }
+
+    #[test]
+    fn nan_gain_never_wins_argmax() {
+        // A NaN acc_gain used to make every comparison false, silently
+        // handing the micro-window to jobs[0]; it must now rank below
+        // every real score.
+        let mut a = UtilityAllocator;
+        let jobs = vec![job(0, 2, 0.3, f32::NAN, 1), job(1, 1, 0.3, 0.05, 1)];
+        assert_eq!(a.pick(&jobs), 1, "NaN-scored job must not win");
+        // All-NaN degenerates deterministically to the lowest id.
+        let jobs = vec![job(1, 1, 0.3, f32::NAN, 1), job(0, 1, 0.2, f32::NAN, 1)];
+        assert_eq!(a.pick(&jobs), 0);
+        // ECCO's fairness bonus path must not panic on NaN accuracy, and
+        // neither sign of NaN may claim the bonus (negative NaN sorts
+        // below -inf under total_cmp, so it needs the explicit guard).
+        let mut e = EccoAllocator::default();
+        let jobs = vec![job(0, 1, f32::NAN, 0.1, 1), job(1, 1, 0.2, 0.1, 1)];
+        assert_eq!(e.pick(&jobs), 1, "NaN-acc job must not take the bonus");
+        let jobs = vec![job(0, 1, -f32::NAN, 0.1, 1), job(1, 1, 0.2, 0.1, 1)];
+        assert_eq!(e.pick(&jobs), 1, "-NaN-acc job must not take the bonus");
+    }
+
+    #[test]
+    fn exact_score_ties_break_to_lowest_id() {
+        let mut a = UtilityAllocator;
+        // Declared out of id order to make the tiebreak observable.
+        let jobs = vec![job(2, 1, 0.3, 0.1, 1), job(1, 1, 0.3, 0.1, 1)];
+        assert_eq!(a.pick(&jobs), 1);
+        // ECCO with zero gains: every score is exactly 0.0 (the fairness
+        // bonus adds 0.0 too), so the win can only come from argmax's
+        // lowest-id tiebreak.
+        let mut e = EccoAllocator::default();
+        let jobs = vec![job(3, 1, 0.3, 0.0, 1), job(1, 1, 0.3, 0.0, 1), job(2, 1, 0.3, 0.0, 1)];
+        assert_eq!(e.pick(&jobs), 1);
     }
 
     #[test]

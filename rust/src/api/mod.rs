@@ -13,20 +13,24 @@
 //!   always-on [`RecordingSink`] backs [`WindowReport`] / [`RunReport`],
 //!   and [`JsonlSink`] streams the run to disk.
 //!
+//! For sweeps, [`run_fleet`] runs many specs concurrently over one shared
+//! engine with results in spec order — every report identical to its
+//! sequential equivalent (see the threading notes in [`crate`] docs).
+//!
 //! ```no_run
 //! use ecco::api::{RunSpec, Session};
 //! use ecco::runtime::{Engine, Task};
 //! use ecco::server::Policy;
 //!
 //! fn main() -> anyhow::Result<()> {
-//!     let mut engine = Engine::open_default()?;
+//!     let engine = Engine::open_default()?;
 //!     let spec = RunSpec::new(Task::Det, Policy::ecco())
 //!         .cams(6)
 //!         .gpus(2.0)
 //!         .shared_mbps(6.0)
 //!         .windows(8)
 //!         .seed(7);
-//!     let report = Session::new(&mut engine, spec)?.run()?;
+//!     let report = Session::new(&engine, spec)?.run()?;
 //!     println!("steady mAP {:.3}", report.steady);
 //!     Ok(())
 //! }
@@ -39,5 +43,5 @@ pub mod spec;
 
 pub use event::{Event, EventSink, JsonlSink, RecordingSink};
 pub use report::{RunReport, WindowReport};
-pub use session::Session;
+pub use session::{run_fleet, Session};
 pub use spec::{RunSpec, SpecError};

@@ -31,7 +31,12 @@ pub struct Session<'e> {
 impl<'e> Session<'e> {
     /// Validate `spec` and assemble the system (pretraining the deployment
     /// student, prefilling the model zoo for zoo-warm-start policies).
-    pub fn new(engine: &'e mut Engine, spec: RunSpec) -> Result<Session<'e>> {
+    ///
+    /// The engine borrow is shared: engines are `Sync` (immutable manifest
+    /// + atomic stats), so any number of sessions — including concurrent
+    /// ones driven by [`run_fleet`] — can share one engine. Call sites
+    /// holding `&mut Engine` coerce without change.
+    pub fn new(engine: &'e Engine, spec: RunSpec) -> Result<Session<'e>> {
         spec.validate()?;
         let (sc, uplinks, rest) = spec.into_parts();
         let mut cfg = SystemConfig::new(rest.task, rest.policy);
@@ -252,7 +257,7 @@ impl<'e> Session<'e> {
 
     /// Snapshot of the engine's execution statistics.
     pub fn engine_stats(&self) -> EngineStats {
-        self.sys.engine.stats.clone()
+        self.sys.engine.stats()
     }
 
     /// Events recorded so far (the built-in recorder's stream).
@@ -264,4 +269,36 @@ impl<'e> Session<'e> {
     pub fn alloc_log(&self) -> Vec<(usize, usize, usize)> {
         self.sys.events.record.alloc_log()
     }
+}
+
+/// Run a batch of independent specs to completion over **one shared
+/// engine**, up to `threads` runs in flight at a time.
+///
+/// Each run owns its own `System` (world, network, RNG streams, event
+/// recorder), so runs never interact; the engine is the only shared state
+/// and is `Sync` by construction. Reports come back **in spec order**
+/// regardless of which run finishes first, and each report is identical to
+/// what a sequential `Session::new(engine, spec)?.run()` would have
+/// produced — policy arms and scenario sweeps parallelize without
+/// renumbering or reseeding anything.
+///
+/// On error the lowest-index failure is returned (deterministic, like the
+/// sequential loop's first error). Engine stats aggregate across all runs,
+/// as they do for sequential runs sharing an engine.
+///
+/// To avoid oversubscribing the CPU (fleet workers x per-run eval workers),
+/// each spec's `eval_threads` default is divided by the fleet concurrency;
+/// an explicit [`RunSpec::eval_threads`] on a spec still wins. Determinism
+/// is unaffected either way.
+pub fn run_fleet(engine: &Engine, specs: Vec<RunSpec>, threads: usize) -> Result<Vec<RunReport>> {
+    let per_run = crate::util::pool::per_run_threads(threads, specs.len());
+    let specs: Vec<RunSpec> = specs
+        .into_iter()
+        .map(|s| s.eval_threads_floor(per_run))
+        .collect();
+    crate::util::pool::map_owned(threads, specs, |_, spec| {
+        Session::new(engine, spec)?.run()
+    })
+    .into_iter()
+    .collect()
 }

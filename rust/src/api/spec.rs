@@ -76,9 +76,10 @@ pub struct RunSpec {
     pub(crate) scenario: Option<Scenario>,
     /// Zoo-prefill fine-tune steps when the policy warm-starts from a zoo.
     pub(crate) zoo_init_steps: usize,
-    /// Config hooks, applied in order after the built-in knobs.
+    /// Config hooks, applied in order after the built-in knobs. `Send +
+    /// Sync` so whole specs can be shipped to fleet-driver workers.
     #[allow(clippy::type_complexity)]
-    pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
+    pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig) + Send + Sync>>,
 }
 
 impl RunSpec {
@@ -158,8 +159,25 @@ impl RunSpec {
 
     /// Arbitrary [`SystemConfig`] tweak, applied after the built-in knobs
     /// (gpus/seed); hooks run in registration order.
-    pub fn configure<F: Fn(&mut SystemConfig) + 'static>(mut self, hook: F) -> Self {
+    pub fn configure<F: Fn(&mut SystemConfig) + Send + Sync + 'static>(mut self, hook: F) -> Self {
         self.hooks.push(Box::new(hook));
+        self
+    }
+
+    /// Worker threads for the system's evaluation fan-outs (see
+    /// `SystemConfig::eval_threads`). Runs are byte-identical at any value;
+    /// defaults to the machine's parallelism (`ECCO_THREADS` overrides).
+    pub fn eval_threads(self, n: usize) -> Self {
+        self.configure(move |cfg| cfg.eval_threads = n.max(1))
+    }
+
+    /// Like [`RunSpec::eval_threads`], but registered *before* every other
+    /// hook so an explicit `eval_threads` (or any user hook) still wins.
+    /// The fleet driver uses this to divide eval workers by the fleet
+    /// concurrency instead of oversubscribing the CPU.
+    pub(crate) fn eval_threads_floor(mut self, n: usize) -> Self {
+        self.hooks
+            .insert(0, Box::new(move |cfg| cfg.eval_threads = n.max(1)));
         self
     }
 
@@ -254,7 +272,7 @@ pub(crate) struct RunSpecRest {
     pub(crate) seed: u64,
     pub(crate) zoo_init_steps: usize,
     #[allow(clippy::type_complexity)]
-    pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig)>>,
+    pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig) + Send + Sync>>,
 }
 
 #[cfg(test)]

@@ -17,11 +17,14 @@ use crate::scene::scenario;
 use crate::server::Policy;
 use crate::teacher::TeacherConfig;
 use crate::util::json::{arr, num, obj, s};
+use crate::util::pool;
 
-use super::common::{print_table, ExpContext};
+use super::common::{print_table, run_many, ExpContext};
 
-/// Eq. 1 parameter sweep on the Fig. 10 workload (3+1 groups).
-pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+/// Eq. 1 parameter sweep on the Fig. 10 workload (3+1 groups). The combos
+/// are scripted runs (forced groups + allocator swap), fanned out across
+/// workers sharing the engine; results reduce in combo order.
+pub fn alpha_beta(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(6);
     let combos: Vec<(f64, f64)> = if ctx.fast {
         vec![(1.0, 0.5), (0.25, 0.5), (4.0, 0.5)]
@@ -34,9 +37,10 @@ pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             (1.0, 1.0),
         ]
     };
-    let mut rows = Vec::new();
-    let mut json_rows = Vec::new();
-    for (alpha, beta) in combos {
+    // Divide eval workers by the combo concurrency (same rule as
+    // run_fleet) so concurrent sessions don't oversubscribe the CPU.
+    let per_run = pool::per_run_threads(ctx.threads, combos.len());
+    let outcomes = pool::try_map(ctx.threads, &combos, |_, &(alpha, beta)| {
         let spec = RunSpec::new(Task::Det, Policy::ecco())
             .scenario(scenario::three_plus_one(ctx.seed))
             .gpus(1.0)
@@ -44,6 +48,7 @@ pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
             .uplink_mbps(20.0)
             .windows(windows)
             .seed(ctx.seed)
+            .eval_threads(per_run)
             .configure(|cfg| {
                 cfg.auto_request = false;
                 cfg.auto_regroup = false;
@@ -59,6 +64,11 @@ pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
         let accs = session.camera_accuracies();
         let g1: f32 = accs[..3].iter().sum::<f32>() / 3.0;
         let g2 = accs[3];
+        Ok::<(f32, f32), anyhow::Error>((g1, g2))
+    })?;
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for (&(alpha, beta), &(g1, g2)) in combos.iter().zip(&outcomes) {
         rows.push(vec![
             format!("a={alpha} b={beta}"),
             format!("{g1:.3}"),
@@ -87,12 +97,16 @@ pub fn alpha_beta(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
 }
 
 /// Alg. 2 metadata-filter ablation: accuracy and grouping-eval cost.
-pub fn filter(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+///
+/// Stays sequential on purpose: the eval-cost metric is a delta over the
+/// shared engine's global infer counter, which concurrent runs would
+/// pollute.
+pub fn filter(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(6);
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
     for enabled in [true, false] {
-        let infer_before = engine.stats.infer_calls;
+        let infer_before = engine.stats().infer_calls;
         let spec = RunSpec::new(Task::Det, Policy::ecco())
             .scenario(scenario::town(8, ctx.seed))
             .gpus(2.0)
@@ -134,29 +148,33 @@ pub fn filter(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     Ok(())
 }
 
-/// Teacher-quality sensitivity.
-pub fn teacher(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+/// Teacher-quality sensitivity. The three teacher arms run concurrently.
+pub fn teacher(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(6);
-    let mut rows = Vec::new();
-    let mut json_rows = Vec::new();
-    for (name, tc) in [
+    let arms = [
         ("oracle", TeacherConfig::oracle()),
         ("strong", TeacherConfig::strong()),
         ("noisy", TeacherConfig::noisy()),
-    ] {
-        let spec = RunSpec::new(Task::Det, Policy::ecco())
-            .scenario(scenario::grouped_static(&[3], 0.06, 20.0, ctx.seed))
-            .gpus(2.0)
-            .shared_mbps(10.0)
-            .uplink_mbps(20.0)
-            .windows(windows)
-            .seed(ctx.seed)
-            .configure(move |cfg| cfg.teacher = tc.clone());
-        let mut session = Session::new(engine, spec)?;
-        for _ in 0..windows {
-            session.step_window()?;
-        }
-        let acc = session.steady_mean(0.4);
+    ];
+    let specs: Vec<RunSpec> = arms
+        .iter()
+        .map(|(_, tc)| {
+            let tc = tc.clone();
+            RunSpec::new(Task::Det, Policy::ecco())
+                .scenario(scenario::grouped_static(&[3], 0.06, 20.0, ctx.seed))
+                .gpus(2.0)
+                .shared_mbps(10.0)
+                .uplink_mbps(20.0)
+                .windows(windows)
+                .seed(ctx.seed)
+                .configure(move |cfg| cfg.teacher = tc.clone())
+        })
+        .collect();
+    let outs = run_many(engine, specs, ctx.threads)?;
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for ((name, _), out) in arms.iter().zip(&outs) {
+        let acc = out.steady;
         rows.push(vec![name.to_string(), format!("{acc:.3}")]);
         json_rows.push(obj(vec![("teacher", s(name)), ("steady", num(acc as f64))]));
     }
@@ -174,7 +192,7 @@ pub fn teacher(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
 }
 
 /// Run all ablations.
-pub fn all(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn all(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     alpha_beta(engine, ctx)?;
     filter(engine, ctx)?;
     teacher(engine, ctx)

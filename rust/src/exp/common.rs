@@ -14,6 +14,9 @@ pub struct ExpContext {
     /// Reduced-scale run (CI / smoke): fewer windows and conditions.
     pub fast: bool,
     pub seed: u64,
+    /// Concurrent runs for sweep fan-outs (`--threads`; results are always
+    /// in condition order, so this only trades wall-clock for cores).
+    pub threads: usize,
 }
 
 impl ExpContext {
@@ -33,10 +36,17 @@ impl ExpContext {
     }
 }
 
-/// Run one spec to completion: the standard one-call wrapper every sweep
-/// runner uses (replaces the old 10-argument `run_policy`).
-pub fn run(engine: &mut Engine, spec: RunSpec) -> Result<RunReport> {
+/// Run one spec to completion: the standard one-call wrapper for a single
+/// condition (replaces the old 10-argument `run_policy`).
+pub fn run(engine: &Engine, spec: RunSpec) -> Result<RunReport> {
     Session::new(engine, spec)?.run()
+}
+
+/// Run a whole sweep concurrently over the shared engine: reports come
+/// back in spec order, each identical to its sequential [`run`]. Sweep
+/// runners build their condition list first, fan out here, then print.
+pub fn run_many(engine: &Engine, specs: Vec<RunSpec>, threads: usize) -> Result<Vec<RunReport>> {
+    crate::api::run_fleet(engine, specs, threads)
 }
 
 /// The four systems of the end-to-end comparison, in report order.

@@ -8,11 +8,13 @@ use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
 use crate::util::json::{arr, num, obj, s};
 
-use super::common::{f3, headline_policies, print_table, run, ExpContext};
+use super::common::{f3, headline_policies, print_table, run_many, ExpContext};
 
 /// Fig. 6 for one task: two sweeps (GPUs at fixed bandwidth; bandwidth at
-/// fixed GPUs) across the four systems.
-pub fn fig6(engine: &mut Engine, ctx: &ExpContext, task: Task) -> Result<()> {
+/// fixed GPUs) across the four systems. All conditions of a sweep run
+/// concurrently over the shared engine; results come back in condition
+/// order, so the tables are identical to the old sequential loop's.
+pub fn fig6(engine: &Engine, ctx: &ExpContext, task: Task) -> Result<()> {
     let windows = ctx.windows(8);
     let gpu_sweep: Vec<f64> = if ctx.fast {
         vec![1.0, 4.0]
@@ -29,23 +31,36 @@ pub fn fig6(engine: &mut Engine, ctx: &ExpContext, task: Task) -> Result<()> {
     let mut json_rows = Vec::new();
 
     for (sweep_name, conditions) in [("gpus", &gpu_sweep), ("bandwidth", &bw_sweep)] {
-        let mut rows = Vec::new();
+        // Build the whole sweep (policy-major), then fan it out.
+        let mut arms: Vec<(crate::server::Policy, f64)> = Vec::new();
         for policy in headline_policies() {
-            let mut row = vec![policy.name.to_string()];
             for &x in conditions.iter() {
+                arms.push((policy.clone(), x));
+            }
+        }
+        let specs: Vec<RunSpec> = arms
+            .iter()
+            .map(|(policy, x)| {
                 let (gpus, bw) = if sweep_name == "gpus" {
-                    (x, fixed_bw)
+                    (*x, fixed_bw)
                 } else {
-                    (fixed_gpus, x)
+                    (fixed_gpus, *x)
                 };
-                let spec = RunSpec::new(task, policy.clone())
+                RunSpec::new(task, policy.clone())
                     .scenario(scenario::grouped_static(&[3, 3], 0.06, 30.0, ctx.seed))
                     .gpus(gpus)
                     .shared_mbps(bw)
                     .uplink_mbps(20.0)
                     .windows(windows)
-                    .seed(ctx.seed);
-                let out = run(engine, spec)?;
+                    .seed(ctx.seed)
+            })
+            .collect();
+        let outs = run_many(engine, specs, ctx.threads)?;
+        let mut rows = Vec::new();
+        for (policy_idx, policy) in headline_policies().iter().enumerate() {
+            let mut row = vec![policy.name.to_string()];
+            for (x_idx, &x) in conditions.iter().enumerate() {
+                let out = &outs[policy_idx * conditions.len() + x_idx];
                 row.push(f3(out.steady));
                 json_rows.push(obj(vec![
                     ("sweep", s(sweep_name)),
@@ -90,28 +105,38 @@ pub fn fig6(engine: &mut Engine, ctx: &ExpContext, task: Task) -> Result<()> {
 }
 
 /// Fig. 7: scalability — accuracy and response time vs number of cameras.
-pub fn fig7(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+/// The (policy x fleet-size) grid runs concurrently via the fleet driver.
+pub fn fig7(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(8);
     let cams_sweep: Vec<usize> = if ctx.fast {
         vec![4, 10]
     } else {
         vec![4, 10, 16, 22]
     };
+    let policies = headline_policies();
+    let specs: Vec<RunSpec> = policies
+        .iter()
+        .flat_map(|policy| {
+            cams_sweep.iter().map(move |&n| {
+                RunSpec::new(Task::Det, policy.clone())
+                    .scenario(scenario::town(n, ctx.seed))
+                    .gpus(4.0)
+                    .shared_mbps(50.0)
+                    .uplink_mbps(20.0)
+                    .windows(windows)
+                    .seed(ctx.seed)
+            })
+        })
+        .collect();
+    let outs = run_many(engine, specs, ctx.threads)?;
     let mut acc_rows = Vec::new();
     let mut resp_rows = Vec::new();
     let mut json_rows = Vec::new();
-    for policy in headline_policies() {
+    for (pi, policy) in policies.iter().enumerate() {
         let mut acc_row = vec![policy.name.to_string()];
         let mut resp_row = vec![policy.name.to_string()];
-        for &n in &cams_sweep {
-            let spec = RunSpec::new(Task::Det, policy.clone())
-                .scenario(scenario::town(n, ctx.seed))
-                .gpus(4.0)
-                .shared_mbps(50.0)
-                .uplink_mbps(20.0)
-                .windows(windows)
-                .seed(ctx.seed);
-            let out = run(engine, spec)?;
+        for (ni, &n) in cams_sweep.iter().enumerate() {
+            let out = &outs[pi * cams_sweep.len() + ni];
             acc_row.push(f3(out.steady));
             resp_row.push(format!("{:.0}", out.response_s));
             json_rows.push(obj(vec![

@@ -39,8 +39,10 @@ pub const ALL_EXPERIMENTS: [&str; 12] = [
     "fig12", "fig13",
 ];
 
-/// Dispatch one experiment id (or `all`).
-pub fn run_experiment(engine: &mut Engine, id: &str, ctx: &ExpContext) -> Result<()> {
+/// Dispatch one experiment id (or `all`). Sweep runners fan their
+/// conditions out over `ctx.threads` concurrent runs sharing `engine`;
+/// output order is condition order either way.
+pub fn run_experiment(engine: &Engine, id: &str, ctx: &ExpContext) -> Result<()> {
     match id {
         "all" => {
             for id in ALL_EXPERIMENTS {

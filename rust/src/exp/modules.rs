@@ -14,7 +14,7 @@ use super::common::{print_table, ExpContext};
 
 /// Fig. 10: two fixed groups (3 cameras vs 1 camera); swap only the GPU
 /// allocator; log per-group accuracy and the one-hot micro-window bars.
-pub fn fig10(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn fig10(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(8);
     let mut json_runs = Vec::new();
     let mut summary = Vec::new();
@@ -105,7 +105,7 @@ pub fn fig10(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
 /// Fig. 11: transmission-controller ablation. Left: accuracy vs shared
 /// bandwidth; right: per-group bandwidth at 9 Mbps vs the GPU-proportional
 /// target (group A's two cameras are uplink-capped at 1 Mbps).
-pub fn fig11(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn fig11(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(6);
     let bw_sweep: Vec<f64> = if ctx.fast {
         vec![3.0, 9.0]

@@ -10,9 +10,9 @@ use crate::scene::scenario;
 use crate::server::{Policy, TransmissionKind};
 use crate::util::json::{arr, f32s, obj, s};
 
-use super::common::{f3, print_table, run, ExpContext};
+use super::common::{f3, print_table, run_many, ExpContext};
 
-pub fn fig2c(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn fig2c(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(8);
     // All settings share the fixed transmission pipeline so the comparison
     // isolates the retraining strategy, exactly as the paper's case study.
@@ -28,17 +28,20 @@ pub fn fig2c(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     group1.name = "group-1gpu";
 
     let settings = [(indep, 3.0), (group3, 3.0), (group1, 1.0)];
-    let mut outcomes = Vec::new();
-    for (policy, gpus) in settings {
-        let spec = RunSpec::new(Task::Det, policy)
-            .scenario(scenario::convoy(3, ctx.seed))
-            .gpus(gpus)
-            .shared_mbps(30.0)
-            .uplink_mbps(10.0)
-            .windows(windows)
-            .seed(ctx.seed);
-        outcomes.push(run(engine, spec)?);
-    }
+    let specs: Vec<RunSpec> = settings
+        .into_iter()
+        .map(|(policy, gpus)| {
+            RunSpec::new(Task::Det, policy)
+                .scenario(scenario::convoy(3, ctx.seed))
+                .gpus(gpus)
+                .shared_mbps(30.0)
+                .uplink_mbps(10.0)
+                .windows(windows)
+                .seed(ctx.seed)
+        })
+        .collect();
+    // The three settings run concurrently; outcomes stay in setting order.
+    let outcomes = run_many(engine, specs, ctx.threads)?;
 
     let header: Vec<String> = (0..windows).map(|w| format!("w{w}")).collect();
     let mut hdr: Vec<&str> = vec!["setting", "steady", "resp(s)"];

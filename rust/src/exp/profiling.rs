@@ -16,6 +16,7 @@ use crate::server::{eval_model, pretrain};
 use crate::teacher::{Teacher, TeacherConfig};
 use crate::transmission::BUDGET_LEVELS;
 use crate::util::json::{arr, num, obj, s};
+use crate::util::pool;
 use crate::util::rng::Pcg32;
 use crate::video::{degrade, transport_window, SamplingConfig, FPS_CHOICES, RES_CHOICES};
 
@@ -57,7 +58,7 @@ struct RetrainSetup {
 
 /// Retrain one camera under a fixed pixel budget and bitrate with a forced
 /// sampling config; returns final mAP.
-fn retrain_with_config(engine: &mut Engine, setup: &RetrainSetup) -> Result<f32> {
+fn retrain_with_config(engine: &Engine, setup: &RetrainSetup) -> Result<f32> {
     let RetrainSetup {
         mount,
         config,
@@ -125,7 +126,9 @@ fn retrain_with_config(engine: &mut Engine, setup: &RetrainSetup) -> Result<f32>
 /// Fig. 5: accuracy heatmap over (fps, res) for a static and mobile camera
 /// under a fixed GPU budget and 1 Mbps. Also writes the measured profile
 /// tables that `transmission::ProfileTable::from_measurements` consumes.
-pub fn fig5(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+/// Heatmap cells are independent (own world + model per cell), so each
+/// mount's grid fans out across the worker pool in cell order.
+pub fn fig5(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(4);
     let budget = 10_000.0; // pixels/sec (BUDGET_LEVELS[2])
     let mounts: Vec<(&str, Mount)> = vec![
@@ -140,34 +143,40 @@ pub fn fig5(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
     ];
     let mut all_rows = Vec::new();
     for (mname, mount) in &mounts {
+        let cells: Vec<SamplingConfig> = RES_CHOICES
+            .iter()
+            .flat_map(|&res| FPS_CHOICES.iter().map(move |&fps| SamplingConfig { fps, res }))
+            .collect();
+        let accs = pool::try_map(ctx.threads, &cells, |_, &c| {
+            if c.pixels_per_sec() > budget * 1.5 {
+                return Ok(f32::NAN); // config can't even fit the budget
+            }
+            // Two seeds per cell to tame eval noise.
+            let setup = RetrainSetup {
+                mount: mount.clone(),
+                config: c,
+                budget_pps: budget,
+                bitrate_mbps: 1.0,
+                windows,
+                seed: ctx.seed,
+            };
+            let a0 = retrain_with_config(engine, &setup)?;
+            let a1 = retrain_with_config(
+                engine,
+                &RetrainSetup {
+                    seed: ctx.seed ^ 0xabcd,
+                    ..setup
+                },
+            )?;
+            Ok::<f32, anyhow::Error>((a0 + a1) / 2.0)
+        })?;
         let mut rows = Vec::new();
         let mut best: Option<(SamplingConfig, f32)> = None;
-        for &res in &RES_CHOICES {
+        for (ri, &res) in RES_CHOICES.iter().enumerate() {
             let mut row = vec![format!("res {res}")];
-            for &fps in &FPS_CHOICES {
+            for (fi, &fps) in FPS_CHOICES.iter().enumerate() {
                 let c = SamplingConfig { fps, res };
-                let acc = if c.pixels_per_sec() > budget * 1.5 {
-                    f32::NAN // config can't even fit the budget
-                } else {
-                    // Two seeds per cell to tame eval noise.
-                    let setup = RetrainSetup {
-                        mount: mount.clone(),
-                        config: c,
-                        budget_pps: budget,
-                        bitrate_mbps: 1.0,
-                        windows,
-                        seed: ctx.seed,
-                    };
-                    let a0 = retrain_with_config(engine, &setup)?;
-                    let a1 = retrain_with_config(
-                        engine,
-                        &RetrainSetup {
-                            seed: ctx.seed ^ 0xabcd,
-                            ..setup
-                        },
-                    )?;
-                    (a0 + a1) / 2.0
-                };
+                let acc = accs[ri * FPS_CHOICES.len() + fi];
                 if !acc.is_nan() && best.map(|(_, b)| acc > b).unwrap_or(true) {
                     best = Some((c, acc));
                 }
@@ -220,7 +229,7 @@ pub fn fig5(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
 }
 
 /// Table 1: equal vs GPU-proportional bandwidth with a 30/70 GPU split.
-pub fn tab1(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn tab1(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(4);
     let total_bw = 0.8; // Mbps shared uplink (constrained, as in the paper)
     let gpu_pps = 10_000.0;

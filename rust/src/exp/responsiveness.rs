@@ -9,13 +9,13 @@ use crate::scene::scenario;
 use crate::server::Policy;
 use crate::util::json::{arr, f32s, num, obj, s};
 
-use super::common::{print_table, run, ExpContext};
+use super::common::{print_table, run_many, ExpContext};
 
 /// Fig. 12: three cameras of one correlated group issue staggered
 /// retraining requests (windows 0 / 2 / 4). Later cameras should start
 /// from the partially-retrained group model under ECCO ("natural reuse"),
 /// vs RECL's static zoo checkpoint.
-pub fn fig12(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn fig12(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     // Joins happen at windows 0/2/4, so at least 6 windows must run.
     let windows = ctx.windows(8).max(6);
     let join_at = [0usize, 2, 4];
@@ -75,8 +75,9 @@ pub fn fig12(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
 }
 
 /// Fig. 13: mean response time (to the mAP threshold) across cameras as
-/// the per-camera uplink shrinks.
-pub fn fig13(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+/// the per-camera uplink shrinks. The (policy x uplink) grid fans out
+/// over the fleet driver.
+pub fn fig13(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(10);
     let uplinks: Vec<f64> = if ctx.fast {
         vec![0.1, 0.5]
@@ -89,20 +90,28 @@ pub fn fig13(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
         Policy::recl(),
         Policy::ekya(),
     ];
+    let specs: Vec<RunSpec> = policies
+        .iter()
+        .flat_map(|policy| {
+            uplinks.iter().map(move |&up| {
+                RunSpec::new(Task::Det, policy.clone())
+                    .scenario(scenario::grouped_static(&[3], 0.05, 10.0, ctx.seed))
+                    .gpus(2.0)
+                    .shared_mbps(50.0) // shared link is NOT the constraint here
+                    .uplink_mbps(up)
+                    .windows(windows)
+                    .seed(ctx.seed)
+                    .configure(|cfg| cfg.response_threshold = 0.45)
+            })
+        })
+        .collect();
+    let outs = run_many(engine, specs, ctx.threads)?;
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
-    for policy in policies {
+    for (pi, policy) in policies.iter().enumerate() {
         let mut row = vec![policy.name.to_string()];
-        for &up in &uplinks {
-            let spec = RunSpec::new(Task::Det, policy.clone())
-                .scenario(scenario::grouped_static(&[3], 0.05, 10.0, ctx.seed))
-                .gpus(2.0)
-                .shared_mbps(50.0) // shared link is NOT the constraint here
-                .uplink_mbps(up)
-                .windows(windows)
-                .seed(ctx.seed)
-                .configure(|cfg| cfg.response_threshold = 0.45);
-            let out = run(engine, spec)?;
+        for (ui, &up) in uplinks.iter().enumerate() {
+            let out = &outs[pi * uplinks.len() + ui];
             row.push(format!("{:.0}", out.response_s));
             json_rows.push(obj(vec![
                 ("policy", s(policy.name)),

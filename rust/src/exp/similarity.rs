@@ -8,68 +8,82 @@ use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
 use crate::server::{Policy, TransmissionKind};
 use crate::util::json::{arr, f32s, num, obj, s};
+use crate::util::pool;
 
 use super::common::{print_table, ExpContext};
 
 /// Fig. 8: manually-formed groups at three similarity levels; group
-/// retraining vs independent retraining with equal resources.
-pub fn fig8(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+/// retraining vs independent retraining with equal resources. The six
+/// scripted conditions run concurrently — each worker builds its own
+/// session over the shared engine — and reduce in condition order.
+pub fn fig8(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let windows = ctx.windows(6);
+    let conditions: Vec<(usize, bool)> = (0..3usize)
+        .flat_map(|level| [(level, true), (level, false)])
+        .collect();
+    // Divide eval workers by the condition concurrency (same rule as
+    // run_fleet) so concurrent sessions don't oversubscribe the CPU.
+    let per_run = pool::per_run_threads(ctx.threads, conditions.len());
+    let accs = pool::try_map(ctx.threads, &conditions, |_, &(level, grouped)| {
+        let (sc, _) = scenario::similarity_triads(20.0, ctx.seed);
+        let triad = sc.groups[level].clone();
+        let mut policy = if grouped { Policy::ecco() } else { Policy::ekya() };
+        // Grouping module disabled (manual groups) and a fixed
+        // transmission pipeline, per the paper's setup.
+        policy.transmission = TransmissionKind::Fixed { fps: 4.0, res: 32 };
+        policy.name = if grouped { "group" } else { "independent" };
+        // Ample bandwidth: similarity (not data volume) is the variable
+        // under study; the paper's 3 Mbps maps to a non-binding uplink
+        // at our proxy scale for these sampling configs.
+        let spec = RunSpec::new(Task::Det, policy)
+            .scenario(sc)
+            .gpus(3.0)
+            .shared_mbps(12.0)
+            .uplink_mbps(20.0)
+            .windows(windows)
+            .seed(ctx.seed)
+            .eval_threads(per_run)
+            .configure(|cfg| {
+                cfg.auto_request = false;
+                cfg.auto_regroup = false;
+            });
+        let mut session = Session::new(engine, spec)?;
+        if grouped {
+            session.force_group(&triad)?;
+        } else {
+            for &cam in &triad {
+                session.force_group(&[cam])?;
+            }
+        }
+        for _ in 0..windows {
+            session.step_window()?;
+        }
+        // Accuracy over the triad only (other cameras are idle).
+        let acc: f32 = triad
+            .iter()
+            .map(|&c| session.camera_accuracy(c))
+            .sum::<f32>()
+            / triad.len() as f32;
+        Ok::<f32, anyhow::Error>(acc)
+    })?;
+    let (_, names) = scenario::similarity_triads(20.0, ctx.seed);
     let mut rows = Vec::new();
     let mut json_rows = Vec::new();
     for level in 0..3usize {
-        let mut accs = Vec::new();
-        for grouped in [true, false] {
-            let (sc, names) = scenario::similarity_triads(20.0, ctx.seed);
-            let triad = sc.groups[level].clone();
-            let mut policy = if grouped { Policy::ecco() } else { Policy::ekya() };
-            // Grouping module disabled (manual groups) and a fixed
-            // transmission pipeline, per the paper's setup.
-            policy.transmission = TransmissionKind::Fixed { fps: 4.0, res: 32 };
-            policy.name = if grouped { "group" } else { "independent" };
-            // Ample bandwidth: similarity (not data volume) is the variable
-            // under study; the paper's 3 Mbps maps to a non-binding uplink
-            // at our proxy scale for these sampling configs.
-            let spec = RunSpec::new(Task::Det, policy)
-                .scenario(sc)
-                .gpus(3.0)
-                .shared_mbps(12.0)
-                .uplink_mbps(20.0)
-                .windows(windows)
-                .seed(ctx.seed)
-                .configure(|cfg| {
-                    cfg.auto_request = false;
-                    cfg.auto_regroup = false;
-                });
-            let mut session = Session::new(engine, spec)?;
-            if grouped {
-                session.force_group(&triad)?;
-            } else {
-                for &cam in &triad {
-                    session.force_group(&[cam])?;
-                }
-            }
-            for _ in 0..windows {
-                session.step_window()?;
-            }
-            // Accuracy over the triad only (other cameras are idle).
-            let acc: f32 = triad
-                .iter()
-                .map(|&c| session.camera_accuracy(c))
-                .sum::<f32>()
-                / triad.len() as f32;
-            accs.push(acc);
+        let grouped_acc = accs[level * 2];
+        let indep_acc = accs[level * 2 + 1];
+        for (acc, grouped) in [(grouped_acc, true), (indep_acc, false)] {
             json_rows.push(obj(vec![
                 ("similarity", s(names[level])),
                 ("mode", s(if grouped { "group" } else { "independent" })),
                 ("mAP", num(acc as f64)),
             ]));
         }
-        let gain = accs[0] - accs[1];
+        let gain = grouped_acc - indep_acc;
         rows.push(vec![
             ["high", "medium", "low"][level].to_string(),
-            format!("{:.3}", accs[0]),
-            format!("{:.3}", accs[1]),
+            format!("{grouped_acc:.3}"),
+            format!("{indep_acc:.3}"),
             format!("{gain:+.3}"),
         ]);
     }
@@ -88,7 +102,7 @@ pub fn fig8(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
 
 /// Fig. 9: dynamic grouping on a route split — camera 2 drives into a
 /// tunnel at t=300s and must be evicted and re-grouped.
-pub fn fig9(engine: &mut Engine, ctx: &ExpContext) -> Result<()> {
+pub fn fig9(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     // The route geometry needs ~10 windows regardless of fast mode: the
     // split camera reaches the tunnel around t=320s (window 6).
     let windows = ctx.windows(10).max(10);

@@ -34,8 +34,30 @@
 //! | [`zoo`] | RECL-style model zoo |
 //! | [`server`] | retraining jobs, micro-window scheduler, the (crate-private) `System` loop |
 //! | [`exp`] | one runner per paper table/figure (`ecco exp <id>`) |
-//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness |
+//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness, scoped worker pool ([`util::pool`]) |
 //!
+//! ## Threading model
+//!
+//! The runtime [`runtime::Engine`] is **shared state**: its manifest is
+//! immutable after construction and its statistics are atomics, so every
+//! engine method takes `&self` and the type is `Sync`. All mutable
+//! training state lives in [`runtime::ModelState`] values owned by the
+//! caller. Two levels of parallelism build on that:
+//!
+//! * **Eval fan-out** — the coordinator's per-window evaluation batches
+//!   (candidate evals during request placement, per-member job evals, the
+//!   per-camera window pass, and the regroup matrix) run on
+//!   [`util::pool`], a std-only scoped worker pool. Results reduce in
+//!   item-index order, so event streams, reports, and RNG consumption are
+//!   **byte-identical at any thread count** (`SystemConfig::eval_threads`,
+//!   [`api::RunSpec::eval_threads`], or the `ECCO_THREADS` env var).
+//! * **Fleet fan-out** — [`api::run_fleet`] runs whole specs (policy arms,
+//!   scenario sweeps) concurrently over one shared engine, reports in spec
+//!   order; the experiment runners take `--threads N`.
+//!
+//! Training itself stays sequential within a run by design: Alg. 1
+//! time-shares all GPUs on one job per micro-window, so the serial train
+//! loop *is* the semantics being simulated.
 //! ## Quick start
 //!
 //! Every run goes through [`api::RunSpec`] and [`api::Session`]:
@@ -46,14 +68,14 @@
 //! use ecco::server::Policy;
 //!
 //! # fn main() -> anyhow::Result<()> {
-//! let mut engine = Engine::open_default()?;
+//! let engine = Engine::open_default()?;
 //! let spec = RunSpec::new(Task::Det, Policy::ecco())
 //!     .cams(6)
 //!     .gpus(2.0)
 //!     .shared_mbps(6.0)
 //!     .windows(8)
 //!     .seed(7);
-//! let mut session = Session::new(&mut engine, spec)?;
+//! let mut session = Session::new(&engine, spec)?;
 //! for _ in 0..8 {
 //!     let w = session.step_window()?;
 //!     println!("window {}: mean mAP {:.3}, {} jobs", w.window, w.mean_acc, w.jobs);

@@ -33,7 +33,7 @@ fn main() -> Result<()> {
                  \x20        [--cams N] [--gpus G] [--bw MBPS] [--windows N] [--seed S]\n\
                  \x20        [--events run.jsonl]\n\
                  ecco exp <fig2c|fig5|tab1|fig6det|fig6seg|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>\n\
-                 \x20        [--out results] [--seed S] [--fast]\n\
+                 \x20        [--out results] [--seed S] [--fast] [--threads N]\n\
                  ecco info"
             );
             bail!("missing or unknown subcommand");
@@ -61,14 +61,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let policy = policy_by_name(&args.str_or("policy", "ecco"))?;
     let windows = args.usize_or("windows", 8)?;
 
-    let mut engine = Engine::open_default()?;
+    let engine = Engine::open_default()?;
     let spec = RunSpec::new(task, policy)
         .cams(args.usize_or("cams", 6)?)
         .gpus(args.f64_or("gpus", 2.0)?)
         .shared_mbps(args.f64_or("bw", 6.0)?)
         .windows(windows)
         .seed(args.u64_or("seed", 7)?);
-    let mut session = Session::new(&mut engine, spec)?;
+    let mut session = Session::new(&engine, spec)?;
     if let Some(path) = args.get("events") {
         session.add_sink(Box::new(JsonlSink::create(path)?));
         println!("# streaming events to {path}");
@@ -95,7 +95,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
     // bound to it (`ecco exp --fast fig6det`).
     let mut args = args.clone();
     args.normalize_flags(&["fast"]);
-    args.reject_unknown(&["out", "seed"], &["fast"])?;
+    args.reject_unknown(&["out", "seed", "threads"], &["fast"])?;
     let Some(id) = args.positional.first() else {
         bail!("exp requires an experiment id (or `all`)");
     };
@@ -103,13 +103,17 @@ fn cmd_exp(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     let fast = args.flag("fast");
     let seed = args.u64_or("seed", 7)?;
-    let mut engine = Engine::open_default()?;
+    let threads = args
+        .usize_or("threads", ecco::util::pool::default_threads())?
+        .max(1);
+    let engine = Engine::open_default()?;
     let ctx = exp::ExpContext {
         out_dir,
         fast,
         seed,
+        threads,
     };
-    exp::run_experiment(&mut engine, id, &ctx)
+    exp::run_experiment(&engine, id, &ctx)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -178,27 +178,34 @@ impl NetSim {
             f.cooldown = (f.cooldown - dt).max(0.0);
             f.rate = (f.rate + f.alpha * dt / f.rtt).min(f.app_limit.max(0.01));
         }
-        // 2. Congestion detection per link; synchronized multiplicative
-        //    decrease for flows crossing a saturated link (once per RTT).
+        // 2. Congestion detection: every link's overload factor is computed
+        //    from a single post-increase rate snapshot. (Mutating rates
+        //    link-by-link here would make later links see already-backed-off
+        //    demand, so goodput would depend on link declaration order.)
+        let rates: Vec<f64> = self.flows.iter().map(|f| f.rate).collect();
         let mut overload = vec![1.0f64; self.links.len()];
         for (li, link) in self.links.iter().enumerate() {
             let demand: f64 = self
                 .flows
                 .iter()
-                .filter(|f| f.path.contains(&li))
-                .map(|f| f.rate)
+                .zip(&rates)
+                .filter(|(f, _)| f.path.contains(&li))
+                .map(|(_, &r)| r)
                 .sum();
             if demand > link.capacity_mbps {
                 overload[li] = link.capacity_mbps / demand;
-                for f in &mut self.flows {
-                    if f.path.contains(&li) && f.cooldown <= 0.0 {
-                        f.rate *= f.beta;
-                        f.cooldown = f.rtt;
-                    }
-                }
             }
         }
-        // 3. Goodput integration: rate scaled by the worst overload factor
+        // 3. Synchronized multiplicative decrease: a flow crossing any
+        //    saturated link backs off once, then cools down for one RTT —
+        //    independent of how its links are ordered or indexed.
+        for f in &mut self.flows {
+            if f.cooldown <= 0.0 && f.path.iter().any(|&l| overload[l] < 1.0) {
+                f.rate *= f.beta;
+                f.cooldown = f.rtt;
+            }
+        }
+        // 4. Goodput integration: rate scaled by the worst overload factor
         //    along the path (fluid approximation of queue drops).
         for f in &mut self.flows {
             let scale = f
@@ -321,6 +328,48 @@ mod tests {
         let ra = sim.delivered_mbit(a) / 60.0;
         let rb = sim.delivered_mbit(b) / 60.0;
         assert!(ra / rb > 2.0, "after alpha bump expected >2x: {ra} vs {rb}");
+    }
+
+    #[test]
+    fn goodput_independent_of_link_declaration_order() {
+        // Same topology (two uplinks into one shared bottleneck), links
+        // declared in permuted order: delivered volumes must be exactly
+        // identical. Before the snapshot fix, back-offs were applied
+        // link-by-link against already-mutated rates, so goodput depended
+        // on link iteration order.
+        let caps = [1.5f64, 4.0, 3.0]; // uplink0, uplink1, shared
+        let build = |perm: &[usize; 3]| -> (NetSim, FlowId, FlowId) {
+            // perm[i] = position of logical link i in the declared list.
+            let mut link_caps = [0.0f64; 3];
+            for (logical, &pos) in perm.iter().enumerate() {
+                link_caps[pos] = caps[logical];
+            }
+            let links: Vec<Link> = link_caps
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| Link {
+                    capacity_mbps: c,
+                    name: format!("l{i}"),
+                })
+                .collect();
+            let mut sim = NetSim::new(links);
+            let a = sim.add_flow(vec![perm[0], perm[2]], 1.0, 0.5).unwrap();
+            let b = sim.add_flow(vec![perm[1], perm[2]], 2.0, 0.5).unwrap();
+            (sim, a, b)
+        };
+        let (mut s1, a1, b1) = build(&[0, 1, 2]);
+        let (mut s2, a2, b2) = build(&[2, 0, 1]);
+        let (mut s3, a3, b3) = build(&[1, 2, 0]);
+        for s in [&mut s1, &mut s2, &mut s3] {
+            s.run(45.0);
+        }
+        assert_eq!(s1.delivered_mbit(a1), s2.delivered_mbit(a2));
+        assert_eq!(s1.delivered_mbit(b1), s2.delivered_mbit(b2));
+        assert_eq!(s1.delivered_mbit(a1), s3.delivered_mbit(a3));
+        assert_eq!(s1.delivered_mbit(b1), s3.delivered_mbit(b3));
+        // The sim actually saturated (the property is non-vacuous).
+        assert!(s1.delivered_mbit(a1) + s1.delivered_mbit(b1) <= caps[2] * 45.0 + 1e-6);
+        assert!(s1.delivered_mbit(b1) > 0.0);
     }
 
     #[test]

@@ -19,6 +19,8 @@
 
 #[cfg(not(feature = "pjrt"))]
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 #[cfg(not(feature = "pjrt"))]
 use std::path::Path;
 
@@ -111,7 +113,9 @@ impl SegPred {
     }
 }
 
-/// Execution statistics (perf accounting).
+/// Execution statistics snapshot (perf accounting). Obtained from
+/// [`Engine::stats`]; the engine itself accumulates these in atomics so
+/// concurrent workers can share one `&Engine`.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     pub train_steps: u64,
@@ -125,13 +129,60 @@ pub struct EngineStats {
     pub infer_nanos: u128,
 }
 
+/// Lock-free accumulator behind [`EngineStats`]: every counter is an
+/// atomic so `Engine` methods can take `&self` and the engine can be
+/// shared (`Sync`) across the eval worker pool and fleet drivers.
+/// Counters use relaxed ordering — they are monotonic tallies, never used
+/// for synchronization.
+#[derive(Debug, Default)]
+pub(crate) struct StatsCell {
+    pub(crate) train_steps: AtomicU64,
+    pub(crate) infer_calls: AtomicU64,
+    pub(crate) feature_calls: AtomicU64,
+    pub(crate) compile_count: AtomicU64,
+    pub(crate) exec_nanos: AtomicU64,
+    pub(crate) train_nanos: AtomicU64,
+    pub(crate) infer_nanos: AtomicU64,
+}
+
+impl StatsCell {
+    pub(crate) fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self) -> EngineStats {
+        EngineStats {
+            train_steps: self.train_steps.load(Ordering::Relaxed),
+            infer_calls: self.infer_calls.load(Ordering::Relaxed),
+            feature_calls: self.feature_calls.load(Ordering::Relaxed),
+            compile_count: self.compile_count.load(Ordering::Relaxed),
+            exec_nanos: self.exec_nanos.load(Ordering::Relaxed) as u128,
+            train_nanos: self.train_nanos.load(Ordering::Relaxed) as u128,
+            infer_nanos: self.infer_nanos.load(Ordering::Relaxed) as u128,
+        }
+    }
+}
+
 /// The native (pure Rust) execution engine. With `--features pjrt` the
 /// [`super::pjrt::Engine`] replaces this type under the same name.
+///
+/// The engine is **shared state**: the manifest is immutable after
+/// construction and the stats are atomic, so every method takes `&self`
+/// and one engine can serve any number of worker threads or concurrent
+/// sessions. Mutable training state lives in the caller's [`ModelState`].
 #[cfg(not(feature = "pjrt"))]
 pub struct Engine {
     pub manifest: Manifest,
-    pub stats: EngineStats,
+    stats: StatsCell,
 }
+
+// Compile-time statement of the sharing contract the eval fan-outs and
+// fleet driver rely on.
+#[cfg(not(feature = "pjrt"))]
+const _: () = {
+    const fn assert_sync<T: Sync + Send>() {}
+    assert_sync::<Engine>();
+};
 
 #[cfg(not(feature = "pjrt"))]
 impl Engine {
@@ -157,7 +208,7 @@ impl Engine {
         };
         Ok(Engine {
             manifest,
-            stats: EngineStats::default(),
+            stats: StatsCell::default(),
         })
     }
 
@@ -167,8 +218,13 @@ impl Engine {
         Engine::new(&dir)
     }
 
+    /// Snapshot of the execution statistics.
+    pub fn stats(&self) -> EngineStats {
+        self.stats.snapshot()
+    }
+
     /// No-op for the native backend (nothing to pre-compile).
-    pub fn warmup(&mut self) -> Result<()> {
+    pub fn warmup(&self) -> Result<()> {
         Ok(())
     }
 
@@ -186,7 +242,7 @@ impl Engine {
 
     /// One SGD+momentum step; mutates `state` and returns the batch loss.
     pub fn train_step(
-        &mut self,
+        &self,
         state: &mut ModelState,
         batch: &TrainBatch,
         lr: f32,
@@ -219,16 +275,16 @@ impl Engine {
         }
         let t0 = std::time::Instant::now();
         let loss = native::train_step(state.task, &mut state.theta, &mut state.mom, batch, b, lr);
-        let dt = t0.elapsed().as_nanos();
-        self.stats.exec_nanos += dt;
-        self.stats.train_nanos += dt;
+        let dt = t0.elapsed().as_nanos() as u64;
+        StatsCell::add(&self.stats.exec_nanos, dt);
+        StatsCell::add(&self.stats.train_nanos, dt);
         state.steps += 1;
-        self.stats.train_steps += 1;
+        StatsCell::add(&self.stats.train_steps, 1);
         Ok(loss)
     }
 
     /// Batched detection inference. `pixels` is `[B,r,r,3]`, B = infer_batch.
-    pub fn infer_det(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
+    pub fn infer_det(&self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
         let m = &self.manifest;
         let (b, g, k) = (m.infer_batch, m.grid, m.classes);
         m.artifact(Task::Det, "infer", res)?;
@@ -237,10 +293,10 @@ impl Engine {
         }
         let t0 = std::time::Instant::now();
         let (obj, cls) = native::infer_det(theta, pixels, b, res);
-        let dt = t0.elapsed().as_nanos();
-        self.stats.exec_nanos += dt;
-        self.stats.infer_nanos += dt;
-        self.stats.infer_calls += 1;
+        let dt = t0.elapsed().as_nanos() as u64;
+        StatsCell::add(&self.stats.exec_nanos, dt);
+        StatsCell::add(&self.stats.infer_nanos, dt);
+        StatsCell::add(&self.stats.infer_calls, 1);
         Ok(DetPred {
             batch: b,
             grid: g,
@@ -251,7 +307,7 @@ impl Engine {
     }
 
     /// Batched segmentation inference.
-    pub fn infer_seg(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
+    pub fn infer_seg(&self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
         let m = &self.manifest;
         let (b, k) = (m.infer_batch, m.classes);
         m.artifact(Task::Seg, "infer", res)?;
@@ -260,10 +316,10 @@ impl Engine {
         }
         let t0 = std::time::Instant::now();
         let probs = native::infer_seg(theta, pixels, b, res);
-        let dt = t0.elapsed().as_nanos();
-        self.stats.exec_nanos += dt;
-        self.stats.infer_nanos += dt;
-        self.stats.infer_calls += 1;
+        let dt = t0.elapsed().as_nanos() as u64;
+        StatsCell::add(&self.stats.exec_nanos, dt);
+        StatsCell::add(&self.stats.infer_nanos, dt);
+        StatsCell::add(&self.stats.infer_calls, 1);
         Ok(SegPred {
             batch: b,
             side: res / 4,
@@ -273,7 +329,7 @@ impl Engine {
     }
 
     /// Drift/grouping descriptors for a `[B,32,32,3]` batch -> `[B,96]`.
-    pub fn features(&mut self, pixels: &[f32]) -> Result<Vec<f32>> {
+    pub fn features(&self, pixels: &[f32]) -> Result<Vec<f32>> {
         let m = &self.manifest;
         let (b, r) = (m.infer_batch, m.feature_res);
         if pixels.len() != b * r * r * 3 {
@@ -281,10 +337,10 @@ impl Engine {
         }
         let t0 = std::time::Instant::now();
         let emb = native::features(pixels, b, r);
-        let dt = t0.elapsed().as_nanos();
-        self.stats.exec_nanos += dt;
-        self.stats.infer_nanos += dt;
-        self.stats.feature_calls += 1;
+        let dt = t0.elapsed().as_nanos() as u64;
+        StatsCell::add(&self.stats.exec_nanos, dt);
+        StatsCell::add(&self.stats.infer_nanos, dt);
+        StatsCell::add(&self.stats.feature_calls, 1);
         Ok(emb)
     }
 }
@@ -295,7 +351,7 @@ mod tests {
 
     #[test]
     fn engine_opens_without_artifacts() {
-        let mut e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
+        let e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
         assert_eq!(e.manifest.classes, 4);
         let mut state = e.init_model(Task::Det).unwrap();
         assert_eq!(state.param_count(), e.manifest.task(Task::Det).param_count);
@@ -310,12 +366,12 @@ mod tests {
         };
         let loss = e.train_step(&mut state, &batch, 0.01).unwrap();
         assert!(loss.is_finite());
-        assert_eq!(e.stats.train_steps, 1);
+        assert_eq!(e.stats().train_steps, 1);
     }
 
     #[test]
     fn engine_rejects_bad_shapes() {
-        let mut e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
+        let e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
         let mut state = e.init_model(Task::Det).unwrap();
         let bad = TrainBatch {
             res: 32,

@@ -6,22 +6,39 @@
 //! requires an environment that provides the `xla` crate (see Cargo.toml);
 //! the default build uses the native reference backend instead, which
 //! implements identical math in pure Rust.
+//!
+//! Like the native backend, every method takes `&self` so the engine can
+//! be shared across threads; unlike it, execution is serialized behind the
+//! compile-cache lock (this backend exists for golden-numerics parity, not
+//! throughput — the native backend is the concurrent hot path).
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{DetPred, EngineStats, Labels, ModelState, SegPred, TrainBatch};
+use super::engine::{DetPred, EngineStats, Labels, ModelState, SegPred, StatsCell, TrainBatch};
 use super::manifest::{Manifest, Task};
 
 /// The PJRT engine.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub stats: EngineStats,
+    executables: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: StatsCell,
 }
+
+// Compile-time guard: the coordinator's eval fan-outs and the fleet driver
+// share `&Engine` across scoped threads, so this backend must be `Sync`
+// like the native one. If the `xla` handle types turn out not to be
+// thread-safe, this single assertion fails with a clear message instead of
+// E0277 at every pool call site — wrap `client`/`executables` in the
+// appropriate guards then (see ROADMAP's parallelism follow-ups).
+const _: () = {
+    const fn assert_sync<T: Sync>() {}
+    assert_sync::<Engine>();
+};
 
 impl Engine {
     /// Create an engine over an artifacts directory (compiles lazily).
@@ -31,8 +48,8 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            executables: HashMap::new(),
-            stats: EngineStats::default(),
+            executables: Mutex::new(HashMap::new()),
+            stats: StatsCell::default(),
         })
     }
 
@@ -42,11 +59,17 @@ impl Engine {
         Engine::new(&dir)
     }
 
+    /// Snapshot of the execution statistics.
+    pub fn stats(&self) -> EngineStats {
+        self.stats.snapshot()
+    }
+
     /// Pre-compile every artifact (otherwise compilation is lazy).
-    pub fn warmup(&mut self) -> Result<()> {
+    pub fn warmup(&self) -> Result<()> {
+        let mut cache = self.executables.lock().expect("pjrt cache poisoned");
         let keys: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
         for key in keys {
-            self.executable(&key)?;
+            self.ensure_compiled(&mut cache, &key)?;
         }
         Ok(())
     }
@@ -57,8 +80,12 @@ impl Engine {
         Ok(ModelState::from_theta(task, theta))
     }
 
-    fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(key) {
+    fn ensure_compiled<'a>(
+        &self,
+        cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+        key: &str,
+    ) -> Result<&'a xla::PjRtLoadedExecutable> {
+        if !cache.contains_key(key) {
             let spec = self
                 .manifest
                 .artifacts
@@ -75,20 +102,21 @@ impl Engine {
                 .client
                 .compile(&comp)
                 .with_context(|| format!("compiling {key}"))?;
-            self.stats.compile_count += 1;
+            StatsCell::add(&self.stats.compile_count, 1);
             crate::util::logger::log(
                 crate::util::logger::Level::Debug,
                 module_path!(),
                 &format!("compiled artifact {key}"),
             );
-            self.executables.insert(key.to_string(), exe);
+            cache.insert(key.to_string(), exe);
         }
-        Ok(&self.executables[key])
+        Ok(&cache[key])
     }
 
-    fn run(&mut self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    fn run(&self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let t0 = std::time::Instant::now();
-        let exe = self.executable(key)?;
+        let mut cache = self.executables.lock().expect("pjrt cache poisoned");
+        let exe = self.ensure_compiled(&mut cache, key)?;
         let result = exe
             .execute::<xla::Literal>(inputs)
             .with_context(|| format!("executing {key}"))?;
@@ -96,19 +124,19 @@ impl Engine {
             .to_literal_sync()
             .with_context(|| format!("fetching {key} result"))?;
         let outs = tuple.to_tuple().context("decomposing result tuple")?;
-        let dt = t0.elapsed().as_nanos();
-        self.stats.exec_nanos += dt;
+        let dt = t0.elapsed().as_nanos() as u64;
+        StatsCell::add(&self.stats.exec_nanos, dt);
         if key.contains("train") {
-            self.stats.train_nanos += dt;
+            StatsCell::add(&self.stats.train_nanos, dt);
         } else {
-            self.stats.infer_nanos += dt;
+            StatsCell::add(&self.stats.infer_nanos, dt);
         }
         Ok(outs)
     }
 
     /// One SGD+momentum step; mutates `state` and returns the batch loss.
     pub fn train_step(
-        &mut self,
+        &self,
         state: &mut ModelState,
         batch: &TrainBatch,
         lr: f32,
@@ -158,13 +186,13 @@ impl Engine {
         state.theta = outs[0].to_vec::<f32>()?;
         state.mom = outs[1].to_vec::<f32>()?;
         state.steps += 1;
-        self.stats.train_steps += 1;
+        StatsCell::add(&self.stats.train_steps, 1);
         let loss = outs[2].to_vec::<f32>()?[0];
         Ok(loss)
     }
 
     /// Batched detection inference. `pixels` is `[B,r,r,3]`, B = infer_batch.
-    pub fn infer_det(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
+    pub fn infer_det(&self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
         let m = &self.manifest;
         let (b, g, k) = (m.infer_batch, m.grid, m.classes);
         let spec = m.artifact(Task::Det, "infer", res)?;
@@ -174,7 +202,7 @@ impl Engine {
         let key = spec.name.clone();
         let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
         let outs = self.run(&key, &inputs)?;
-        self.stats.infer_calls += 1;
+        StatsCell::add(&self.stats.infer_calls, 1);
         Ok(DetPred {
             batch: b,
             grid: g,
@@ -185,7 +213,7 @@ impl Engine {
     }
 
     /// Batched segmentation inference.
-    pub fn infer_seg(&mut self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
+    pub fn infer_seg(&self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
         let m = &self.manifest;
         let (b, k) = (m.infer_batch, m.classes);
         let spec = m.artifact(Task::Seg, "infer", res)?;
@@ -195,7 +223,7 @@ impl Engine {
         let key = spec.name.clone();
         let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
         let outs = self.run(&key, &inputs)?;
-        self.stats.infer_calls += 1;
+        StatsCell::add(&self.stats.infer_calls, 1);
         Ok(SegPred {
             batch: b,
             side: res / 4,
@@ -205,7 +233,7 @@ impl Engine {
     }
 
     /// Drift/grouping descriptors for a `[B,32,32,3]` batch -> `[B,96]`.
-    pub fn features(&mut self, pixels: &[f32]) -> Result<Vec<f32>> {
+    pub fn features(&self, pixels: &[f32]) -> Result<Vec<f32>> {
         let m = &self.manifest;
         let (b, r) = (m.infer_batch, m.feature_res);
         if pixels.len() != b * r * r * 3 {
@@ -213,7 +241,7 @@ impl Engine {
         }
         let inputs = [vec1(pixels, &[b, r, r, 3])?];
         let outs = self.run("features_r32", &inputs)?;
-        self.stats.feature_calls += 1;
+        StatsCell::add(&self.stats.feature_calls, 1);
         Ok(outs[0].to_vec::<f32>()?)
     }
 }

@@ -131,6 +131,11 @@ pub struct SystemConfig {
     /// Periodic regrouping at window boundaries (Alg. 2 UpdateGrouping).
     pub auto_regroup: bool,
     pub seed: u64,
+    /// Worker threads for the evaluation fan-outs (candidate evals, job
+    /// evals, the per-camera window pass, the regroup matrix). Results are
+    /// reduced in index order, so any value >= 1 produces byte-identical
+    /// runs; this knob only trades wall-clock for cores.
+    pub eval_threads: usize,
 }
 
 impl SystemConfig {
@@ -154,6 +159,7 @@ impl SystemConfig {
             auto_request: true,
             auto_regroup: true,
             seed: 7,
+            eval_threads: crate::util::pool::default_threads(),
         }
     }
 

@@ -105,7 +105,7 @@ impl Job {
     /// buffer has no usable data.
     pub fn train(
         &mut self,
-        engine: &mut Engine,
+        engine: &Engine,
         steps: usize,
         lr: f32,
         rng: &mut Pcg32,
@@ -120,7 +120,7 @@ impl Job {
         if usable.is_empty() {
             return Ok(None);
         }
-        let m = engine.manifest.clone();
+        let m = &engine.manifest;
         let task = self.model.task;
         let mut loss_sum = 0.0f32;
         let mut n = 0usize;
@@ -150,8 +150,12 @@ impl Job {
 
 /// Evaluate a model (by flat theta) on labelled eval frames: returns mAP.
 /// Frames beyond the engine's infer batch are evaluated in chunks.
+///
+/// Takes `&Engine` (inference never mutates engine state), so callers can
+/// fan independent evals out across [`crate::util::pool`] workers sharing
+/// one engine.
 pub fn eval_model(
-    engine: &mut Engine,
+    engine: &Engine,
     task: Task,
     theta: &[f32],
     frames: &[Frame],
@@ -159,7 +163,7 @@ pub fn eval_model(
     if frames.is_empty() {
         return Ok(0.0);
     }
-    let m = engine.manifest.clone();
+    let m = &engine.manifest;
     let res = frames[0].res;
     let mut maps = Vec::new();
     for chunk in frames.chunks(m.infer_batch) {

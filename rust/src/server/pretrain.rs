@@ -2,7 +2,7 @@
 //! ships with (§2.1). Results are cached on disk keyed by the recipe so
 //! repeated experiment runs skip the work.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
@@ -14,14 +14,14 @@ use crate::util::rng::Pcg32;
 /// Pretrain a student on a scene distribution for `steps` SGD steps at
 /// resolution 32; deterministic in `seed`.
 pub fn pretrain_on(
-    engine: &mut Engine,
+    engine: &Engine,
     task: Task,
     state0: &SceneState,
     steps: usize,
     lr: f32,
     seed: u64,
 ) -> Result<ModelState> {
-    let m = engine.manifest.clone();
+    let m = &engine.manifest;
     let mut model = engine.init_model(task)?;
     let mut teacher = Teacher::new(TeacherConfig::oracle(), seed);
     let mut rng = Pcg32::new(seed, 55);
@@ -42,41 +42,66 @@ pub fn pretrain_on(
     Ok(model)
 }
 
-fn cache_path(engine: &Engine, task: Task, steps: usize, seed: u64) -> PathBuf {
-    engine
-        .manifest
-        .dir
-        .join(format!("cache_pretrain_{}_{steps}_{seed}.bin", task.name()))
+fn cache_path(engine: &Engine, task: Task, steps: usize, lr: f32, seed: u64) -> PathBuf {
+    // The key carries every input the checkpoint depends on — lr included
+    // (as raw bits: lossless and filename-safe), so an lr ablation never
+    // reuses a checkpoint pretrained at a different rate.
+    engine.manifest.dir.join(format!(
+        "cache_pretrain_{}_{steps}_{seed}_lr{:08x}.bin",
+        task.name(),
+        lr.to_bits()
+    ))
+}
+
+/// Read a cached pretrain checkpoint if it exists and has the right size.
+fn read_cached(path: &Path, task: Task, count: usize) -> Option<ModelState> {
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() != count * 4 {
+        return None;
+    }
+    let theta: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Some(ModelState::from_theta(task, theta))
 }
 
 /// Pretrain on the default-day distribution with a disk cache.
 pub fn pretrained_default(
-    engine: &mut Engine,
+    engine: &Engine,
     task: Task,
     steps: usize,
     lr: f32,
     seed: u64,
 ) -> Result<ModelState> {
-    let path = cache_path(engine, task, steps, seed);
+    let path = cache_path(engine, task, steps, lr, seed);
     let count = engine.manifest.task(task).param_count;
-    if let Ok(bytes) = std::fs::read(&path) {
-        if bytes.len() == count * 4 {
-            let theta: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            return Ok(ModelState::from_theta(task, theta));
-        }
+    if let Some(model) = read_cached(&path, task, count) {
+        return Ok(model);
+    }
+    // Cache miss: serialize the (expensive) pretrain across in-process
+    // threads so concurrent fleet arms sharing a recipe don't all redo it —
+    // whoever wins the lock computes and writes; the rest re-read the
+    // cache. Distinct recipes serialize too, but a pretrain costs the same
+    // either way and mixed-recipe fleets are rare.
+    static PRETRAIN_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = PRETRAIN_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(model) = read_cached(&path, task, count) {
+        return Ok(model);
     }
     let model = pretrain_on(engine, task, &SceneState::default_day(), steps, lr, seed)?;
     let bytes: Vec<u8> = model.theta.iter().flat_map(|v| v.to_le_bytes()).collect();
     // Cache failure is non-fatal; the directory may not exist yet when the
     // native backend runs without generated artifacts. Write-then-rename so
-    // concurrent readers (parallel tests) never observe a torn file.
+    // concurrent readers (parallel tests) never observe a torn file. The
+    // tmp name carries a process-wide counter as well as the pid: fleet
+    // runs pretrain concurrently on threads within one process.
     if let Some(parent) = path.parent() {
         let _ = std::fs::create_dir_all(parent);
     }
-    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp{}_{seq}", std::process::id()));
     if std::fs::write(&tmp, bytes).is_ok() {
         let _ = std::fs::rename(&tmp, &path);
     }

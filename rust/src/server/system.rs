@@ -18,7 +18,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::alloc::{Allocator, JobView};
 use crate::api::event::{Event, EventBus};
@@ -29,6 +29,7 @@ use crate::runtime::{batch, Engine, ModelState};
 use crate::scene::{Frame, World};
 use crate::teacher::Teacher;
 use crate::transmission::{baseline_plan, ams_plan, Controller, GpuAllocationInfo, TransmissionPlan};
+use crate::util::pool;
 use crate::util::rng::Pcg32;
 use crate::util::stats::l2;
 use crate::video::{degrade, transport_window};
@@ -69,10 +70,16 @@ pub(crate) struct CamAgent {
 /// A full system run. Drivers never touch this directly: the only public
 /// construction path is [`crate::api::Session`], and observation happens
 /// through the typed event stream it wires up.
+///
+/// The engine borrow is **shared**: the engine's state is immutable
+/// (manifest) plus atomic (stats), so independent evaluations fan out
+/// across the [`pool`] workers and several systems can run concurrently
+/// over one engine (the fleet driver). All mutable training state lives in
+/// each job's [`ModelState`].
 pub(crate) struct System<'e> {
     pub(crate) cfg: SystemConfig,
     pub(crate) world: World,
-    pub(crate) engine: &'e mut Engine,
+    pub(crate) engine: &'e Engine,
     pub(crate) net: NetSim,
     pub(crate) teacher: Teacher,
     pub(crate) jobs: Vec<Job>,
@@ -101,9 +108,15 @@ impl<'e> System<'e> {
         world: World,
         local_caps: &[f64],
         shared_mbps: f64,
-        engine: &'e mut Engine,
+        engine: &'e Engine,
     ) -> Result<System<'e>> {
-        assert_eq!(local_caps.len(), world.cameras.len());
+        if local_caps.len() != world.cameras.len() {
+            bail!(
+                "{} uplink capacities for {} cameras (counts must match)",
+                local_caps.len(),
+                world.cameras.len()
+            );
+        }
         let pretrained = pretrained_default(
             engine,
             cfg.task,
@@ -254,19 +267,26 @@ impl<'e> System<'e> {
             // Evaluate candidate jobs' models on the request subsamples.
             // With the metadata filter on, only correlated jobs pay the
             // eval (the whole point of §3.3's pre-filtering); the ablation
-            // switch makes EVERY job a candidate and pays for it.
-            let mut evals: BTreeMap<usize, f32> = BTreeMap::new();
+            // switch makes EVERY job a candidate and pays for it. The
+            // candidate evals are independent, so they fan out across the
+            // worker pool; index-ordered reduction keeps the decision (and
+            // the event stream) identical at any pool size.
+            let mut candidates: Vec<(usize, &[f32])> = Vec::new();
             for job in &self.group_meta {
                 let candidate = !self.cfg.grouping.metadata_filter
                     || grouping::metadata_correlated(&self.cfg.grouping, job, &meta);
                 if candidate {
                     if let Some(idx) = self.job_index(job.id) {
-                        let theta = self.jobs[idx].model.theta.clone();
-                        let acc = eval_model(self.engine, self.cfg.task, &theta, &frames)?;
-                        evals.insert(job.id, acc);
+                        candidates.push((job.id, &self.jobs[idx].model.theta));
                     }
                 }
             }
+            let engine = self.engine;
+            let task = self.cfg.task;
+            let scored = pool::try_map(self.cfg.eval_threads, &candidates, |_, &(id, theta)| {
+                eval_model(engine, task, theta, &frames).map(|acc| (id, acc))
+            })?;
+            let evals: BTreeMap<usize, f32> = scored.into_iter().collect();
             grouping::group_request(
                 &mut self.group_meta,
                 &mut self.next_job_id,
@@ -329,6 +349,10 @@ impl<'e> System<'e> {
         }
         // The model will be retrained for the *current* distribution.
         self.cams[cam].ref_embed = Some(emb);
+        debug_assert!(
+            grouping::is_partition(&self.group_meta),
+            "request placement broke the one-job-per-camera partition"
+        );
         Ok(())
     }
 
@@ -386,7 +410,15 @@ impl<'e> System<'e> {
     }
 
     /// Ingest the frames each camera's delivered bandwidth paid for.
+    ///
+    /// Capture instants are **spread across the micro-window** at the
+    /// plan's effective frame spacing: the world's drift processes advance
+    /// once per micro-window, but mobile cameras keep moving between
+    /// frames and frame content is seeded by the capture instant — so a
+    /// higher-fps plan buys genuinely distinct observations instead of
+    /// noise-duplicated copies of the micro-window's final timestamp.
     fn collect_data(&mut self, mw_secs: f64) -> Result<()> {
+        let t_end = self.now();
         for cam in 0..self.cams.len() {
             let Some(job_id) = self.cams[cam].job else {
                 continue;
@@ -403,7 +435,8 @@ impl<'e> System<'e> {
             }
             let job_idx = self.job_index(job_id).unwrap();
             for i in 0..n {
-                let mut frame = self.world.capture(cam, plan.config.res);
+                let t = t_end - mw_secs + ((i + 1) as f64 / n as f64) * mw_secs;
+                let mut frame = self.world.capture_at(cam, plan.config.res, t);
                 let seed = self
                     .rng
                     .next_u64()
@@ -424,30 +457,44 @@ impl<'e> System<'e> {
     // GPU micro-window scheduling (Alg. 1)
     // ------------------------------------------------------------------
 
-    fn eval_job(&mut self, job_idx: usize) -> Result<f32> {
-        let members = self.jobs[job_idx].members.clone();
-        let theta = self.jobs[job_idx].model.theta.clone();
-        let mut total = 0.0f32;
-        for &cam in &members {
-            let salt = (self.window_idx as u64) * 104_729 + cam as u64 * 7 + 3;
-            let frames = self
-                .world
-                .eval_frames(cam, EVAL_RES, self.cfg.eval_frames, salt);
-            total += eval_model(self.engine, self.cfg.task, &theta, &frames)?;
-        }
-        Ok(total / members.len().max(1) as f32)
+    /// Mean accuracy of a job's model over its members' live streams. The
+    /// per-member evals are independent (held-out frames are derived from
+    /// (window, cam) salts, not the run RNG) and fan out across the worker
+    /// pool; the sum reduces in member order, so the result is bit-equal
+    /// to the serial loop at any pool size.
+    fn eval_job(&self, job_idx: usize) -> Result<f32> {
+        let job = &self.jobs[job_idx];
+        let theta = &job.model.theta;
+        let engine = self.engine;
+        let task = self.cfg.task;
+        let world = &self.world;
+        let eval_frames = self.cfg.eval_frames;
+        let window = self.window_idx as u64;
+        let accs = pool::try_map(self.cfg.eval_threads, &job.members, |_, &cam| {
+            let salt = window * 104_729 + cam as u64 * 7 + 3;
+            let frames = world.eval_frames(cam, EVAL_RES, eval_frames, salt);
+            eval_model(engine, task, theta, &frames)
+        })?;
+        Ok(accs.iter().sum::<f32>() / job.members.len().max(1) as f32)
     }
 
     fn job_views(&self) -> Vec<JobView> {
         self.jobs
             .iter()
-            .map(|j| JobView {
-                id: j.id,
-                n_cams: j.n_cams(),
-                acc: j.acc,
-                acc_gain: j.acc_gain,
-                micro_windows: j.micro_windows,
-                lifetime_mw: j.lifetime_mw,
+            .map(|j| {
+                debug_assert!(
+                    !j.acc_gain.is_nan() && !j.acc.is_nan(),
+                    "job {} feeds NaN into the allocator",
+                    j.id
+                );
+                JobView {
+                    id: j.id,
+                    n_cams: j.n_cams(),
+                    acc: j.acc,
+                    acc_gain: j.acc_gain,
+                    micro_windows: j.micro_windows,
+                    lifetime_mw: j.lifetime_mw,
+                }
             })
             .collect()
     }
@@ -469,12 +516,17 @@ impl<'e> System<'e> {
 
         let acc_i = self.eval_job(job_idx)?;
         let res = self.jobs[job_idx].train_res().unwrap_or(EVAL_RES);
-        let m = self.engine.manifest.clone();
-        let steps = self.cfg.steps_for(res, m.train_batch, mw_secs);
+        let steps = self
+            .cfg
+            .steps_for(res, self.engine.manifest.train_batch, mw_secs);
         let lr = self.cfg.lr;
         let mut rng = self.rng.fork(pick_id as u64);
         self.jobs[job_idx].train(self.engine, steps, lr, &mut rng)?;
         let acc_f = self.eval_job(job_idx)?;
+        debug_assert!(
+            !acc_i.is_nan() && !acc_f.is_nan(),
+            "job {pick_id} produced a NaN accuracy"
+        );
         let job = &mut self.jobs[job_idx];
         job.acc = acc_f;
         job.acc_gain = acc_f - acc_i;
@@ -503,14 +555,22 @@ impl<'e> System<'e> {
                 cams: members,
             });
         }
-        // Per-camera accuracy measurement (live model on live stream).
-        for cam in 0..self.cams.len() {
-            let salt = (self.window_idx as u64) * 31_337 + cam as u64;
-            let frames = self
-                .world
-                .eval_frames(cam, EVAL_RES, self.cfg.eval_frames, salt);
-            let theta = self.cams[cam].theta.clone();
-            let acc = eval_model(self.engine, self.cfg.task, &theta, &frames)?;
+        // Per-camera accuracy measurement (live model on live stream),
+        // fanned out across the worker pool — one eval per camera, reduced
+        // in camera order so downstream bookkeeping is order-identical.
+        let accs = {
+            let engine = self.engine;
+            let task = self.cfg.task;
+            let world = &self.world;
+            let eval_frames = self.cfg.eval_frames;
+            let window = self.window_idx as u64;
+            pool::try_map(self.cfg.eval_threads, &self.cams, |cam, agent| {
+                let salt = window * 31_337 + cam as u64;
+                let frames = world.eval_frames(cam, EVAL_RES, eval_frames, salt);
+                eval_model(engine, task, &agent.theta, &frames)
+            })?
+        };
+        for (cam, acc) in accs.into_iter().enumerate() {
             self.cams[cam].last_acc = acc;
             self.history.push(cam, now, acc);
             self.tracker.observe(cam, now, acc);
@@ -584,19 +644,31 @@ impl<'e> System<'e> {
     }
 
     fn regroup(&mut self) -> Result<()> {
-        // Evaluate every (job, member) pair on fresh member data.
-        let mut evals: BTreeMap<(usize, usize), f32> = BTreeMap::new();
-        for j in 0..self.jobs.len() {
-            let theta = self.jobs[j].model.theta.clone();
-            for &cam in &self.jobs[j].members.clone() {
-                let salt = (self.window_idx as u64) * 523 + cam as u64 * 11;
-                let frames = self
-                    .world
-                    .eval_frames(cam, EVAL_RES, self.cfg.eval_frames, salt);
-                let acc = eval_model(self.engine, self.cfg.task, &theta, &frames)?;
-                evals.insert((self.jobs[j].id, cam), acc);
+        // Evaluate every (job, member) pair on fresh member data — the
+        // largest eval fan-out in the loop (|jobs| x |members| calls), run
+        // on the worker pool. Pair order (job-major, member order) matches
+        // the old serial nesting, and the BTreeMap reduction is keyed, so
+        // the grouping decision is identical at any pool size.
+        let evals: BTreeMap<(usize, usize), f32> = {
+            let mut pairs: Vec<(usize, usize, &[f32])> = Vec::new();
+            for job in &self.jobs {
+                for &cam in &job.members {
+                    pairs.push((job.id, cam, &job.model.theta));
+                }
             }
-        }
+            let engine = self.engine;
+            let task = self.cfg.task;
+            let world = &self.world;
+            let eval_frames = self.cfg.eval_frames;
+            let window = self.window_idx as u64;
+            let scored =
+                pool::try_map(self.cfg.eval_threads, &pairs, |_, &(job_id, cam, theta)| {
+                    let salt = window * 523 + cam as u64 * 11;
+                    let frames = world.eval_frames(cam, EVAL_RES, eval_frames, salt);
+                    eval_model(engine, task, theta, &frames).map(|acc| ((job_id, cam), acc))
+                })?;
+            scored.into_iter().collect()
+        };
         let now = self.now();
         let world = &self.world;
         let evicted = grouping::update_grouping(
@@ -638,6 +710,10 @@ impl<'e> System<'e> {
         }
         // Drop empty jobs.
         self.jobs.retain(|j| !j.members.is_empty());
+        debug_assert!(
+            grouping::is_partition(&self.group_meta),
+            "regroup broke the one-job-per-camera partition"
+        );
         Ok(())
     }
 
@@ -680,7 +756,7 @@ impl<'e> System<'e> {
         for cam in 0..self.cams.len() {
             let state0 = self.world.camera_state(cam);
             let mut model = ModelState::from_theta(self.cfg.task, self.pretrained.clone());
-            let m = self.engine.manifest.clone();
+            let m = &self.engine.manifest;
             let mut rng = Pcg32::new(self.cfg.seed ^ 0x200, cam as u64);
             let pool: Vec<Frame> = (0..32)
                 .map(|i| crate::scene::render(&state0, EVAL_RES, 0x900d + cam as u64 * 97 + i))
@@ -731,11 +807,36 @@ impl<'e> System<'e> {
 
     /// Create a job with a fixed membership (Fig. 8's manual groups),
     /// bypassing Alg. 2. The job starts from the first member's model.
+    ///
+    /// A camera that already belongs to a job is detached from it first
+    /// (membership, grouping metadata, and buffered samples), preserving
+    /// the one-job-per-camera partition invariant; jobs emptied by the
+    /// detach are dropped.
     pub(crate) fn force_group(&mut self, cams: &[usize]) -> Result<usize> {
         assert!(!cams.is_empty());
+        let now = self.now();
+        for &cam in cams {
+            if let Some(old_id) = self.cams[cam].job.take() {
+                if let Some(idx) = self.job_index(old_id) {
+                    self.jobs[idx].remove_member(cam);
+                }
+                for meta in &mut self.group_meta {
+                    if meta.id == old_id {
+                        meta.members.retain(|m| m.cam != cam);
+                    }
+                }
+                self.events.emit(Event::GroupSplit {
+                    time: now,
+                    window: self.window_idx,
+                    job: old_id,
+                    cam,
+                });
+            }
+        }
+        self.jobs.retain(|j| !j.members.is_empty());
+        self.group_meta.retain(|g| !g.members.is_empty());
         let id = self.next_job_id;
         self.next_job_id += 1;
-        let now = self.now();
         let model = ModelState::from_theta(self.cfg.task, self.cams[cams[0]].theta.clone());
         let mut job = Job::new(id, cams[0], model, self.cfg.buffer_cap, now);
         let mut meta_job: Option<GroupJob> = None;
@@ -786,6 +887,10 @@ impl<'e> System<'e> {
             self.cams[cam].ref_embed = Some(emb);
         }
         self.group_meta.push(meta_job.unwrap());
+        debug_assert!(
+            grouping::is_partition(&self.group_meta),
+            "force_group broke the one-job-per-camera partition"
+        );
         Ok(id)
     }
 }

@@ -1,14 +1,15 @@
 //! Foundation substrates: RNG, JSON, CLI parsing, logging, statistics,
-//! property testing, and a microbenchmark harness.
+//! property testing, a microbenchmark harness, and a scoped worker pool.
 //!
 //! These replace `rand` / `serde` / `clap` / `log` / `proptest` /
-//! `criterion`, none of which are available in the offline build
-//! environment; each is implemented from scratch and unit-tested.
+//! `criterion` / `rayon`, none of which are available in the offline
+//! build environment; each is implemented from scratch and unit-tested.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logger;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

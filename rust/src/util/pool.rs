@@ -1,0 +1,213 @@
+//! Scoped worker pool with **index-ordered reduction** (std-only).
+//!
+//! The coordinator's hot loops fan out dozens-to-hundreds of independent
+//! `eval_model` calls per window (candidate evals in request placement,
+//! per-member job evals, the per-camera window pass, the full regroup
+//! matrix) and the experiment drivers fan out whole runs. This module is
+//! the one concurrency primitive they all share:
+//!
+//! * built on [`std::thread::scope`] so workers may borrow the caller's
+//!   stack (no `'static` bounds, no channels, no extra dependencies);
+//! * work is handed out by an atomic cursor (cheap dynamic balancing);
+//! * results are written back **by item index**, so the reduced `Vec` is
+//!   identical to the serial `items.iter().map(f).collect()` — byte for
+//!   byte — at any thread count. Determinism tests rely on this.
+//!
+//! `threads <= 1` (or a single item) short-circuits to a plain serial map
+//! on the caller thread, so a pool size of 1 has zero overhead and zero
+//! behavioural difference.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count: the `ECCO_THREADS` environment variable when set
+/// (CI pins this to 1), otherwise the machine's available parallelism,
+/// capped at 8 (eval items are coarse; more workers only add contention).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ECCO_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Eval workers each of `runs` concurrent runs should use when a fleet
+/// driver runs them on `fleet_threads` workers: the machine's budget
+/// divided by the actual fleet concurrency, floored at 1. One definition
+/// so `api::run_fleet` and the scripted exp fan-outs can't drift apart.
+pub fn per_run_threads(fleet_threads: usize, runs: usize) -> usize {
+    let fleet_workers = fleet_threads.max(1).min(runs.max(1));
+    (default_threads() / fleet_workers).max(1)
+}
+
+/// Map `f` over `items` on up to `threads` workers; the result vector is
+/// index-ordered (`out[i] == f(i, &items[i])`) regardless of thread count.
+///
+/// Panics in `f` propagate to the caller when the scope joins.
+pub fn map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut init: Vec<Option<R>> = Vec::with_capacity(n);
+    init.resize_with(n, || None);
+    let slots = Mutex::new(init);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                slots.lock().expect("pool slots poisoned")[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .expect("pool slots poisoned")
+        .into_iter()
+        .map(|r| r.expect("every slot filled by a worker"))
+        .collect()
+}
+
+/// Fallible [`map`]: runs every item, then surfaces the **lowest-index**
+/// error (deterministic regardless of which worker failed first).
+pub fn try_map<T, R, E, F>(threads: usize, items: &[T], f: F) -> Result<Vec<R>, E>
+where
+    T: Sync,
+    R: Send,
+    E: Send,
+    F: Fn(usize, &T) -> Result<R, E> + Sync,
+{
+    map(threads, items, f).into_iter().collect()
+}
+
+/// [`map`] over owned items (each consumed exactly once by one worker);
+/// used by the fleet driver, where each item is a whole run spec.
+pub fn map_owned<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let handoff: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let cursor = AtomicUsize::new(0);
+    let mut init: Vec<Option<R>> = Vec::with_capacity(n);
+    init.resize_with(n, || None);
+    let slots = Mutex::new(init);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = handoff[i]
+                    .lock()
+                    .expect("pool handoff poisoned")
+                    .take()
+                    .expect("item taken twice");
+                let r = f(i, item);
+                slots.lock().expect("pool slots poisoned")[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .expect("pool slots poisoned")
+        .into_iter()
+        .map(|r| r.expect("every slot filled by a worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn map_is_index_ordered_at_any_thread_count() {
+        let items: Vec<usize> = (0..37).collect();
+        let serial = map(1, &items, |i, &x| i * 1000 + x * x);
+        for threads in [2, 3, 4, 16] {
+            let par = map(threads, &items, |i, &x| i * 1000 + x * x);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn per_run_threads_divides_the_budget() {
+        let budget = default_threads();
+        assert_eq!(per_run_threads(1, 10), budget, "sequential fleet keeps full budget");
+        assert_eq!(
+            per_run_threads(100, 2),
+            (budget / 2).max(1),
+            "fleet workers clamp to the run count before dividing"
+        );
+        assert_eq!(per_run_threads(0, 0), budget, "degenerate inputs stay sane");
+        assert!(per_run_threads(budget, 1000) >= 1);
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(map(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(map(4, &[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn try_map_surfaces_lowest_index_error() {
+        let items: Vec<usize> = (0..20).collect();
+        let r = try_map(4, &items, |i, &x| {
+            if x % 7 == 3 {
+                Err(format!("bad {i}"))
+            } else {
+                Ok(x)
+            }
+        });
+        // Items 3, 10, 17 all fail; the reported error must be item 3's.
+        assert_eq!(r.unwrap_err(), "bad 3");
+    }
+
+    #[test]
+    fn map_owned_consumes_each_item_once() {
+        let items: Vec<String> = (0..11).map(|i| format!("s{i}")).collect();
+        let out = map_owned(4, items, |i, s| format!("{i}:{s}"));
+        let want: Vec<String> = (0..11).map(|i| format!("{i}:s{i}")).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn prop_pool_matches_serial_map() {
+        prop::check("pool-matches-serial", 30, |g| {
+            let n = g.usize(0, 64);
+            let threads = g.usize(1, 9);
+            let items: Vec<u64> = (0..n).map(|_| g.rng.next_u64() % 1_000_000).collect();
+            let f = |i: usize, &x: &u64| x.wrapping_mul(31).wrapping_add(i as u64);
+            let serial: Vec<u64> = items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+            let par = map(threads, &items, f);
+            if par != serial {
+                return Err(format!("mismatch at n={n} threads={threads}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,7 +1,7 @@
 //! Tests for the `ecco::api` façade itself: RunSpec validation at the
 //! session boundary, determinism of the event stream, and the JSONL sink.
 
-use ecco::api::{JsonlSink, RunReport, RunSpec, Session, SpecError};
+use ecco::api::{run_fleet, JsonlSink, RunReport, RunSpec, Session, SpecError};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
 use ecco::server::Policy;
@@ -92,6 +92,78 @@ fn identical_spec_and_seed_reproduce_byte_identical_runs() {
     assert_eq!(a.jobs, b.jobs);
     assert_eq!(a.alloc_log, b.alloc_log);
     assert_eq!(a.membership, b.membership);
+}
+
+#[test]
+fn event_log_byte_identical_at_any_pool_size() {
+    // The determinism contract of the eval fan-out: worker pools of 1 and
+    // 4 threads must produce byte-identical event logs (index-ordered
+    // reduction; no RNG is consumed on pool workers).
+    let engine = Engine::open_default().unwrap();
+    let run_with = |threads: usize| -> (RunReport, String) {
+        let mut session =
+            Session::new(&engine, small_spec(41).eval_threads(threads)).unwrap();
+        let report = session.run().unwrap();
+        let jsonl: String = report
+            .events
+            .iter()
+            .map(|e| e.to_json().to_string_compact())
+            .collect::<Vec<_>>()
+            .join("\n");
+        (report, jsonl)
+    };
+    let (a, a_log) = run_with(1);
+    let (b, b_log) = run_with(4);
+    assert!(!a.events.is_empty());
+    assert_eq!(a_log, b_log, "pool size must not change the event stream");
+    assert_eq!(a.window_acc, b.window_acc);
+    assert_eq!(a.cam_acc, b.cam_acc);
+    assert_eq!(a.alloc_log, b.alloc_log);
+    assert_eq!(a.membership, b.membership);
+}
+
+#[test]
+fn fleet_reports_match_sequential_runs_in_spec_order() {
+    let engine = Engine::open_default().unwrap();
+    let seeds = [31u64, 32];
+    let specs: Vec<RunSpec> = seeds.iter().map(|&s| small_spec(s)).collect();
+    let fleet = run_fleet(&engine, specs, 4).unwrap();
+    assert_eq!(fleet.len(), seeds.len());
+    for (i, &seed) in seeds.iter().enumerate() {
+        let seq = Session::new(&engine, small_spec(seed)).unwrap().run().unwrap();
+        assert_eq!(fleet[i].events, seq.events, "seed {seed} diverged");
+        assert_eq!(fleet[i].window_acc, seq.window_acc);
+        assert_eq!(fleet[i].final_acc, seq.final_acc);
+        assert_eq!(fleet[i].response_s, seq.response_s);
+    }
+}
+
+#[test]
+fn session_surfaces_uplink_scenario_mismatch_as_error() {
+    // The old System::new asserted on this; it must be a typed validation
+    // error at the façade, not a panic.
+    let mut engine = Engine::open_default().unwrap();
+    let sc = scenario::grouped_static(&[3], 0.05, 20.0, 9);
+    let spec = RunSpec::new(Task::Det, Policy::ecco())
+        .scenario(sc)
+        .uplinks(vec![10.0; 5]);
+    assert_eq!(
+        spec.validate(),
+        Err(SpecError::UplinkCountMismatch {
+            cams: 3,
+            uplinks: 5
+        })
+    );
+    let sc = scenario::grouped_static(&[3], 0.05, 20.0, 9);
+    let err = Session::new(
+        &mut engine,
+        RunSpec::new(Task::Det, Policy::ecco())
+            .scenario(sc)
+            .uplinks(vec![10.0; 5]),
+    )
+    .err()
+    .expect("mismatched uplinks must not build a session");
+    assert!(err.to_string().contains("uplink"), "{err}");
 }
 
 #[test]

@@ -3,8 +3,10 @@
 //! on. Each property prints a replayable seed on failure.
 
 use ecco::net::{gaimd_weight, NetSim};
-use ecco::scene::{render, SceneState};
-use ecco::util::prop;
+use ecco::runtime::{Engine, Task};
+use ecco::scene::{render, Frame, SceneState};
+use ecco::server::eval_model;
+use ecco::util::{pool, prop};
 use ecco::video::{transport_window, SamplingConfig, BPP_FLOOR, BPP_LOSSLESS};
 
 #[test]
@@ -125,6 +127,52 @@ fn prop_render_deterministic_and_bounded() {
             if o.class >= 4 || !(0.0..=1.0).contains(&o.cx) {
                 return Err("invalid object".into());
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_eval_matrix_equals_serial() {
+    // The regroup fan-out's correctness contract: evaluating the full
+    // (job x member) matrix on the worker pool yields exactly the serial
+    // matrix, bit for bit, at any thread count. Inference is pure in
+    // (theta, frames), so this is equality, not approximation.
+    let engine = Engine::open_default().unwrap();
+    let base = engine.init_model(Task::Det).unwrap().theta;
+    prop::check("parallel-eval-matrix", 6, |g| {
+        let n_jobs = g.usize(1, 3);
+        let n_cams = g.usize(1, 4);
+        let threads = g.usize(2, 6);
+        let thetas: Vec<Vec<f32>> = (0..n_jobs)
+            .map(|j| {
+                let scale = 1.0 + j as f32 * g.f32(0.01, 0.2);
+                base.iter().map(|&v| v * scale).collect()
+            })
+            .collect();
+        let frame_sets: Vec<Vec<Frame>> = (0..n_cams)
+            .map(|cam| {
+                let salt = g.rng.next_u64();
+                (0..4u64)
+                    .map(|i| render(&SceneState::default_day(), 32, salt ^ (cam as u64 * 97 + i)))
+                    .collect()
+            })
+            .collect();
+        let pairs: Vec<(usize, usize)> = (0..n_jobs)
+            .flat_map(|j| (0..n_cams).map(move |c| (j, c)))
+            .collect();
+        let serial: Vec<f32> = pairs
+            .iter()
+            .map(|&(j, c)| eval_model(&engine, Task::Det, &thetas[j], &frame_sets[c]).unwrap())
+            .collect();
+        let par = pool::try_map(threads, &pairs, |_, &(j, c)| {
+            eval_model(&engine, Task::Det, &thetas[j], &frame_sets[c])
+        })
+        .map_err(|e| e.to_string())?;
+        if par != serial {
+            return Err(format!(
+                "parallel matrix diverged (jobs={n_jobs} cams={n_cams} threads={threads})"
+            ));
         }
         Ok(())
     });

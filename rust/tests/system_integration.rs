@@ -101,7 +101,7 @@ fn gpu_budget_controls_training_volume() {
     let mut engine = Engine::open_default().unwrap();
     let mut steps = Vec::new();
     for gpus in [1.0, 4.0] {
-        let before = engine.stats.train_steps;
+        let before = engine.stats().train_steps;
         let spec = small_spec(Task::Det, Policy::ecco())
             .scenario(scenario::grouped_static(&[2], 0.05, 10.0, 8))
             .gpus(gpus)
@@ -172,6 +172,50 @@ fn forced_groups_and_scripted_requests() {
         membership.iter().any(|(_, m)| m.len() >= 3),
         "the forced group must persist"
     );
+}
+
+#[test]
+fn force_group_reassignment_preserves_partition() {
+    // Regression: force_group used to add an already-grouped camera to the
+    // new job without removing it from its old one, breaking the
+    // one-job-per-camera invariant.
+    let mut engine = Engine::open_default().unwrap();
+    let spec = small_spec(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[4], 0.05, 10.0, 21))
+        .windows(2)
+        .configure(|cfg| {
+            cfg.auto_request = false;
+            cfg.auto_regroup = false;
+        });
+    let mut session = Session::new(&mut engine, spec).unwrap();
+    let first = session.force_group(&[0, 1]).unwrap();
+    // Camera 1 is pulled into a second forced group: it must leave the
+    // first job, and the partition must hold.
+    let second = session.force_group(&[1, 2]).unwrap();
+    assert!(session.is_partition());
+    let membership = session.membership();
+    let total: usize = membership.iter().map(|(_, m)| m.len()).sum();
+    assert_eq!(total, 3, "cameras 0,1,2 exactly once: {membership:?}");
+    let job_of = |cam: usize| {
+        membership
+            .iter()
+            .find(|(_, m)| m.contains(&cam))
+            .map(|(id, _)| *id)
+    };
+    assert_eq!(job_of(1), Some(second), "cam 1 must move to the new job");
+    assert_eq!(job_of(0), Some(first), "cam 0 stays in the old job");
+    // Re-grouping EVERY member of a job must drop the emptied job.
+    let third = session.force_group(&[0]).unwrap();
+    let membership = session.membership();
+    assert!(
+        membership.iter().all(|(id, _)| *id != first),
+        "emptied job {first} must be dropped: {membership:?}"
+    );
+    assert!(membership.iter().any(|(id, _)| *id == third));
+    assert!(session.is_partition());
+    // The system still runs fine afterwards.
+    session.step_window().unwrap();
+    assert!(session.is_partition());
 }
 
 #[test]
