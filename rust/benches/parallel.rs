@@ -1,34 +1,80 @@
-//! Parallelism benchmarks: the per-window eval fan-out and the fleet
-//! driver at 1 vs N worker threads. The printed pair per workload is the
-//! number a deployment cares about — how much wall-clock the worker pool
-//! buys on this machine's cores (determinism is unaffected either way; see
-//! the threading notes in `ecco`'s crate docs).
+//! Parallelism benchmarks: the batch-sharded native train step, the
+//! per-window eval fan-out, and the fleet driver at 1 vs N worker
+//! threads. The printed pair per workload is the number a deployment
+//! cares about — how much wall-clock the worker pool buys on this
+//! machine's cores (determinism is unaffected either way; see the
+//! threading notes in `ecco`'s crate docs).
 //!
 //! Run: `cargo bench --bench parallel`
 
 use ecco::api::{run_fleet, RunSpec};
-use ecco::runtime::{Engine, Task};
+use ecco::runtime::native::{self, Exec};
+use ecco::runtime::{Engine, Labels, Task, TrainBatch};
 use ecco::scene::scenario;
 use ecco::server::{eval_model, Policy};
 use ecco::util::bench::{black_box, BenchSuite};
-use ecco::util::pool;
+use ecco::util::pool::{self, Pool};
+use ecco::util::rng::Pcg32;
 
 fn main() {
     let engine = Engine::open_default().expect("engine should open");
     let mut b = BenchSuite::new("parallel");
     let n_threads = pool::default_threads().max(2);
 
+    // Batch-sharded native train step: one SGD step (res 48, batch 8) at
+    // 1 vs N kernel threads over explicit pools. The per-sample shards
+    // reduce in sample order, so both rows compute bit-identical steps —
+    // the ratio is pure wall-clock.
+    {
+        let r = 48usize;
+        let bsz = native::TRAIN_BATCH;
+        let theta0 = native::he_init(Task::Det, 77);
+        let mom0 = vec![0.0f32; theta0.len()];
+        let mut rng = Pcg32::new(77, 0xbe7);
+        let pixels: Vec<f32> = (0..bsz * r * r * 3).map(|_| rng.f32()).collect();
+        let obj: Vec<f32> = (0..bsz * native::GRID * native::GRID)
+            .map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 })
+            .collect();
+        let mut cls = vec![0.0f32; bsz * native::GRID * native::GRID * native::K];
+        for (i, chunk) in cls.chunks_mut(native::K).enumerate() {
+            chunk[i % native::K] = 1.0;
+        }
+        let batch = TrainBatch {
+            res: r,
+            pixels,
+            labels: Labels::Det { obj, cls },
+        };
+        for threads in [1usize, n_threads] {
+            let kernel_pool = Pool::new(threads.saturating_sub(1));
+            let exec = Exec {
+                pool: &kernel_pool,
+                threads,
+            };
+            b.bench(&format!("train_step_shard_res48_{threads}threads"), || {
+                let mut theta = theta0.clone();
+                let mut mom = mom0.clone();
+                native::train_step(Task::Det, &mut theta, &mut mom, &batch, bsz, 0.01, exec)
+            });
+        }
+    }
+
     // Eval fan-out: one model evaluated on 16 cameras' held-out batches —
-    // the shape of the end-of-window per-camera pass.
+    // the shape of the end-of-window per-camera pass. The engine under
+    // test gets a SERIAL kernel pool (ECCO_THREADS=1 at construction), so
+    // these rows isolate the outer per-camera fan-out; kernel sharding is
+    // measured by the train_step rows above.
+    std::env::set_var("ECCO_THREADS", "1");
+    let engine_serial = Engine::open_default().expect("engine should open");
+    std::env::remove_var("ECCO_THREADS");
     let sc = scenario::town(16, 7);
     let world = sc.world;
-    let model = engine.init_model(Task::Det).expect("init model");
+    let model = engine_serial.init_model(Task::Det).expect("init model");
     let cams: Vec<usize> = (0..16).collect();
     for threads in [1usize, n_threads] {
         b.bench(&format!("eval_fanout_16cams_{threads}threads"), || {
             pool::try_map(threads, &cams, |_, &cam| {
                 let frames = world.eval_frames(cam, 32, 16, 0xbe7 + cam as u64);
-                eval_model(&engine, Task::Det, &model.theta, &frames)
+                eval_model(&engine_serial, Task::Det, &model.theta, &frames)
             })
             .expect("eval fan-out")
         });
@@ -36,6 +82,11 @@ fn main() {
 
     // Fleet driver: four policy arms of a small end-to-end run sharing the
     // engine (the exp-runner sweep shape). Timed per fleet, not per run.
+    // Since PR 5 every layer (fleet workers, eval fan-out, kernel shards)
+    // rides the ONE bounded engine pool, so the 1-vs-N ratio measures how
+    // much of a run's serial, non-kernel work (net sim, teacher, batching)
+    // fleet concurrency can overlap on top of always-on kernel sharding —
+    // expect a smaller ratio than the pre-PR-5 scoped-thread numbers.
     for threads in [1usize, n_threads] {
         b.bench_timed(&format!("fleet_4runs_{threads}threads"), || {
             let specs: Vec<RunSpec> = [
@@ -46,10 +97,8 @@ fn main() {
             ]
             .into_iter()
             .map(|policy| {
-                // Pin each run to one eval worker so the 1-vs-N comparison
-                // isolates FLEET concurrency (run_fleet would otherwise
-                // redistribute the same cores to per-run eval workers and
-                // flatten the ratio).
+                // Pin each run to one eval worker so per-run eval fan-outs
+                // don't additionally contend for the shared pool.
                 RunSpec::new(Task::Det, policy)
                     .scenario(scenario::grouped_static(&[2], 0.05, 20.0, 40))
                     .gpus(1.0)

@@ -296,9 +296,9 @@ pub fn run_fleet(engine: &Engine, specs: Vec<RunSpec>, threads: usize) -> Result
         .into_iter()
         .map(|s| s.eval_threads_floor(per_run))
         .collect();
-    crate::util::pool::map_owned(threads, specs, |_, spec| {
-        Session::new(engine, spec)?.run()
-    })
-    .into_iter()
-    .collect()
+    engine
+        .pool()
+        .map_owned(threads, specs, |_, spec| Session::new(engine, spec)?.run())
+        .into_iter()
+        .collect()
 }

@@ -171,6 +171,13 @@ impl RunSpec {
         self.configure(move |cfg| cfg.eval_threads = n.max(1))
     }
 
+    /// Enable/disable the per-window eval-frame render cache (see
+    /// `SystemConfig::frame_cache`; on by default). Runs are byte-identical
+    /// either way — disabling only trades wall-clock to verify that claim.
+    pub fn frame_cache(self, enabled: bool) -> Self {
+        self.configure(move |cfg| cfg.frame_cache = enabled)
+    }
+
     /// Like [`RunSpec::eval_threads`], but registered *before* every other
     /// hook so an explicit `eval_threads` (or any user hook) still wins.
     /// The fleet driver uses this to divide eval workers by the fleet

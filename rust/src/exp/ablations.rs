@@ -40,7 +40,7 @@ pub fn alpha_beta(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     // Divide eval workers by the combo concurrency (same rule as
     // run_fleet) so concurrent sessions don't oversubscribe the CPU.
     let per_run = pool::per_run_threads(ctx.threads, combos.len());
-    let outcomes = pool::try_map(ctx.threads, &combos, |_, &(alpha, beta)| {
+    let outcomes = engine.pool().try_map(ctx.threads, &combos, |_, &(alpha, beta)| {
         let spec = RunSpec::new(Task::Det, Policy::ecco())
             .scenario(scenario::three_plus_one(ctx.seed))
             .gpus(1.0)
@@ -84,11 +84,15 @@ pub fn alpha_beta(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         ]));
     }
     print_table(
+        ctx,
         "Ablation: Eq.1 alpha/beta sweep (3-cam vs 1-cam groups)",
         &["params", "G1 mAP", "G2 mAP", "gap", "per-cam mean"],
         &rows,
     );
-    println!("expectation: larger alpha -> average-optimising (bigger gap); beta->1 weights big groups harder");
+    ctx.line(
+        "expectation: larger alpha -> average-optimising (bigger gap); beta->1 weights \
+         big groups harder",
+    );
     ctx.save(
         "abl_alpha_beta",
         &obj(vec![("experiment", s("abl_alpha_beta")), ("rows", arr(json_rows))]),
@@ -136,11 +140,12 @@ pub fn filter(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         ]));
     }
     print_table(
+        ctx,
         "Ablation: Alg.2 metadata pre-filter (8 cameras, 4 regions)",
         &["mode", "steady mAP", "jobs", "infer calls"],
         &rows,
     );
-    println!("expectation: similar accuracy, strictly more grouping evals without the filter");
+    ctx.line("expectation: similar accuracy, strictly more grouping evals without the filter");
     ctx.save(
         "abl_filter",
         &obj(vec![("experiment", s("abl_filter")), ("rows", arr(json_rows))]),
@@ -179,11 +184,14 @@ pub fn teacher(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         json_rows.push(obj(vec![("teacher", s(name)), ("steady", num(acc as f64))]));
     }
     print_table(
+        ctx,
         "Ablation: teacher label quality",
         &["teacher", "steady mAP"],
         &rows,
     );
-    println!("expectation: monotone in teacher quality; strong ~ oracle (paper's implicit assumption)");
+    ctx.line(
+        "expectation: monotone in teacher quality; strong ~ oracle (paper's implicit assumption)",
+    );
     ctx.save(
         "abl_teacher",
         &obj(vec![("experiment", s("abl_teacher")), ("rows", arr(json_rows))]),

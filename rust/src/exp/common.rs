@@ -1,11 +1,51 @@
 //! Shared experiment infrastructure: the standard run wrapper over
 //! [`crate::api`], table printing, and JSON output.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use crate::api::{RunReport, RunSpec, Session};
 use crate::runtime::Engine;
 use crate::util::json::Json;
+
+/// Where a runner's human-readable output goes: straight to stdout (the
+/// default), or into a per-experiment buffer so `exp all` can fan runners
+/// out concurrently and still print whole experiments in id order, never
+/// interleaved.
+#[derive(Debug, Clone, Default)]
+pub struct OutSink {
+    buf: Option<Arc<Mutex<String>>>,
+}
+
+impl OutSink {
+    /// Unbuffered: lines go straight to stdout as they happen.
+    pub fn stdout() -> OutSink {
+        OutSink { buf: None }
+    }
+
+    /// Buffered: lines accumulate in the returned handle until the caller
+    /// flushes them (the `exp all` fan-out prints buffers in id order).
+    pub fn buffered() -> (OutSink, Arc<Mutex<String>>) {
+        let buf = Arc::new(Mutex::new(String::new()));
+        let sink = OutSink {
+            buf: Some(buf.clone()),
+        };
+        (sink, buf)
+    }
+
+    /// Emit one output line.
+    pub fn line(&self, text: impl AsRef<str>) {
+        match &self.buf {
+            None => println!("{}", text.as_ref()),
+            Some(buf) => {
+                let mut buf = buf.lock().expect("exp output buffer poisoned");
+                buf.push_str(text.as_ref());
+                buf.push('\n');
+            }
+        }
+    }
+}
 
 /// Experiment context from the CLI.
 #[derive(Debug, Clone)]
@@ -17,6 +57,8 @@ pub struct ExpContext {
     /// Concurrent runs for sweep fan-outs (`--threads`; results are always
     /// in condition order, so this only trades wall-clock for cores).
     pub threads: usize,
+    /// Output sink for the runner's tables and shape notes.
+    pub out: OutSink,
 }
 
 impl ExpContext {
@@ -28,10 +70,15 @@ impl ExpContext {
         }
     }
 
+    /// Emit one line of experiment output (stdout or the `exp all` buffer).
+    pub fn line(&self, text: impl AsRef<str>) {
+        self.out.line(text);
+    }
+
     pub fn save(&self, name: &str, json: &Json) -> Result<()> {
         let path = format!("{}/{}.json", self.out_dir, name);
         std::fs::write(&path, json.to_string_pretty())?;
-        println!("[saved {path}]");
+        self.line(format!("[saved {path}]"));
         Ok(())
     }
 }
@@ -60,9 +107,9 @@ pub fn headline_policies() -> Vec<crate::server::Policy> {
     ]
 }
 
-/// Print a fixed-width table.
-pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
-    println!("\n== {title} ==");
+/// Print a fixed-width table to the context's output sink.
+pub fn print_table(ctx: &ExpContext, title: &str, header: &[&str], rows: &[Vec<String>]) {
+    ctx.line(format!("\n== {title} =="));
     let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
     for row in rows {
         for (i, cell) in row.iter().enumerate() {
@@ -79,12 +126,11 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
             .collect::<Vec<_>>()
             .join("  ")
     };
-    println!(
-        "{}",
-        fmt_row(&header.iter().map(|h| h.to_string()).collect::<Vec<_>>())
-    );
+    ctx.line(fmt_row(
+        &header.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    ));
     for row in rows {
-        println!("{}", fmt_row(row));
+        ctx.line(fmt_row(row));
     }
 }
 

@@ -83,6 +83,7 @@ pub fn fig6(engine: &Engine, ctx: &ExpContext, task: Task) -> Result<()> {
         }));
         let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
         print_table(
+            ctx,
             &format!(
                 "Fig 6 [{}]: steady mAP vs {} ({} cams, {} windows)",
                 task.name(),
@@ -154,8 +155,8 @@ pub fn fig7(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     let mut hdr = vec!["policy".to_string()];
     hdr.extend(cams_sweep.iter().map(|n| format!("{n} cams")));
     let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
-    print_table("Fig 7a: steady mAP vs #cameras (4 GPUs, 50 Mbps)", &hdr_refs, &acc_rows);
-    print_table("Fig 7b: mean response time (s) vs #cameras", &hdr_refs, &resp_rows);
+    print_table(ctx, "Fig 7a: steady mAP vs #cameras (4 GPUs, 50 Mbps)", &hdr_refs, &acc_rows);
+    print_table(ctx, "Fig 7b: mean response time (s) vs #cameras", &hdr_refs, &resp_rows);
     ctx.save(
         "fig7",
         &obj(vec![("experiment", s("fig7")), ("rows", arr(json_rows))]),

@@ -27,7 +27,10 @@ pub mod profiling;
 pub mod responsiveness;
 pub mod similarity;
 
-pub use common::ExpContext;
+pub use common::{ExpContext, OutSink};
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -39,18 +42,62 @@ pub const ALL_EXPERIMENTS: [&str; 12] = [
     "fig12", "fig13",
 ];
 
+/// Streams completed experiment buffers to stdout in id order: buffer `i`
+/// prints as soon as every buffer before it has printed, regardless of
+/// completion order.
+struct InOrderPrinter {
+    next: usize,
+    pending: BTreeMap<usize, String>,
+}
+
+impl InOrderPrinter {
+    fn submit(&mut self, idx: usize, text: String) {
+        self.pending.insert(idx, text);
+        while let Some(t) = self.pending.remove(&self.next) {
+            print!("{t}");
+            self.next += 1;
+        }
+    }
+}
+
 /// Dispatch one experiment id (or `all`). Sweep runners fan their
 /// conditions out over `ctx.threads` concurrent runs sharing `engine`;
 /// output order is condition order either way.
 pub fn run_experiment(engine: &Engine, id: &str, ctx: &ExpContext) -> Result<()> {
     match id {
         "all" => {
-            for id in ALL_EXPERIMENTS {
-                let t0 = std::time::Instant::now();
-                println!("\n########## {id} ##########");
-                run_experiment(engine, id, ctx)?;
-                println!("[{id} done in {:.0}s]", t0.elapsed().as_secs_f64());
+            if ctx.threads <= 1 {
+                // Sequential: stream output live, experiment by experiment.
+                for id in ALL_EXPERIMENTS {
+                    let t0 = std::time::Instant::now();
+                    println!("\n########## {id} ##########");
+                    run_experiment(engine, id, ctx)?;
+                    println!("[{id} done in {:.0}s]", t0.elapsed().as_secs_f64());
+                }
+                return Ok(());
             }
+            // The experiment ids are independent (none of them read the
+            // others' results, and each writes its own JSON file), so they
+            // fan out across the engine's worker pool. Every runner writes
+            // into a private buffer; whole experiments print in id order,
+            // so the combined output has the sequential loop's shape.
+            let printer = Mutex::new(InOrderPrinter {
+                next: 0,
+                pending: BTreeMap::new(),
+            });
+            let ids: Vec<&str> = ALL_EXPERIMENTS.to_vec();
+            engine.pool().try_map(ctx.threads, &ids, |i, &id| {
+                let (out, buf) = OutSink::buffered();
+                let mut sub = ctx.clone();
+                sub.out = out;
+                let t0 = std::time::Instant::now();
+                let result = run_experiment(engine, id, &sub);
+                let mut text = format!("\n########## {id} ##########\n");
+                text.push_str(&buf.lock().expect("exp output buffer poisoned"));
+                text.push_str(&format!("[{id} done in {:.0}s]\n", t0.elapsed().as_secs_f64()));
+                printer.lock().expect("exp printer poisoned").submit(i, text);
+                result
+            })?;
             Ok(())
         }
         "fig2c" => motivation::fig2c(engine, ctx),

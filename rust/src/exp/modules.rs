@@ -67,12 +67,14 @@ pub fn fig10(engine: &Engine, ctx: &ExpContext) -> Result<()> {
             .zip(&acc_g2)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
-        println!("\n[{name}] micro-window allocation (1=big group, 2=small): {bars}");
-        println!(
+        ctx.line(format!(
+            "\n[{name}] micro-window allocation (1=big group, 2=small): {bars}"
+        ));
+        ctx.line(format!(
             "[{name}] big-group GPU share {:.0}%, max inter-group accuracy gap {:.3}",
             g1_share * 100.0,
             max_gap
-        );
+        ));
         summary.push(vec![
             name.to_string(),
             format!("{:.3}", acc_g1.last().copied().unwrap_or(0.0)),
@@ -90,11 +92,14 @@ pub fn fig10(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         ]));
     }
     print_table(
+        ctx,
         "Fig 10: allocator comparison (groups of 3 vs 1 camera, 1 GPU)",
         &["allocator", "G1 final", "G2 final", "max gap", "G1 GPU%"],
         &summary,
     );
-    println!("shape: paper shows RECL's allocator starving the small group (large gap), ECCO balanced");
+    ctx.line(
+        "shape: paper shows RECL's allocator starving the small group (large gap), ECCO balanced",
+    );
     ctx.save(
         "fig10",
         &obj(vec![("experiment", s("fig10")), ("runs", arr(json_runs))]),
@@ -170,13 +175,13 @@ pub fn fig11(engine: &Engine, ctx: &ExpContext) -> Result<()> {
                     // GPU-share targets from the allocator estimates.
                     let shares: Vec<f64> =
                         session.job_shares().iter().map(|&(_, p)| p).collect();
-                    println!(
+                    ctx.line(format!(
                         "[{name} @9Mbps] group bw A/B/C = {:.2}/{:.2}/{:.2} Mbps; GPU shares {:?}",
                         group_bw[0],
                         group_bw[1],
                         group_bw[2],
                         shares.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
-                    );
+                    ));
                     traces_json.push(obj(vec![
                         ("mode", s(name)),
                         (
@@ -194,11 +199,15 @@ pub fn fig11(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     hdr.extend(bw_sweep.iter().map(|b| format!("{b} Mbps")));
     let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
     print_table(
+        ctx,
         "Fig 11: transmission controller ablation (6 cams / 3 groups, 1 GPU; A capped 1 Mbps)",
         &hdr_refs,
         &rows,
     );
-    println!("shape: paper has the controller winning at low bandwidth and matching at high; traces approximate GPU-proportional shares");
+    ctx.line(
+        "shape: paper has the controller winning at low bandwidth and matching at high; \
+         traces approximate GPU-proportional shares",
+    );
     ctx.save(
         "fig11",
         &obj(vec![

@@ -60,6 +60,7 @@ pub fn fig2c(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         })
         .collect();
     print_table(
+        ctx,
         "Fig 2(c): accuracy over time, independent vs group retraining",
         &hdr,
         &rows,
@@ -67,12 +68,12 @@ pub fn fig2c(engine: &Engine, ctx: &ExpContext) -> Result<()> {
 
     // Paper shape checks (reported, not asserted): group-3gpu >= indep-3gpu,
     // group-1gpu ~ indep-3gpu.
-    println!(
+    ctx.line(format!(
         "shape: group3 {} indep3 (paper: group wins)  |  group1 {:.3} vs indep3 {:.3} (paper: comparable)",
         if outcomes[1].steady >= outcomes[0].steady { ">=" } else { "<" },
         outcomes[2].steady,
         outcomes[0].steady
-    );
+    ));
 
     ctx.save(
         "fig2c",

@@ -16,7 +16,6 @@ use crate::server::{eval_model, pretrain};
 use crate::teacher::{Teacher, TeacherConfig};
 use crate::transmission::BUDGET_LEVELS;
 use crate::util::json::{arr, num, obj, s};
-use crate::util::pool;
 use crate::util::rng::Pcg32;
 use crate::video::{degrade, transport_window, SamplingConfig, FPS_CHOICES, RES_CHOICES};
 
@@ -147,7 +146,7 @@ pub fn fig5(engine: &Engine, ctx: &ExpContext) -> Result<()> {
             .iter()
             .flat_map(|&res| FPS_CHOICES.iter().map(move |&fps| SamplingConfig { fps, res }))
             .collect();
-        let accs = pool::try_map(ctx.threads, &cells, |_, &c| {
+        let accs = engine.pool().try_map(ctx.threads, &cells, |_, &c| {
             if c.pixels_per_sec() > budget * 1.5 {
                 return Ok(f32::NAN); // config can't even fit the budget
             }
@@ -192,18 +191,20 @@ pub fn fig5(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         hdr.extend(FPS_CHOICES.iter().map(|f| format!("{f} fps")));
         let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
         print_table(
+            ctx,
             &format!("Fig 5 ({mname} camera): mAP per sampling config, {budget} px/s, 1 Mbps"),
             &hdr_refs,
             &rows,
         );
         let (bc, ba) = best.unwrap();
-        println!("best for {mname}: {bc:?} at {ba:.3}");
+        ctx.line(format!("best for {mname}: {bc:?} at {ba:.3}"));
         all_rows.push((mname.to_string(), rows, bc, ba));
     }
-    println!(
-        "shape: paper finds static favours resolution, mobile favours frame rate — got static=res{}, mobile fps {}",
+    ctx.line(format!(
+        "shape: paper finds static favours resolution, mobile favours frame rate — \
+         got static=res{}, mobile fps {}",
         all_rows[0].2.res, all_rows[1].2.fps
-    );
+    ));
     ctx.save(
         "fig5",
         &obj(vec![
@@ -294,15 +295,17 @@ pub fn tab1(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         results.push((scheme.to_string(), accs[0], accs[1], overall));
     }
     print_table(
+        ctx,
         "Table 1: retraining accuracy, equal vs GPU-proportional bandwidth",
         &["scheme", "bw split", "cam A mAP", "cam B mAP", "overall"],
         &rows,
     );
-    println!(
-        "shape: paper has proportional > equal overall and B(high-GPU) gains most — got overall {} and B {}",
+    ctx.line(format!(
+        "shape: paper has proportional > equal overall and B(high-GPU) gains most — \
+         got overall {} and B {}",
         if results[1].3 >= results[0].3 { "higher ✓" } else { "LOWER ✗" },
         if results[1].2 >= results[0].2 { "higher ✓" } else { "LOWER ✗" },
-    );
+    ));
     ctx.save(
         "tab1",
         &obj(vec![

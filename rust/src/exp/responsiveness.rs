@@ -62,11 +62,15 @@ pub fn fig12(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         ]));
     }
     print_table(
+        ctx,
         "Fig 12: per-camera accuracy at join (staggered requests w0/w2/w4)",
         &["policy", "cam1@w0", "cam2@w2", "cam3@w4"],
         &rows,
     );
-    println!("shape: paper has ECCO/ECCO+RECL beating RECL for the LATER cameras (2 and 3) via natural model reuse");
+    ctx.line(
+        "shape: paper has ECCO/ECCO+RECL beating RECL for the LATER cameras (2 and 3) \
+         via natural model reuse",
+    );
     ctx.save(
         "fig12",
         &obj(vec![("experiment", s("fig12")), ("runs", arr(json_runs))]),
@@ -126,11 +130,15 @@ pub fn fig13(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     hdr.extend(uplinks.iter().map(|u| format!("{u} Mbps")));
     let hdr_refs: Vec<&str> = hdr.iter().map(|h| h.as_str()).collect();
     print_table(
+        ctx,
         "Fig 13: mean response time (s) vs per-camera uplink bandwidth",
         &hdr_refs,
         &rows,
     );
-    println!("shape: paper has group retraining (ECCO variants) cutting response time up to 5x at low uplink");
+    ctx.line(
+        "shape: paper has group retraining (ECCO variants) cutting response time up to 5x \
+         at low uplink",
+    );
     ctx.save(
         "fig13",
         &obj(vec![("experiment", s("fig13")), ("rows", arr(json_rows))]),

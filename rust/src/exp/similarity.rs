@@ -24,7 +24,7 @@ pub fn fig8(engine: &Engine, ctx: &ExpContext) -> Result<()> {
     // Divide eval workers by the condition concurrency (same rule as
     // run_fleet) so concurrent sessions don't oversubscribe the CPU.
     let per_run = pool::per_run_threads(ctx.threads, conditions.len());
-    let accs = pool::try_map(ctx.threads, &conditions, |_, &(level, grouped)| {
+    let accs = engine.pool().try_map(ctx.threads, &conditions, |_, &(level, grouped)| {
         let (sc, _) = scenario::similarity_triads(20.0, ctx.seed);
         let triad = sc.groups[level].clone();
         let mut policy = if grouped { Policy::ecco() } else { Policy::ekya() };
@@ -88,11 +88,12 @@ pub fn fig8(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         ]);
     }
     print_table(
+        ctx,
         "Fig 8: group vs independent retraining by camera similarity (3 GPUs)",
         &["similarity", "group mAP", "indep mAP", "group gain"],
         &rows,
     );
-    println!("shape: paper has the gain shrinking from high to low similarity");
+    ctx.line("shape: paper has the gain shrinking from high to low similarity");
     ctx.save(
         "fig8",
         &obj(vec![("experiment", s("fig8")), ("rows", arr(json_rows))]),
@@ -120,8 +121,8 @@ pub fn fig9(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         .configure(|cfg| cfg.grouping.drop_threshold = 0.12);
     let mut session = Session::new(engine, spec)?;
 
-    println!("\n== Fig 9: dynamic grouping timeline (camera 2 turns off at t=240s) ==");
-    println!("window |  t(s) | cam0  cam1  cam2 | groups (job: members)");
+    ctx.line("\n== Fig 9: dynamic grouping timeline (camera 2 turns off at t=240s) ==");
+    ctx.line("window |  t(s) | cam0  cam1  cam2 | groups (job: members)");
     let mut acc_series: Vec<Vec<f32>> = vec![Vec::new(); 3];
     let mut membership_series = Vec::new();
     for _ in 0..windows {
@@ -134,7 +135,7 @@ pub fn fig9(engine: &Engine, ctx: &ExpContext) -> Result<()> {
             .iter()
             .map(|(id, members)| format!("{id}:{members:?}"))
             .collect();
-        println!(
+        ctx.line(format!(
             "{:>6} | {:>5.0} | {:.3} {:.3} {:.3} | {}",
             w.window,
             w.time,
@@ -142,7 +143,7 @@ pub fn fig9(engine: &Engine, ctx: &ExpContext) -> Result<()> {
             w.cam_acc[1],
             w.cam_acc[2],
             groups.join("  ")
-        );
+        ));
         membership_series.push(w.membership);
     }
     // Shape check: at some window cam2 must be in a different job from cam0.
@@ -151,9 +152,9 @@ pub fn fig9(engine: &Engine, ctx: &ExpContext) -> Result<()> {
         job_of(0).is_some() && job_of(2).is_some() && job_of(0) != job_of(2)
     });
     let merged_initially = membership_series.first().map(|g| g.len() == 1).unwrap_or(false);
-    println!(
+    ctx.line(format!(
         "shape: initially one group: {merged_initially}; cam2 split into its own job later: {split_observed}"
-    );
+    ));
     ctx.save(
         "fig9",
         &obj(vec![

@@ -34,7 +34,7 @@
 //! | [`zoo`] | RECL-style model zoo |
 //! | [`server`] | retraining jobs, micro-window scheduler, the (crate-private) `System` loop |
 //! | [`exp`] | one runner per paper table/figure (`ecco exp <id>`) |
-//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness, scoped worker pool ([`util::pool`]) |
+//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness, persistent worker pool ([`util::pool`]) |
 //!
 //! ## Threading model
 //!
@@ -42,22 +42,48 @@
 //! immutable after construction and its statistics are atomics, so every
 //! engine method takes `&self` and the type is `Sync`. All mutable
 //! training state lives in [`runtime::ModelState`] values owned by the
-//! caller. Two levels of parallelism build on that:
+//! caller.
 //!
+//! Every engine additionally owns a **persistent worker pool**
+//! ([`util::pool::Pool`]): a fixed set of threads spawned once at
+//! `Engine::new`, parked on a condvar between fan-outs, and joined when
+//! the engine drops. Work is handed out by an atomic cursor, results
+//! write back into per-slot cells by item index, and the submitting
+//! caller always participates in its own fan-out — which bounds total
+//! parallelism by the pool width no matter how the layers below nest, and
+//! makes nested fan-outs deadlock-free by construction. Three layers
+//! dispatch onto it:
+//!
+//! * **Kernel batch sharding** — `runtime::native`'s `train_step` /
+//!   `infer_det` / `infer_seg` shard the batch dimension (per-sample
+//!   forward/backward passes are independent given the batch-global loss
+//!   normalisers). Loss partials and gradients reduce in sample-index
+//!   order, so every step is **bit-identical at any pool width**.
 //! * **Eval fan-out** — the coordinator's per-window evaluation batches
 //!   (candidate evals during request placement, per-member job evals, the
-//!   per-camera window pass, and the regroup matrix) run on
-//!   [`util::pool`], a std-only scoped worker pool. Results reduce in
+//!   per-camera window pass, and the regroup matrix). Results reduce in
 //!   item-index order, so event streams, reports, and RNG consumption are
 //!   **byte-identical at any thread count** (`SystemConfig::eval_threads`,
 //!   [`api::RunSpec::eval_threads`], or the `ECCO_THREADS` env var).
 //! * **Fleet fan-out** — [`api::run_fleet`] runs whole specs (policy arms,
 //!   scenario sweeps) concurrently over one shared engine, reports in spec
-//!   order; the experiment runners take `--threads N`.
+//!   order; the experiment runners take `--threads N`, and `ecco exp all`
+//!   fans the independent experiment ids out with per-experiment buffered
+//!   printing (whole experiments print in id order).
 //!
-//! Training itself stays sequential within a run by design: Alg. 1
-//! time-shares all GPUs on one job per micro-window, so the serial train
-//! loop *is* the semantics being simulated.
+//! The eval fan-outs additionally read rendered frames through a
+//! **per-(camera, salt) eval-frame cache** owned by each run: renders are
+//! pure functions of the frozen world state, the cache is invalidated on
+//! every world advance (each micro-window), and cached batches are
+//! therefore bit-identical to fresh renders — the pre-/post-training eval
+//! pair of a micro-window and the window-boundary passes share one render
+//! per camera instead of re-rasterising (`SystemConfig::frame_cache`
+//! force-disables it for A/B verification).
+//!
+//! Training itself stays sequential across micro-windows by design:
+//! Alg. 1 time-shares all GPUs on one job per micro-window, so the serial
+//! step loop *is* the semantics being simulated — only the math inside
+//! each step is sharded.
 //! ## Quick start
 //!
 //! Every run goes through [`api::RunSpec`] and [`api::Session`]:

@@ -107,11 +107,22 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .usize_or("threads", ecco::util::pool::default_threads())?
         .max(1);
     let engine = Engine::open_default()?;
+    if threads > engine.pool().parallelism() {
+        // The engine's persistent pool (sized from ECCO_THREADS / machine
+        // parallelism at startup) bounds real concurrency; say so instead
+        // of silently capping the flag.
+        eprintln!(
+            "[ecco] --threads {threads} exceeds the engine pool's parallelism ({}); \
+             concurrency is capped there (raise ECCO_THREADS to widen the pool)",
+            engine.pool().parallelism()
+        );
+    }
     let ctx = exp::ExpContext {
         out_dir,
         fast,
         seed,
         threads,
+        out: exp::OutSink::stdout(),
     };
     exp::run_experiment(&engine, id, &ctx)
 }

@@ -15,6 +15,7 @@
 
 use crate::runtime::{DetPred, SegPred};
 use crate::scene::GroundTruth;
+use crate::util::stats::nan_ranks_last;
 
 /// A scored binary candidate (one class's detection).
 #[derive(Debug, Clone, Copy)]
@@ -33,8 +34,13 @@ fn average_precision(mut cands: Vec<Candidate>, n_positive: usize) -> f32 {
     if n_positive == 0 {
         return f32::NAN; // class absent from GT: skipped by the caller
     }
+    // NaN fails the `>=` floor, so a NaN-scored cell counts as "not
+    // detected" rather than poisoning the ranking.
     cands.retain(|c| c.score >= MIN_SCORE);
-    cands.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    // Descending by score via `total_cmp` on the NaN-last rank key: the
+    // comparator is total, so a stray NaN (e.g. diverged model weights)
+    // can never panic the sort again.
+    cands.sort_by(|a, b| nan_ranks_last(b.score).total_cmp(&nan_ranks_last(a.score)));
     // Precision/recall curve.
     let mut tp = 0usize;
     let mut fp = 0usize;
@@ -405,6 +411,42 @@ mod tests {
         };
         let m_bad = seg_map(&pred_bad, &[&truth], 1);
         assert!(m_bad < 0.2, "{m_bad}");
+    }
+
+    #[test]
+    fn nan_scores_never_panic_and_rank_last() {
+        // Regression: a single NaN confidence (diverged model weights)
+        // used to panic the whole mAP computation through the
+        // `partial_cmp(..).unwrap()` sort. NaN cells must instead count as
+        // "not detected".
+        let truths = vec![truth_with(vec![
+            Obj { class: 1, cx: 0.12, cy: 0.12, radius: 0.05 },
+            Obj { class: 1, cx: 0.9, cy: 0.9, radius: 0.05 },
+        ])];
+        let mut pred = pred_from(1, &[(0, 0, 0, 1, 0.99), (0, 3, 3, 1, 0.98)]);
+        // Poison a handful of cells, including one of the true positives.
+        pred.obj[5] = f32::NAN;
+        pred.obj[(3 * 4) + 3] = f32::NAN;
+        let trefs: Vec<&GroundTruth> = truths.iter().collect();
+        let m = det_map(&pred, &trefs, 1);
+        assert!(m.is_finite(), "NaN scores must not poison mAP: {m}");
+        assert!((0.0..=1.0).contains(&m));
+        // The NaN'd true positive is a miss, so recall is capped at 1/2.
+        let clean = pred_from(1, &[(0, 0, 0, 1, 0.99), (0, 3, 3, 1, 0.98)]);
+        let m_clean = det_map(&clean, &trefs, 1);
+        assert!(m < m_clean, "NaN cell must score as a miss: {m} vs {m_clean}");
+        // Seg path: NaN probabilities are equally harmless.
+        let s = 8usize;
+        let mut probs = vec![0.0f32; s * s * 5];
+        let truth = truth_with(vec![Obj { class: 0, cx: 0.5, cy: 0.5, radius: 0.25 }]);
+        let mask = truth.mask_grid(s);
+        for (i, &cell) in mask.iter().enumerate() {
+            probs[i * 5 + cell] = 1.0;
+        }
+        probs[0] = f32::NAN;
+        let pred = SegPred { batch: 1, side: s, classes: 5, probs };
+        let m_seg = seg_map(&pred, &[&truth], 1);
+        assert!(m_seg.is_finite() && (0.0..=1.0).contains(&m_seg));
     }
 
     #[test]

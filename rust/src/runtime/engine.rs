@@ -29,6 +29,8 @@ use super::manifest::Manifest;
 use super::manifest::Task;
 #[cfg(not(feature = "pjrt"))]
 use super::native;
+#[cfg(not(feature = "pjrt"))]
+use crate::util::pool::{self, Pool};
 
 /// Mutable training state of one student model.
 #[derive(Debug, Clone)]
@@ -170,10 +172,18 @@ impl StatsCell {
 /// construction and the stats are atomic, so every method takes `&self`
 /// and one engine can serve any number of worker threads or concurrent
 /// sessions. Mutable training state lives in the caller's [`ModelState`].
+///
+/// Each engine additionally owns a **persistent worker pool**
+/// ([`Engine::pool`]), spawned once at construction and parked between
+/// uses: the coordinator's eval fan-outs, the fleet driver, and the
+/// batch-sharded train/infer kernels all dispatch onto it, so total
+/// parallelism stays bounded by the pool width no matter how the layers
+/// nest. The workers die with the engine.
 #[cfg(not(feature = "pjrt"))]
 pub struct Engine {
     pub manifest: Manifest,
     stats: StatsCell,
+    pool: Pool,
 }
 
 // Compile-time statement of the sharing contract the eval fan-outs and
@@ -209,6 +219,8 @@ impl Engine {
         Ok(Engine {
             manifest,
             stats: StatsCell::default(),
+            // Caller + workers == default_threads() total concurrency.
+            pool: Pool::new(pool::default_threads().saturating_sub(1)),
         })
     }
 
@@ -216,6 +228,21 @@ impl Engine {
     pub fn open_default() -> Result<Engine> {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         Engine::new(&dir)
+    }
+
+    /// The engine's persistent worker set: eval fan-outs, fleet drivers,
+    /// and the batch-sharded kernels all run on this pool. Parked when
+    /// idle; joined when the engine drops.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Kernel execution context: shard on the engine pool at full width.
+    fn exec(&self) -> native::Exec<'_> {
+        native::Exec {
+            pool: &self.pool,
+            threads: self.pool.parallelism(),
+        }
     }
 
     /// Snapshot of the execution statistics.
@@ -274,7 +301,15 @@ impl Engine {
             _ => bail!("label kind does not match task {:?}", state.task),
         }
         let t0 = std::time::Instant::now();
-        let loss = native::train_step(state.task, &mut state.theta, &mut state.mom, batch, b, lr);
+        let loss = native::train_step(
+            state.task,
+            &mut state.theta,
+            &mut state.mom,
+            batch,
+            b,
+            lr,
+            self.exec(),
+        );
         let dt = t0.elapsed().as_nanos() as u64;
         StatsCell::add(&self.stats.exec_nanos, dt);
         StatsCell::add(&self.stats.train_nanos, dt);
@@ -292,7 +327,7 @@ impl Engine {
             bail!("infer batch pixels wrong size");
         }
         let t0 = std::time::Instant::now();
-        let (obj, cls) = native::infer_det(theta, pixels, b, res);
+        let (obj, cls) = native::infer_det(theta, pixels, b, res, self.exec());
         let dt = t0.elapsed().as_nanos() as u64;
         StatsCell::add(&self.stats.exec_nanos, dt);
         StatsCell::add(&self.stats.infer_nanos, dt);
@@ -315,7 +350,7 @@ impl Engine {
             bail!("infer batch pixels wrong size");
         }
         let t0 = std::time::Instant::now();
-        let probs = native::infer_seg(theta, pixels, b, res);
+        let probs = native::infer_seg(theta, pixels, b, res, self.exec());
         let dt = t0.elapsed().as_nanos() as u64;
         StatsCell::add(&self.stats.exec_nanos, dt);
         StatsCell::add(&self.stats.infer_nanos, dt);

@@ -13,10 +13,32 @@
 //! bit-exact golden comparisons in `tests/golden_numerics.rs` only apply
 //! to the PJRT backend.
 
+use crate::util::pool::Pool;
 use crate::util::rng::Pcg32;
 
 use super::engine::{Labels, TrainBatch};
 use super::manifest::Task;
+
+/// Execution context for the batch-sharded kernels: which worker pool to
+/// shard the batch dimension on and how many threads the call may use.
+/// Per-sample results always reduce in sample-index order, so any `Exec`
+/// produces bit-identical outputs — including [`Exec::serial`], which runs
+/// the same per-sample code on the caller alone.
+#[derive(Clone, Copy)]
+pub struct Exec<'p> {
+    pub pool: &'p Pool,
+    pub threads: usize,
+}
+
+impl Exec<'static> {
+    /// The serial path: no workers, caller-only.
+    pub fn serial() -> Exec<'static> {
+        Exec {
+            pool: Pool::serial(),
+            threads: 1,
+        }
+    }
+}
 
 /// Object classes (model.py `K`).
 pub const K: usize = 4;
@@ -496,19 +518,26 @@ fn softmax_row(row: &mut [f32]) {
     }
 }
 
-/// Det loss (BCE objectness + objectness-masked class CE) and its gradient
-/// w.r.t. the `[B,G,G,1+K]` logits.
-fn det_loss_grad(logits: &[f32], y_obj: &[f32], y_cls: &[f32]) -> (f32, Vec<f32>) {
-    let n = y_obj.len();
-    let obj_sum: f32 = y_obj.iter().sum::<f32>() + 1e-6;
+/// Det loss partials over one row range (one batch shard): raw BCE sum,
+/// CE sum, and the logit gradient. `n_total` and `obj_sum` are the
+/// batch-global normalisers, so per-sample shards sum (in sample order) to
+/// exactly the whole-batch loss and gradient.
+fn det_loss_grad_rows(
+    logits: &[f32],
+    y_obj: &[f32],
+    y_cls: &[f32],
+    n_total: usize,
+    obj_sum: f32,
+) -> (f32, f32, Vec<f32>) {
+    let rows = y_obj.len();
     let mut dlogits = vec![0.0f32; logits.len()];
     let mut bce = 0.0f32;
     let mut ce = 0.0f32;
-    for i in 0..n {
+    for i in 0..rows {
         let lo = logits[i * HEAD_OUT];
         let y = y_obj[i];
         bce += lo.max(0.0) - lo * y + (-lo.abs()).exp().ln_1p();
-        dlogits[i * HEAD_OUT] = (sigmoid(lo) - y) / n as f32;
+        dlogits[i * HEAD_OUT] = (sigmoid(lo) - y) / n_total as f32;
 
         // Class CE on the 4 class logits, masked by objectness.
         let mut probs = [0.0f32; K];
@@ -527,15 +556,17 @@ fn det_loss_grad(logits: &[f32], y_obj: &[f32], y_cls: &[f32]) -> (f32, Vec<f32>
             dlogits[i * HEAD_OUT + 1 + k] = y * (*p / z - yk) / obj_sum;
         }
     }
-    (bce / n as f32 + ce, dlogits)
+    (bce, ce, dlogits)
 }
 
-/// Seg loss (mean CE over every mask cell) and gradient w.r.t. logits.
-fn seg_loss_grad(logits: &[f32], y_mask: &[f32]) -> (f32, Vec<f32>) {
-    let n = logits.len() / HEAD_OUT;
+/// Seg loss partials over one row range; `n_total` is the batch-global
+/// cell count, so per-sample shards sum to the whole-batch loss.
+fn seg_loss_grad_rows(logits: &[f32], y_mask: &[f32], n_total: usize) -> (f32, Vec<f32>) {
+    let rows = logits.len() / HEAD_OUT;
+    let n = n_total;
     let mut dlogits = vec![0.0f32; logits.len()];
     let mut loss = 0.0f32;
-    for i in 0..n {
+    for i in 0..rows {
         let row = &logits[i * HEAD_OUT..(i + 1) * HEAD_OUT];
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
@@ -554,9 +585,73 @@ fn seg_loss_grad(logits: &[f32], y_mask: &[f32]) -> (f32, Vec<f32>) {
     (loss, dlogits)
 }
 
+/// Read-only state shared by every batch shard of one kernel call.
+struct ShardCtx<'a> {
+    p: Params<'a>,
+    /// Whole-batch pixels `[B,R,R,3]`.
+    x: &'a [f32],
+    r: usize,
+    n_params: usize,
+}
+
+/// One sample's det loss partials and parameter gradient: (raw BCE sum,
+/// CE sum, grad). Pure in `(ctx, labels, s)`, so shards run on any thread.
+fn det_sample_grad(
+    ctx: &ShardCtx,
+    obj: &[f32],
+    cls: &[f32],
+    s: usize,
+    n_rows: usize,
+    obj_sum: f32,
+) -> (f32, f32, Vec<f32>) {
+    let r = ctx.r;
+    let px = &ctx.x[s * r * r * 3..(s + 1) * r * r * 3];
+    let mut g_all = vec![0.0f32; ctx.n_params];
+    let mut g = split_grads(&mut g_all);
+    let (caches, h) = trunk_forward(&ctx.p, px, 1, r);
+    let sd = r / 4;
+    let pooled = grid_pool(&h, 1, sd, 32);
+    let rows = GRID * GRID;
+    let logits = head_forward(&ctx.p, &pooled, rows);
+    let (bce, ce, dlogits) = det_loss_grad_rows(
+        &logits,
+        &obj[s * rows..(s + 1) * rows],
+        &cls[s * rows * K..(s + 1) * rows * K],
+        n_rows,
+        obj_sum,
+    );
+    let dpooled = head_backward(&pooled, rows, &dlogits, &ctx.p, &mut g);
+    let dh = grid_pool_backward(&dpooled, 1, sd, 32);
+    trunk_backward(&caches, 1, r, dh, &ctx.p, &mut g);
+    (bce, ce, g_all)
+}
+
+/// One sample's seg loss partial and parameter gradient.
+fn seg_sample_grad(ctx: &ShardCtx, mask: &[f32], s: usize, n_cells: usize) -> (f32, f32, Vec<f32>) {
+    let r = ctx.r;
+    let px = &ctx.x[s * r * r * 3..(s + 1) * r * r * 3];
+    let mut g_all = vec![0.0f32; ctx.n_params];
+    let mut g = split_grads(&mut g_all);
+    let (caches, h) = trunk_forward(&ctx.p, px, 1, r);
+    let sd = r / 4;
+    let rows = sd * sd;
+    let logits = head_forward(&ctx.p, &h, rows);
+    let mask_s = &mask[s * rows * HEAD_OUT..(s + 1) * rows * HEAD_OUT];
+    let (loss, dlogits) = seg_loss_grad_rows(&logits, mask_s, n_cells);
+    let dh = head_backward(&h, rows, &dlogits, &ctx.p, &mut g);
+    trunk_backward(&caches, 1, r, dh, &ctx.p, &mut g);
+    (loss, 0.0, g_all)
+}
+
 /// One SGD+momentum step; mutates `theta`/`mom` in place, returns the loss.
 /// `b` is the (padded) batch size; pixel/label sizes are checked by the
 /// engine before this is called.
+///
+/// The per-sample forward/backward passes are independent given the
+/// batch-global loss normalisers, so they **shard across `exec`'s pool**;
+/// loss partials and gradients then reduce on the caller in sample-index
+/// order, making the step bit-identical at any pool width (the serial
+/// path runs the exact same per-sample code).
 pub fn train_step(
     task: Task,
     theta: &mut [f32],
@@ -564,37 +659,50 @@ pub fn train_step(
     batch: &TrainBatch,
     b: usize,
     lr: f32,
+    exec: Exec,
 ) -> f32 {
     let (x, labels, r) = (&batch.pixels, &batch.labels, batch.res);
-    let mut grad = vec![0.0f32; theta.len()];
-    let loss;
-    {
-        let p = split_params(theta);
-        let mut g = split_grads(&mut grad);
-        let (caches, h) = trunk_forward(&p, x, b, r);
-        let s = r / 4;
+    let n_params = theta.len();
+    let n_grid = b * GRID * GRID;
+    let sd = r / 4;
+    let n_cells = b * sd * sd;
+    let shards: Vec<(f32, f32, Vec<f32>)> = {
+        let ctx = ShardCtx {
+            p: split_params(theta),
+            x,
+            r,
+            n_params,
+        };
+        let ctx = &ctx;
         match (task, labels) {
             (Task::Det, Labels::Det { obj, cls }) => {
-                let pooled = grid_pool(&h, b, s, 32);
-                let rows = b * GRID * GRID;
-                let logits = head_forward(&p, &pooled, rows);
-                let (l, dlogits) = det_loss_grad(&logits, obj, cls);
-                loss = l;
-                let dpooled = head_backward(&pooled, rows, &dlogits, &p, &mut g);
-                let dh = grid_pool_backward(&dpooled, b, s, 32);
-                trunk_backward(&caches, b, r, dh, &p, &mut g);
+                let obj_sum: f32 = obj.iter().sum::<f32>() + 1e-6;
+                exec.pool.map_n(exec.threads, b, |s| {
+                    det_sample_grad(ctx, obj, cls, s, n_grid, obj_sum)
+                })
             }
             (Task::Seg, Labels::Seg { mask }) => {
-                let rows = b * s * s;
-                let logits = head_forward(&p, &h, rows);
-                let (l, dlogits) = seg_loss_grad(&logits, mask);
-                loss = l;
-                let dh = head_backward(&h, rows, &dlogits, &p, &mut g);
-                trunk_backward(&caches, b, r, dh, &p, &mut g);
+                let shard = |s: usize| seg_sample_grad(ctx, mask, s, n_cells);
+                exec.pool.map_n(exec.threads, b, shard)
             }
             _ => unreachable!("label kind checked against task by the engine"),
         }
+    };
+    // Sample-index-order reduction (the determinism contract).
+    let mut grad = vec![0.0f32; n_params];
+    let mut loss_main = 0.0f32;
+    let mut loss_aux = 0.0f32;
+    for (main, aux, gs) in shards {
+        loss_main += main;
+        loss_aux += aux;
+        for (acc, &gv) in grad.iter_mut().zip(&gs) {
+            *acc += gv;
+        }
     }
+    let loss = match task {
+        Task::Det => loss_main / n_grid as f32 + loss_aux,
+        Task::Seg => loss_main,
+    };
     // Global-norm clip, then heavy-ball momentum.
     let norm = (grad.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
     let scale = (GRAD_CLIP / norm).min(1.0);
@@ -606,41 +714,72 @@ pub fn train_step(
 }
 
 /// Detection inference: `(obj sigmoid [B,G,G], class softmax [B,G,G,K])`.
-pub fn infer_det(theta: &[f32], x: &[f32], b: usize, r: usize) -> (Vec<f32>, Vec<f32>) {
+/// Samples are independent end to end, so the batch shards across `exec`'s
+/// pool; per-sample outputs concatenate in sample order.
+pub fn infer_det(
+    theta: &[f32],
+    pixels: &[f32],
+    b: usize,
+    r: usize,
+    exec: Exec,
+) -> (Vec<f32>, Vec<f32>) {
     let p = split_params(theta);
-    let (_, h) = trunk_forward(&p, x, b, r);
-    let pooled = grid_pool(&h, b, r / 4, 32);
-    let rows = b * GRID * GRID;
-    let logits = head_forward(&p, &pooled, rows);
-    let mut obj = Vec::with_capacity(rows);
-    let mut cls = Vec::with_capacity(rows * K);
-    for i in 0..rows {
-        obj.push(sigmoid(logits[i * HEAD_OUT]));
-        let mut row = [0.0f32; K];
-        row.copy_from_slice(&logits[i * HEAD_OUT + 1..(i + 1) * HEAD_OUT]);
-        softmax_row(&mut row);
-        cls.extend_from_slice(&row);
+    let pr = &p;
+    let rows = GRID * GRID;
+    let per: Vec<(Vec<f32>, Vec<f32>)> = exec.pool.map_n(exec.threads, b, |s| {
+        let px = &pixels[s * r * r * 3..(s + 1) * r * r * 3];
+        let (_, h) = trunk_forward(pr, px, 1, r);
+        let pooled = grid_pool(&h, 1, r / 4, 32);
+        let logits = head_forward(pr, &pooled, rows);
+        let mut obj = Vec::with_capacity(rows);
+        let mut cls = Vec::with_capacity(rows * K);
+        for i in 0..rows {
+            obj.push(sigmoid(logits[i * HEAD_OUT]));
+            let mut row = [0.0f32; K];
+            row.copy_from_slice(&logits[i * HEAD_OUT + 1..(i + 1) * HEAD_OUT]);
+            softmax_row(&mut row);
+            cls.extend_from_slice(&row);
+        }
+        (obj, cls)
+    });
+    let mut obj = Vec::with_capacity(b * rows);
+    let mut cls = Vec::with_capacity(b * rows * K);
+    for (o, c) in per {
+        obj.extend(o);
+        cls.extend(c);
     }
     (obj, cls)
 }
 
-/// Segmentation inference: class softmax `[B,S,S,K+1]`.
-pub fn infer_seg(theta: &[f32], x: &[f32], b: usize, r: usize) -> Vec<f32> {
+/// Segmentation inference: class softmax `[B,S,S,K+1]`, batch-sharded like
+/// [`infer_det`].
+pub fn infer_seg(theta: &[f32], pixels: &[f32], b: usize, r: usize, exec: Exec) -> Vec<f32> {
     let p = split_params(theta);
-    let (_, h) = trunk_forward(&p, x, b, r);
-    let s = r / 4;
-    let rows = b * s * s;
-    let mut logits = head_forward(&p, &h, rows);
-    for row in logits.chunks_mut(HEAD_OUT) {
-        softmax_row(row);
+    let pr = &p;
+    let sd = r / 4;
+    let rows = sd * sd;
+    let per: Vec<Vec<f32>> = exec.pool.map_n(exec.threads, b, |s| {
+        let px = &pixels[s * r * r * 3..(s + 1) * r * r * 3];
+        let (_, h) = trunk_forward(pr, px, 1, r);
+        let mut logits = head_forward(pr, &h, rows);
+        for row in logits.chunks_mut(HEAD_OUT) {
+            softmax_row(row);
+        }
+        logits
+    });
+    let mut out = Vec::with_capacity(b * rows * HEAD_OUT);
+    for chunk in per {
+        out.extend(chunk);
     }
-    logits
+    out
 }
 
 /// Patch-statistics descriptors: `[B,R,R,3] -> [B,96]`, L2-normalised.
 ///
 /// Mirrors `python/compile/kernels/patchstats.py`: a 4x4 patch grid, each
-/// patch contributing per-channel (mean, sqrt(var + 1e-6)).
+/// patch contributing per-channel (mean, sqrt(var + 1e-6)). Deliberately
+/// **not** batch-sharded: one sample is ~15k flops, far below the pool's
+/// handout cost, so the serial loop is the fast path.
 pub fn features(x: &[f32], b: usize, r: usize) -> Vec<f32> {
     let patch = r / PATCHES;
     let inv_n = 1.0 / (patch * patch) as f32;
@@ -686,6 +825,16 @@ mod tests {
         crate::util::rng::GoldenLcg::new(seed).fill(n)
     }
 
+    /// Whole-batch det loss + gradient over the sharded row kernel (what
+    /// `train_step` reduces to; the finite-difference check differentiates
+    /// this composition directly).
+    fn det_loss_grad(logits: &[f32], y_obj: &[f32], y_cls: &[f32]) -> (f32, Vec<f32>) {
+        let n = y_obj.len();
+        let obj_sum: f32 = y_obj.iter().sum::<f32>() + 1e-6;
+        let (bce, ce, dlogits) = det_loss_grad_rows(logits, y_obj, y_cls, n, obj_sum);
+        (bce / n as f32 + ce, dlogits)
+    }
+
     #[test]
     fn param_count_matches_layout() {
         // conv1 27x8+8, conv2 72x16+16, conv3 144x32+32, head 32x5+5.
@@ -723,10 +872,10 @@ mod tests {
             pixels: x,
             labels: Labels::Det { obj, cls },
         };
-        let first = train_step(Task::Det, &mut theta, &mut mom, &batch, b, 0.03);
+        let first = train_step(Task::Det, &mut theta, &mut mom, &batch, b, 0.03, Exec::serial());
         let mut best = first;
         for _ in 0..40 {
-            let l = train_step(Task::Det, &mut theta, &mut mom, &batch, b, 0.03);
+            let l = train_step(Task::Det, &mut theta, &mut mom, &batch, b, 0.03, Exec::serial());
             best = best.min(l);
         }
         assert!(first.is_finite() && best.is_finite());
@@ -752,10 +901,10 @@ mod tests {
             pixels: x,
             labels: Labels::Seg { mask },
         };
-        let first = train_step(Task::Seg, &mut theta, &mut mom, &batch, b, 0.03);
+        let first = train_step(Task::Seg, &mut theta, &mut mom, &batch, b, 0.03, Exec::serial());
         let mut best = first;
         for _ in 0..40 {
-            let l = train_step(Task::Seg, &mut theta, &mut mom, &batch, b, 0.03);
+            let l = train_step(Task::Seg, &mut theta, &mut mom, &batch, b, 0.03, Exec::serial());
             best = best.min(l);
         }
         assert!(best < first * 0.8, "{first} -> best {best}");
@@ -821,7 +970,7 @@ mod tests {
         let (b, r) = (INFER_BATCH, 32usize);
         let theta = he_init(Task::Det, 21);
         let x = lcg(b * r * r * 3, 23);
-        let (obj, cls) = infer_det(&theta, &x, b, r);
+        let (obj, cls) = infer_det(&theta, &x, b, r, Exec::serial());
         assert_eq!(obj.len(), b * GRID * GRID);
         assert_eq!(cls.len(), b * GRID * GRID * K);
         assert!(obj.iter().all(|p| (0.0..=1.0).contains(p)));
@@ -830,7 +979,7 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-4);
         }
         let theta_s = he_init(Task::Seg, 22);
-        let probs = infer_seg(&theta_s, &x, b, r);
+        let probs = infer_seg(&theta_s, &x, b, r, Exec::serial());
         assert_eq!(probs.len(), b * (r / 4) * (r / 4) * HEAD_OUT);
         for row in probs.chunks(HEAD_OUT) {
             let s: f32 = row.iter().sum();
@@ -868,8 +1017,77 @@ mod tests {
                     cls: vec![0.0; TRAIN_BATCH * GRID * GRID * K],
                 },
             };
-            let loss = train_step(Task::Det, &mut theta, &mut mom, &batch, TRAIN_BATCH, 0.01);
+            let loss = train_step(
+                Task::Det,
+                &mut theta,
+                &mut mom,
+                &batch,
+                TRAIN_BATCH,
+                0.01,
+                Exec::serial(),
+            );
             assert!(loss.is_finite(), "det r{r}");
         }
+    }
+
+    /// Batch sharding's determinism contract: pool widths 1 and 4 produce
+    /// bit-identical parameters, momentum, losses, and inference outputs.
+    #[test]
+    fn sharded_kernels_bit_identical_at_pool_sizes_1_and_4() {
+        let par_pool = Pool::new(3);
+        let par = Exec {
+            pool: &par_pool,
+            threads: 4,
+        };
+        let (b, r) = (TRAIN_BATCH, 16usize);
+        let x = lcg(b * r * r * 3, 41);
+        let obj: Vec<f32> = lcg(b * GRID * GRID, 43)
+            .into_iter()
+            .map(|v| if v > 0.6 { 1.0 } else { 0.0 })
+            .collect();
+        let mut cls = vec![0.0f32; b * GRID * GRID * K];
+        for (i, chunk) in cls.chunks_mut(K).enumerate() {
+            chunk[i % K] = 1.0;
+        }
+        let det_batch = TrainBatch {
+            res: r,
+            pixels: x.clone(),
+            labels: Labels::Det { obj, cls },
+        };
+        let sd = r / 4;
+        let mut mask = vec![0.0f32; b * sd * sd * HEAD_OUT];
+        for (i, chunk) in mask.chunks_mut(HEAD_OUT).enumerate() {
+            chunk[(i * 3 + 1) % HEAD_OUT] = 1.0;
+        }
+        let seg_batch = TrainBatch {
+            res: r,
+            pixels: x.clone(),
+            labels: Labels::Seg { mask },
+        };
+        for (task, batch) in [(Task::Det, &det_batch), (Task::Seg, &seg_batch)] {
+            let mut theta_a = he_init(task, 47);
+            let mut mom_a = vec![0.0f32; theta_a.len()];
+            let mut theta_b = theta_a.clone();
+            let mut mom_b = mom_a.clone();
+            for step in 0..5 {
+                let la = train_step(task, &mut theta_a, &mut mom_a, batch, b, 0.03, Exec::serial());
+                let lb = train_step(task, &mut theta_b, &mut mom_b, batch, b, 0.03, par);
+                assert_eq!(la.to_bits(), lb.to_bits(), "{task:?} loss step {step}");
+            }
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&theta_a), bits(&theta_b), "{task:?} theta diverged");
+            assert_eq!(bits(&mom_a), bits(&mom_b), "{task:?} momentum diverged");
+        }
+        // Inference: identical outputs, bit for bit.
+        let theta = he_init(Task::Det, 53);
+        let xi = lcg(INFER_BATCH * 32 * 32 * 3, 59);
+        let (obj_s, cls_s) = infer_det(&theta, &xi, INFER_BATCH, 32, Exec::serial());
+        let (obj_p, cls_p) = infer_det(&theta, &xi, INFER_BATCH, 32, par);
+        assert_eq!(obj_s, obj_p);
+        assert_eq!(cls_s, cls_p);
+        let theta_seg = he_init(Task::Seg, 61);
+        let seg_s = infer_seg(&theta_seg, &xi, INFER_BATCH, 32, Exec::serial());
+        let seg_p = infer_seg(&theta_seg, &xi, INFER_BATCH, 32, par);
+        assert_eq!(seg_s, seg_p);
     }
 }

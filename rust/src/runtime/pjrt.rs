@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use super::engine::{DetPred, EngineStats, Labels, ModelState, SegPred, StatsCell, TrainBatch};
 use super::manifest::{Manifest, Task};
+use crate::util::pool::{self, Pool};
 
 /// The PJRT engine.
 pub struct Engine {
@@ -27,10 +28,14 @@ pub struct Engine {
     pub manifest: Manifest,
     executables: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     stats: StatsCell,
+    /// Persistent worker set for the coordinator's eval fan-outs and the
+    /// fleet driver (this backend's own execution stays serialized behind
+    /// the compile-cache lock, so the kernels don't shard here).
+    pool: Pool,
 }
 
 // Compile-time guard: the coordinator's eval fan-outs and the fleet driver
-// share `&Engine` across scoped threads, so this backend must be `Sync`
+// share `&Engine` across pool workers, so this backend must be `Sync`
 // like the native one. If the `xla` handle types turn out not to be
 // thread-safe, this single assertion fails with a clear message instead of
 // E0277 at every pool call site — wrap `client`/`executables` in the
@@ -50,7 +55,13 @@ impl Engine {
             manifest,
             executables: Mutex::new(HashMap::new()),
             stats: StatsCell::default(),
+            pool: Pool::new(pool::default_threads().saturating_sub(1)),
         })
+    }
+
+    /// The engine's persistent worker set (see the native engine's docs).
+    pub fn pool(&self) -> &Pool {
+        &self.pool
     }
 
     /// Default artifacts location (crate-root `artifacts/`).

@@ -136,6 +136,14 @@ pub struct SystemConfig {
     /// reduced in index order, so any value >= 1 produces byte-identical
     /// runs; this knob only trades wall-clock for cores.
     pub eval_threads: usize,
+    /// Memoise eval-frame renders between world advances: the
+    /// twice-per-micro-window job evals, the end-of-window per-camera
+    /// pass, and the regroup matrix then render each (camera, salt) batch
+    /// once instead of once per consumer. Renders are pure functions of
+    /// the frozen world state, so cached batches are bit-identical to
+    /// fresh ones (an A/B test asserts the event logs match); disable only
+    /// to measure that claim.
+    pub frame_cache: bool,
 }
 
 impl SystemConfig {
@@ -160,6 +168,7 @@ impl SystemConfig {
             auto_regroup: true,
             seed: 7,
             eval_threads: crate::util::pool::default_threads(),
+            frame_cache: true,
         }
     }
 

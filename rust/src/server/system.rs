@@ -16,7 +16,8 @@
 //! executables on frames rendered by the scene simulator and degraded by
 //! the encoder model.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -29,7 +30,6 @@ use crate::runtime::{batch, Engine, ModelState};
 use crate::scene::{Frame, World};
 use crate::teacher::Teacher;
 use crate::transmission::{baseline_plan, ams_plan, Controller, GpuAllocationInfo, TransmissionPlan};
-use crate::util::pool;
 use crate::util::rng::Pcg32;
 use crate::util::stats::l2;
 use crate::video::{degrade, transport_window};
@@ -46,6 +46,66 @@ const MAX_FRAMES_PER_MW: usize = 150;
 pub type MembershipSnapshot = Vec<(usize, Vec<usize>)>;
 /// Evaluation resolution (the device's live stream).
 const EVAL_RES: usize = 32;
+
+/// Memoises [`World::eval_frames`] renders between world advances.
+///
+/// `World::eval_frames` is a pure function of the frozen world state and
+/// its `(cam, res, n, salt)` arguments, and the coordinator re-requests
+/// identical batches several times per window: `train_micro_window`
+/// evaluates the picked job before *and* after training with the same
+/// salts, and every consumer of a job's model re-renders its members'
+/// streams. The cache hands all of them one `Arc`'d render per key; the
+/// system clears it whenever the world advances (every micro-window), so a
+/// hit can never observe stale drift state or camera motion — cached
+/// batches are bit-identical to fresh renders by construction, which the
+/// cache-on/off A/B test asserts end to end.
+///
+/// Thread-safe because eval fan-out workers fetch through it concurrently;
+/// the lock is held only for lookup/insert, never while rendering (two
+/// workers racing on one key render identical frames and keep the first).
+pub(crate) struct FrameCache {
+    enabled: bool,
+    map: Mutex<HashMap<(usize, usize, usize, u64), Arc<Vec<Frame>>>>,
+}
+
+impl FrameCache {
+    fn new(enabled: bool) -> FrameCache {
+        FrameCache {
+            enabled,
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Fetch-or-render camera `cam`'s eval batch.
+    fn eval_frames(
+        &self,
+        world: &World,
+        cam: usize,
+        res: usize,
+        n: usize,
+        salt: u64,
+    ) -> Arc<Vec<Frame>> {
+        if !self.enabled {
+            return Arc::new(world.eval_frames(cam, res, n, salt));
+        }
+        let key = (cam, res, n, salt);
+        if let Some(hit) = self.map.lock().expect("frame cache poisoned").get(&key) {
+            return hit.clone();
+        }
+        let rendered = Arc::new(world.eval_frames(cam, res, n, salt));
+        self.map
+            .lock()
+            .expect("frame cache poisoned")
+            .entry(key)
+            .or_insert(rendered)
+            .clone()
+    }
+
+    /// Drop every entry; called whenever the world advances.
+    fn invalidate(&self) {
+        self.map.lock().expect("frame cache poisoned").clear();
+    }
+}
 
 /// Camera-side agent state (indexed by camera id in `System::cams`).
 pub(crate) struct CamAgent {
@@ -73,9 +133,9 @@ pub(crate) struct CamAgent {
 ///
 /// The engine borrow is **shared**: the engine's state is immutable
 /// (manifest) plus atomic (stats), so independent evaluations fan out
-/// across the [`pool`] workers and several systems can run concurrently
-/// over one engine (the fleet driver). All mutable training state lives in
-/// each job's [`ModelState`].
+/// across the engine's persistent worker pool and several systems can run
+/// concurrently over one engine (the fleet driver). All mutable training
+/// state lives in each job's [`ModelState`].
 pub(crate) struct System<'e> {
     pub(crate) cfg: SystemConfig,
     pub(crate) world: World,
@@ -96,6 +156,8 @@ pub(crate) struct System<'e> {
     pub(crate) shares: BTreeMap<usize, f64>,
     /// The typed observation stream (replaces the old log vectors).
     pub(crate) events: EventBus,
+    /// Per-(cam, salt) eval-frame render cache, cleared on world advance.
+    eval_cache: FrameCache,
     rng: Pcg32,
     pretrained: Vec<f32>,
 }
@@ -146,6 +208,7 @@ impl<'e> System<'e> {
         }
         let allocator = cfg.policy.alloc.build();
         let n_cams = cams.len();
+        let eval_cache = FrameCache::new(cfg.frame_cache);
         Ok(System {
             teacher: Teacher::new(cfg.teacher.clone(), cfg.seed ^ 0x7ea),
             tracker: ResponseTracker::new(cfg.response_threshold),
@@ -164,6 +227,7 @@ impl<'e> System<'e> {
             allocator,
             shares: BTreeMap::new(),
             events: EventBus::new(),
+            eval_cache,
             pretrained,
         })
     }
@@ -269,8 +333,8 @@ impl<'e> System<'e> {
             // eval (the whole point of §3.3's pre-filtering); the ablation
             // switch makes EVERY job a candidate and pays for it. The
             // candidate evals are independent, so they fan out across the
-            // worker pool; index-ordered reduction keeps the decision (and
-            // the event stream) identical at any pool size.
+            // engine's worker pool; index-ordered reduction keeps the
+            // decision (and the event stream) identical at any pool size.
             let mut candidates: Vec<(usize, &[f32])> = Vec::new();
             for job in &self.group_meta {
                 let candidate = !self.cfg.grouping.metadata_filter
@@ -283,7 +347,8 @@ impl<'e> System<'e> {
             }
             let engine = self.engine;
             let task = self.cfg.task;
-            let scored = pool::try_map(self.cfg.eval_threads, &candidates, |_, &(id, theta)| {
+            let pool = engine.pool();
+            let scored = pool.try_map(self.cfg.eval_threads, &candidates, |_, &(id, theta)| {
                 eval_model(engine, task, theta, &frames).map(|acc| (id, acc))
             })?;
             let evals: BTreeMap<usize, f32> = scored.into_iter().collect();
@@ -459,20 +524,24 @@ impl<'e> System<'e> {
 
     /// Mean accuracy of a job's model over its members' live streams. The
     /// per-member evals are independent (held-out frames are derived from
-    /// (window, cam) salts, not the run RNG) and fan out across the worker
-    /// pool; the sum reduces in member order, so the result is bit-equal
-    /// to the serial loop at any pool size.
+    /// (window, cam) salts, not the run RNG) and fan out across the
+    /// engine's worker pool; the sum reduces in member order, so the
+    /// result is bit-equal to the serial loop at any pool size. Frames
+    /// come from the eval cache: the pre-/post-training eval pair of a
+    /// micro-window shares one render per member.
     fn eval_job(&self, job_idx: usize) -> Result<f32> {
         let job = &self.jobs[job_idx];
         let theta = &job.model.theta;
         let engine = self.engine;
         let task = self.cfg.task;
         let world = &self.world;
+        let cache = &self.eval_cache;
         let eval_frames = self.cfg.eval_frames;
         let window = self.window_idx as u64;
-        let accs = pool::try_map(self.cfg.eval_threads, &job.members, |_, &cam| {
+        let pool = engine.pool();
+        let accs = pool.try_map(self.cfg.eval_threads, &job.members, |_, &cam| {
             let salt = window * 104_729 + cam as u64 * 7 + 3;
-            let frames = world.eval_frames(cam, EVAL_RES, eval_frames, salt);
+            let frames = cache.eval_frames(world, cam, EVAL_RES, eval_frames, salt);
             eval_model(engine, task, theta, &frames)
         })?;
         Ok(accs.iter().sum::<f32>() / job.members.len().max(1) as f32)
@@ -556,17 +625,22 @@ impl<'e> System<'e> {
             });
         }
         // Per-camera accuracy measurement (live model on live stream),
-        // fanned out across the worker pool — one eval per camera, reduced
-        // in camera order so downstream bookkeeping is order-identical.
+        // fanned out across the engine's worker pool — one eval per
+        // camera, reduced in camera order so downstream bookkeeping is
+        // order-identical. Renders go through the eval cache, so cameras
+        // sharing a (cam, salt) key with a later consumer this window
+        // render once.
         let accs = {
             let engine = self.engine;
             let task = self.cfg.task;
             let world = &self.world;
+            let cache = &self.eval_cache;
             let eval_frames = self.cfg.eval_frames;
             let window = self.window_idx as u64;
-            pool::try_map(self.cfg.eval_threads, &self.cams, |cam, agent| {
+            let pool = engine.pool();
+            pool.try_map(self.cfg.eval_threads, &self.cams, |cam, agent| {
                 let salt = window * 31_337 + cam as u64;
-                let frames = world.eval_frames(cam, EVAL_RES, eval_frames, salt);
+                let frames = cache.eval_frames(world, cam, EVAL_RES, eval_frames, salt);
                 eval_model(engine, task, &agent.theta, &frames)
             })?
         };
@@ -646,9 +720,11 @@ impl<'e> System<'e> {
     fn regroup(&mut self) -> Result<()> {
         // Evaluate every (job, member) pair on fresh member data — the
         // largest eval fan-out in the loop (|jobs| x |members| calls), run
-        // on the worker pool. Pair order (job-major, member order) matches
-        // the old serial nesting, and the BTreeMap reduction is keyed, so
-        // the grouping decision is identical at any pool size.
+        // on the engine's worker pool. Pair order (job-major, member
+        // order) matches the old serial nesting, and the BTreeMap
+        // reduction is keyed, so the grouping decision is identical at any
+        // pool size. The eval cache collapses a camera's render to once
+        // per window here no matter how many jobs evaluate it.
         let evals: BTreeMap<(usize, usize), f32> = {
             let mut pairs: Vec<(usize, usize, &[f32])> = Vec::new();
             for job in &self.jobs {
@@ -659,14 +735,15 @@ impl<'e> System<'e> {
             let engine = self.engine;
             let task = self.cfg.task;
             let world = &self.world;
+            let cache = &self.eval_cache;
             let eval_frames = self.cfg.eval_frames;
             let window = self.window_idx as u64;
-            let scored =
-                pool::try_map(self.cfg.eval_threads, &pairs, |_, &(job_id, cam, theta)| {
-                    let salt = window * 523 + cam as u64 * 11;
-                    let frames = world.eval_frames(cam, EVAL_RES, eval_frames, salt);
-                    eval_model(engine, task, theta, &frames).map(|acc| ((job_id, cam), acc))
-                })?;
+            let pool = engine.pool();
+            let scored = pool.try_map(self.cfg.eval_threads, &pairs, |_, &(job_id, cam, theta)| {
+                let salt = window * 523 + cam as u64 * 11;
+                let frames = cache.eval_frames(world, cam, EVAL_RES, eval_frames, salt);
+                eval_model(engine, task, theta, &frames).map(|acc| ((job_id, cam), acc))
+            })?;
             scored.into_iter().collect()
         };
         let now = self.now();
@@ -736,6 +813,8 @@ impl<'e> System<'e> {
         for mw in 0..w_eff {
             self.net.run(mw_secs);
             self.world.advance(mw_secs);
+            // The world moved: every cached eval render is stale.
+            self.eval_cache.invalidate();
             self.collect_data(mw_secs)?;
             self.detect_and_request()?;
             self.train_micro_window(mw, mw_secs)?;

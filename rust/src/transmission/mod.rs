@@ -19,6 +19,7 @@
 //! distant objects), mobile mounts favour frame rate (fast scene change).
 
 use crate::scene::Mount;
+use crate::util::stats::nan_ranks_last;
 use crate::video::{SamplingConfig, BPP_LOSSLESS, FPS_CHOICES, RES_CHOICES};
 
 /// GPU budget levels (pixels/second) the table is indexed by. Retraining
@@ -36,16 +37,34 @@ pub struct ProfileTable {
 impl ProfileTable {
     /// Build from measured (budget level, config, accuracy) triples — the
     /// output of the Fig. 5 profiling sweep.
+    ///
+    /// NaN accuracies (a profiling cell whose eval diverged) rank below
+    /// every real measurement instead of panicking the argmax, and ties
+    /// break deterministically to the **lowest-index** config of the
+    /// level, so a profile table never depends on float quirks or
+    /// iteration luck.
     pub fn from_measurements(measured: &[(usize, SamplingConfig, f32)]) -> ProfileTable {
         let mut entries = Vec::with_capacity(BUDGET_LEVELS.len());
         for level in 0..BUDGET_LEVELS.len() {
-            let best = measured
-                .iter()
-                .filter(|(l, _, _)| *l == level)
-                .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
-                .map(|(_, c, _)| *c)
+            let mut best: Option<(SamplingConfig, f32)> = None;
+            for (l, c, a) in measured {
+                if *l != level {
+                    continue;
+                }
+                // Strict improvement only: equal (and all-NaN) accuracies
+                // keep the earliest — lowest-index — measurement.
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => nan_ranks_last(*a) > nan_ranks_last(*b),
+                };
+                if better {
+                    best = Some((*c, *a));
+                }
+            }
+            let cfg = best
+                .map(|(c, _)| c)
                 .unwrap_or(SamplingConfig { fps: 1.0, res: 32 });
-            entries.push(best);
+            entries.push(cfg);
         }
         ProfileTable { entries }
     }
@@ -272,6 +291,31 @@ mod tests {
         let t = ProfileTable::from_measurements(&measured);
         assert_eq!(t.entries[0], SamplingConfig { fps: 0.5, res: 32 });
         assert_eq!(t.entries[1], SamplingConfig { fps: 2.0, res: 32 });
+    }
+
+    #[test]
+    fn from_measurements_is_nan_safe_with_low_index_ties() {
+        // Regression: a NaN accuracy used to panic the per-level argmax
+        // through `partial_cmp(..).unwrap()`. NaN must rank below every
+        // real measurement, ties must keep the lowest-index config, and an
+        // all-NaN level must deterministically keep its first config.
+        let measured = vec![
+            (0, SamplingConfig { fps: 1.0, res: 16 }, f32::NAN),
+            (0, SamplingConfig { fps: 0.5, res: 32 }, 0.3),
+            (0, SamplingConfig { fps: 2.0, res: 48 }, 0.3), // tie: loses to index 1
+            (0, SamplingConfig { fps: 4.0, res: 16 }, 0.1),
+            (1, SamplingConfig { fps: 2.0, res: 16 }, f32::NAN),
+            (1, SamplingConfig { fps: 8.0, res: 48 }, f32::NAN),
+        ];
+        let t = ProfileTable::from_measurements(&measured);
+        assert_eq!(t.entries[0], SamplingConfig { fps: 0.5, res: 32 });
+        assert_eq!(
+            t.entries[1],
+            SamplingConfig { fps: 2.0, res: 16 },
+            "all-NaN level keeps its lowest-index config"
+        );
+        // Unmeasured levels still fall back to the default.
+        assert_eq!(t.entries[2], SamplingConfig { fps: 1.0, res: 32 });
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Foundation substrates: RNG, JSON, CLI parsing, logging, statistics,
-//! property testing, a microbenchmark harness, and a scoped worker pool.
+//! property testing, a microbenchmark harness, and a persistent worker
+//! pool.
 //!
 //! These replace `rand` / `serde` / `clap` / `log` / `proptest` /
 //! `criterion` / `rayon`, none of which are available in the offline

@@ -1,38 +1,97 @@
-//! Scoped worker pool with **index-ordered reduction** (std-only).
+//! Persistent worker pool with **index-ordered reduction** (std-only).
 //!
 //! The coordinator's hot loops fan out dozens-to-hundreds of independent
 //! `eval_model` calls per window (candidate evals in request placement,
 //! per-member job evals, the per-camera window pass, the full regroup
-//! matrix) and the experiment drivers fan out whole runs. This module is
-//! the one concurrency primitive they all share:
+//! matrix), the sharded native kernels fan out the batch dimension of
+//! every train/infer call, and the experiment drivers fan out whole runs.
+//! This module is the one concurrency primitive they all share.
 //!
-//! * built on [`std::thread::scope`] so workers may borrow the caller's
-//!   stack (no `'static` bounds, no channels, no extra dependencies);
-//! * work is handed out by an atomic cursor (cheap dynamic balancing);
-//! * results are written back **by item index**, so the reduced `Vec` is
-//!   identical to the serial `items.iter().map(f).collect()` — byte for
-//!   byte — at any thread count. Determinism tests rely on this.
+//! # Design
 //!
-//! `threads <= 1` (or a single item) short-circuits to a plain serial map
-//! on the caller thread, so a pool size of 1 has zero overhead and zero
-//! behavioural difference.
+//! A [`Pool`] owns a fixed set of **persistent, parked worker threads**
+//! (spawned once, woken by condvar when work arrives). Earlier revisions
+//! spawned fresh `std::thread::scope` threads per map call; eval items are
+//! ms-scale and kernel shards are sub-ms, so the spawn/join cost was pure
+//! overhead on the micro-window hot path. The execution contract:
+//!
+//! * work is handed out by an **atomic cursor** (cheap dynamic balancing);
+//! * results are written back **by item index** into per-slot cells — one
+//!   writer per slot, no shared result lock — so the reduced `Vec` is
+//!   identical to the serial `items.iter().map(f).collect()`, byte for
+//!   byte, at any thread count. Determinism tests rely on this;
+//! * the **submitting caller participates**: it drains the same cursor
+//!   from its own thread, then waits only for items still in flight on
+//!   workers. This also makes nested maps (a pool worker submitting a
+//!   sub-map onto the same pool) deadlock-free by construction — a
+//!   saturated pool degrades to the caller running its own items serially;
+//! * fan-outs below [`SERIAL_BELOW`] items (or `threads <= 1`) run as a
+//!   plain serial map on the caller with zero pool interaction and zero
+//!   behavioural difference.
+//!
+//! Lifecycle: the engine owns a pool for its whole life (workers park
+//! between windows and die when the engine is dropped); the module-level
+//! [`map`]/[`try_map`]/[`map_owned`] helpers share one lazily-spawned
+//! process-global pool for engine-less callers (benches, tests).
 
+use std::any::Any;
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Fan-outs below this many items skip the pool entirely: the
+/// handout/notify overhead cannot be amortised over a single item.
+const SERIAL_BELOW: usize = 2;
 
 /// Default worker count: the `ECCO_THREADS` environment variable when set
-/// (CI pins this to 1), otherwise the machine's available parallelism,
-/// capped at 8 (eval items are coarse; more workers only add contention).
+/// (CI pins this to 1 and 4), otherwise the machine's available
+/// parallelism, capped at 8 (eval items are coarse; more workers only add
+/// contention). An unparsable override is ignored **loudly** — a one-time
+/// warning — so a typo'd CI pin can't silently fall back to machine
+/// parallelism and masquerade as a determinism bug.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("ECCO_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            return n.max(1);
-        }
+    match std::env::var("ECCO_THREADS") {
+        Ok(raw) => match parse_thread_override(&raw) {
+            Some(n) => n,
+            None => {
+                warn_bad_override_once(&raw);
+                machine_parallelism()
+            }
+        },
+        Err(_) => machine_parallelism(),
     }
+}
+
+/// Parse an `ECCO_THREADS` override: a base-10 integer, floored at 1.
+/// Empty and garbage values yield `None` (the caller warns and falls back
+/// to the machine default).
+pub(crate) fn parse_thread_override(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
+fn machine_parallelism() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
         .min(8)
+}
+
+fn warn_bad_override_once(raw: &str) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        crate::util::logger::log(
+            crate::util::logger::Level::Warn,
+            module_path!(),
+            &format!(
+                "ignoring unparsable ECCO_THREADS={raw:?}; \
+                 using machine parallelism ({})",
+                machine_parallelism()
+            ),
+        );
+    });
 }
 
 /// Eval workers each of `runs` concurrent runs should use when a fleet
@@ -44,47 +103,349 @@ pub fn per_run_threads(fleet_threads: usize, runs: usize) -> usize {
     (default_threads() / fleet_workers).max(1)
 }
 
-/// Map `f` over `items` on up to `threads` workers; the result vector is
-/// index-ordered (`out[i] == f(i, &items[i])`) regardless of thread count.
+// ---------------------------------------------------------------------------
+// The persistent pool
+// ---------------------------------------------------------------------------
+
+/// One fan-out in flight on the pool.
 ///
-/// Panics in `f` propagate to the caller when the scope joins.
+/// The closure is reached through a type-erased `(call, ctx)` pair rather
+/// than a trait object so no fat-pointer lifetime juggling is needed: the
+/// submitting caller blocks in [`Pool::run_job`] until `done == n`, which
+/// keeps the closure (and everything it borrows) alive for as long as any
+/// worker can possibly touch `ctx`.
+struct Job {
+    /// Monomorphised trampoline: `call(ctx, i)` runs item `i`.
+    call: unsafe fn(*const (), usize),
+    ctx: *const (),
+    n: usize,
+    /// Next item index to hand out.
+    cursor: AtomicUsize,
+    /// Items fully finished (incremented *after* the item ran or unwound);
+    /// `done == n` is the completion signal.
+    done: AtomicUsize,
+    /// Threads currently working this job (the caller counts as one).
+    active: AtomicUsize,
+    /// Concurrency cap for this job: caller + extra pool workers.
+    max_workers: usize,
+    /// First panic payload from any item; rethrown on the caller.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Completion handshake for the caller's final wait.
+    wait: Mutex<()>,
+    cv: Condvar,
+}
+
+// SAFETY: `ctx` points at a `Sync` closure owned by the stack frame of
+// `Pool::run_job`, which does not return before every handed-out item has
+// finished (`done == n`), so sharing the pointer with worker threads is
+// sound for the job's whole reachable lifetime.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.n
+    }
+
+    /// Drain the cursor from the current thread, recording panics. The
+    /// `done` increment uses release ordering so the caller's acquire load
+    /// of `done == n` sees every slot write.
+    fn work(&self) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            let outcome =
+                panic::catch_unwind(AssertUnwindSafe(|| unsafe { (self.call)(self.ctx, i) }));
+            if let Err(payload) = outcome {
+                let mut slot = self.panic.lock().expect("pool panic slot poisoned");
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                // Lock-then-notify handshake with `run_job`'s final wait:
+                // the waiter re-checks `done` under this lock, so the
+                // wakeup cannot be lost.
+                drop(self.wait.lock().expect("pool wait lock poisoned"));
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolQueue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    /// Wakes parked workers on job arrival or shutdown.
+    cv: Condvar,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut q = shared.queue.lock().expect("pool queue poisoned");
+    loop {
+        // Drop finished jobs, then join the first one with spare slots.
+        q.jobs.retain(|j| !j.exhausted());
+        let picked = q.jobs.iter().find_map(|j| {
+            if j.active.fetch_add(1, Ordering::Relaxed) < j.max_workers {
+                Some(j.clone())
+            } else {
+                j.active.fetch_sub(1, Ordering::Relaxed);
+                None
+            }
+        });
+        match picked {
+            Some(job) => {
+                drop(q);
+                job.work();
+                job.active.fetch_sub(1, Ordering::Relaxed);
+                q = shared.queue.lock().expect("pool queue poisoned");
+            }
+            None if q.shutdown => return,
+            None => q = shared.cv.wait(q).expect("pool queue poisoned"),
+        }
+    }
+}
+
+/// A persistent set of parked worker threads plus the job queue they
+/// serve. See the module docs for the execution contract.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `workers` parked worker threads. Zero workers is valid (every
+    /// map runs serially on the caller), which is what `ECCO_THREADS=1`
+    /// produces.
+    pub fn new(workers: usize) -> Pool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("ecco-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, workers }
+    }
+
+    /// A shared zero-worker pool: maps on it always run serially on the
+    /// caller thread. For tests and explicitly-serial call sites.
+    pub fn serial() -> &'static Pool {
+        static SERIAL: OnceLock<Pool> = OnceLock::new();
+        SERIAL.get_or_init(|| Pool::new(0))
+    }
+
+    /// Worker threads owned by this pool (the caller participates on top).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Maximum concurrency a map on this pool can reach: the owned workers
+    /// plus the submitting caller.
+    pub fn parallelism(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Submit a job of `n` items, drain it from the calling thread, then
+    /// wait for items in flight on workers; rethrows the first item panic.
+    fn run_job<F: Fn(usize) + Sync>(&self, n: usize, extra_workers: usize, f: &F) {
+        /// Monomorphised trampoline back from the erased context pointer.
+        unsafe fn trampoline<F: Fn(usize)>(ctx: *const (), i: usize) {
+            (*(ctx as *const F))(i);
+        }
+        let job = Arc::new(Job {
+            call: trampoline::<F>,
+            ctx: f as *const F as *const (),
+            n,
+            cursor: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            active: AtomicUsize::new(1), // the caller
+            max_workers: extra_workers.saturating_add(1),
+            panic: Mutex::new(None),
+            wait: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.jobs.push_back(job.clone());
+        }
+        self.shared.cv.notify_all();
+        // The caller is worker zero.
+        job.work();
+        // Wait for stragglers on pool workers. The timeout is pure
+        // belt-and-braces: the lock-then-notify handshake in `Job::work`
+        // already rules out lost wakeups.
+        {
+            let mut g = job.wait.lock().expect("pool wait lock poisoned");
+            while job.done.load(Ordering::Acquire) < job.n {
+                let waited = job.cv.wait_timeout(g, Duration::from_millis(1));
+                g = waited.expect("pool wait lock poisoned").0;
+            }
+        }
+        // Remove our queue entry if no worker got around to it.
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        let payload = job.panic.lock().expect("pool panic slot poisoned").take();
+        if let Some(p) = payload {
+            panic::resume_unwind(p);
+        }
+    }
+
+    /// Map `f` over `items` on up to `threads` concurrent threads (the
+    /// caller plus `threads - 1` pool workers); the result vector is
+    /// index-ordered (`out[i] == f(i, &items[i])`) regardless of thread
+    /// count. Panics in `f` propagate to the caller after the fan-out
+    /// settles.
+    pub fn map<T, R, F>(&self, threads: usize, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.map_n(threads, items.len(), |i| f(i, &items[i]))
+    }
+
+    /// [`Pool::map`] over the index range `0..n` (the sharded kernels'
+    /// shape: the items are implicit in the closure's captures).
+    pub fn map_n<R, F>(&self, threads: usize, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let workers = threads.max(1).min(n);
+        if workers <= 1 || n < SERIAL_BELOW {
+            return (0..n).map(f).collect();
+        }
+        let slots: Vec<Slot<R>> = (0..n).map(|_| Slot::empty()).collect();
+        let runner = |i: usize| {
+            let r = f(i);
+            // SAFETY: the cursor hands index `i` to exactly one thread.
+            unsafe { *slots[i].0.get() = Some(r) };
+        };
+        self.run_job(n, workers - 1, &runner);
+        slots
+            .into_iter()
+            .map(|s| s.0.into_inner().expect("every slot filled by a worker"))
+            .collect()
+    }
+
+    /// Fallible [`Pool::map`]: runs every item, then surfaces the
+    /// **lowest-index** error (deterministic regardless of which worker
+    /// failed first).
+    pub fn try_map<T, R, E, F>(&self, threads: usize, items: &[T], f: F) -> Result<Vec<R>, E>
+    where
+        T: Sync,
+        R: Send,
+        E: Send,
+        F: Fn(usize, &T) -> Result<R, E> + Sync,
+    {
+        self.map(threads, items, f).into_iter().collect()
+    }
+
+    /// [`Pool::map`] over owned items (each consumed exactly once by one
+    /// thread); used by the fleet driver, where each item is a whole run
+    /// spec.
+    pub fn map_owned<T, R, F>(&self, threads: usize, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = threads.max(1).min(n);
+        if workers <= 1 || n < SERIAL_BELOW {
+            return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let src: Vec<Slot<T>> = items.into_iter().map(Slot::filled).collect();
+        let slots: Vec<Slot<R>> = (0..n).map(|_| Slot::empty()).collect();
+        let runner = |i: usize| {
+            // SAFETY: the cursor hands index `i` to exactly one thread, so
+            // each source item is taken once and each slot written once.
+            let item = unsafe { (*src[i].0.get()).take().expect("item taken twice") };
+            let r = f(i, item);
+            unsafe { *slots[i].0.get() = Some(r) };
+        };
+        self.run_job(n, workers - 1, &runner);
+        slots
+            .into_iter()
+            .map(|s| s.0.into_inner().expect("every slot filled by a worker"))
+            .collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A single-writer result cell: the atomic cursor guarantees exactly one
+/// thread touches each index, so no per-slot lock is needed (the old
+/// implementation funnelled every completion through one `Mutex<Vec<_>>`,
+/// serialising write-backs).
+struct Slot<V>(UnsafeCell<Option<V>>);
+
+// SAFETY: slot access is partitioned by item index (one thread per slot),
+// and the contained value only crosses threads by move — hence `V: Send`.
+unsafe impl<V: Send> Sync for Slot<V> {}
+
+impl<V> Slot<V> {
+    fn empty() -> Slot<V> {
+        Slot(UnsafeCell::new(None))
+    }
+
+    fn filled(v: V) -> Slot<V> {
+        Slot(UnsafeCell::new(Some(v)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Module-level helpers over the process-global pool
+// ---------------------------------------------------------------------------
+
+/// The process-global pool backing the module-level helpers, sized so
+/// caller + workers equals [`default_threads`]. Spawned on first use;
+/// engine-owned code paths use the engine's own pool instead.
+fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(default_threads().saturating_sub(1)))
+}
+
+/// [`Pool::map`] on the process-global pool.
 pub fn map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let n = items.len();
-    let workers = threads.max(1).min(n);
-    if workers <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
-    }
-    let cursor = AtomicUsize::new(0);
-    let mut init: Vec<Option<R>> = Vec::with_capacity(n);
-    init.resize_with(n, || None);
-    let slots = Mutex::new(init);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i, &items[i]);
-                slots.lock().expect("pool slots poisoned")[i] = Some(r);
-            });
-        }
-    });
-    slots
-        .into_inner()
-        .expect("pool slots poisoned")
-        .into_iter()
-        .map(|r| r.expect("every slot filled by a worker"))
-        .collect()
+    global().map(threads, items, f)
 }
 
-/// Fallible [`map`]: runs every item, then surfaces the **lowest-index**
-/// error (deterministic regardless of which worker failed first).
+/// [`Pool::try_map`] on the process-global pool.
 pub fn try_map<T, R, E, F>(threads: usize, items: &[T], f: F) -> Result<Vec<R>, E>
 where
     T: Sync,
@@ -92,50 +453,17 @@ where
     E: Send,
     F: Fn(usize, &T) -> Result<R, E> + Sync,
 {
-    map(threads, items, f).into_iter().collect()
+    global().try_map(threads, items, f)
 }
 
-/// [`map`] over owned items (each consumed exactly once by one worker);
-/// used by the fleet driver, where each item is a whole run spec.
+/// [`Pool::map_owned`] on the process-global pool.
 pub fn map_owned<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(usize, T) -> R + Sync,
 {
-    let n = items.len();
-    let workers = threads.max(1).min(n);
-    if workers <= 1 {
-        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
-    }
-    let handoff: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let cursor = AtomicUsize::new(0);
-    let mut init: Vec<Option<R>> = Vec::with_capacity(n);
-    init.resize_with(n, || None);
-    let slots = Mutex::new(init);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = handoff[i]
-                    .lock()
-                    .expect("pool handoff poisoned")
-                    .take()
-                    .expect("item taken twice");
-                let r = f(i, item);
-                slots.lock().expect("pool slots poisoned")[i] = Some(r);
-            });
-        }
-    });
-    slots
-        .into_inner()
-        .expect("pool slots poisoned")
-        .into_iter()
-        .map(|r| r.expect("every slot filled by a worker"))
-        .collect()
+    global().map_owned(threads, items, f)
 }
 
 #[cfg(test)]
@@ -167,6 +495,18 @@ mod tests {
     }
 
     #[test]
+    fn thread_override_parsing_covers_empty_and_garbage() {
+        assert_eq!(parse_thread_override("4"), Some(4));
+        assert_eq!(parse_thread_override("  4  "), Some(4));
+        assert_eq!(parse_thread_override("0"), Some(1), "zero floors to one");
+        assert_eq!(parse_thread_override(""), None, "empty value is rejected");
+        assert_eq!(parse_thread_override("   "), None);
+        assert_eq!(parse_thread_override("four"), None, "garbage is rejected");
+        assert_eq!(parse_thread_override("4x"), None);
+        assert_eq!(parse_thread_override("-2"), None);
+    }
+
+    #[test]
     fn map_handles_empty_and_single() {
         let empty: Vec<u32> = Vec::new();
         assert!(map(4, &empty, |_, &x| x).is_empty());
@@ -193,6 +533,62 @@ mod tests {
         let out = map_owned(4, items, |i, s| format!("{i}:{s}"));
         let want: Vec<String> = (0..11).map(|i| format!("{i}:s{i}")).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn persistent_pool_reuses_workers_across_many_maps() {
+        // Hundreds of small maps on one explicit pool: exercises the
+        // park/wake path the per-call scoped spawns never had.
+        let pool = Pool::new(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.parallelism(), 4);
+        let items: Vec<u64> = (0..23).collect();
+        let want: Vec<u64> = items.iter().enumerate().map(|(i, x)| x * 3 + i as u64).collect();
+        for _ in 0..200 {
+            let got = pool.map(4, &items, |i, &x| x * 3 + i as u64);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_on_the_caller() {
+        let pool = Pool::new(0);
+        let items: Vec<u32> = (0..9).collect();
+        assert_eq!(
+            pool.map(8, &items, |_, &x| x + 1),
+            (1..10).collect::<Vec<u32>>()
+        );
+    }
+
+    #[test]
+    fn nested_maps_on_one_pool_make_progress() {
+        // A worker (or the caller) submitting a sub-map onto the same pool
+        // must never deadlock: the submitter drains its own cursor.
+        let pool = Pool::new(2);
+        let outer: Vec<usize> = (0..8).collect();
+        let got = pool.map(3, &outer, |_, &i| {
+            let inner: Vec<usize> = (0..6).collect();
+            pool.map(3, &inner, |_, &j| i * 10 + j).iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..6).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pool_survives_item_panics() {
+        let pool = Pool::new(2);
+        let items: Vec<u32> = (0..12).collect();
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(3, &items, |_, &x| {
+                if x == 5 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        assert!(caught.is_err(), "item panic must propagate to the caller");
+        // The pool stays fully usable afterwards.
+        assert_eq!(pool.map(3, &items, |_, &x| x * 2)[5], 10);
     }
 
     #[test]

@@ -61,6 +61,18 @@ impl Welford {
 }
 
 /// Percentile of a sample set (linear interpolation, q in [0,1]).
+/// Rank key for NaN-safe descending/argmax comparisons: NaN maps below
+/// every real value (the "NaN ranks last" convention shared by the mAP
+/// candidate sort and the transmission profile argmax). Compare the
+/// returned keys with `total_cmp` for a total order.
+pub fn nan_ranks_last(v: f32) -> f32 {
+    if v.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        v
+    }
+}
+
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -146,6 +158,19 @@ pub fn l2(a: &[f32], b: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn nan_ranks_last_orders_below_everything() {
+        assert_eq!(nan_ranks_last(0.3), 0.3);
+        assert_eq!(nan_ranks_last(f32::NAN), f32::NEG_INFINITY);
+        assert_eq!(nan_ranks_last(-f32::NAN), f32::NEG_INFINITY);
+        let mut v = [0.2f32, f32::NAN, 0.9, f32::NEG_INFINITY];
+        v.sort_by(|a, b| nan_ranks_last(*b).total_cmp(&nan_ranks_last(*a)));
+        assert_eq!(v[0], 0.9);
+        assert_eq!(v[1], 0.2);
+        // NaN and -inf tie at the bottom (stable order preserved).
+        assert!(v[2].is_nan() && v[3] == f32::NEG_INFINITY);
+    }
 
     #[test]
     fn welford_matches_direct() {

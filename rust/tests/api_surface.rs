@@ -123,6 +123,34 @@ fn event_log_byte_identical_at_any_pool_size() {
 }
 
 #[test]
+fn event_log_byte_identical_with_frame_cache_disabled() {
+    // The eval-frame cache memoises pure renders of the frozen world
+    // state, invalidated on every world advance — so disabling it must
+    // not change a single byte of the run, including with the eval
+    // fan-out active (cache hits happen on pool workers).
+    let engine = Engine::open_default().unwrap();
+    let run_with = |cache: bool| -> (RunReport, String) {
+        let spec = small_spec(43).eval_threads(4).frame_cache(cache);
+        let report = Session::new(&engine, spec).unwrap().run().unwrap();
+        let jsonl: String = report
+            .events
+            .iter()
+            .map(|e| e.to_json().to_string_compact())
+            .collect::<Vec<_>>()
+            .join("\n");
+        (report, jsonl)
+    };
+    let (a, a_log) = run_with(true);
+    let (b, b_log) = run_with(false);
+    assert!(!a.events.is_empty());
+    assert_eq!(a_log, b_log, "frame cache must not change the event stream");
+    assert_eq!(a.window_acc, b.window_acc);
+    assert_eq!(a.cam_acc, b.cam_acc);
+    assert_eq!(a.alloc_log, b.alloc_log);
+    assert_eq!(a.membership, b.membership);
+}
+
+#[test]
 fn fleet_reports_match_sequential_runs_in_spec_order() {
     let engine = Engine::open_default().unwrap();
     let seeds = [31u64, 32];

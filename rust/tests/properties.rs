@@ -3,9 +3,11 @@
 //! on. Each property prints a replayable seed on failure.
 
 use ecco::net::{gaimd_weight, NetSim};
-use ecco::runtime::{Engine, Task};
+use ecco::runtime::native::{self, Exec};
+use ecco::runtime::{Engine, Labels, Task, TrainBatch};
 use ecco::scene::{render, Frame, SceneState};
 use ecco::server::eval_model;
+use ecco::util::pool::Pool;
 use ecco::util::{pool, prop};
 use ecco::video::{transport_window, SamplingConfig, BPP_FLOOR, BPP_LOSSLESS};
 
@@ -173,6 +175,84 @@ fn prop_parallel_eval_matrix_equals_serial() {
             return Err(format!(
                 "parallel matrix diverged (jobs={n_jobs} cams={n_cams} threads={threads})"
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_sharded_kernels_bit_identical_to_serial() {
+    // The sharded kernels' correctness contract: train-step gradients
+    // (observed through theta/momentum after the update) and infer_batch
+    // outputs at pool size 4 equal the serial pool-size-1 path bit for
+    // bit, across random batches, tasks, and resolutions.
+    let par_pool = Pool::new(3);
+    prop::check("batch-shard-bit-identical", 6, |g| {
+        let par = Exec {
+            pool: &par_pool,
+            threads: 4,
+        };
+        let r = [16usize, 32][g.usize(0, 1)];
+        let b = native::TRAIN_BATCH;
+        let seed = g.rng.next_u64();
+        let pixels: Vec<f32> = (0..b * r * r * 3).map(|_| g.f32(0.0, 1.0)).collect();
+        let seg_task = g.usize(0, 1) == 1;
+        let (task, labels) = if seg_task {
+            let sd = r / 4;
+            let mut mask = vec![0.0f32; b * sd * sd * native::HEAD_OUT];
+            for chunk in mask.chunks_mut(native::HEAD_OUT) {
+                chunk[g.usize(0, native::HEAD_OUT - 1)] = 1.0;
+            }
+            (Task::Seg, Labels::Seg { mask })
+        } else {
+            let obj: Vec<f32> = (0..b * native::GRID * native::GRID)
+                .map(|_| if g.usize(0, 2) == 0 { 1.0 } else { 0.0 })
+                .collect();
+            let mut cls = vec![0.0f32; b * native::GRID * native::GRID * native::K];
+            for chunk in cls.chunks_mut(native::K) {
+                chunk[g.usize(0, native::K - 1)] = 1.0;
+            }
+            (Task::Det, Labels::Det { obj, cls })
+        };
+        let batch = TrainBatch {
+            res: r,
+            pixels: pixels.clone(),
+            labels,
+        };
+        let mut theta_s = native::he_init(task, seed);
+        let mut mom_s = vec![0.0f32; theta_s.len()];
+        let mut theta_p = theta_s.clone();
+        let mut mom_p = mom_s.clone();
+        let ser = Exec::serial();
+        for step in 0..3 {
+            let ls = native::train_step(task, &mut theta_s, &mut mom_s, &batch, b, 0.03, ser);
+            let lp = native::train_step(task, &mut theta_p, &mut mom_p, &batch, b, 0.03, par);
+            if ls.to_bits() != lp.to_bits() {
+                return Err(format!("loss diverged at step {step}: {ls} vs {lp}"));
+            }
+        }
+        if theta_s != theta_p || mom_s != mom_p {
+            return Err(format!("params diverged (task {task:?}, r={r})"));
+        }
+        // Inference over the updated weights.
+        let xi: Vec<f32> = (0..native::INFER_BATCH * r * r * 3)
+            .map(|_| g.f32(0.0, 1.0))
+            .collect();
+        match task {
+            Task::Det => {
+                let (os, cs) = native::infer_det(&theta_s, &xi, native::INFER_BATCH, r, ser);
+                let (op, cp) = native::infer_det(&theta_s, &xi, native::INFER_BATCH, r, par);
+                if os != op || cs != cp {
+                    return Err("infer_det diverged".into());
+                }
+            }
+            Task::Seg => {
+                let ps = native::infer_seg(&theta_s, &xi, native::INFER_BATCH, r, ser);
+                let pp = native::infer_seg(&theta_s, &xi, native::INFER_BATCH, r, par);
+                if ps != pp {
+                    return Err("infer_seg diverged".into());
+                }
+            }
         }
         Ok(())
     });
