@@ -14,6 +14,8 @@
 //!   This is the allocator the paper shows starves small groups (Fig. 10).
 //! * [`UniformAllocator`] — the naive baseline: round-robin micro-windows.
 
+use std::collections::BTreeMap;
+
 /// Scheduler-visible state of one retraining job (group).
 #[derive(Debug, Clone)]
 pub struct JobView {
@@ -229,6 +231,27 @@ impl AllocKind {
     }
 }
 
+/// Re-split the GPU-share estimates when job membership changes
+/// mid-window (a fault evicted a camera and possibly emptied its job):
+/// drop estimates for jobs that no longer exist and renormalise the
+/// survivors, so the transmission controllers immediately see a
+/// consistent `p_j` vector instead of shares that sum below 1. Jobs
+/// created after the last estimate simply stay absent — their lookup
+/// site already falls back to the uniform share, as after a regroup.
+pub fn resplit_shares(shares: &mut BTreeMap<usize, f64>, live: &[usize]) {
+    shares.retain(|id, _| live.contains(id));
+    let total: f64 = shares.values().sum();
+    if total > 0.0 && total.is_finite() {
+        for p in shares.values_mut() {
+            *p /= total;
+        }
+    } else {
+        // Nothing valid to renormalise: clear so every job falls back to
+        // the uniform share.
+        shares.clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,5 +432,39 @@ mod tests {
         assert!(ecco_small > util_small);
         // ECCO keeps the small group within a reasonable band of parity.
         assert!(ecco_small >= 24 / 4, "ecco small-group share too low: {ecco_small}");
+    }
+
+    #[test]
+    fn resplit_drops_dead_jobs_and_renormalises() {
+        let mut shares: BTreeMap<usize, f64> =
+            [(0, 0.5), (1, 0.25), (2, 0.25)].into_iter().collect();
+        resplit_shares(&mut shares, &[0, 2]);
+        assert_eq!(shares.len(), 2);
+        assert!((shares[&0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((shares[&2] - 1.0 / 3.0).abs() < 1e-12);
+        let total: f64 = shares.values().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resplit_with_no_survivors_or_no_mass_clears() {
+        let mut shares: BTreeMap<usize, f64> = [(0, 0.6), (1, 0.4)].into_iter().collect();
+        resplit_shares(&mut shares, &[]);
+        assert!(shares.is_empty());
+        // Zero/NaN mass degrades to the uniform fallback (empty map).
+        let mut zero: BTreeMap<usize, f64> = [(0, 0.0), (1, 0.0)].into_iter().collect();
+        resplit_shares(&mut zero, &[0, 1]);
+        assert!(zero.is_empty());
+        let mut bad: BTreeMap<usize, f64> = [(0, f64::NAN)].into_iter().collect();
+        resplit_shares(&mut bad, &[0]);
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn resplit_is_identity_when_membership_unchanged() {
+        let mut shares: BTreeMap<usize, f64> = [(3, 0.75), (5, 0.25)].into_iter().collect();
+        let before = shares.clone();
+        resplit_shares(&mut shares, &[3, 5]);
+        assert_eq!(shares, before, "normalised shares must pass through");
     }
 }

@@ -74,6 +74,40 @@ pub enum Event {
         cam_acc: Vec<f32>,
         membership: MembershipSnapshot,
     },
+    /// An injected fault took the camera offline (see [`crate::faults`]).
+    CameraDown { time: f64, window: usize, cam: usize },
+    /// The camera rejoined the fleet after a dropout; it re-enters
+    /// placement through the normal drift-probe path.
+    CameraUp { time: f64, window: usize, cam: usize },
+    /// The camera's uplink was degraded to `factor` of its healthy
+    /// capacity (`0.0` = full outage).
+    LinkDegraded {
+        time: f64,
+        window: usize,
+        cam: usize,
+        factor: f64,
+    },
+    /// A fault cleared: `kind` is `"camera"` (accuracy re-crossed the
+    /// response threshold after a dropout) or `"uplink"` (capacity
+    /// restored); `windows` is the retraining windows from onset to
+    /// recovery.
+    FaultRecovered {
+        time: f64,
+        window: usize,
+        cam: usize,
+        kind: &'static str,
+        windows: usize,
+    },
+    /// The system degraded gracefully instead of failing: a discarded
+    /// corrupt probe, a deferred model publish, a detached stale
+    /// assignment, a skipped micro-window. `component` names the layer,
+    /// `detail` is human-readable.
+    Degraded {
+        time: f64,
+        window: usize,
+        component: &'static str,
+        detail: String,
+    },
 }
 
 impl Event {
@@ -87,6 +121,11 @@ impl Event {
             Event::Alloc { .. } => "alloc",
             Event::ModelPublished { .. } => "model_published",
             Event::WindowClosed { .. } => "window_closed",
+            Event::CameraDown { .. } => "camera_down",
+            Event::CameraUp { .. } => "camera_up",
+            Event::LinkDegraded { .. } => "link_degraded",
+            Event::FaultRecovered { .. } => "fault_recovered",
+            Event::Degraded { .. } => "degraded",
         }
     }
 
@@ -99,7 +138,12 @@ impl Event {
             | Event::GroupSplit { window, .. }
             | Event::Alloc { window, .. }
             | Event::ModelPublished { window, .. }
-            | Event::WindowClosed { window, .. } => *window,
+            | Event::WindowClosed { window, .. }
+            | Event::CameraDown { window, .. }
+            | Event::CameraUp { window, .. }
+            | Event::LinkDegraded { window, .. }
+            | Event::FaultRecovered { window, .. }
+            | Event::Degraded { window, .. } => *window,
         }
     }
 
@@ -194,6 +238,51 @@ impl Event {
                     arr(cam_acc.iter().map(|&a| num(a as f64)).collect()),
                 ),
                 ("membership", membership_json(membership)),
+            ]),
+            Event::CameraDown { time, window, cam }
+            | Event::CameraUp { time, window, cam } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("cam", num(*cam as f64)),
+            ]),
+            Event::LinkDegraded {
+                time,
+                window,
+                cam,
+                factor,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("cam", num(*cam as f64)),
+                ("factor", num(*factor)),
+            ]),
+            Event::FaultRecovered {
+                time,
+                window,
+                cam,
+                kind,
+                windows,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("cam", num(*cam as f64)),
+                ("kind", s(kind)),
+                ("windows", num(*windows as f64)),
+            ]),
+            Event::Degraded {
+                time,
+                window,
+                component,
+                detail,
+            } => obj(vec![
+                ("type", s(self.kind())),
+                ("time", num(*time)),
+                ("window", num(*window as f64)),
+                ("component", s(component)),
+                ("detail", s(detail)),
             ]),
         }
     }
@@ -403,5 +492,60 @@ mod tests {
         for e in sample_events() {
             assert_eq!(e.window(), 0);
         }
+    }
+
+    #[test]
+    fn fault_events_serialize_with_discriminants() {
+        let events = vec![
+            Event::CameraDown {
+                time: 10.0,
+                window: 1,
+                cam: 3,
+            },
+            Event::CameraUp {
+                time: 50.0,
+                window: 2,
+                cam: 3,
+            },
+            Event::LinkDegraded {
+                time: 12.0,
+                window: 1,
+                cam: 0,
+                factor: 0.5,
+            },
+            Event::FaultRecovered {
+                time: 90.0,
+                window: 3,
+                cam: 3,
+                kind: "camera",
+                windows: 2,
+            },
+            Event::Degraded {
+                time: 14.0,
+                window: 1,
+                component: "probe",
+                detail: "cam 2: corrupt probe embedding discarded".into(),
+            },
+        ];
+        let kinds: Vec<&str> = events.iter().map(|e| e.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "camera_down",
+                "camera_up",
+                "link_degraded",
+                "fault_recovered",
+                "degraded"
+            ]
+        );
+        for e in &events {
+            let j = Json::parse(&e.to_json().to_string_compact()).unwrap();
+            assert_eq!(j.get("type").unwrap().as_str().unwrap(), e.kind());
+            assert_eq!(
+                j.get("window").unwrap().as_f64().unwrap() as usize,
+                e.window()
+            );
+        }
+        assert_eq!(events[3].window(), 3);
     }
 }

@@ -42,6 +42,6 @@ pub mod session;
 pub mod spec;
 
 pub use event::{Event, EventSink, JsonlSink, RecordingSink};
-pub use report::{RunReport, WindowReport};
+pub use report::{Resilience, RunReport, WindowReport};
 pub use session::{run_fleet, Session};
 pub use spec::{RunSpec, SpecError};

@@ -50,7 +50,26 @@ pub struct RunReport {
     pub membership: Vec<(usize, MembershipSnapshot)>,
     /// The full typed event stream the run emitted.
     pub events: Vec<Event>,
+    /// Accuracy-under-fault and recovery metrics (all-zero without a
+    /// fault plan).
+    pub resilience: Resilience,
     pub wall_secs: f64,
+}
+
+/// Resilience metrics for runs with a fault plan attached (see
+/// [`crate::faults`]). A run without faults reports the default
+/// (all-zero) value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Resilience {
+    /// Windows during which at least one fault was active.
+    pub fault_windows: usize,
+    /// Mean end-of-window fleet accuracy over fault-active windows.
+    pub acc_under_fault: f32,
+    /// Completed recoveries (camera rejoins back above the response
+    /// threshold, uplink restores).
+    pub recoveries: usize,
+    /// Mean windows from fault onset to recovery (0 when none completed).
+    pub windows_to_recover: f64,
 }
 
 impl RunReport {
@@ -69,6 +88,16 @@ impl RunReport {
             ("satisfied", num(self.satisfied as f64)),
             ("requests", num(self.requests as f64)),
             ("jobs", num(self.jobs as f64)),
+            ("fault_windows", num(self.resilience.fault_windows as f64)),
+            (
+                "acc_under_fault",
+                num(self.resilience.acc_under_fault as f64),
+            ),
+            ("recoveries", num(self.resilience.recoveries as f64)),
+            (
+                "windows_to_recover",
+                num(self.resilience.windows_to_recover),
+            ),
             ("wall_secs", num(self.wall_secs)),
         ])
     }

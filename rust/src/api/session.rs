@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use crate::alloc::Allocator;
 use crate::api::event::{self, Event, EventSink};
-use crate::api::report::{RunReport, WindowReport};
+use crate::api::report::{Resilience, RunReport, WindowReport};
 use crate::api::spec::RunSpec;
 use crate::net::trace::Traces;
 use crate::runtime::{Engine, EngineStats};
@@ -42,6 +42,7 @@ impl<'e> Session<'e> {
         let mut cfg = SystemConfig::new(rest.task, rest.policy);
         cfg.gpus = rest.gpus;
         cfg.seed = rest.seed;
+        cfg.faults = rest.faults;
         for hook in &rest.hooks {
             hook(&mut cfg);
         }
@@ -120,6 +121,7 @@ impl<'e> Session<'e> {
             alloc_log: record.alloc_log(),
             membership: record.membership_log(),
             events: record.events.clone(),
+            resilience: resilience_of(&self.sys),
             wall_secs: self.t0.elapsed().as_secs_f64(),
         }
     }
@@ -260,6 +262,12 @@ impl<'e> Session<'e> {
         self.sys.engine.stats()
     }
 
+    /// Resilience metrics accumulated so far (all-zero without a fault
+    /// plan, or before any fault has fired).
+    pub fn resilience(&self) -> Resilience {
+        resilience_of(&self.sys)
+    }
+
     /// Events recorded so far (the built-in recorder's stream).
     pub fn events(&self) -> &[Event] {
         &self.sys.events.record.events
@@ -268,6 +276,25 @@ impl<'e> Session<'e> {
     /// `(window, micro_window, job)` GPU grants recorded so far.
     pub fn alloc_log(&self) -> Vec<(usize, usize, usize)> {
         self.sys.events.record.alloc_log()
+    }
+}
+
+/// Aggregate the system's fault counters into report-ready metrics.
+fn resilience_of(sys: &System<'_>) -> Resilience {
+    let (fault_windows, acc_sum, recoveries) = sys.fault_summary();
+    Resilience {
+        fault_windows,
+        acc_under_fault: if fault_windows > 0 {
+            (acc_sum / fault_windows as f64) as f32
+        } else {
+            0.0
+        },
+        recoveries: recoveries.len(),
+        windows_to_recover: if recoveries.is_empty() {
+            0.0
+        } else {
+            recoveries.iter().sum::<usize>() as f64 / recoveries.len() as f64
+        },
     }
 }
 

@@ -8,6 +8,7 @@
 
 use std::fmt;
 
+use crate::faults::FaultPlan;
 use crate::runtime::Task;
 use crate::scene::scenario::{self, Scenario};
 use crate::server::{Policy, SystemConfig};
@@ -27,6 +28,8 @@ pub enum SpecError {
     UplinkCountMismatch { cams: usize, uplinks: usize },
     /// The scenario (or default-world camera count) has no cameras.
     NoCameras,
+    /// The fault plan targets a camera index the scenario doesn't have.
+    FaultCamOutOfRange { cam: usize, cams: usize },
 }
 
 impl fmt::Display for SpecError {
@@ -47,6 +50,10 @@ impl fmt::Display for SpecError {
                 "run spec: {uplinks} uplinks for {cams} cameras (counts must match)"
             ),
             SpecError::NoCameras => write!(f, "run spec: scenario has no cameras"),
+            SpecError::FaultCamOutOfRange { cam, cams } => write!(
+                f,
+                "run spec: fault plan targets camera {cam} but the scenario has {cams} cameras"
+            ),
         }
     }
 }
@@ -74,6 +81,9 @@ pub struct RunSpec {
     pub(crate) windows: usize,
     pub(crate) seed: u64,
     pub(crate) scenario: Option<Scenario>,
+    /// Deterministic fault-injection schedule ([`FaultPlan::none`] by
+    /// default — guaranteed zero-cost, see [`crate::faults`]).
+    faults: FaultPlan,
     /// Zoo-prefill fine-tune steps when the policy warm-starts from a zoo.
     pub(crate) zoo_init_steps: usize,
     /// Config hooks, applied in order after the built-in knobs. `Send +
@@ -94,6 +104,7 @@ impl RunSpec {
             windows: 8,
             seed: 7,
             scenario: None,
+            faults: FaultPlan::none(),
             zoo_init_steps: 40,
             hooks: Vec::new(),
         }
@@ -147,6 +158,15 @@ impl RunSpec {
     /// two-triple static world.
     pub fn scenario(mut self, sc: Scenario) -> Self {
         self.scenario = Some(sc);
+        self
+    }
+
+    /// Attach a deterministic fault-injection schedule (see
+    /// [`crate::faults`]). [`FaultPlan::none`] — the default — is
+    /// guaranteed zero-cost: event logs stay byte-identical to a run
+    /// without a plan.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
         self
     }
 
@@ -233,6 +253,11 @@ impl RunSpec {
                 }
             }
         }
+        if let Some(cam) = self.faults.max_cam() {
+            if cam >= n {
+                return Err(SpecError::FaultCamOutOfRange { cam, cams: n });
+            }
+        }
         Ok(())
     }
 
@@ -262,6 +287,7 @@ impl RunSpec {
                 shared_mbps: self.shared_mbps,
                 windows: self.windows,
                 seed: self.seed,
+                faults: self.faults,
                 zoo_init_steps: self.zoo_init_steps,
                 hooks: self.hooks,
             },
@@ -277,6 +303,7 @@ pub(crate) struct RunSpecRest {
     pub(crate) shared_mbps: f64,
     pub(crate) windows: usize,
     pub(crate) seed: u64,
+    pub(crate) faults: FaultPlan,
     pub(crate) zoo_init_steps: usize,
     #[allow(clippy::type_complexity)]
     pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig) + Send + Sync>>,
@@ -344,6 +371,17 @@ mod tests {
     #[test]
     fn rejects_zero_cameras() {
         assert_eq!(base().cams(0).validate(), Err(SpecError::NoCameras));
+    }
+
+    #[test]
+    fn rejects_fault_plan_targeting_missing_camera() {
+        use crate::faults::{FaultKind, FaultPlan};
+        let plan = FaultPlan::none().at(0, 0, 9, FaultKind::CameraDown);
+        assert_eq!(
+            base().cams(4).faults(plan.clone()).validate(),
+            Err(SpecError::FaultCamOutOfRange { cam: 9, cams: 4 })
+        );
+        assert_eq!(base().cams(10).faults(plan).validate(), Ok(()));
     }
 
     #[test]

@@ -1,0 +1,392 @@
+//! `ecco::faults` — deterministic fault injection for the camera fleet.
+//!
+//! A [`FaultPlan`] is a seeded, pre-computed schedule of [`FaultEvent`]s,
+//! each pinned to a `(window, micro-window, camera)` coordinate. The
+//! coordinator applies due events at micro-window boundaries, so a plan
+//! perturbs the run at exactly the same simulated instants regardless of
+//! thread count — fault runs inherit the same byte-identical determinism
+//! contract as healthy runs.
+//!
+//! What can fail, and the degradation guarantee per layer:
+//!
+//! * **Camera dropout / rejoin** ([`FaultKind::CameraDown`] /
+//!   [`FaultKind::CameraUp`]): the coordinator detaches the camera from
+//!   its job without stalling the group; if the dropout empties the job,
+//!   the model is *parked* instead of lost, and a rejoining camera
+//!   resumes from it, then re-enters placement through the normal
+//!   drift-probe path.
+//! * **Uplink outage / degradation** ([`FaultKind::UplinkDown`],
+//!   [`FaultKind::UplinkScale`], [`FaultKind::UplinkRestore`]):
+//!   `net::NetSim` takes the link down or rescales its capacity; the
+//!   camera keeps serving its last good model until a window boundary
+//!   after restoration publishes a fresh one.
+//! * **Stragglers** ([`FaultKind::StragglerWindow`]): probe and frame
+//!   delivery arrive after the micro-window closes — probes count as
+//!   lost (bounded retry/backoff), delivered bits are wasted.
+//! * **Corrupted probes** ([`FaultKind::CorruptProbe`]): NaN or zeroed
+//!   embeddings are detected by [`embedding_valid`] and discarded at
+//!   every consumer (drift detection, placement, zoo signatures) so they
+//!   can never poison references, dynamics estimates, or the model zoo.
+//!
+//! The hard zero-cost rule: with [`FaultPlan::none`] attached (the
+//! default), the coordinator's fault checks all collapse to cold
+//! always-false branches, no extra events are emitted, and no RNG is
+//! consumed — event logs stay byte-identical to a build without the
+//! subsystem. `rust/tests/faults.rs` pins this A/B.
+
+use crate::util::rng::Pcg32;
+
+/// How a corrupted probe embedding manifests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// Every channel is NaN (a poisoned reduction upstream).
+    Nan,
+    /// Every channel is zero (a truncated/empty payload).
+    Zero,
+}
+
+/// One kind of injectable fault. All kinds are idempotent at the
+/// application site: re-applying a state a camera is already in is a
+/// no-op, so hand-built plans cannot corrupt the runtime bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The camera process dies: detached from its job, no probes, no
+    /// frames, no model publishes until [`FaultKind::CameraUp`].
+    CameraDown,
+    /// The camera rejoins the fleet and re-enters placement through the
+    /// normal drift-probe path.
+    CameraUp,
+    /// The camera's uplink goes fully dark (capacity 0).
+    UplinkDown,
+    /// The camera's uplink capacity is rescaled by `factor` in `(0, 1)`.
+    UplinkScale {
+        /// Multiplier on the healthy capacity, clamped to `[0, 1]`.
+        factor: f64,
+    },
+    /// The camera's uplink returns to full capacity.
+    UplinkRestore,
+    /// For the rest of this window, the camera's probe and frame
+    /// delivery land after the micro-window closes.
+    StragglerWindow,
+    /// For the rest of this window, the camera's probe embeddings are
+    /// corrupted.
+    CorruptProbe {
+        /// How the corruption manifests.
+        mode: CorruptMode,
+    },
+}
+
+/// One scheduled fault: `kind` strikes camera `cam` at the boundary of
+/// micro-window `mw` of retraining window `window`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Retraining window index the event fires in.
+    pub window: usize,
+    /// Micro-window boundary within the window (0 = window start).
+    pub mw: usize,
+    /// Target camera index.
+    pub cam: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// Built-in fault intensity presets for [`FaultPlan::scenario`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultScenario {
+    /// Occasional churn: a camera flap every few windows, a transient
+    /// capacity dip, a rare straggler.
+    Light,
+    /// Dense churn: every window flaps ≥30% of the fleet, takes one
+    /// uplink fully dark, and throws in a straggler plus a corrupted
+    /// probe. The chaos-smoke preset.
+    Heavy,
+}
+
+/// A deterministic, time-sorted schedule of fault events.
+///
+/// Events are kept sorted by `(window, mw)`; insertion order breaks
+/// ties, so a recovery scheduled while generating window `w` applies
+/// before a new fault inserted later at the same coordinate.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: guaranteed zero-cost (see module docs).
+    pub fn none() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// True when no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The `i`-th event in schedule order.
+    pub fn get(&self, i: usize) -> Option<&FaultEvent> {
+        self.events.get(i)
+    }
+
+    /// Iterate events in schedule order.
+    pub fn iter(&self) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter()
+    }
+
+    /// Highest camera index any event targets (validated against the
+    /// fleet size at the `RunSpec` boundary).
+    pub fn max_cam(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.cam).max()
+    }
+
+    /// Insert an event, keeping the schedule sorted by `(window, mw)`
+    /// with stable (insertion-order) tie-breaking.
+    pub fn push(&mut self, ev: FaultEvent) {
+        let at = self
+            .events
+            .partition_point(|e| (e.window, e.mw) <= (ev.window, ev.mw));
+        self.events.insert(at, ev);
+    }
+
+    /// Builder-style [`FaultPlan::push`].
+    pub fn at(mut self, window: usize, mw: usize, cam: usize, kind: FaultKind) -> Self {
+        self.push(FaultEvent {
+            window,
+            mw,
+            cam,
+            kind,
+        });
+        self
+    }
+
+    /// Generate a preset plan for `n_cams` cameras over `windows`
+    /// retraining windows. Generation draws only from a plan-local
+    /// [`Pcg32`] — it never touches the run's RNG, so attaching a plan
+    /// perturbs the simulation exclusively through the scheduled events.
+    pub fn scenario(preset: FaultScenario, n_cams: usize, windows: usize, seed: u64) -> Self {
+        let mut plan = FaultPlan::none();
+        if n_cams == 0 || windows == 0 {
+            return plan;
+        }
+        let mut rng = Pcg32::new(seed, 0xfa17);
+        match preset {
+            FaultScenario::Light => {
+                for w in 0..windows {
+                    if w % 3 == 0 {
+                        let cam = rng.index(n_cams);
+                        plan.push(FaultEvent {
+                            window: w,
+                            mw: 0,
+                            cam,
+                            kind: FaultKind::CameraDown,
+                        });
+                        if w + 1 < windows {
+                            plan.push(FaultEvent {
+                                window: w + 1,
+                                mw: 0,
+                                cam,
+                                kind: FaultKind::CameraUp,
+                            });
+                        }
+                    }
+                    if w % 2 == 1 {
+                        let cam = rng.index(n_cams);
+                        plan.push(FaultEvent {
+                            window: w,
+                            mw: 0,
+                            cam,
+                            kind: FaultKind::UplinkScale { factor: 0.5 },
+                        });
+                        if w + 1 < windows {
+                            plan.push(FaultEvent {
+                                window: w + 1,
+                                mw: 0,
+                                cam,
+                                kind: FaultKind::UplinkRestore,
+                            });
+                        }
+                    }
+                    if rng.chance(0.25) {
+                        plan.push(FaultEvent {
+                            window: w,
+                            mw: 0,
+                            cam: rng.index(n_cams),
+                            kind: FaultKind::StragglerWindow,
+                        });
+                    }
+                }
+            }
+            FaultScenario::Heavy => {
+                // ceil(0.3 * n_cams), at least one: the "≥30% flapping"
+                // density guarantee.
+                let flappers = (3 * n_cams).div_ceil(10).max(1);
+                for w in 0..windows {
+                    let mut order: Vec<usize> = (0..n_cams).collect();
+                    rng.shuffle(&mut order);
+                    for &cam in order.iter().take(flappers) {
+                        let mw = rng.index(2);
+                        plan.push(FaultEvent {
+                            window: w,
+                            mw,
+                            cam,
+                            kind: FaultKind::CameraDown,
+                        });
+                        if w + 1 < windows {
+                            // The rejoin sorts before any window-(w+1)
+                            // re-flap of the same camera (stable ties).
+                            plan.push(FaultEvent {
+                                window: w + 1,
+                                mw: 0,
+                                cam,
+                                kind: FaultKind::CameraUp,
+                            });
+                        }
+                    }
+                    // Exactly one full uplink outage per window.
+                    let victim = rng.index(n_cams);
+                    plan.push(FaultEvent {
+                        window: w,
+                        mw: 0,
+                        cam: victim,
+                        kind: FaultKind::UplinkDown,
+                    });
+                    if w + 1 < windows {
+                        plan.push(FaultEvent {
+                            window: w + 1,
+                            mw: 0,
+                            cam: victim,
+                            kind: FaultKind::UplinkRestore,
+                        });
+                    }
+                    plan.push(FaultEvent {
+                        window: w,
+                        mw: 0,
+                        cam: rng.index(n_cams),
+                        kind: FaultKind::StragglerWindow,
+                    });
+                    let mode = if w % 2 == 0 {
+                        CorruptMode::Nan
+                    } else {
+                        CorruptMode::Zero
+                    };
+                    plan.push(FaultEvent {
+                        window: w,
+                        mw: 0,
+                        cam: rng.index(n_cams),
+                        kind: FaultKind::CorruptProbe { mode },
+                    });
+                }
+            }
+        }
+        plan
+    }
+}
+
+/// A usable probe embedding: finite everywhere and not the all-zero
+/// vector. Genuine embeddings always pass — `runtime::native::features`
+/// includes per-channel std terms of at least `sqrt(1e-6)` before unit
+/// normalization, so a real embedding can never be all-zero — which
+/// makes this check free on healthy runs and exact on
+/// [`CorruptMode::Zero`] corruption.
+pub fn embedding_valid(emb: &[f32]) -> bool {
+    !emb.is_empty()
+        && emb.iter().all(|v| v.is_finite())
+        && emb.iter().any(|&v| v != 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_zero_cost_shaped() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.max_cam(), None);
+        assert_eq!(p, FaultPlan::default());
+    }
+
+    #[test]
+    fn push_keeps_schedule_sorted_with_stable_ties() {
+        let p = FaultPlan::none()
+            .at(2, 0, 0, FaultKind::CameraDown)
+            .at(0, 1, 1, FaultKind::UplinkDown)
+            .at(0, 0, 2, FaultKind::StragglerWindow)
+            // Same coordinate as the first event: must sort after it.
+            .at(2, 0, 3, FaultKind::CameraUp);
+        let order: Vec<(usize, usize, usize)> =
+            p.iter().map(|e| (e.window, e.mw, e.cam)).collect();
+        assert_eq!(order, vec![(0, 0, 2), (0, 1, 1), (2, 0, 0), (2, 0, 3)]);
+    }
+
+    #[test]
+    fn scenario_is_deterministic_in_seed() {
+        let a = FaultPlan::scenario(FaultScenario::Heavy, 8, 6, 42);
+        let b = FaultPlan::scenario(FaultScenario::Heavy, 8, 6, 42);
+        let c = FaultPlan::scenario(FaultScenario::Heavy, 8, 6, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different seeds must change the plan");
+    }
+
+    #[test]
+    fn heavy_preset_meets_density_guarantees() {
+        let n_cams = 10;
+        let windows = 5;
+        let p = FaultPlan::scenario(FaultScenario::Heavy, n_cams, windows, 7);
+        for w in 0..windows {
+            let downs = p
+                .iter()
+                .filter(|e| e.window == w && e.kind == FaultKind::CameraDown)
+                .count();
+            assert!(
+                downs * 10 >= 3 * n_cams,
+                "window {w}: only {downs} dropouts for {n_cams} cams"
+            );
+            let outages = p
+                .iter()
+                .filter(|e| e.window == w && e.kind == FaultKind::UplinkDown)
+                .count();
+            assert_eq!(outages, 1, "window {w}: exactly one uplink outage");
+        }
+        // Every dropout before the last window is paired with a rejoin.
+        for ev in p.iter().filter(|e| e.kind == FaultKind::CameraDown) {
+            if ev.window + 1 < windows {
+                assert!(
+                    p.iter().any(|r| r.kind == FaultKind::CameraUp
+                        && r.cam == ev.cam
+                        && r.window == ev.window + 1),
+                    "dropout of cam {} in window {} has no rejoin",
+                    ev.cam,
+                    ev.window
+                );
+            }
+        }
+        assert!(p.max_cam().unwrap() < n_cams);
+    }
+
+    #[test]
+    fn scenario_handles_degenerate_sizes() {
+        assert!(FaultPlan::scenario(FaultScenario::Heavy, 0, 5, 1).is_empty());
+        assert!(FaultPlan::scenario(FaultScenario::Light, 4, 0, 1).is_empty());
+        let one = FaultPlan::scenario(FaultScenario::Heavy, 1, 3, 1);
+        assert!(!one.is_empty());
+        assert_eq!(one.max_cam(), Some(0));
+    }
+
+    #[test]
+    fn embedding_validity_detects_corruption_modes() {
+        assert!(embedding_valid(&[0.1, -0.2, 0.3]));
+        assert!(!embedding_valid(&[]));
+        assert!(!embedding_valid(&[0.1, f32::NAN, 0.3]));
+        assert!(!embedding_valid(&[0.1, f32::INFINITY, 0.3]));
+        assert!(!embedding_valid(&[0.0, 0.0, 0.0]));
+        // A single live channel is enough (real embeddings are unit-norm).
+        assert!(embedding_valid(&[0.0, 1.0, 0.0]));
+    }
+}

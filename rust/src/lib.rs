@@ -29,6 +29,7 @@
 //! | [`teacher`] | oracle-with-noise annotator (YOLO11x substitute) |
 //! | [`metrics`] | cell-level mAP / mask-mAP, response-time tracking |
 //! | [`alloc`] | Alg. 1 GPU allocator + Ekya/RECL/naive baselines |
+//! | [`faults`] | deterministic fault injection: seeded [`faults::FaultPlan`]s + graceful-degradation contract |
 //! | [`grouping`] | Alg. 2 dynamic camera grouping |
 //! | [`transmission`] | §3.2 sampling-config tables + GAIMD parameterisation |
 //! | [`zoo`] | RECL-style model zoo |
@@ -84,6 +85,36 @@
 //! Alg. 1 time-shares all GPUs on one job per micro-window, so the serial
 //! step loop *is* the semantics being simulated — only the math inside
 //! each step is sharded.
+//!
+//! ## Fault model
+//!
+//! Deployments churn: cameras flap, uplinks saturate, probes go missing.
+//! The [`faults`] module injects exactly that, deterministically — a
+//! seeded [`faults::FaultPlan`] (attach via [`api::RunSpec::faults`] or a
+//! [`faults::FaultScenario`] preset) schedules camera dropout/rejoin,
+//! uplink outage and capacity degradation, straggler windows, and
+//! corrupted (NaN/zeroed) probe embeddings at fixed micro-window
+//! boundaries. Every layer degrades gracefully instead of panicking:
+//!
+//! * **server** — a dead camera is evicted from its job without stalling
+//!   the group; an emptied job's model is *parked* and restored when the
+//!   camera rejoins, which then re-places itself through the normal
+//!   drift-probe path with bounded retry/backoff on lost probes.
+//! * **net** — links take up/down and capacity-rescale operations; a
+//!   camera behind a dead uplink keeps serving its last good model.
+//! * **alloc** — GPU shares re-split over the surviving jobs the moment
+//!   membership shrinks mid-window.
+//! * **transmission** — the controller falls back to its last valid
+//!   profile entry when the pushed budget is missing or NaN.
+//!
+//! Fault activity is visible as typed events
+//! ([`api::Event::CameraDown`], [`api::Event::LinkDegraded`],
+//! [`api::Event::FaultRecovered`], …) and summarized in the report's
+//! resilience metrics (accuracy-under-fault, windows-to-recover). With
+//! no plan attached the subsystem is guaranteed zero-cost: event logs
+//! are byte-identical to a fault-free build (pinned by
+//! `rust/tests/faults.rs`).
+//!
 //! ## Quick start
 //!
 //! Every run goes through [`api::RunSpec`] and [`api::Session`]:
@@ -124,6 +155,7 @@
 pub mod alloc;
 pub mod api;
 pub mod exp;
+pub mod faults;
 pub mod grouping;
 pub mod metrics;
 pub mod net;

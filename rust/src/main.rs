@@ -15,6 +15,7 @@
 use anyhow::{bail, Result};
 use ecco::api::{JsonlSink, RunSpec, Session};
 use ecco::exp;
+use ecco::faults::{FaultPlan, FaultScenario};
 use ecco::runtime::{Engine, Task};
 use ecco::server::Policy;
 use ecco::util::cli::Args;
@@ -31,7 +32,7 @@ fn main() -> Result<()> {
                  \n\
                  ecco run [--policy ecco|naive|ekya|recl] [--task det|seg]\n\
                  \x20        [--cams N] [--gpus G] [--bw MBPS] [--windows N] [--seed S]\n\
-                 \x20        [--events run.jsonl]\n\
+                 \x20        [--events run.jsonl] [--faults none|light|heavy] [--fault-seed S]\n\
                  ecco exp <fig2c|fig5|tab1|fig6det|fig6seg|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>\n\
                  \x20        [--out results] [--seed S] [--fast] [--threads N]\n\
                  ecco info"
@@ -54,20 +55,42 @@ fn policy_by_name(name: &str) -> Result<Policy> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.reject_unknown(
-        &["policy", "task", "cams", "gpus", "bw", "windows", "seed", "events"],
+        &[
+            "policy",
+            "task",
+            "cams",
+            "gpus",
+            "bw",
+            "windows",
+            "seed",
+            "events",
+            "faults",
+            "fault-seed",
+        ],
         &[],
     )?;
     let task = Task::parse(&args.str_or("task", "det"))?;
     let policy = policy_by_name(&args.str_or("policy", "ecco"))?;
     let windows = args.usize_or("windows", 8)?;
+    let cams = args.usize_or("cams", 6)?;
+    let fault_arg = args.str_or("faults", "none");
+    let fault_seed = args.u64_or("fault-seed", 0xfa17)?;
+    let faults = match fault_arg.as_str() {
+        "none" => FaultPlan::none(),
+        "light" => FaultPlan::scenario(FaultScenario::Light, cams, windows, fault_seed),
+        "heavy" => FaultPlan::scenario(FaultScenario::Heavy, cams, windows, fault_seed),
+        other => bail!("unknown fault preset {other:?} (use none|light|heavy)"),
+    };
+    let chaos = !faults.is_empty();
 
     let engine = Engine::open_default()?;
     let spec = RunSpec::new(task, policy)
-        .cams(args.usize_or("cams", 6)?)
+        .cams(cams)
         .gpus(args.f64_or("gpus", 2.0)?)
         .shared_mbps(args.f64_or("bw", 6.0)?)
         .windows(windows)
-        .seed(args.u64_or("seed", 7)?);
+        .seed(args.u64_or("seed", 7)?)
+        .faults(faults);
     let mut session = Session::new(&engine, spec)?;
     if let Some(path) = args.get("events") {
         session.add_sink(Box::new(JsonlSink::create(path)?));
@@ -85,6 +108,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             w.mean_acc,
             w.jobs,
             per.join(" ")
+        );
+    }
+    if chaos {
+        let r = session.resilience();
+        println!(
+            "# resilience: {} fault windows, mAP under fault {:.3}, \
+             {} recoveries (mean {:.1} windows)",
+            r.fault_windows, r.acc_under_fault, r.recoveries, r.windows_to_recover
         );
     }
     Ok(())

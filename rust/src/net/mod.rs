@@ -26,10 +26,40 @@ pub const DEFAULT_TICK: f64 = 0.02;
 pub const DEFAULT_RTT: f64 = 0.05;
 
 /// A network link with fixed capacity in Mbit/s.
+///
+/// Fault injection can take a link down (`up = false`) or rescale its
+/// capacity (`cap_scale`); both default to healthy and are observed only
+/// through [`Link::effective_capacity`], so a fault-free simulation is
+/// bit-identical to one without the fields.
 #[derive(Debug, Clone)]
 pub struct Link {
     pub capacity_mbps: f64,
     pub name: String,
+    /// False while the link is dark (outage): effective capacity 0.
+    pub up: bool,
+    /// Degradation multiplier on the nominal capacity (1.0 = healthy).
+    pub cap_scale: f64,
+}
+
+impl Link {
+    /// A healthy link (up, full capacity).
+    pub fn new(capacity_mbps: f64, name: impl Into<String>) -> Link {
+        Link {
+            capacity_mbps,
+            name: name.into(),
+            up: true,
+            cap_scale: 1.0,
+        }
+    }
+
+    /// Capacity after outage/degradation state.
+    pub fn effective_capacity(&self) -> f64 {
+        if self.up {
+            self.capacity_mbps * self.cap_scale
+        } else {
+            0.0
+        }
+    }
 }
 
 /// One GAIMD flow (camera -> server).
@@ -83,15 +113,9 @@ impl NetSim {
         let mut links: Vec<Link> = local_caps
             .iter()
             .enumerate()
-            .map(|(i, &c)| Link {
-                capacity_mbps: c,
-                name: format!("uplink{i}"),
-            })
+            .map(|(i, &c)| Link::new(c, format!("uplink{i}")))
             .collect();
-        links.push(Link {
-            capacity_mbps: shared_mbps,
-            name: "shared".to_string(),
-        });
+        links.push(Link::new(shared_mbps, "shared"));
         NetSim::new(links)
     }
 
@@ -137,6 +161,28 @@ impl NetSim {
     /// Cap a flow at its application sending rate.
     pub fn set_app_limit(&mut self, id: FlowId, limit_mbps: f64) {
         self.flows[id.0].app_limit = limit_mbps.max(0.0);
+    }
+
+    /// Take a link dark (`up = false`) or bring it back. A dark link has
+    /// zero effective capacity: every flow crossing it sees full overload
+    /// and its goodput drops to zero within a tick.
+    pub fn set_link_up(&mut self, link: usize, up: bool) {
+        if let Some(l) = self.links.get_mut(link) {
+            l.up = up;
+        }
+    }
+
+    /// Rescale a link's capacity (degradation), `scale` clamped to ≥ 0.
+    pub fn set_link_capacity_scale(&mut self, link: usize, scale: f64) {
+        if let Some(l) = self.links.get_mut(link) {
+            l.cap_scale = scale.max(0.0);
+        }
+    }
+
+    /// First link on the flow's path — in a star topology, the camera's
+    /// own uplink (the fault-injection target).
+    pub fn flow_uplink(&self, id: FlowId) -> usize {
+        self.flows[id.0].path[0]
     }
 
     /// Attach a rate-trace recorder sampling every `sample_dt` seconds.
@@ -192,8 +238,11 @@ impl NetSim {
                 .filter(|(f, _)| f.path.contains(&li))
                 .map(|(_, &r)| r)
                 .sum();
-            if demand > link.capacity_mbps {
-                overload[li] = link.capacity_mbps / demand;
+            let cap = link.effective_capacity();
+            if demand > cap {
+                // demand > cap >= 0, so the quotient is well-defined (a
+                // dark link yields overload 0: zero goodput through it).
+                overload[li] = cap / demand;
             }
         }
         // 3. Synchronized multiplicative decrease: a flow crossing any
@@ -347,10 +396,7 @@ mod tests {
             let links: Vec<Link> = link_caps
                 .iter()
                 .enumerate()
-                .map(|(i, &c)| Link {
-                    capacity_mbps: c,
-                    name: format!("l{i}"),
-                })
+                .map(|(i, &c)| Link::new(c, format!("l{i}")))
                 .collect();
             let mut sim = NetSim::new(links);
             let a = sim.add_flow(vec![perm[0], perm[2]], 1.0, 0.5).unwrap();
@@ -370,6 +416,64 @@ mod tests {
         // The sim actually saturated (the property is non-vacuous).
         assert!(s1.delivered_mbit(a1) + s1.delivered_mbit(b1) <= caps[2] * 45.0 + 1e-6);
         assert!(s1.delivered_mbit(b1) > 0.0);
+    }
+
+    #[test]
+    fn link_outage_kills_goodput_and_restore_recovers_it() {
+        let mut sim = NetSim::star(&[100.0], 10.0);
+        let f = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+        sim.run(30.0); // converge healthy
+        let healthy = mean_rate_over(&mut sim, f, 20.0);
+        assert!(healthy > 5.0, "healthy={healthy}");
+        // Outage on the camera's uplink: goodput collapses to ~0.
+        let uplink = sim.flow_uplink(f);
+        assert_eq!(uplink, 0);
+        sim.set_link_up(uplink, false);
+        let dark = mean_rate_over(&mut sim, f, 20.0);
+        assert!(dark < 0.05, "dark link still delivered {dark}");
+        // Restore: AIMD re-converges to the healthy band.
+        sim.set_link_up(uplink, true);
+        sim.run(30.0);
+        let back = mean_rate_over(&mut sim, f, 20.0);
+        assert!(back > 5.0, "post-restore={back}");
+    }
+
+    #[test]
+    fn scaled_uplink_bounds_delivery_like_a_smaller_link() {
+        // A 10 Mbps uplink scaled by 0.25 must behave exactly like a
+        // 2.5 Mbps link (the product is FP-exact, so bit-identical).
+        let mut scaled = NetSim::star(&[10.0], 100.0);
+        let fs = scaled.add_camera_flow(0, 1.0, 0.5).unwrap();
+        scaled.set_link_capacity_scale(0, 0.25);
+        scaled.run(40.0);
+        let rs = mean_rate_over(&mut scaled, fs, 40.0);
+        let mut small = NetSim::star(&[2.5], 100.0);
+        let fm = small.add_camera_flow(0, 1.0, 0.5).unwrap();
+        small.run(40.0);
+        let rm = mean_rate_over(&mut small, fm, 40.0);
+        assert_eq!(rs, rm, "scaled link must equal a natively smaller one");
+        assert!(rs <= 2.5 * 1.02, "scaled link over-delivered: {rs}");
+    }
+
+    #[test]
+    fn healthy_fault_fields_change_nothing() {
+        // Zero-cost guarantee at the net layer: toggling a link down and
+        // back before any traffic leaves state bit-identical to never
+        // having touched it.
+        let run = |touch: bool| {
+            let mut sim = NetSim::star(&[5.0, 8.0], 6.0);
+            let a = sim.add_camera_flow(0, 1.0, 0.5).unwrap();
+            let b = sim.add_camera_flow(1, 2.0, 0.5).unwrap();
+            if touch {
+                sim.set_link_up(0, false);
+                sim.set_link_up(0, true);
+                sim.set_link_capacity_scale(1, 0.25);
+                sim.set_link_capacity_scale(1, 1.0);
+            }
+            sim.run(50.0);
+            (sim.delivered_mbit(a), sim.delivered_mbit(b))
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! System configuration and the policy presets for ECCO and its baselines.
 
 use crate::alloc::AllocKind;
+use crate::faults::FaultPlan;
 use crate::grouping::GroupingPolicy;
 use crate::runtime::Task;
 use crate::teacher::TeacherConfig;
@@ -144,6 +145,10 @@ pub struct SystemConfig {
     /// fresh ones (an A/B test asserts the event logs match); disable only
     /// to measure that claim.
     pub frame_cache: bool,
+    /// Deterministic fault-injection schedule (see [`crate::faults`]).
+    /// [`FaultPlan::none`] (the default) is guaranteed zero-cost: event
+    /// logs are byte-identical to a run without the subsystem.
+    pub faults: FaultPlan,
 }
 
 impl SystemConfig {
@@ -169,6 +174,7 @@ impl SystemConfig {
             seed: 7,
             eval_threads: crate::util::pool::default_threads(),
             frame_cache: true,
+            faults: FaultPlan::none(),
         }
     }
 

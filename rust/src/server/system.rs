@@ -17,12 +17,13 @@
 //! the encoder model.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::{bail, Result};
 
-use crate::alloc::{Allocator, JobView};
+use crate::alloc::{resplit_shares, Allocator, JobView};
 use crate::api::event::{Event, EventBus};
+use crate::faults::{embedding_valid, CorruptMode, FaultEvent, FaultKind};
 use crate::grouping::{self, Decision, GroupJob, RequestMeta};
 use crate::metrics::{AccuracyHistory, ResponseTracker};
 use crate::net::{FlowId, NetSim};
@@ -41,6 +42,10 @@ use super::pretrain::pretrained_default;
 
 /// Maximum frames ingested per camera per micro-window (safety bound).
 const MAX_FRAMES_PER_MW: usize = 150;
+
+/// Cap on the exponential probe-retry backoff under faults: after this many
+/// consecutive lost probes the delay stops doubling.
+const MAX_PROBE_RETRIES: u32 = 3;
 
 /// One window's group-membership snapshot: (job id, member cameras).
 pub type MembershipSnapshot = Vec<(usize, Vec<usize>)>;
@@ -89,21 +94,25 @@ impl FrameCache {
             return Arc::new(world.eval_frames(cam, res, n, salt));
         }
         let key = (cam, res, n, salt);
-        if let Some(hit) = self.map.lock().expect("frame cache poisoned").get(&key) {
+        // A worker that panicked mid-eval poisons the lock but can't leave a
+        // partial entry (values are whole `Arc`s, inserted atomically), so
+        // recovering the guard is always safe.
+        if let Some(hit) = self.lock_map().get(&key) {
             return hit.clone();
         }
         let rendered = Arc::new(world.eval_frames(cam, res, n, salt));
-        self.map
-            .lock()
-            .expect("frame cache poisoned")
-            .entry(key)
-            .or_insert(rendered)
-            .clone()
+        self.lock_map().entry(key).or_insert(rendered).clone()
+    }
+
+    fn lock_map(
+        &self,
+    ) -> std::sync::MutexGuard<'_, HashMap<(usize, usize, usize, u64), Arc<Vec<Frame>>>> {
+        self.map.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Drop every entry; called whenever the world advances.
     fn invalidate(&self) {
-        self.map.lock().expect("frame cache poisoned").clear();
+        self.lock_map().clear();
     }
 }
 
@@ -125,6 +134,70 @@ pub(crate) struct CamAgent {
     pub(crate) last_acc: f32,
     delivered_prev: f64,
     last_request_t: f64,
+}
+
+/// Runtime state for the fault-injection subsystem (see [`crate::faults`]).
+///
+/// With an empty [`crate::faults::FaultPlan`] every field stays at its
+/// initial value and every guard that consults it is pass-through, which is
+/// what makes the no-fault path byte-identical to a build without faults.
+struct FaultRt {
+    /// Next unapplied event in the (sorted) plan.
+    cursor: usize,
+    /// Camera is currently dropped out (ignores probes, evals, publishes).
+    cam_down: Vec<bool>,
+    /// Current uplink capacity scale per camera (1.0 = healthy, 0.0 = down).
+    link_scale: Vec<f64>,
+    /// Window at which the camera's uplink first degraded (for recovery
+    /// metrics); `None` when healthy.
+    link_down_since: Vec<Option<usize>>,
+    /// Camera is a straggler this window: its probe and sample uploads are
+    /// lost, though transport bits are still spent.
+    straggler: Vec<bool>,
+    /// Probe embeddings from this camera are corrupted this window.
+    corrupt: Vec<Option<CorruptMode>>,
+    /// Consecutive lost probes (drives exponential backoff).
+    probe_retries: Vec<u32>,
+    /// Earliest sim time the camera may probe again after a lost probe.
+    next_probe_t: Vec<f64>,
+    /// Window at which the camera dropped out; cleared (into
+    /// `recovery_windows`) once it is back above the response threshold.
+    await_recovery: Vec<Option<usize>>,
+    /// Parked models of jobs whose membership collapsed under faults:
+    /// (job id, theta) so a rejoining camera resumes from its last state.
+    parked: Vec<(usize, Vec<f32>)>,
+    /// The job a dropped camera belonged to, for un-parking on rejoin.
+    parked_of: Vec<Option<usize>>,
+    /// A fault event fired during the current window.
+    active_this_window: bool,
+    /// Windows during which any fault was active (for the report).
+    fault_windows: usize,
+    /// Sum of end-of-window mean accuracy over fault-active windows.
+    fault_acc_sum: f64,
+    /// Windows-to-recover samples, one per completed recovery.
+    recovery_windows: Vec<usize>,
+}
+
+impl FaultRt {
+    fn new(n_cams: usize) -> FaultRt {
+        FaultRt {
+            cursor: 0,
+            cam_down: vec![false; n_cams],
+            link_scale: vec![1.0; n_cams],
+            link_down_since: vec![None; n_cams],
+            straggler: vec![false; n_cams],
+            corrupt: vec![None; n_cams],
+            probe_retries: vec![0; n_cams],
+            next_probe_t: vec![f64::NEG_INFINITY; n_cams],
+            await_recovery: vec![None; n_cams],
+            parked: Vec::new(),
+            parked_of: vec![None; n_cams],
+            active_this_window: false,
+            fault_windows: 0,
+            fault_acc_sum: 0.0,
+            recovery_windows: Vec::new(),
+        }
+    }
 }
 
 /// A full system run. Drivers never touch this directly: the only public
@@ -158,6 +231,8 @@ pub(crate) struct System<'e> {
     pub(crate) events: EventBus,
     /// Per-(cam, salt) eval-frame render cache, cleared on world advance.
     eval_cache: FrameCache,
+    /// Fault-injection runtime state (inert when `cfg.faults` is empty).
+    fault: FaultRt,
     rng: Pcg32,
     pretrained: Vec<f32>,
 }
@@ -228,6 +303,7 @@ impl<'e> System<'e> {
             shares: BTreeMap::new(),
             events: EventBus::new(),
             eval_cache,
+            fault: FaultRt::new(n_cams),
             pretrained,
         })
     }
@@ -254,7 +330,15 @@ impl<'e> System<'e> {
         let refs: Vec<&Frame> = frames.iter().collect();
         let pixels = batch::pixel_tensor(&refs, m.infer_batch, m.feature_res);
         let emb = self.engine.features(&pixels)?;
-        let mean = mean_embedding(&emb, m.embed_dim);
+        let mut mean = mean_embedding(&emb, m.embed_dim);
+        // Fault injection: a corrupted probe leaves the frames intact but
+        // mangles the embedding the server would act on.
+        if let Some(mode) = self.fault.corrupt.get(cam).copied().flatten() {
+            match mode {
+                CorruptMode::Nan => mean.fill(f32::NAN),
+                CorruptMode::Zero => mean.fill(0.0),
+            }
+        }
         Ok((frames, mean))
     }
 
@@ -267,14 +351,37 @@ impl<'e> System<'e> {
         }
         let n_cams = self.cams.len();
         for cam in 0..n_cams {
+            if self.fault.cam_down[cam] {
+                continue; // dropped out: no device to probe
+            }
             if self.cams[cam].job.is_some() {
                 continue; // already retraining
             }
             if self.now() - self.cams[cam].last_request_t < self.cfg.window_secs * 0.5 {
                 continue; // debounce
             }
+            if self.now() < self.fault.next_probe_t[cam] {
+                continue; // backing off after a lost probe
+            }
+            if self.fault.straggler[cam] {
+                self.probe_lost(cam);
+                continue; // straggler: the probe never reaches the server
+            }
             let salt = (self.window_idx as u64) * 7919 + cam as u64 * 131 + 1;
             let (frames, emb) = self.probe(cam, salt)?;
+            if !embedding_valid(&emb) {
+                // Corrupted probe: discard rather than poison the drift
+                // detector or the grouping metadata, and back off.
+                self.probe_lost(cam);
+                self.events.emit(Event::Degraded {
+                    time: self.now(),
+                    window: self.window_idx,
+                    component: "probe",
+                    detail: format!("cam {cam}: corrupt probe embedding discarded"),
+                });
+                continue;
+            }
+            self.fault.probe_retries[cam] = 0;
             let drifted = match &self.cams[cam].ref_embed {
                 None => {
                     self.cams[cam].ref_embed = Some(emb.clone());
@@ -294,11 +401,24 @@ impl<'e> System<'e> {
         let c = &mut self.cams[cam];
         if let Some(prev) = &c.last_embed {
             let d = l2(prev, emb);
-            // Map embedding motion to [0,1] dynamics with a soft scale.
-            let inst = (d / 0.08).clamp(0.0, 1.0);
-            c.dynamics = 0.5 * c.dynamics + 0.5 * inst;
+            // Map embedding motion to [0,1] dynamics with a soft scale. A
+            // non-finite distance (corrupt embedding that slipped through)
+            // must not poison the EWMA.
+            if d.is_finite() {
+                let inst = (d / 0.08).clamp(0.0, 1.0);
+                c.dynamics = 0.5 * c.dynamics + 0.5 * inst;
+            }
         }
         c.last_embed = Some(emb.to_vec());
+    }
+
+    /// Register a lost/corrupt probe: bump the retry counter and push the
+    /// camera's next probe attempt out by an exponentially growing delay
+    /// (capped at 2^[`MAX_PROBE_RETRIES`] micro-windows).
+    fn probe_lost(&mut self, cam: usize) {
+        let retries = self.fault.probe_retries[cam].min(MAX_PROBE_RETRIES);
+        self.fault.probe_retries[cam] = self.fault.probe_retries[cam].saturating_add(1);
+        self.fault.next_probe_t[cam] = self.now() + self.cfg.mw_secs() * (1u32 << retries) as f64;
     }
 
     /// Process a retraining request (Alg. 2 GroupRequest).
@@ -369,7 +489,35 @@ impl<'e> System<'e> {
 
         match decision {
             Decision::Joined(job_id) => {
-                let idx = self.job_index(job_id).expect("meta/job desync");
+                // Grouping metadata normally always has a live training job
+                // behind it; if a fault sequence evicted the job between the
+                // decision and placement, rebuild one from the camera's own
+                // model rather than crashing the coordinator.
+                let idx = match self.job_index(job_id) {
+                    Some(idx) => idx,
+                    None => {
+                        self.events.emit(Event::Degraded {
+                            time: meta.time,
+                            window: self.window_idx,
+                            component: "grouping",
+                            detail: format!("job {job_id} metadata had no training state; rebuilt"),
+                        });
+                        let parked = self.fault.parked.iter().position(|(id, _)| *id == job_id);
+                        let theta = match parked {
+                            Some(i) => self.fault.parked.swap_remove(i).1,
+                            None => self.cams[cam].theta.clone(),
+                        };
+                        let model = ModelState::from_theta(self.cfg.task, theta);
+                        self.jobs.push(Job::new(
+                            job_id,
+                            cam,
+                            model,
+                            self.cfg.buffer_cap,
+                            meta.time,
+                        ));
+                        self.jobs.len() - 1
+                    }
+                };
                 self.jobs[idx].add_member(cam);
                 self.cams[cam].job = Some(job_id);
                 self.push_probe_samples(idx, cam, frames);
@@ -447,7 +595,20 @@ impl<'e> System<'e> {
                 self.net.set_app_limit(flow, 0.05);
                 continue;
             };
-            let job_idx = self.job_index(job_id).unwrap();
+            let Some(job_idx) = self.job_index(job_id) else {
+                // The camera's job was evicted by a fault mid-window: idle
+                // the flow and let the normal drift-probe path re-place it.
+                self.events.emit(Event::Degraded {
+                    time: self.now(),
+                    window: self.window_idx,
+                    component: "transmission",
+                    detail: format!("cam {cam}: job {job_id} gone; uplink idled"),
+                });
+                self.cams[cam].job = None;
+                let flow = self.cams[cam].flow;
+                self.net.set_app_limit(flow, 0.05);
+                continue;
+            };
             let n_members = self.jobs[job_idx].n_cams();
             let plan = match &self.cfg.policy.transmission {
                 TransmissionKind::Ecco => {
@@ -456,11 +617,12 @@ impl<'e> System<'e> {
                         .get(&job_id)
                         .unwrap_or(&(1.0 / n_jobs as f64));
                     let budget_pps = p_j * self.cfg.gpus * self.cfg.gpu_pps;
-                    self.cams[cam].controller.plan(GpuAllocationInfo {
+                    let info = GpuAllocationInfo {
                         group_budget_pps: budget_pps,
                         share_weight: p_j,
                         group_size: n_members,
-                    })
+                    };
+                    self.cams[cam].controller.plan(info)
                 }
                 TransmissionKind::Fixed { fps, res } => baseline_plan(*fps, *res),
                 TransmissionKind::Ams { base_fps, res } => {
@@ -492,13 +654,25 @@ impl<'e> System<'e> {
             let total = self.net.delivered_mbit(flow);
             let delta = (total - self.cams[cam].delivered_prev).max(0.0);
             self.cams[cam].delivered_prev = total;
+            if self.fault.straggler[cam] {
+                continue; // straggler: bits were spent but uploads are lost
+            }
             let plan = self.cams[cam].plan;
             let outcome = transport_window(plan.config, mw_secs, delta);
             let n = outcome.frames_delivered.min(MAX_FRAMES_PER_MW);
             if n == 0 {
                 continue;
             }
-            let job_idx = self.job_index(job_id).unwrap();
+            let Some(job_idx) = self.job_index(job_id) else {
+                self.events.emit(Event::Degraded {
+                    time: self.now(),
+                    window: self.window_idx,
+                    component: "ingest",
+                    detail: format!("cam {cam}: job {job_id} gone; {n} frames dropped"),
+                });
+                self.cams[cam].job = None;
+                continue;
+            };
             for i in 0..n {
                 let t = t_end - mw_secs + ((i + 1) as f64 / n as f64) * mw_secs;
                 let mut frame = self.world.capture_at(cam, plan.config.res, t);
@@ -576,7 +750,17 @@ impl<'e> System<'e> {
         }
         let views = self.job_views();
         let pick_id = self.allocator.pick(&views);
-        let job_idx = self.job_index(pick_id).expect("allocator picked unknown job");
+        let Some(job_idx) = self.job_index(pick_id) else {
+            // An allocator bug must degrade to a skipped micro-window, not
+            // a crashed run: the budget is lost but the window completes.
+            self.events.emit(Event::Degraded {
+                time: self.now(),
+                window: self.window_idx,
+                component: "alloc",
+                detail: format!("allocator picked unknown job {pick_id}; micro-window skipped"),
+            });
+            return Ok(());
+        };
         self.events.emit(Event::Alloc {
             window: self.window_idx,
             micro_window: mw,
@@ -610,18 +794,32 @@ impl<'e> System<'e> {
 
     fn end_window(&mut self) -> Result<()> {
         let now = self.now();
-        // Publish updated models to member devices.
+        // Publish updated models to member devices. A device that is down
+        // or behind a dead uplink cannot receive the push: it keeps serving
+        // its last good model and the publish is deferred (the next healthy
+        // window's publish covers it).
         for j in 0..self.jobs.len() {
             let theta = self.jobs[j].model.theta.clone();
             let members = self.jobs[j].members.clone();
+            let mut published = Vec::with_capacity(members.len());
             for &cam in &members {
+                if self.fault.cam_down[cam] || self.fault.link_scale[cam] <= 0.0 {
+                    self.events.emit(Event::Degraded {
+                        time: now,
+                        window: self.window_idx,
+                        component: "publish",
+                        detail: format!("cam {cam}: model publish deferred (device unreachable)"),
+                    });
+                    continue;
+                }
                 self.cams[cam].theta = theta.clone();
+                published.push(cam);
             }
             self.events.emit(Event::ModelPublished {
                 time: now,
                 window: self.window_idx,
                 job: self.jobs[j].id,
-                cams: members,
+                cams: published,
             });
         }
         // Per-camera accuracy measurement (live model on live stream),
@@ -637,8 +835,13 @@ impl<'e> System<'e> {
             let cache = &self.eval_cache;
             let eval_frames = self.cfg.eval_frames;
             let window = self.window_idx as u64;
+            let down = &self.fault.cam_down;
             let pool = engine.pool();
             pool.try_map(self.cfg.eval_threads, &self.cams, |cam, agent| {
+                if down[cam] {
+                    // No live stream to measure: carry the last known value.
+                    return Ok(agent.last_acc);
+                }
                 let salt = window * 31_337 + cam as u64;
                 let frames = cache.eval_frames(world, cam, EVAL_RES, eval_frames, salt);
                 eval_model(engine, task, &agent.theta, &frames)
@@ -647,7 +850,31 @@ impl<'e> System<'e> {
         for (cam, acc) in accs.into_iter().enumerate() {
             self.cams[cam].last_acc = acc;
             self.history.push(cam, now, acc);
-            self.tracker.observe(cam, now, acc);
+            if !self.fault.cam_down[cam] {
+                self.tracker.observe(cam, now, acc);
+            }
+        }
+        // A camera counts as recovered once it is back online and its live
+        // accuracy clears the response threshold again.
+        for cam in 0..self.cams.len() {
+            if self.fault.cam_down[cam] {
+                continue;
+            }
+            let Some(since) = self.fault.await_recovery[cam] else {
+                continue;
+            };
+            if self.cams[cam].last_acc >= self.cfg.response_threshold {
+                self.fault.await_recovery[cam] = None;
+                let windows = self.window_idx.saturating_sub(since);
+                self.fault.recovery_windows.push(windows);
+                self.events.emit(Event::FaultRecovered {
+                    time: now,
+                    window: self.window_idx,
+                    cam,
+                    kind: "camera",
+                    windows,
+                });
+            }
         }
         // RECL zoo maintenance: store retrained models with signatures
         // (periodically — zoo updates carry overhead, §5.1).
@@ -658,9 +885,14 @@ impl<'e> System<'e> {
                 if self.jobs[j].micro_windows == 0 {
                     continue;
                 }
-                let cam0 = self.jobs[j].members[0];
+                let Some(&cam0) = self.jobs[j].members.first() else {
+                    continue;
+                };
                 let salt = (self.window_idx as u64) * 977 + cam0 as u64;
                 let (_, emb) = self.probe(cam0, salt)?;
+                if !embedding_valid(&emb) {
+                    continue; // never key the zoo on a corrupt signature
+                }
                 let theta = self.jobs[j].model.theta.clone();
                 let label = format!("job{}-w{}", self.jobs[j].id, self.window_idx);
                 self.zoo.insert(theta, emb, &label);
@@ -681,6 +913,19 @@ impl<'e> System<'e> {
             cam_acc,
             membership: snapshot,
         });
+        // Resilience accounting: a window counts as fault-active when an
+        // event fired in it or a degradation persists from earlier ones.
+        if !self.cfg.faults.is_empty() {
+            let degraded = self.fault.active_this_window
+                || self.fault.cam_down.iter().any(|&d| d)
+                || self.fault.link_scale.iter().any(|&s| s < 1.0)
+                || self.fault.straggler.iter().any(|&s| s)
+                || self.fault.corrupt.iter().any(|c| c.is_some());
+            if degraded {
+                self.fault.fault_windows += 1;
+                self.fault.fault_acc_sum += self.history.final_mean() as f64;
+            }
+        }
         // Periodic regrouping (Alg. 2 UpdateGrouping).
         if self.cfg.policy.group_retraining && self.cfg.auto_regroup {
             self.regroup()?;
@@ -713,6 +958,12 @@ impl<'e> System<'e> {
         // Reset per-window counters.
         for j in &mut self.jobs {
             j.micro_windows = 0;
+        }
+        // Window-scoped faults (stragglers, corrupt probes) expire here.
+        if !self.cfg.faults.is_empty() {
+            self.fault.active_this_window = false;
+            self.fault.straggler.fill(false);
+            self.fault.corrupt.fill(None);
         }
         Ok(())
     }
@@ -776,6 +1027,18 @@ impl<'e> System<'e> {
             // Re-enter the grouping pipeline as a fresh request.
             let salt = (self.window_idx as u64) * 6151 + cam as u64 * 13 + 9;
             let (frames, emb) = self.probe(cam, salt)?;
+            if !embedding_valid(&emb) {
+                // Re-placement probe corrupted: defer — the camera retries
+                // through the normal drift path with backoff next window.
+                self.probe_lost(cam);
+                self.events.emit(Event::Degraded {
+                    time: now,
+                    window: self.window_idx,
+                    component: "probe",
+                    detail: format!("cam {cam}: re-placement probe corrupt; deferred"),
+                });
+                continue;
+            }
             self.tracker.request(cam, now);
             self.events.emit(Event::RetrainRequest {
                 time: now,
@@ -795,11 +1058,207 @@ impl<'e> System<'e> {
     }
 
     // ------------------------------------------------------------------
+    // Fault injection (see crate::faults)
+    // ------------------------------------------------------------------
+
+    /// Apply every scheduled fault event up to `(window_idx, upto_mw)`.
+    /// Returns whether anything was applied. With an empty plan this is a
+    /// single branch — the zero-cost guarantee's hot-path cost.
+    fn apply_fault_events(&mut self, upto_mw: usize) -> Result<bool> {
+        if self.cfg.faults.is_empty() {
+            return Ok(false);
+        }
+        let mut applied = false;
+        loop {
+            let Some(&ev) = self.cfg.faults.get(self.fault.cursor) else {
+                break;
+            };
+            if ev.window > self.window_idx || (ev.window == self.window_idx && ev.mw > upto_mw) {
+                break;
+            }
+            self.fault.cursor += 1;
+            self.apply_fault(ev);
+            applied = true;
+        }
+        if applied {
+            self.fault.active_this_window = true;
+        }
+        Ok(applied)
+    }
+
+    /// Apply one fault event. All handlers are idempotent: a plan that
+    /// repeats an event (or restores an already-healthy link) is a no-op
+    /// rather than a double-count.
+    fn apply_fault(&mut self, ev: FaultEvent) {
+        let cam = ev.cam;
+        if cam >= self.cams.len() {
+            return; // plan targets a camera this scenario doesn't have
+        }
+        let now = self.now();
+        match ev.kind {
+            FaultKind::CameraDown => {
+                if self.fault.cam_down[cam] {
+                    return;
+                }
+                self.fault.cam_down[cam] = true;
+                self.fault.await_recovery[cam].get_or_insert(self.window_idx);
+                self.events.emit(Event::CameraDown {
+                    time: now,
+                    window: self.window_idx,
+                    cam,
+                });
+                self.fault_detach(cam);
+                let flow = self.cams[cam].flow;
+                self.net.set_app_limit(flow, 0.0);
+            }
+            FaultKind::CameraUp => {
+                if !self.fault.cam_down[cam] {
+                    return;
+                }
+                self.fault.cam_down[cam] = false;
+                self.events.emit(Event::CameraUp {
+                    time: now,
+                    window: self.window_idx,
+                    cam,
+                });
+                // Re-arm the probe path: the rejoining device goes through
+                // the normal drift-detection pipeline immediately.
+                self.cams[cam].last_request_t = f64::NEG_INFINITY;
+                self.fault.next_probe_t[cam] = f64::NEG_INFINITY;
+                self.fault.probe_retries[cam] = 0;
+                // Its delivered-bytes ledger moved while it was detached.
+                let flow = self.cams[cam].flow;
+                self.cams[cam].delivered_prev = self.net.delivered_mbit(flow);
+                // If its old job's model was parked, restore it locally so
+                // the device resumes from its last trained state.
+                if let Some(job_id) = self.fault.parked_of[cam].take() {
+                    if let Some((_, theta)) =
+                        self.fault.parked.iter().find(|(id, _)| *id == job_id)
+                    {
+                        self.cams[cam].theta = theta.clone();
+                    }
+                }
+            }
+            FaultKind::UplinkDown => self.set_uplink_scale(cam, 0.0),
+            FaultKind::UplinkScale { factor } => {
+                self.set_uplink_scale(cam, factor.clamp(0.0, 1.0));
+            }
+            FaultKind::UplinkRestore => {
+                let Some(since) = self.fault.link_down_since[cam].take() else {
+                    return; // link already healthy
+                };
+                self.fault.link_scale[cam] = 1.0;
+                let link = self.net.flow_uplink(self.cams[cam].flow);
+                self.net.set_link_up(link, true);
+                self.net.set_link_capacity_scale(link, 1.0);
+                let windows = self.window_idx.saturating_sub(since);
+                self.fault.recovery_windows.push(windows);
+                self.events.emit(Event::FaultRecovered {
+                    time: now,
+                    window: self.window_idx,
+                    cam,
+                    kind: "uplink",
+                    windows,
+                });
+            }
+            FaultKind::StragglerWindow => {
+                if self.fault.straggler[cam] {
+                    return;
+                }
+                self.fault.straggler[cam] = true;
+                self.events.emit(Event::Degraded {
+                    time: now,
+                    window: self.window_idx,
+                    component: "camera",
+                    detail: format!("cam {cam}: straggling this window (uploads lost)"),
+                });
+            }
+            FaultKind::CorruptProbe { mode } => {
+                self.fault.corrupt[cam] = Some(mode);
+            }
+        }
+    }
+
+    /// Degrade a camera's uplink to `factor` x capacity (0.0 = outage).
+    fn set_uplink_scale(&mut self, cam: usize, factor: f64) {
+        if self.fault.link_scale[cam] == factor {
+            return; // idempotent: no duplicate events
+        }
+        self.fault.link_scale[cam] = factor;
+        if factor < 1.0 {
+            self.fault.link_down_since[cam].get_or_insert(self.window_idx);
+        }
+        let link = self.net.flow_uplink(self.cams[cam].flow);
+        if factor <= 0.0 {
+            self.net.set_link_up(link, false);
+        } else {
+            self.net.set_link_up(link, true);
+            self.net.set_link_capacity_scale(link, factor);
+        }
+        self.events.emit(Event::LinkDegraded {
+            time: self.now(),
+            window: self.window_idx,
+            cam,
+            factor,
+        });
+    }
+
+    /// Detach a dead camera from its job without stalling the group: the
+    /// survivors keep training; a job emptied by the detach has its model
+    /// parked for the camera's eventual rejoin.
+    fn fault_detach(&mut self, cam: usize) {
+        let Some(job_id) = self.cams[cam].job.take() else {
+            return;
+        };
+        self.fault.parked_of[cam] = Some(job_id);
+        if let Some(idx) = self.job_index(job_id) {
+            self.jobs[idx].remove_member(cam);
+            if self.jobs[idx].members.is_empty() {
+                let job = self.jobs.remove(idx);
+                self.fault.parked.retain(|(id, _)| *id != job_id);
+                self.fault.parked.push((job_id, job.model.theta));
+            }
+        }
+        for meta in &mut self.group_meta {
+            if meta.id == job_id {
+                meta.members.retain(|m| m.cam != cam);
+            }
+        }
+        self.group_meta.retain(|g| !g.members.is_empty());
+        self.events.emit(Event::GroupSplit {
+            time: self.now(),
+            window: self.window_idx,
+            job: job_id,
+            cam,
+        });
+    }
+
+    /// Re-split the GPU budget over the surviving jobs after membership
+    /// changed mid-window (dead shares would otherwise starve survivors).
+    fn resplit_after_faults(&mut self) {
+        let live: Vec<usize> = self.jobs.iter().map(|j| j.id).collect();
+        resplit_shares(&mut self.shares, &live);
+    }
+
+    /// Resilience counters for the report:
+    /// (fault-active windows, their accuracy sum, windows-to-recover samples).
+    pub(crate) fn fault_summary(&self) -> (usize, f64, &[usize]) {
+        (
+            self.fault.fault_windows,
+            self.fault.fault_acc_sum,
+            &self.fault.recovery_windows,
+        )
+    }
+
+    // ------------------------------------------------------------------
     // Public driver
     // ------------------------------------------------------------------
 
     /// Run one retraining window.
     pub(crate) fn run_window(&mut self) -> Result<()> {
+        if self.apply_fault_events(0)? {
+            self.resplit_after_faults();
+        }
         if self.window_idx == 0 {
             // Establish the deployment-time drift references before any
             // simulated time passes (the pretraining distribution).
@@ -811,6 +1270,12 @@ impl<'e> System<'e> {
         let w_eff = self.cfg.effective_micro_windows(self.jobs.len());
         let mw_secs = self.cfg.window_secs / w_eff as f64;
         for mw in 0..w_eff {
+            if mw > 0 && self.apply_fault_events(mw)? {
+                // Membership or link state changed mid-window: re-split the
+                // GPU budget over the survivors and re-push plans.
+                self.resplit_after_faults();
+                self.apply_transmission_plans();
+            }
             self.net.run(mw_secs);
             self.world.advance(mw_secs);
             // The world moved: every cached eval render is stale.
@@ -818,6 +1283,11 @@ impl<'e> System<'e> {
             self.collect_data(mw_secs)?;
             self.detect_and_request()?;
             self.train_micro_window(mw, mw_secs)?;
+        }
+        // Drain events scheduled past the effective micro-window count so
+        // no fault is silently skipped when W shrinks.
+        if self.apply_fault_events(usize::MAX)? {
+            self.resplit_after_faults();
         }
         self.end_window()?;
         self.window_idx += 1;
@@ -876,6 +1346,9 @@ impl<'e> System<'e> {
     /// `auto_request = false`): probe the camera now and run it through the
     /// normal grouping pipeline.
     pub(crate) fn request_now(&mut self, cam: usize) -> Result<()> {
+        if cam >= self.cams.len() {
+            bail!("request_now: camera {cam} out of range (have {})", self.cams.len());
+        }
         if self.cams[cam].job.is_some() {
             return Ok(());
         }
@@ -892,7 +1365,12 @@ impl<'e> System<'e> {
     /// the one-job-per-camera partition invariant; jobs emptied by the
     /// detach are dropped.
     pub(crate) fn force_group(&mut self, cams: &[usize]) -> Result<usize> {
-        assert!(!cams.is_empty());
+        if cams.is_empty() {
+            bail!("force_group: empty camera list");
+        }
+        if let Some(&bad) = cams.iter().find(|&&c| c >= self.cams.len()) {
+            bail!("force_group: camera {bad} out of range (have {})", self.cams.len());
+        }
         let now = self.now();
         for &cam in cams {
             if let Some(old_id) = self.cams[cam].job.take() {
@@ -965,7 +1443,10 @@ impl<'e> System<'e> {
             self.push_probe_samples(idx, cam, frames);
             self.cams[cam].ref_embed = Some(emb);
         }
-        self.group_meta.push(meta_job.unwrap());
+        // `cams` is non-empty (checked above), so the loop always set this.
+        if let Some(g) = meta_job {
+            self.group_meta.push(g);
+        }
         debug_assert!(
             grouping::is_partition(&self.group_meta),
             "force_group broke the one-job-per-camera partition"

@@ -171,11 +171,18 @@ pub struct TransmissionPlan {
 #[derive(Debug, Clone)]
 pub struct Controller {
     pub table: ProfileTable,
+    /// The last group config resolved from a valid budget — the fallback
+    /// when a pushed measurement is missing or NaN (e.g. a fault corrupted
+    /// the server's budget estimate mid-window).
+    last_cfg: Option<SamplingConfig>,
 }
 
 impl Controller {
     pub fn new(table: ProfileTable) -> Controller {
-        Controller { table }
+        Controller {
+            table,
+            last_cfg: None,
+        }
     }
 
     pub fn for_mount(mount: &Mount) -> Controller {
@@ -183,14 +190,33 @@ impl Controller {
     }
 
     /// Compute the window plan from the server's allocation info (§3.2).
-    pub fn plan(&self, info: GpuAllocationInfo) -> TransmissionPlan {
-        let group_cfg = self.table.lookup(info.group_budget_pps);
+    ///
+    /// Degradation contract: a non-finite `group_budget_pps` holds the
+    /// last valid profile entry (the cheapest config if there has never
+    /// been one), and a non-finite `share_weight` competes at the minimum
+    /// GAIMD aggressiveness — the plan is always well-formed, never NaN.
+    pub fn plan(&mut self, info: GpuAllocationInfo) -> TransmissionPlan {
+        let group_cfg = if info.group_budget_pps.is_finite() {
+            let cfg = self.table.lookup(info.group_budget_pps);
+            self.last_cfg = Some(cfg);
+            cfg
+        } else {
+            self.last_cfg.unwrap_or(SamplingConfig {
+                fps: FPS_CHOICES[0],
+                res: RES_CHOICES[0],
+            })
+        };
         let n = info.group_size.max(1) as f32;
         let config = SamplingConfig {
             fps: group_cfg.fps / n,
             res: group_cfg.res,
         };
-        let alpha = (info.share_weight / n as f64).max(1e-3);
+        let share = if info.share_weight.is_finite() {
+            info.share_weight
+        } else {
+            0.0
+        };
+        let alpha = (share / n as f64).max(1e-3);
         let app_limit_mbps =
             config.pixels_per_sec() * 3.0 * BPP_LOSSLESS / 1e6; // channel-pixels
         TransmissionPlan {
@@ -320,7 +346,7 @@ mod tests {
 
     #[test]
     fn plan_scales_fps_by_group_size_and_alpha_by_share() {
-        let ctl = Controller::for_mount(&Mount::StaticHigh);
+        let mut ctl = Controller::for_mount(&Mount::StaticHigh);
         let info1 = GpuAllocationInfo {
             group_budget_pps: 40_000.0,
             share_weight: 0.6,
@@ -342,7 +368,7 @@ mod tests {
     fn gaimd_weights_proportional_to_group_share() {
         // Two groups with shares 0.75/0.25, sizes 3/1: per-camera weights
         // alpha/(1-beta) must make GROUP totals proportional to shares.
-        let ctl = Controller::for_mount(&Mount::StaticHigh);
+        let mut ctl = Controller::for_mount(&Mount::StaticHigh);
         let pa = ctl.plan(GpuAllocationInfo {
             group_budget_pps: 1e4,
             share_weight: 0.75,
@@ -360,7 +386,7 @@ mod tests {
 
     #[test]
     fn app_limit_covers_lossless_stream() {
-        let ctl = Controller::for_mount(&Mount::StaticHigh);
+        let mut ctl = Controller::for_mount(&Mount::StaticHigh);
         let p = ctl.plan(GpuAllocationInfo {
             group_budget_pps: 20_000.0,
             share_weight: 0.5,
@@ -368,6 +394,47 @@ mod tests {
         });
         let need = p.config.pixels_per_sec() * 3.0 * BPP_LOSSLESS / 1e6;
         assert!((p.app_limit_mbps - need).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_budget_falls_back_to_last_valid_profile_entry() {
+        let mut ctl = Controller::for_mount(&Mount::StaticHigh);
+        let healthy = ctl.plan(GpuAllocationInfo {
+            group_budget_pps: 40_000.0,
+            share_weight: 0.5,
+            group_size: 2,
+        });
+        // Budget goes NaN (lost measurement): the config must hold.
+        let degraded = ctl.plan(GpuAllocationInfo {
+            group_budget_pps: f64::NAN,
+            share_weight: 0.5,
+            group_size: 2,
+        });
+        assert_eq!(degraded.config, healthy.config);
+        assert!(degraded.gaimd_alpha.is_finite());
+        assert!(degraded.app_limit_mbps.is_finite());
+        // A NaN share degrades to minimum aggressiveness, never NaN.
+        let no_share = ctl.plan(GpuAllocationInfo {
+            group_budget_pps: 40_000.0,
+            share_weight: f64::NAN,
+            group_size: 2,
+        });
+        assert_eq!(no_share.gaimd_alpha, 1e-3);
+        // A controller that has never seen a valid budget degrades to the
+        // cheapest config rather than guessing.
+        let mut fresh = Controller::for_mount(&Mount::StaticHigh);
+        let first = fresh.plan(GpuAllocationInfo {
+            group_budget_pps: f64::INFINITY,
+            share_weight: 0.5,
+            group_size: 1,
+        });
+        assert_eq!(
+            first.config,
+            SamplingConfig {
+                fps: FPS_CHOICES[0],
+                res: RES_CHOICES[0]
+            }
+        );
     }
 
     #[test]

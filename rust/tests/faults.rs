@@ -1,0 +1,128 @@
+//! Integration tests for `ecco::faults`: the zero-cost guarantee of the
+//! empty plan, graceful degradation under a dense fault schedule, and the
+//! thread-count determinism of fault runs.
+
+use ecco::api::{RunReport, RunSpec, Session};
+use ecco::faults::{FaultPlan, FaultScenario};
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::Policy;
+
+const CAMS: usize = 4;
+const WINDOWS: usize = 4;
+
+/// A reduced-scale deterministic spec (4 cameras in two pairs, 4 windows).
+fn small_spec(seed: u64) -> RunSpec {
+    RunSpec::new(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[2, 2], 0.05, 20.0, seed))
+        .gpus(1.0)
+        .shared_mbps(10.0)
+        .uplink_mbps(20.0)
+        .windows(WINDOWS)
+        .seed(seed)
+        .configure(|cfg| {
+            cfg.micro_windows = 4;
+            cfg.window_secs = 40.0;
+            cfg.eval_frames = 8;
+            cfg.pretrain_steps = 120;
+        })
+}
+
+fn heavy_plan(seed: u64) -> FaultPlan {
+    FaultPlan::scenario(FaultScenario::Heavy, CAMS, WINDOWS, seed)
+}
+
+fn jsonl(report: &RunReport) -> String {
+    report
+        .events
+        .iter()
+        .map(|e| e.to_json().to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn empty_fault_plan_is_byte_identical_to_no_plan() {
+    // The hard zero-cost rule: attaching FaultPlan::none() must not change
+    // one byte of the event log relative to never mentioning faults.
+    let engine = Engine::open_default().unwrap();
+    let bare = Session::new(&engine, small_spec(31))
+        .unwrap()
+        .run()
+        .unwrap();
+    let none = Session::new(&engine, small_spec(31).faults(FaultPlan::none()))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(!bare.events.is_empty());
+    assert_eq!(
+        jsonl(&bare),
+        jsonl(&none),
+        "FaultPlan::none() must be zero-cost"
+    );
+    assert_eq!(bare.window_acc, none.window_acc);
+    assert_eq!(bare.cam_acc, none.cam_acc);
+    assert_eq!(bare.alloc_log, none.alloc_log);
+    assert_eq!(bare.membership, none.membership);
+    // No plan → all-zero resilience metrics in both reports.
+    assert_eq!(bare.resilience, none.resilience);
+    assert_eq!(bare.resilience.fault_windows, 0);
+    assert_eq!(bare.resilience.recoveries, 0);
+}
+
+#[test]
+fn dense_fault_plan_completes_every_window_and_reports_resilience() {
+    // The chaos-smoke guarantee: ≥30% of cameras flapping every window
+    // plus one full uplink outage per window, and the run still completes
+    // its whole horizon with the partition invariant intact.
+    let engine = Engine::open_default().unwrap();
+    let plan = heavy_plan(7);
+    assert!(!plan.is_empty());
+    let mut session = Session::new(&engine, small_spec(31).faults(plan)).unwrap();
+    for w in 0..WINDOWS {
+        let report = session.step_window().unwrap();
+        assert_eq!(report.window, w);
+        assert!(
+            session.is_partition(),
+            "window {w}: faults broke the one-job-per-camera partition"
+        );
+    }
+    let kinds: Vec<&str> = session.events().iter().map(|e| e.kind()).collect();
+    assert!(kinds.contains(&"camera_down"), "no dropout was injected");
+    assert!(kinds.contains(&"camera_up"), "no rejoin was injected");
+    assert!(kinds.contains(&"link_degraded"), "no uplink fault was injected");
+    assert!(
+        kinds.contains(&"fault_recovered"),
+        "no recovery completed over {WINDOWS} windows"
+    );
+    let report = session.into_report();
+    assert_eq!(report.window_acc.len(), WINDOWS, "every window must close");
+    assert!(report.resilience.fault_windows > 0);
+    assert!(report.resilience.acc_under_fault > 0.0);
+    assert!(report.resilience.recoveries > 0);
+    // The resilience metrics reach the results JSON.
+    let json = report.to_json().to_string_compact();
+    assert!(json.contains("\"fault_windows\""), "{json}");
+    assert!(json.contains("\"windows_to_recover\""), "{json}");
+}
+
+#[test]
+fn fault_runs_are_byte_identical_across_thread_counts() {
+    // Fault runs inherit the determinism contract: same plan + same seed
+    // must produce byte-identical event logs at eval pools of 1 and 4.
+    let engine = Engine::open_default().unwrap();
+    let run_with = |threads: usize| -> (RunReport, String) {
+        let spec = small_spec(41)
+            .faults(heavy_plan(11))
+            .eval_threads(threads);
+        let report = Session::new(&engine, spec).unwrap().run().unwrap();
+        let log = jsonl(&report);
+        (report, log)
+    };
+    let (a, a_log) = run_with(1);
+    let (b, b_log) = run_with(4);
+    assert!(a.events.iter().any(|e| e.kind() == "camera_down"));
+    assert_eq!(a_log, b_log, "thread count changed a fault run's event log");
+    assert_eq!(a.window_acc, b.window_acc);
+    assert_eq!(a.resilience, b.resilience);
+}
