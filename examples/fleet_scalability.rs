@@ -1,20 +1,92 @@
-//! Compare ECCO vs baselines on a 6-camera fleet (two correlated triples)
-//! under a constrained GPU + bandwidth budget — the Fig. 6 setting, small —
-//! via the `ecco::api` façade. The four policy arms run **concurrently**
-//! over one shared engine through `api::run_fleet`; reports come back in
-//! arm order, each identical to its sequential run.
+//! Fleet scalability, two modes:
+//!
+//! * default — compare ECCO vs baselines on a 6-camera fleet (two
+//!   correlated triples) under a constrained GPU + bandwidth budget (the
+//!   Fig. 6 setting, small) via the `ecco::api` façade. The four policy
+//!   arms run **concurrently** over one shared engine through
+//!   `api::run_fleet`; reports come back in arm order, each identical to
+//!   its sequential run.
+//! * `--scale N [--budget-secs S]` — one city-scale ECCO run with N
+//!   cameras in a single process: event-driven scheduler, degree-6
+//!   topology-pruned grouping, capped micro-windows. Prints per-window
+//!   wall-clock; with `--budget-secs` the process exits non-zero if the
+//!   run overshoots the budget (used by the `rust-scale` CI job at
+//!   N = 1000).
+//!
+//!   cargo run --release --example fleet_scalability -- --scale 1000
 use anyhow::Result;
-use ecco::api::{run_fleet, RunSpec};
+use ecco::api::{run_fleet, RunSpec, RuntimeOpts, Session};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
-use ecco::server::Policy;
+use ecco::server::{Policy, Scheduler};
 use ecco::util::pool;
 
-fn main() -> Result<()> {
+fn scale_run(cams: usize, budget_secs: Option<f64>) -> Result<()> {
     let engine = Engine::open_default()?;
-    let gpus: f64 = std::env::args().nth(1).map(|s| s.parse().unwrap()).unwrap_or(2.0);
-    let bw: f64 = std::env::args().nth(2).map(|s| s.parse().unwrap()).unwrap_or(6.0);
-    let windows: usize = std::env::args().nth(3).map(|s| s.parse().unwrap()).unwrap_or(8);
+    let threads = pool::default_threads();
+    let windows = 2usize;
+    println!("scale: {cams} cams, {windows} windows, degree-6 topology, {threads} eval workers");
+    let spec = RunSpec::new(Task::Det, Policy::ecco())
+        .scenario(scenario::town(cams, 42))
+        .gpus(8.0)
+        .shared_mbps(64.0)
+        .uplink_mbps(20.0)
+        .windows(windows)
+        .seed(42)
+        .topology_degree(6)
+        .runtime(RuntimeOpts::new().threads(threads).scheduler(Scheduler::EventDriven))
+        .configure(|cfg| {
+            // City-scale trims: short windows, few eval frames, a light
+            // pretrain, and the capped micro-window budget that keeps
+            // per-window coordination linear in the fleet size.
+            cfg.window_secs = 20.0;
+            cfg.micro_windows = 2;
+            cfg.max_micro_windows = 8;
+            cfg.eval_frames = 4;
+            cfg.pretrain_steps = 40;
+        });
+    let t0 = std::time::Instant::now();
+    let mut session = Session::new(&engine, spec)?;
+    let built = t0.elapsed().as_secs_f64();
+    println!("  built system in {built:.1}s");
+    for _ in 0..windows {
+        let w0 = std::time::Instant::now();
+        let report = session.step_window()?;
+        println!(
+            "  window {}: {:.1}s wall, {} jobs, mean mAP {:.3}",
+            report.window,
+            w0.elapsed().as_secs_f64(),
+            report.jobs,
+            report.mean_acc
+        );
+    }
+    let total = t0.elapsed().as_secs_f64();
+    println!("{cams} cams x {windows} windows in {total:.1}s wall (one process)");
+    if let Some(budget) = budget_secs {
+        if total > budget {
+            eprintln!("FAIL: {total:.1}s exceeds the {budget:.0}s budget");
+            std::process::exit(1);
+        }
+        println!("within the {budget:.0}s budget");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--scale") {
+        let cams: usize = args.get(i + 1).map(|s| s.parse().unwrap()).unwrap_or(1000);
+        let budget = args
+            .iter()
+            .position(|a| a == "--budget-secs")
+            .and_then(|j| args.get(j + 1))
+            .map(|s| s.parse().unwrap());
+        return scale_run(cams, budget);
+    }
+    let engine = Engine::open_default()?;
+    let gpus: f64 = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(2.0);
+    let bw: f64 = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(6.0);
+    let windows: usize = args.get(3).map(|s| s.parse().unwrap()).unwrap_or(8);
     let threads = pool::default_threads();
     println!(
         "fleet: 6 cams (3+3 correlated), {gpus} GPUs, {bw} Mbps shared, {windows} windows, \

@@ -7,10 +7,15 @@
 //!
 //! Run: `cargo bench --bench parallel`
 
-use ecco::api::{run_fleet, RunSpec};
+use std::collections::BTreeSet;
+
+use ecco::api::{run_fleet, RunSpec, RuntimeOpts};
+use ecco::grouping::topology::Topology;
+use ecco::grouping::{group_request_pruned, Decision, GroupJob, GroupingPolicy, RequestMeta};
 use ecco::runtime::native::{self, Exec};
 use ecco::runtime::{Engine, Labels, Task, TrainBatch};
 use ecco::scene::scenario;
+use ecco::server::sched::{EventWheel, SchedEvent};
 use ecco::server::{eval_model, Policy};
 use ecco::util::bench::{black_box, BenchSuite};
 use ecco::util::pool::{self, Pool};
@@ -106,7 +111,7 @@ fn main() {
                     .uplink_mbps(20.0)
                     .windows(2)
                     .seed(40)
-                    .eval_threads(1)
+                    .runtime(RuntimeOpts::new().threads(1))
                     .configure(|cfg| {
                         cfg.micro_windows = 4;
                         cfg.window_secs = 40.0;
@@ -121,6 +126,97 @@ fn main() {
             black_box(reports.len());
             dt
         });
+    }
+
+    // Scheduler time wheel at fleet scale: build + drain one window's
+    // worth of per-camera capture/probe events plus the training lanes at
+    // w_eff = 8 slots (the fleet cap). The per-window coordination cost of
+    // the event driver is exactly this heap churn, so the 100 -> 1k -> 10k
+    // rows should scale near-linearly (O(n log n)), not quadratically.
+    for n in [100usize, 1_000, 10_000] {
+        let w_eff = 8usize;
+        b.bench(&format!("sched_wheel_{n}cams"), || {
+            let mut wheel = EventWheel::new();
+            for cam in 0..n {
+                for slot in 1..=w_eff {
+                    wheel.push(SchedEvent::capture(slot, cam));
+                    wheel.push(SchedEvent::probe(slot, cam));
+                }
+            }
+            for mw in 0..w_eff {
+                wheel.push(SchedEvent::train(mw + 1, mw));
+            }
+            let mut drained = 0usize;
+            for slot in 1..=w_eff {
+                while let Some(ev) = wheel.pop_due(slot) {
+                    drained = drained.wrapping_add(ev.cam);
+                }
+            }
+            drained
+        });
+    }
+
+    // Grouping placement at fleet scale: one request per camera, placed
+    // sequentially with camera -> job tracking (the System's shape). The
+    // eval closure spins a fixed arithmetic load standing in for a model
+    // eval — eval count x cost dominates real runs, so the all-pairs rows
+    // grow quadratically with the fleet while the degree-8 topology rows
+    // stay near-linear. The metadata filter is off (worst case for
+    // all-pairs, per the §3.3 ablation) and every eval fails the
+    // performance check so the job list grows to n, the city-scale regime.
+    for n in [100usize, 1_000] {
+        let sc = scenario::town(n, 11);
+        let positions: Vec<(f32, f32)> = sc.world.cameras.iter().map(|c| c.pos).collect();
+        // O(n^2) build, done once out here — the rows time placement only.
+        let topo = Topology::from_positions(&positions, 8);
+        let policy = GroupingPolicy {
+            metadata_filter: false,
+            ..GroupingPolicy::default()
+        };
+        for (tag, topo) in [("allpairs", None), ("topo8", Some(&topo))] {
+            b.bench(&format!("group_place_{n}cams_{tag}"), || {
+                let mut jobs: Vec<GroupJob> = Vec::new();
+                let mut next_id = 0usize;
+                let mut cam_job = vec![usize::MAX; n];
+                let mut evals = 0usize;
+                for cam in 0..n {
+                    let req = RequestMeta {
+                        cam,
+                        time: 0.0,
+                        loc: positions[cam],
+                        acc: 0.5,
+                    };
+                    let candidates: Option<BTreeSet<usize>> = topo.map(|t| {
+                        t.neighbors(cam)
+                            .iter()
+                            .filter_map(|&nb| match cam_job[nb] {
+                                usize::MAX => None,
+                                id => Some(id),
+                            })
+                            .collect()
+                    });
+                    let decision = group_request_pruned(
+                        &mut jobs,
+                        &mut next_id,
+                        &policy,
+                        candidates.as_ref(),
+                        req,
+                        |_job| {
+                            evals += 1;
+                            let mut x = 0.37f32;
+                            for i in 0..400u32 {
+                                x = (x * 1.000_001 + i as f32 * 1e-7).fract();
+                            }
+                            black_box(x) * 1e-6 // always below req.acc
+                        },
+                    );
+                    cam_job[cam] = match decision {
+                        Decision::Joined(id) | Decision::NewJob(id) => id,
+                    };
+                }
+                (jobs.len(), evals)
+            });
+        }
     }
 
     b.finish();

@@ -17,6 +17,34 @@
 //! engine with results in spec order — every report identical to its
 //! sequential equivalent (see the threading notes in [`crate`] docs).
 //!
+//! Two sub-builders refine a spec without new top-level setters:
+//! [`RunSpec::camera`] layers per-camera overrides ([`CameraSpec`]: uplink,
+//! window length, phase) over the fleet defaults, and
+//! [`RunSpec::runtime`] groups process-level knobs ([`RuntimeOpts`]:
+//! eval threads, frame cache, lockstep vs event-driven scheduler).
+//! City-scale fleets add [`RunSpec::topology_degree`] to prune grouping's
+//! candidate scan to spatial neighbors:
+//!
+//! ```no_run
+//! use ecco::api::{RunSpec, RuntimeOpts, Session};
+//! use ecco::runtime::{Engine, Task};
+//! use ecco::scene::scenario;
+//! use ecco::server::{Policy, Scheduler};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let engine = Engine::open_default()?;
+//!     let spec = RunSpec::new(Task::Det, Policy::ecco())
+//!         .scenario(scenario::town(1000, 42))
+//!         .topology_degree(6)
+//!         .camera(0, |c| c.uplink_mbps(8.0).window_len(30.0).phase(10.0))
+//!         .runtime(RuntimeOpts::new().threads(4).scheduler(Scheduler::EventDriven))
+//!         .windows(4);
+//!     let report = Session::new(&engine, spec)?.run()?;
+//!     println!("final mAP {:.3}", report.final_acc);
+//!     Ok(())
+//! }
+//! ```
+//!
 //! ```no_run
 //! use ecco::api::{RunSpec, Session};
 //! use ecco::runtime::{Engine, Task};
@@ -44,4 +72,4 @@ pub mod spec;
 pub use event::{Event, EventSink, JsonlSink, RecordingSink};
 pub use report::{Resilience, RunReport, WindowReport};
 pub use session::{run_fleet, Session};
-pub use spec::{RunSpec, SpecError};
+pub use spec::{CameraSpec, RunSpec, RuntimeOpts, SpecError};

@@ -14,6 +14,7 @@ use crate::alloc::Allocator;
 use crate::api::event::{self, Event, EventSink};
 use crate::api::report::{Resilience, RunReport, WindowReport};
 use crate::api::spec::RunSpec;
+use crate::grouping::topology::Topology;
 use crate::net::trace::Traces;
 use crate::runtime::{Engine, EngineStats};
 use crate::server::system::{MembershipSnapshot, System};
@@ -43,8 +44,17 @@ impl<'e> Session<'e> {
         cfg.gpus = rest.gpus;
         cfg.seed = rest.seed;
         cfg.faults = rest.faults;
+        cfg.cam_windows = rest.cam_windows;
         for hook in &rest.hooks {
             hook(&mut cfg);
+        }
+        // Derive the spatial pruning graph from the scenario's camera
+        // placement, unless a hook installed an explicit topology.
+        if let Some(degree) = rest.topology_degree {
+            if cfg.policy.group_retraining && cfg.grouping.topology.is_none() {
+                let positions: Vec<(f32, f32)> = sc.world.cameras.iter().map(|c| c.pos).collect();
+                cfg.grouping.topology = Some(Topology::from_positions(&positions, degree));
+            }
         }
         let name = cfg.policy.name.to_string();
         let zoo_prefill = cfg.policy.zoo_warm_start && rest.zoo_init_steps > 0;

@@ -5,13 +5,19 @@
 //! seed, and the scenario world. [`super::Session::new`] consumes a spec;
 //! validation happens before any engine work, so malformed sweeps fail
 //! fast with a typed [`SpecError`].
+//!
+//! Per-camera knobs (uplink, window length, phase) layer onto the fleet
+//! defaults through [`RunSpec::camera`] + [`CameraSpec`]; process-level
+//! runtime knobs (eval workers, frame cache, scheduler) are grouped in
+//! [`RuntimeOpts`] and applied with [`RunSpec::runtime`].
 
+use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::faults::FaultPlan;
 use crate::runtime::Task;
 use crate::scene::scenario::{self, Scenario};
-use crate::server::{Policy, SystemConfig};
+use crate::server::{CamWindow, Policy, Scheduler, SystemConfig};
 
 /// A validation failure in a [`RunSpec`].
 #[derive(Debug, Clone, PartialEq)]
@@ -30,6 +36,18 @@ pub enum SpecError {
     NoCameras,
     /// The fault plan targets a camera index the scenario doesn't have.
     FaultCamOutOfRange { cam: usize, cams: usize },
+    /// A [`RunSpec::camera`] override targets a camera index the scenario
+    /// doesn't have.
+    UnknownCamera { cam: usize, cams: usize },
+    /// A per-camera window length must be positive and finite.
+    ZeroWindowLen { cam: usize, secs: f64 },
+    /// A per-camera phase must be finite, non-negative, and strictly less
+    /// than the camera's window length (when one is set on the spec).
+    PhaseOutOfRange {
+        cam: usize,
+        phase: f64,
+        window_len: Option<f64>,
+    },
 }
 
 impl fmt::Display for SpecError {
@@ -54,6 +72,28 @@ impl fmt::Display for SpecError {
                 f,
                 "run spec: fault plan targets camera {cam} but the scenario has {cams} cameras"
             ),
+            SpecError::UnknownCamera { cam, cams } => write!(
+                f,
+                "run spec: camera override targets camera {cam} but the scenario has {cams} cameras"
+            ),
+            SpecError::ZeroWindowLen { cam, secs } => write!(
+                f,
+                "run spec: camera {cam} window length must be positive, got {secs} s"
+            ),
+            SpecError::PhaseOutOfRange {
+                cam,
+                phase,
+                window_len,
+            } => match window_len {
+                Some(len) => write!(
+                    f,
+                    "run spec: camera {cam} phase {phase} s must lie in [0, {len}) s"
+                ),
+                None => write!(
+                    f,
+                    "run spec: camera {cam} phase must be finite and >= 0, got {phase} s"
+                ),
+            },
         }
     }
 }
@@ -68,6 +108,98 @@ enum Uplinks {
     PerCamera(Vec<f64>),
 }
 
+/// Per-camera overrides, built with [`RunSpec::camera`]. Every field is
+/// optional: unset fields keep the fleet-wide default (the spec's uplink
+/// setting, the global window length, zero phase).
+///
+/// ```
+/// use ecco::api::{CameraSpec, RunSpec};
+/// use ecco::runtime::Task;
+/// use ecco::server::Policy;
+///
+/// let spec = RunSpec::new(Task::Det, Policy::ecco())
+///     .cams(4)
+///     .camera(2, |c: CameraSpec| c.uplink_mbps(8.0).window_len(30.0))
+///     .camera(3, |c| c.phase(10.0));
+/// assert_eq!(spec.validate(), Ok(()));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CameraSpec {
+    uplink_mbps: Option<f64>,
+    window_len: Option<f64>,
+    phase: Option<f64>,
+}
+
+impl CameraSpec {
+    /// Override this camera's uplink capacity (Mbit/s).
+    pub fn uplink_mbps(mut self, mbps: f64) -> Self {
+        self.uplink_mbps = Some(mbps);
+        self
+    }
+
+    /// Give this camera its own retraining-window length (seconds). Any
+    /// heterogeneous length forces the event-driven scheduler.
+    pub fn window_len(mut self, secs: f64) -> Self {
+        self.window_len = Some(secs);
+        self
+    }
+
+    /// Stagger this camera's window boundaries by `secs` from the server
+    /// clock origin; must lie in `[0, window_len)`. Any non-zero phase
+    /// forces the event-driven scheduler.
+    pub fn phase(mut self, secs: f64) -> Self {
+        self.phase = Some(secs);
+        self
+    }
+}
+
+/// Process-level runtime options, applied with [`RunSpec::runtime`].
+/// Unset fields keep the [`SystemConfig`] defaults, so `RuntimeOpts::new()`
+/// is a no-op.
+///
+/// ```
+/// use ecco::api::{RunSpec, RuntimeOpts};
+/// use ecco::runtime::Task;
+/// use ecco::server::{Policy, Scheduler};
+///
+/// let spec = RunSpec::new(Task::Det, Policy::ecco())
+///     .runtime(RuntimeOpts::new().threads(4).scheduler(Scheduler::EventDriven));
+/// assert_eq!(spec.validate(), Ok(()));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RuntimeOpts {
+    threads: Option<usize>,
+    frame_cache: Option<bool>,
+    scheduler: Option<Scheduler>,
+}
+
+impl RuntimeOpts {
+    pub fn new() -> RuntimeOpts {
+        RuntimeOpts::default()
+    }
+
+    /// Worker threads for the evaluation fan-outs (clamped to >= 1).
+    /// Byte-identical at any value; only trades wall-clock for cores.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Enable/disable the per-window eval-frame render cache (on by
+    /// default; byte-identical either way).
+    pub fn frame_cache(mut self, enabled: bool) -> Self {
+        self.frame_cache = Some(enabled);
+        self
+    }
+
+    /// Pick the per-window driver. Heterogeneous camera windows force
+    /// [`Scheduler::EventDriven`] regardless of this setting.
+    pub fn scheduler(mut self, scheduler: Scheduler) -> Self {
+        self.scheduler = Some(scheduler);
+        self
+    }
+}
+
 /// Builder for one system run. Defaults mirror the quick-driver CLI:
 /// 6 cameras in two correlated triples, 1 GPU, 6 Mbps shared / 20 Mbps
 /// uplinks, 8 windows, seed 7.
@@ -78,6 +210,10 @@ pub struct RunSpec {
     pub(crate) gpus: f64,
     pub(crate) shared_mbps: f64,
     uplinks: Uplinks,
+    /// Per-camera overrides, layered over `uplinks` / the global window.
+    cameras: BTreeMap<usize, CameraSpec>,
+    /// Prune Alg. 2 candidate scans to each camera's k spatial neighbors.
+    topology_degree: Option<usize>,
     pub(crate) windows: usize,
     pub(crate) seed: u64,
     pub(crate) scenario: Option<Scenario>,
@@ -101,6 +237,8 @@ impl RunSpec {
             gpus: 1.0,
             shared_mbps: 6.0,
             uplinks: Uplinks::Uniform(20.0),
+            cameras: BTreeMap::new(),
+            topology_degree: None,
             windows: 8,
             seed: 7,
             scenario: None,
@@ -136,9 +274,31 @@ impl RunSpec {
     }
 
     /// Explicit per-camera uplinks (Mbit/s); length must match the camera
-    /// count or validation fails.
+    /// count or validation fails. Equivalent to calling
+    /// [`RunSpec::camera`] with `uplink_mbps` per index; per-camera
+    /// overrides win over this base vector.
     pub fn uplinks(mut self, mbps: Vec<f64>) -> Self {
         self.uplinks = Uplinks::PerCamera(mbps);
+        self
+    }
+
+    /// Per-camera overrides: fetch (or default) camera `cam`'s
+    /// [`CameraSpec`], run it through `f`, and store the result. Repeated
+    /// calls for the same camera compose — each sees the accumulated spec.
+    pub fn camera(mut self, cam: usize, f: impl FnOnce(CameraSpec) -> CameraSpec) -> Self {
+        let entry = self.cameras.get(&cam).copied().unwrap_or_default();
+        self.cameras.insert(cam, f(entry));
+        self
+    }
+
+    /// Prune dynamic grouping's candidate scan (Alg. 2) to each camera's
+    /// `degree` nearest spatial neighbors, derived from the scenario's
+    /// camera placement. `degree >= n - 1` reproduces the all-pairs scan
+    /// exactly; smaller degrees drop the per-request cost from O(n) to
+    /// O(degree) with a periodic long-range probe window as the safety
+    /// net. Only affects group-retraining policies.
+    pub fn topology_degree(mut self, degree: usize) -> Self {
+        self.topology_degree = Some(degree);
         self
     }
 
@@ -184,18 +344,43 @@ impl RunSpec {
         self
     }
 
+    /// Apply a batch of process-level runtime options (threads, frame
+    /// cache, scheduler). Only fields explicitly set on `opts` are
+    /// applied; like any hook, later calls win over earlier ones.
+    pub fn runtime(self, opts: RuntimeOpts) -> Self {
+        self.configure(move |cfg| {
+            if let Some(n) = opts.threads {
+                cfg.eval_threads = n;
+            }
+            if let Some(cache) = opts.frame_cache {
+                cfg.frame_cache = cache;
+            }
+            if let Some(scheduler) = opts.scheduler {
+                cfg.scheduler = scheduler;
+            }
+        })
+    }
+
     /// Worker threads for the system's evaluation fan-outs (see
     /// `SystemConfig::eval_threads`). Runs are byte-identical at any value;
     /// defaults to the machine's parallelism (`ECCO_THREADS` overrides).
+    ///
+    /// Deprecated in favor of
+    /// [`RunSpec::runtime`]`(RuntimeOpts::new().threads(n))`; kept as a
+    /// thin wrapper.
     pub fn eval_threads(self, n: usize) -> Self {
-        self.configure(move |cfg| cfg.eval_threads = n.max(1))
+        self.runtime(RuntimeOpts::new().threads(n))
     }
 
     /// Enable/disable the per-window eval-frame render cache (see
     /// `SystemConfig::frame_cache`; on by default). Runs are byte-identical
     /// either way — disabling only trades wall-clock to verify that claim.
+    ///
+    /// Deprecated in favor of
+    /// [`RunSpec::runtime`]`(RuntimeOpts::new().frame_cache(enabled))`;
+    /// kept as a thin wrapper.
     pub fn frame_cache(self, enabled: bool) -> Self {
-        self.configure(move |cfg| cfg.frame_cache = enabled)
+        self.runtime(RuntimeOpts::new().frame_cache(enabled))
     }
 
     /// Like [`RunSpec::eval_threads`], but registered *before* every other
@@ -258,6 +443,30 @@ impl RunSpec {
                 return Err(SpecError::FaultCamOutOfRange { cam, cams: n });
             }
         }
+        for (&cam, cspec) in &self.cameras {
+            if cam >= n {
+                return Err(SpecError::UnknownCamera { cam, cams: n });
+            }
+            if let Some(mbps) = cspec.uplink_mbps {
+                check(cam, mbps)?;
+            }
+            if let Some(len) = cspec.window_len {
+                if !(len.is_finite() && len > 0.0) {
+                    return Err(SpecError::ZeroWindowLen { cam, secs: len });
+                }
+            }
+            if let Some(phase) = cspec.phase {
+                let bad = !(phase.is_finite() && phase >= 0.0)
+                    || cspec.window_len.is_some_and(|len| phase >= len);
+                if bad {
+                    return Err(SpecError::PhaseOutOfRange {
+                        cam,
+                        phase,
+                        window_len: cspec.window_len,
+                    });
+                }
+            }
+        }
         Ok(())
     }
 
@@ -273,10 +482,29 @@ impl RunSpec {
             scenario::grouped_static(&split, 0.06, 30.0, self.seed)
         });
         let n = sc.world.cameras.len();
-        let uplinks = match self.uplinks {
+        let mut uplinks = match self.uplinks {
             Uplinks::Uniform(mbps) => vec![mbps; n],
             Uplinks::PerCamera(ups) => ups,
         };
+        for (&cam, cspec) in &self.cameras {
+            if let (Some(mbps), Some(slot)) = (cspec.uplink_mbps, uplinks.get_mut(cam)) {
+                *slot = mbps;
+            }
+        }
+        let cam_windows: BTreeMap<usize, CamWindow> = self
+            .cameras
+            .iter()
+            .filter(|(_, c)| c.window_len.is_some() || c.phase.is_some())
+            .map(|(&cam, c)| {
+                (
+                    cam,
+                    CamWindow {
+                        len_secs: c.window_len,
+                        phase_secs: c.phase.unwrap_or(0.0),
+                    },
+                )
+            })
+            .collect();
         (
             sc,
             uplinks,
@@ -289,6 +517,8 @@ impl RunSpec {
                 seed: self.seed,
                 faults: self.faults,
                 zoo_init_steps: self.zoo_init_steps,
+                cam_windows,
+                topology_degree: self.topology_degree,
                 hooks: self.hooks,
             },
         )
@@ -305,6 +535,8 @@ pub(crate) struct RunSpecRest {
     pub(crate) seed: u64,
     pub(crate) faults: FaultPlan,
     pub(crate) zoo_init_steps: usize,
+    pub(crate) cam_windows: BTreeMap<usize, CamWindow>,
+    pub(crate) topology_degree: Option<usize>,
     #[allow(clippy::type_complexity)]
     pub(crate) hooks: Vec<Box<dyn Fn(&mut SystemConfig) + Send + Sync>>,
 }
@@ -382,6 +614,92 @@ mod tests {
             Err(SpecError::FaultCamOutOfRange { cam: 9, cams: 4 })
         );
         assert_eq!(base().cams(10).faults(plan).validate(), Ok(()));
+    }
+
+    #[test]
+    fn camera_overrides_validate_with_typed_errors() {
+        // Index past the fleet.
+        assert_eq!(
+            base().cams(4).camera(9, |c| c.uplink_mbps(5.0)).validate(),
+            Err(SpecError::UnknownCamera { cam: 9, cams: 4 })
+        );
+        // Bad uplink override reuses the uplink error.
+        assert_eq!(
+            base().camera(1, |c| c.uplink_mbps(0.0)).validate(),
+            Err(SpecError::NonPositiveUplink { cam: 1, mbps: 0.0 })
+        );
+        // Zero / non-finite window length.
+        assert_eq!(
+            base().camera(0, |c| c.window_len(0.0)).validate(),
+            Err(SpecError::ZeroWindowLen { cam: 0, secs: 0.0 })
+        );
+        // Phase at/after the camera's own window boundary.
+        assert_eq!(
+            base().camera(2, |c| c.window_len(30.0).phase(30.0)).validate(),
+            Err(SpecError::PhaseOutOfRange {
+                cam: 2,
+                phase: 30.0,
+                window_len: Some(30.0)
+            })
+        );
+        // Negative phase fails even without a window-length override.
+        assert_eq!(
+            base().camera(2, |c| c.phase(-1.0)).validate(),
+            Err(SpecError::PhaseOutOfRange {
+                cam: 2,
+                phase: -1.0,
+                window_len: None
+            })
+        );
+        // A well-formed heterogeneous fleet passes.
+        assert_eq!(
+            base()
+                .camera(0, |c| c.window_len(30.0).phase(10.0))
+                .camera(5, |c| c.uplink_mbps(4.0))
+                .validate(),
+            Ok(())
+        );
+    }
+
+    #[test]
+    fn camera_calls_compose_and_layer_over_uplink_vector() {
+        let spec = base()
+            .cams(3)
+            .uplinks(vec![10.0, 11.0, 12.0])
+            .camera(1, |c| c.uplink_mbps(99.0))
+            .camera(1, |c| c.window_len(30.0)); // must keep the uplink
+        assert_eq!(spec.validate(), Ok(()));
+        let (_, uplinks, rest) = spec.into_parts();
+        assert_eq!(uplinks, vec![10.0, 99.0, 12.0]);
+        let cw = rest.cam_windows.get(&1).copied().unwrap();
+        assert_eq!(cw.len_secs, Some(30.0));
+        assert_eq!(cw.phase_secs, 0.0);
+        // Uplink-only overrides don't create window entries.
+        let (_, _, rest2) = base().camera(0, |c| c.uplink_mbps(5.0)).into_parts();
+        assert!(rest2.cam_windows.is_empty());
+    }
+
+    #[test]
+    fn runtime_opts_unset_fields_are_no_ops() {
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        let baseline = (cfg.eval_threads, cfg.frame_cache, cfg.scheduler);
+        let spec = base().runtime(RuntimeOpts::new());
+        for hook in &spec.hooks {
+            hook(&mut cfg);
+        }
+        assert_eq!((cfg.eval_threads, cfg.frame_cache, cfg.scheduler), baseline);
+        let spec = base().runtime(
+            RuntimeOpts::new()
+                .threads(0)
+                .frame_cache(false)
+                .scheduler(Scheduler::EventDriven),
+        );
+        for hook in &spec.hooks {
+            hook(&mut cfg);
+        }
+        assert_eq!(cfg.eval_threads, 1, "threads clamp to >= 1");
+        assert!(!cfg.frame_cache);
+        assert_eq!(cfg.scheduler, Scheduler::EventDriven);
     }
 
     #[test]

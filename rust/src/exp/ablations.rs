@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::alloc::EccoAllocator;
-use crate::api::{RunSpec, Session};
+use crate::api::{RunSpec, RuntimeOpts, Session};
 use crate::runtime::{Engine, Task};
 use crate::scene::scenario;
 use crate::server::Policy;
@@ -48,7 +48,7 @@ pub fn alpha_beta(engine: &Engine, ctx: &ExpContext) -> Result<()> {
             .uplink_mbps(20.0)
             .windows(windows)
             .seed(ctx.seed)
-            .eval_threads(per_run)
+            .runtime(RuntimeOpts::new().threads(per_run))
             .configure(|cfg| {
                 cfg.auto_request = false;
                 cfg.auto_regroup = false;

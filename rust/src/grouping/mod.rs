@@ -13,8 +13,17 @@
 //!   whose accuracy under the group model dropped by more than fraction
 //!   `drop_threshold` relative to the previous window is evicted and
 //!   re-enters the pipeline as a fresh request.
+//!
+//! At fleet scale the candidate search itself is the bottleneck: without
+//! pruning every request examines every job (O(n²) per window across the
+//! fleet). [`group_request_pruned`] accepts an optional candidate-id set —
+//! typically the jobs owned by the requester's spatial neighbors from a
+//! [`topology::Topology`] graph — restricting both the metadata filter and
+//! the expensive model evals to O(degree) jobs per request.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+
+pub mod topology;
 
 /// Metadata of a retraining request (Alg. 2's r.t / r.loc / r.acc).
 #[derive(Debug, Clone)]
@@ -64,6 +73,12 @@ pub struct GroupingPolicy {
     /// Ablation switch: disable the metadata pre-filter (every job becomes
     /// a candidate and must be eval'd — the expensive path §3.3 avoids).
     pub metadata_filter: bool,
+    /// Spatial neighbor graph for candidate pruning (None = all-pairs,
+    /// the exact legacy behavior). When set, a request only considers
+    /// jobs owning at least one of the requester's neighbors, except on
+    /// [`topology::Topology::long_range_due`] windows where every job is
+    /// considered again.
+    pub topology: Option<topology::Topology>,
 }
 
 impl Default for GroupingPolicy {
@@ -73,6 +88,7 @@ impl Default for GroupingPolicy {
             loc_delta: 0.2,
             drop_threshold: 0.25,
             metadata_filter: true,
+            topology: None,
         }
     }
 }
@@ -101,15 +117,38 @@ pub fn metadata_correlated(policy: &GroupingPolicy, job: &GroupJob, req: &Reques
 /// Alg. 2 `GroupRequest`. `eval(job_id)` must return the accuracy of that
 /// job's current model on the request's sampled frames; it is only invoked
 /// for jobs passing the metadata filter (the whole point of the filter).
+/// Considers every job — see [`group_request_pruned`] for the
+/// topology-restricted variant.
 pub fn group_request<F: FnMut(usize) -> f32>(
     jobs: &mut Vec<GroupJob>,
     next_job_id: &mut usize,
     policy: &GroupingPolicy,
     req: RequestMeta,
+    eval: F,
+) -> Decision {
+    group_request_pruned(jobs, next_job_id, policy, None, req, eval)
+}
+
+/// [`group_request`] restricted to a candidate set: when `candidates` is
+/// `Some`, only jobs whose id is in the set are examined (metadata filter
+/// *and* eval both skipped otherwise); `None` is exactly `group_request`.
+/// A request whose candidate set rules out every job starts a new job,
+/// same as an empty fleet would.
+pub fn group_request_pruned<F: FnMut(usize) -> f32>(
+    jobs: &mut Vec<GroupJob>,
+    next_job_id: &mut usize,
+    policy: &GroupingPolicy,
+    candidates: Option<&BTreeSet<usize>>,
+    req: RequestMeta,
     mut eval: F,
 ) -> Decision {
     let mut best: Option<(usize, f32)> = None;
     for job in jobs.iter() {
+        if let Some(set) = candidates {
+            if !set.contains(&job.id) {
+                continue;
+            }
+        }
         if policy.metadata_filter && !metadata_correlated(policy, job, &req) {
             continue;
         }
@@ -365,6 +404,88 @@ mod tests {
         update_grouping(&mut jobs, &policy, 100.0, |_| (0.0, 0.0), |_, _| 0.40);
         let ev = update_grouping(&mut jobs, &policy, 200.0, |_| (0.0, 0.0), |_, _| 0.37);
         assert!(ev.is_empty(), "-7.5% is within the 15% tolerance");
+    }
+
+    #[test]
+    fn pruning_blocks_non_candidate_jobs() {
+        let policy = GroupingPolicy::default();
+        let mut jobs = vec![
+            GroupJob::new(0, req(0, 10.0, (0.1, 0.1), 0.2)),
+            GroupJob::new(1, req(1, 12.0, (0.15, 0.1), 0.2)),
+        ];
+        let mut next = 2;
+        // Job 1 scores better but is not a candidate: job 0 must win.
+        let set: BTreeSet<usize> = [0].into_iter().collect();
+        let mut evals = Vec::new();
+        let d = group_request_pruned(
+            &mut jobs,
+            &mut next,
+            &policy,
+            Some(&set),
+            req(2, 15.0, (0.12, 0.12), 0.1),
+            |job_id| {
+                evals.push(job_id);
+                if job_id == 1 {
+                    0.9
+                } else {
+                    0.2
+                }
+            },
+        );
+        assert_eq!(d, Decision::Joined(0));
+        assert_eq!(evals, vec![0], "pruned job must not even be eval'd");
+        // Empty candidate set: new job, zero evals.
+        let empty = BTreeSet::new();
+        let d2 = group_request_pruned(
+            &mut jobs,
+            &mut next,
+            &policy,
+            Some(&empty),
+            req(3, 15.0, (0.12, 0.12), 0.0),
+            |_| unreachable!("no candidates to eval"),
+        );
+        assert_eq!(d2, Decision::NewJob(2));
+        assert!(is_partition(&jobs));
+    }
+
+    /// ISSUE 7 satellite: a complete candidate set (what a degree n-1
+    /// topology produces) must reproduce all-pairs grouping decisions
+    /// exactly, under random request storms.
+    #[test]
+    fn prop_full_candidate_set_matches_all_pairs() {
+        prop::check("grouping-pruned-full-equiv", 60, |g| {
+            let policy = GroupingPolicy::default();
+            let mut jobs_a: Vec<GroupJob> = Vec::new();
+            let mut jobs_b: Vec<GroupJob> = Vec::new();
+            let (mut next_a, mut next_b) = (0usize, 0usize);
+            let n_cams = g.usize(2, 12);
+            for cam in 0..n_cams {
+                let r = req(
+                    cam,
+                    g.f32(0.0, 300.0) as f64,
+                    (g.f32(0.0, 1.0), g.f32(0.0, 1.0)),
+                    g.f32(0.0, 0.4),
+                );
+                let acc = g.f32(0.0, 0.6);
+                let d_a = group_request(&mut jobs_a, &mut next_a, &policy, r.clone(), |_| acc);
+                let all: BTreeSet<usize> = jobs_b.iter().map(|j| j.id).collect();
+                let d_b = group_request_pruned(
+                    &mut jobs_b,
+                    &mut next_b,
+                    &policy,
+                    Some(&all),
+                    r,
+                    |_| acc,
+                );
+                if d_a != d_b {
+                    return Err(format!("decision diverged: {d_a:?} vs {d_b:?}"));
+                }
+            }
+            if next_a != next_b || jobs_a.len() != jobs_b.len() {
+                return Err("job sets diverged".to_string());
+            }
+            Ok(())
+        });
     }
 
     #[test]

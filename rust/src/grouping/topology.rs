@@ -1,0 +1,205 @@
+//! Camera topology graph — spatial neighbor pruning for Algorithm 2.
+//!
+//! All-pairs grouping evaluates every (job, request) pair, which is O(n²)
+//! in fleet size and caps the simulation at tens of cameras. ReXCam's
+//! observation is that cross-camera correlation is overwhelmingly *local*:
+//! a camera's drift is correlated with its spatial neighbors, so the
+//! similarity search can be pruned to a sparse neighbor graph. This module
+//! provides that graph:
+//!
+//! * [`Topology::from_positions`] builds a k-nearest-neighbor graph over
+//!   camera placements (symmetrised: `a ~ b` if either picks the other),
+//!   so candidate generation per request is O(degree) instead of O(jobs).
+//! * [`Topology::long_range_due`] marks periodic windows on which the
+//!   pruning is lifted and *all* jobs are candidates again — the
+//!   low-frequency long-range probe that lets distant-but-correlated
+//!   cameras still merge.
+//!
+//! The graph is static (derived from deployment positions); degree `n-1`
+//! reproduces all-pairs grouping exactly (pinned by a property test).
+
+use std::collections::BTreeSet;
+
+/// Default cadence of the long-range probe: every 8th window considers
+/// every job, not just spatial neighbors' jobs.
+pub const DEFAULT_LONG_RANGE_PERIOD: usize = 8;
+
+/// A static spatial neighbor graph over the camera fleet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Sorted neighbor ids per camera (never contains the camera itself).
+    neighbors: Vec<Vec<usize>>,
+    /// Every `long_range_period`-th window lifts the pruning entirely;
+    /// 0 disables long-range probes.
+    pub long_range_period: usize,
+}
+
+impl Topology {
+    /// Complete graph on `n` cameras: every camera neighbors every other.
+    /// Grouping with this topology is exactly the all-pairs pass.
+    pub fn full(n: usize) -> Topology {
+        let neighbors = (0..n)
+            .map(|c| (0..n).filter(|&o| o != c).collect())
+            .collect();
+        Topology {
+            neighbors,
+            long_range_period: DEFAULT_LONG_RANGE_PERIOD,
+        }
+    }
+
+    /// k-nearest-neighbor graph over camera positions, symmetrised: each
+    /// camera picks its `degree` nearest peers by Euclidean distance
+    /// (ties broken by lower camera id, so the graph is deterministic),
+    /// then `a ~ b` holds if either side picked the other. `degree >= n-1`
+    /// yields the complete graph.
+    pub fn from_positions(positions: &[(f32, f32)], degree: usize) -> Topology {
+        let n = positions.len();
+        let mut sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+        let mut scratch: Vec<(f32, usize)> = Vec::with_capacity(n.saturating_sub(1));
+        for cam in 0..n {
+            scratch.clear();
+            let p = positions[cam];
+            for (other, &q) in positions.iter().enumerate() {
+                if other == cam {
+                    continue;
+                }
+                let d2 = (p.0 - q.0) * (p.0 - q.0) + (p.1 - q.1) * (p.1 - q.1);
+                scratch.push((d2, other));
+            }
+            let k = degree.min(scratch.len());
+            if k > 0 {
+                // Partial selection keeps the build O(n²) overall instead
+                // of O(n² log n); ties resolve by camera id for determinism.
+                scratch.select_nth_unstable_by(k - 1, |a, b| {
+                    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+                });
+                for &(_, other) in &scratch[..k] {
+                    sets[cam].insert(other);
+                    sets[other].insert(cam);
+                }
+            }
+        }
+        Topology {
+            neighbors: sets
+                .into_iter()
+                .map(|s| s.into_iter().collect())
+                .collect(),
+            long_range_period: DEFAULT_LONG_RANGE_PERIOD,
+        }
+    }
+
+    /// Override the long-range probe cadence (0 disables it).
+    pub fn with_long_range_period(mut self, period: usize) -> Topology {
+        self.long_range_period = period;
+        self
+    }
+
+    pub fn n_cams(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Sorted neighbor ids of `cam` (empty slice when out of range).
+    pub fn neighbors(&self, cam: usize) -> &[usize] {
+        self.neighbors.get(cam).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Largest per-camera degree after symmetrisation.
+    pub fn max_degree(&self) -> usize {
+        self.neighbors.iter().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    /// Is `window` a long-range probe window? On these windows grouping
+    /// considers every job, not just neighbors' jobs. Window 0 is never
+    /// long-range (the initial request storm is exactly what pruning is
+    /// for); with period `p` the probe fires on windows p-1, 2p-1, ...
+    pub fn long_range_due(&self, window: usize) -> bool {
+        self.long_range_period > 0 && (window + 1) % self.long_range_period == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(n: usize) -> Vec<(f32, f32)> {
+        (0..n)
+            .map(|i| ((i % 8) as f32 * 0.1, (i / 8) as f32 * 0.1))
+            .collect()
+    }
+
+    #[test]
+    fn full_graph_links_everyone() {
+        let t = Topology::full(4);
+        assert_eq!(t.n_cams(), 4);
+        for c in 0..4 {
+            assert_eq!(t.neighbors(c).len(), 3);
+            assert!(!t.neighbors(c).contains(&c));
+        }
+        assert_eq!(t.max_degree(), 3);
+    }
+
+    #[test]
+    fn knn_graph_is_symmetric_and_self_free() {
+        let t = Topology::from_positions(&grid(20), 3);
+        for c in 0..20 {
+            for &o in t.neighbors(c) {
+                assert_ne!(o, c, "no self loops");
+                assert!(
+                    t.neighbors(o).contains(&c),
+                    "edge {c}~{o} must be symmetric"
+                );
+            }
+            assert!(t.neighbors(c).windows(2).all(|w| w[0] < w[1]), "sorted");
+        }
+    }
+
+    #[test]
+    fn knn_prefers_near_cameras() {
+        // A line of cameras: each one's 2-NN are its adjacent peers.
+        let pos: Vec<(f32, f32)> = (0..6).map(|i| (i as f32, 0.0)).collect();
+        let t = Topology::from_positions(&pos, 2);
+        assert_eq!(t.neighbors(0), &[1, 2]);
+        assert!(t.neighbors(3).contains(&2) && t.neighbors(3).contains(&4));
+        assert!(!t.neighbors(0).contains(&5), "far end is not a neighbor");
+    }
+
+    #[test]
+    fn degree_n_minus_1_is_complete() {
+        let pos = grid(9);
+        let t = Topology::from_positions(&pos, 8);
+        assert_eq!(t, Topology::full(9));
+        // Over-asking is clamped, not a panic.
+        let t2 = Topology::from_positions(&pos, 100);
+        assert_eq!(t2, Topology::full(9));
+    }
+
+    #[test]
+    fn coincident_positions_tie_break_by_id() {
+        // Three cameras at the same point: 1-NN must pick the lowest id.
+        let pos = vec![(0.5, 0.5); 3];
+        let t = Topology::from_positions(&pos, 1);
+        // cam 0 picks 1, cam 1 picks 0, cam 2 picks 0; symmetrised.
+        assert_eq!(t.neighbors(0), &[1, 2]);
+        assert_eq!(t.neighbors(1), &[0]);
+        assert_eq!(t.neighbors(2), &[0]);
+    }
+
+    #[test]
+    fn out_of_range_and_empty() {
+        let t = Topology::from_positions(&[], 3);
+        assert_eq!(t.n_cams(), 0);
+        assert!(t.neighbors(7).is_empty());
+        let one = Topology::from_positions(&[(0.0, 0.0)], 3);
+        assert!(one.neighbors(0).is_empty());
+    }
+
+    #[test]
+    fn long_range_cadence() {
+        let t = Topology::full(2).with_long_range_period(4);
+        let due: Vec<usize> = (0..12).filter(|&w| t.long_range_due(w)).collect();
+        assert_eq!(due, vec![3, 7, 11]);
+        assert!(!t.long_range_due(0), "window 0 must stay pruned");
+        let never = Topology::full(2).with_long_range_period(0);
+        assert!((0..32).all(|w| !never.long_range_due(w)));
+    }
+}

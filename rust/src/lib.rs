@@ -86,6 +86,34 @@
 //! step loop *is* the semantics being simulated — only the math inside
 //! each step is sharded.
 //!
+//! ## Scheduler clock model
+//!
+//! Two per-window drivers share all of the machinery above
+//! ([`server::Scheduler`], picked via [`api::RuntimeOpts::scheduler`]):
+//! the legacy **lockstep** loop advances every camera in unison one
+//! micro-window at a time, while the **event-driven** driver
+//! ([`server::sched`]) runs a min-heap time wheel so cameras with
+//! heterogeneous window lengths and staggered phases
+//! ([`api::CameraSpec::window_len`] / [`api::CameraSpec::phase`]) advance
+//! independently. The wheel's clock is deliberately *slot-quantised*: the
+//! driver performs the identical sequence of `advance(window/W)` calls the
+//! lockstep loop would, and events are keyed by the integer micro-tick
+//! they fall in, never by float instants. Within a tick, events drain in
+//! `(action, camera id)` order — captures, then drift probes, then the
+//! training micro-window, then per-camera window boundaries — which is
+//! exactly the lockstep statement order, with camera id as the
+//! deterministic tie-break. Fault-plan drains are not wheel events: the
+//! fault cursor fires as a fixed step *before* each tick's time advance
+//! (and once more at the window end), exactly where the lockstep loop
+//! applies it. Consequences: with uniform windows the event driver is
+//! **byte-identical** to lockstep — same events, same RNG draws, same
+//! timestamps to the last ULP (pinned by `rust/tests/scheduler.rs`) — and
+//! any heterogeneous camera window forces the event driver automatically.
+//! At city scale, grouping's candidate scan is pruned to each camera's
+//! spatial neighbors via [`grouping::topology`]
+//! ([`api::RunSpec::topology_degree`]), with a periodic long-range window
+//! that rescans all pairs so distant-but-correlated cameras still merge.
+//!
 //! ## Fault model
 //!
 //! Deployments churn: cameras flap, uplinks saturate, probes go missing.

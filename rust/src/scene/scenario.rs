@@ -20,6 +20,17 @@ pub struct Scenario {
     pub groups: Vec<Vec<usize>>,
 }
 
+impl Scenario {
+    /// k-nearest-neighbor pruning graph over this scenario's camera
+    /// placement (see [`crate::grouping::topology`]): each camera links to
+    /// its `degree` closest peers by mount position. `degree >= n - 1`
+    /// yields the complete graph, i.e. all-pairs grouping.
+    pub fn topology(&self, degree: usize) -> crate::grouping::topology::Topology {
+        let positions: Vec<(f32, f32)> = self.world.cameras.iter().map(|c| c.pos).collect();
+        crate::grouping::topology::Topology::from_positions(&positions, degree)
+    }
+}
+
 /// N static cameras split into correlated groups; `cams_per_group[i]`
 /// cameras share region `i`. All groups get a synchronized drift event at
 /// `drift_at` seconds (each region gets its own flavour so groups remain
@@ -354,6 +365,21 @@ mod tests {
         let s = town(22, 9);
         assert_eq!(s.world.cameras.len(), 22);
         assert_eq!(s.groups.iter().map(|g| g.len()).sum::<usize>(), 22);
+    }
+
+    #[test]
+    fn scenario_topology_degree_bounds() {
+        let s = town(10, 4);
+        let pruned = s.topology(3);
+        assert_eq!(pruned.n_cams(), 10);
+        for cam in 0..10 {
+            assert!(!pruned.neighbors(cam).is_empty());
+        }
+        // degree n-1 reproduces the complete graph.
+        let full = s.topology(9);
+        for cam in 0..10 {
+            assert_eq!(full.neighbors(cam).len(), 9);
+        }
     }
 
     #[test]

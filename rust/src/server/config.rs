@@ -91,6 +91,32 @@ impl Policy {
     }
 }
 
+/// Which per-window driver runs the simulation loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Scheduler {
+    /// Legacy lockstep loop: every camera advances in unison, one
+    /// micro-window at a time.
+    #[default]
+    Lockstep,
+    /// Event/time-wheel driver (see [`crate::server::sched`]): per-camera
+    /// capture/probe/window-end events on a slot-quantised clock. With
+    /// uniform window lengths and zero phases this replays the lockstep
+    /// loop byte-identically; it is selected automatically whenever any
+    /// camera has a heterogeneous window.
+    EventDriven,
+}
+
+/// Per-camera window override (see [`crate::api::CameraSpec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CamWindow {
+    /// This camera's own window length in seconds; `None` keeps the
+    /// global `window_secs`.
+    pub len_secs: Option<f64>,
+    /// Offset of the camera's first window boundary from the server's
+    /// clock origin; must lie in `[0, len)`.
+    pub phase_secs: f64,
+}
+
 /// Full system configuration.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -149,6 +175,18 @@ pub struct SystemConfig {
     /// [`FaultPlan::none`] (the default) is guaranteed zero-cost: event
     /// logs are byte-identical to a run without the subsystem.
     pub faults: FaultPlan,
+    /// Per-window driver; heterogeneous `cam_windows` force
+    /// [`Scheduler::EventDriven`] regardless of this setting.
+    pub scheduler: Scheduler,
+    /// Per-camera window length/phase overrides (empty = uniform fleet).
+    pub cam_windows: std::collections::BTreeMap<usize, CamWindow>,
+    /// Upper bound on [`SystemConfig::effective_micro_windows`]. The
+    /// Alg. 1 heuristic grows W with the job count so every job gets at
+    /// least two slots; at city scale (hundreds of jobs) that would make
+    /// per-window coordination quadratic, so fleet runs cap it — jobs
+    /// then time-share the capped slot budget via the allocator. The
+    /// default (`usize::MAX`) preserves the legacy behavior exactly.
+    pub max_micro_windows: usize,
 }
 
 impl SystemConfig {
@@ -175,6 +213,9 @@ impl SystemConfig {
             eval_threads: crate::util::pool::default_threads(),
             frame_cache: true,
             faults: FaultPlan::none(),
+            scheduler: Scheduler::default(),
+            cam_windows: std::collections::BTreeMap::new(),
+            max_micro_windows: usize::MAX,
         }
     }
 
@@ -186,9 +227,12 @@ impl SystemConfig {
     /// Effective micro-windows for a window with `n_jobs` active jobs:
     /// Alg. 1's per-window initial pass must not consume the whole budget,
     /// so W grows with the job count (total GPU-time is unchanged — the
-    /// micro-windows just get shorter).
+    /// micro-windows just get shorter), clamped to `max_micro_windows`
+    /// (never below the configured baseline W) for fleet-scale runs.
     pub fn effective_micro_windows(&self, n_jobs: usize) -> usize {
-        self.micro_windows.max(2 * n_jobs.max(1))
+        self.micro_windows
+            .max(2 * n_jobs.max(1))
+            .min(self.max_micro_windows.max(self.micro_windows))
     }
 
     /// SGD steps all G GPUs can run in a micro-window of `mw_secs` seconds
@@ -218,6 +262,20 @@ mod tests {
         assert_eq!(Policy::naive().alloc, AllocKind::Uniform);
         assert_eq!(Policy::ekya().alloc, AllocKind::Utility);
         assert_eq!(Policy::ecco().alloc, AllocKind::Ecco);
+    }
+
+    #[test]
+    fn micro_window_cap_bounds_job_growth() {
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        cfg.micro_windows = 6;
+        assert_eq!(cfg.effective_micro_windows(1), 6);
+        assert_eq!(cfg.effective_micro_windows(500), 1000, "uncapped default");
+        cfg.max_micro_windows = 8;
+        assert_eq!(cfg.effective_micro_windows(500), 8);
+        assert_eq!(cfg.effective_micro_windows(1), 6, "cap leaves small runs alone");
+        // Cap below the baseline W never shrinks below W.
+        cfg.max_micro_windows = 2;
+        assert_eq!(cfg.effective_micro_windows(500), 6);
     }
 
     #[test]

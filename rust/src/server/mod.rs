@@ -8,8 +8,9 @@
 pub mod config;
 pub mod job;
 pub mod pretrain;
+pub mod sched;
 pub mod system;
 
-pub use config::{Policy, SystemConfig, TransmissionKind};
+pub use config::{CamWindow, Policy, Scheduler, SystemConfig, TransmissionKind};
 pub use job::{eval_model, Job, Sample};
 pub use system::MembershipSnapshot;

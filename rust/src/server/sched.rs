@@ -1,0 +1,282 @@
+//! Event/time-wheel scheduler for the per-window loop.
+//!
+//! The legacy lockstep loop advances every camera in unison, one
+//! micro-window at a time. The event scheduler replaces that control flow
+//! with a min-heap of [`SchedEvent`]s keyed by *slot* — the global
+//! micro-tick (1-based) the event is due at — so cameras with
+//! heterogeneous window lengths and staggered phases can advance
+//! independently while the world/network clock still moves in exact
+//! `mw_secs` increments.
+//!
+//! # Clock model
+//!
+//! Time is deliberately slot-quantised: the driver advances the world by
+//! exactly `window_secs / w_eff` per slot (the same repeated-increment
+//! float accumulation the lockstep loop performs) and then drains all
+//! events due at that slot. Events never carry float instants — a
+//! heterogeneous camera's own grid instants are quantised to their
+//! enclosing tick by [`slots_for_grid`]. This is what makes the
+//! uniform-window case *byte-identical* to lockstep rather than merely
+//! equivalent: both paths execute the identical sequence of
+//! `advance(mw_secs)` calls, so every simulated timestamp matches to the
+//! last ULP.
+//!
+//! # Ordering
+//!
+//! Within a slot, events fire in `(Action, cam)` order, which encodes the
+//! lockstep body: all captures (by camera id), then all probes (by camera
+//! id), then the training micro-window, then any per-camera window
+//! boundaries. Ties are therefore deterministic by construction — the
+//! heap order *is* the derived `Ord`.
+//!
+//! Fault-plan drains are deliberately NOT wheel events: the lockstep
+//! cursor applies the events of micro-window coordinate `m` *before* the
+//! slot's time advance, so the driver keeps them as a fixed pre-advance
+//! step of the slot loop (reusing the exact cursor), followed by the
+//! end-of-window drain after the last slot.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// What fires when a [`SchedEvent`] comes due. Variant order is the
+/// within-slot priority (captures before probes before training before
+/// camera window boundaries) — it mirrors the statement order of the
+/// lockstep loop body and must not be reordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Action {
+    /// Ingest the camera's frames delivered since its last capture.
+    Capture,
+    /// Camera-side drift probe + (possibly) a retraining request.
+    Probe,
+    /// One global GPU micro-window (Alg. 1); payload = micro-window index.
+    Train(usize),
+    /// A heterogeneous camera's own window boundary: publish + measure.
+    CamWindowEnd,
+}
+
+/// One scheduled event. The derived lexicographic `Ord` over
+/// `(slot, action, cam)` is the heap priority: earlier slots first, then
+/// the action priority, then camera id as the tie-break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SchedEvent {
+    /// Global micro-tick this event is due at (1-based within the window).
+    pub slot: usize,
+    pub action: Action,
+    /// Camera id for per-camera actions; 0 for the global lanes.
+    pub cam: usize,
+}
+
+impl SchedEvent {
+    pub fn capture(slot: usize, cam: usize) -> SchedEvent {
+        SchedEvent {
+            slot,
+            action: Action::Capture,
+            cam,
+        }
+    }
+
+    pub fn probe(slot: usize, cam: usize) -> SchedEvent {
+        SchedEvent {
+            slot,
+            action: Action::Probe,
+            cam,
+        }
+    }
+
+    pub fn train(slot: usize, mw: usize) -> SchedEvent {
+        SchedEvent {
+            slot,
+            action: Action::Train(mw),
+            cam: 0,
+        }
+    }
+
+    pub fn cam_window_end(slot: usize, cam: usize) -> SchedEvent {
+        SchedEvent {
+            slot,
+            action: Action::CamWindowEnd,
+            cam,
+        }
+    }
+}
+
+/// Min-heap of scheduled events, drained slot by slot.
+#[derive(Debug, Default)]
+pub struct EventWheel {
+    heap: BinaryHeap<Reverse<SchedEvent>>,
+}
+
+impl EventWheel {
+    pub fn new() -> EventWheel {
+        EventWheel::default()
+    }
+
+    pub fn push(&mut self, ev: SchedEvent) {
+        self.heap.push(Reverse(ev));
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Pop the highest-priority event due at or before `slot`; `None`
+    /// when the head (if any) is scheduled later.
+    pub fn pop_due(&mut self, slot: usize) -> Option<SchedEvent> {
+        match self.heap.peek() {
+            Some(Reverse(ev)) if ev.slot <= slot => self.heap.pop().map(|Reverse(e)| e),
+            _ => None,
+        }
+    }
+
+    pub fn peek(&self) -> Option<SchedEvent> {
+        self.heap.peek().map(|&Reverse(e)| e)
+    }
+}
+
+/// Global slots (1-based, strictly increasing, clamped to `[1, w_eff]`)
+/// at which the arithmetic grid `{phase + k·step : k ∈ ℕ}` has instants
+/// strictly inside the server window `(t0, t0 + window_secs]`. Each
+/// instant is quantised *up* to its enclosing micro-tick — an event can
+/// only fire once its instant has passed on the slot clock. Instants
+/// landing in the same tick are deduplicated.
+pub fn slots_for_grid(
+    t0: f64,
+    window_secs: f64,
+    mw_secs: f64,
+    phase: f64,
+    step: f64,
+    w_eff: usize,
+) -> Vec<usize> {
+    let mut slots = Vec::new();
+    if !(step.is_finite() && step > 0.0 && mw_secs > 0.0 && w_eff > 0) {
+        return slots;
+    }
+    // First k with phase + k·step strictly after t0.
+    let mut k = if t0 <= phase {
+        0.0
+    } else {
+        ((t0 - phase) / step).floor()
+    };
+    while phase + k * step <= t0 {
+        k += 1.0;
+    }
+    let end = t0 + window_secs;
+    // Bounded by construction (step > 0), but guard float pathologies and
+    // absurdly dense grids (dedup caps useful output at w_eff slots anyway).
+    let max_iters = ((window_secs / step).ceil() as usize + 2).min(1_000_000);
+    for _ in 0..=max_iters {
+        let t = phase + k * step;
+        // Tolerate the last grid point landing one ULP past the window end.
+        if t > end + window_secs * 1e-12 {
+            break;
+        }
+        let rel = (t - t0).max(0.0);
+        let slot = ((rel / mw_secs).ceil() as usize).clamp(1, w_eff);
+        if slots.last() != Some(&slot) {
+            slots.push(slot);
+        }
+        k += 1.0;
+    }
+    slots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_slot_priority_matches_lockstep_body() {
+        let mut w = EventWheel::new();
+        // Insert deliberately out of order.
+        w.push(SchedEvent::probe(1, 1));
+        w.push(SchedEvent::cam_window_end(1, 0));
+        w.push(SchedEvent::train(1, 0));
+        w.push(SchedEvent::capture(1, 1));
+        w.push(SchedEvent::probe(1, 0));
+        w.push(SchedEvent::capture(1, 0));
+        let mut order = Vec::new();
+        while let Some(ev) = w.pop_due(1) {
+            order.push((ev.action, ev.cam));
+        }
+        assert_eq!(
+            order,
+            vec![
+                (Action::Capture, 0),
+                (Action::Capture, 1),
+                (Action::Probe, 0),
+                (Action::Probe, 1),
+                (Action::Train(0), 0),
+                (Action::CamWindowEnd, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn pop_due_respects_slots() {
+        let mut w = EventWheel::new();
+        w.push(SchedEvent::capture(2, 0));
+        w.push(SchedEvent::capture(1, 0));
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.pop_due(1), Some(SchedEvent::capture(1, 0)));
+        assert_eq!(w.pop_due(1), None, "slot-2 event must wait");
+        assert_eq!(w.pop_due(2), Some(SchedEvent::capture(2, 0)));
+        assert!(w.is_empty());
+        assert_eq!(w.peek(), None);
+    }
+
+    #[test]
+    fn uniform_grid_hits_every_slot() {
+        // step == mw_secs, zero phase: exactly the lockstep tick grid.
+        let w_eff = 6;
+        let mw = 60.0 / w_eff as f64;
+        for window in 0..4 {
+            let t0 = window as f64 * 60.0;
+            let slots = slots_for_grid(t0, 60.0, mw, 0.0, mw, w_eff);
+            assert_eq!(slots, (1..=w_eff).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn dense_grid_dedupes_to_ticks() {
+        // step = mw/3: three instants per tick collapse to one slot each.
+        let slots = slots_for_grid(0.0, 60.0, 10.0, 0.0, 10.0 / 3.0, 6);
+        assert_eq!(slots, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn sparse_grid_skips_ticks() {
+        // A camera window of 30s inside a 60s/6-tick server window:
+        // boundaries at 30 and 60 quantise to slots 3 and 6.
+        let slots = slots_for_grid(0.0, 60.0, 10.0, 0.0, 30.0, 6);
+        assert_eq!(slots, vec![3, 6]);
+    }
+
+    #[test]
+    fn phase_staggers_slots() {
+        // phase 15, step 30 → instants 15, 45 → slots 2, 5.
+        let slots = slots_for_grid(0.0, 60.0, 10.0, 15.0, 30.0, 6);
+        assert_eq!(slots, vec![2, 5]);
+        // Second window (t0 = 60): instants 75, 105 → rel 15, 45.
+        let slots2 = slots_for_grid(60.0, 60.0, 10.0, 15.0, 30.0, 6);
+        assert_eq!(slots2, vec![2, 5]);
+    }
+
+    #[test]
+    fn grid_boundary_is_exclusive_at_start_inclusive_at_end() {
+        // An instant exactly at t0 belongs to the *previous* window; one
+        // exactly at t0 + T lands on the final slot.
+        let slots = slots_for_grid(30.0, 30.0, 5.0, 0.0, 30.0, 6);
+        assert_eq!(slots, vec![6], "t=30 excluded, t=60 on slot 6");
+    }
+
+    #[test]
+    fn degenerate_steps_yield_no_slots() {
+        assert!(slots_for_grid(0.0, 60.0, 10.0, 0.0, 0.0, 6).is_empty());
+        assert!(slots_for_grid(0.0, 60.0, 10.0, 0.0, f64::NAN, 6).is_empty());
+        assert!(slots_for_grid(0.0, 60.0, 10.0, 0.0, -1.0, 6).is_empty());
+    }
+}

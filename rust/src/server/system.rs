@@ -16,7 +16,7 @@
 //! executables on frames rendered by the scene simulator and degraded by
 //! the encoder model.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::{bail, Result};
@@ -36,9 +36,10 @@ use crate::util::stats::l2;
 use crate::video::{degrade, transport_window};
 use crate::zoo::{mean_embedding, ModelZoo};
 
-use super::config::{SystemConfig, TransmissionKind};
+use super::config::{Scheduler, SystemConfig, TransmissionKind};
 use super::job::{eval_model, Job, Sample};
 use super::pretrain::pretrained_default;
+use super::sched::{slots_for_grid, Action, EventWheel, SchedEvent};
 
 /// Maximum frames ingested per camera per micro-window (safety bound).
 const MAX_FRAMES_PER_MW: usize = 150;
@@ -233,6 +234,10 @@ pub(crate) struct System<'e> {
     eval_cache: FrameCache,
     /// Fault-injection runtime state (inert when `cfg.faults` is empty).
     fault: FaultRt,
+    /// Per-camera instant of the last capture event. Only consulted by the
+    /// event scheduler for cameras on heterogeneous capture grids (uniform
+    /// cameras always ingest exactly one micro-window of delivery).
+    last_capture_t: Vec<f64>,
     rng: Pcg32,
     pretrained: Vec<f32>,
 }
@@ -253,6 +258,27 @@ impl<'e> System<'e> {
                 local_caps.len(),
                 world.cameras.len()
             );
+        }
+        // Per-camera window overrides are validated against the *resolved*
+        // global window (configure hooks may have changed `window_secs`
+        // after RunSpec validation).
+        for (&cam, w) in &cfg.cam_windows {
+            if cam >= world.cameras.len() {
+                bail!(
+                    "cam_windows targets camera {cam} but the scenario has {}",
+                    world.cameras.len()
+                );
+            }
+            let len = w.len_secs.unwrap_or(cfg.window_secs);
+            if !(len.is_finite() && len > 0.0) {
+                bail!("camera {cam}: window length must be positive and finite, got {len}");
+            }
+            if !(w.phase_secs.is_finite() && w.phase_secs >= 0.0 && w.phase_secs < len) {
+                bail!(
+                    "camera {cam}: phase {} must lie in [0, {len})",
+                    w.phase_secs
+                );
+            }
         }
         let pretrained = pretrained_default(
             engine,
@@ -284,6 +310,7 @@ impl<'e> System<'e> {
         let allocator = cfg.policy.alloc.build();
         let n_cams = cams.len();
         let eval_cache = FrameCache::new(cfg.frame_cache);
+        let last_capture_t = vec![world.time; n_cams];
         Ok(System {
             teacher: Teacher::new(cfg.teacher.clone(), cfg.seed ^ 0x7ea),
             tracker: ResponseTracker::new(cfg.response_threshold),
@@ -304,8 +331,42 @@ impl<'e> System<'e> {
             events: EventBus::new(),
             eval_cache,
             fault: FaultRt::new(n_cams),
+            last_capture_t,
             pretrained,
         })
+    }
+
+    /// This camera's own window length (global unless overridden).
+    fn cam_window_len(&self, cam: usize) -> f64 {
+        self.cfg
+            .cam_windows
+            .get(&cam)
+            .and_then(|w| w.len_secs)
+            .unwrap_or(self.cfg.window_secs)
+    }
+
+    /// Offset of the camera's first window boundary from the clock origin.
+    fn cam_phase(&self, cam: usize) -> f64 {
+        self.cfg
+            .cam_windows
+            .get(&cam)
+            .map(|w| w.phase_secs)
+            .unwrap_or(0.0)
+    }
+
+    /// Does this camera run on the server's own window grid?
+    fn cam_uniform(&self, cam: usize) -> bool {
+        match self.cfg.cam_windows.get(&cam) {
+            None => true,
+            Some(w) => {
+                w.phase_secs == 0.0 && w.len_secs.is_none_or(|l| l == self.cfg.window_secs)
+            }
+        }
+    }
+
+    /// Any camera off the server grid forces the event scheduler.
+    fn heterogeneous(&self) -> bool {
+        (0..self.cams.len()).any(|cam| !self.cam_uniform(cam))
     }
 
     pub(crate) fn now(&self) -> f64 {
@@ -342,57 +403,64 @@ impl<'e> System<'e> {
         Ok((frames, mean))
     }
 
-    /// Camera-side drift check; issues a retraining request when the
-    /// embedding moved beyond the threshold (or on the very first probe
-    /// after deployment when accuracy already collapsed).
+    /// Camera-side drift check over the whole fleet (the lockstep cadence:
+    /// every camera probes every micro-window).
     fn detect_and_request(&mut self) -> Result<()> {
+        for cam in 0..self.cams.len() {
+            self.detect_and_request_cam(cam)?;
+        }
+        Ok(())
+    }
+
+    /// One camera's drift check; issues a retraining request when the
+    /// embedding moved beyond the threshold (or on the very first probe
+    /// after deployment when accuracy already collapsed). The debounce
+    /// interval follows the camera's own window length.
+    fn detect_and_request_cam(&mut self, cam: usize) -> Result<()> {
         if !self.cfg.auto_request {
             return Ok(());
         }
-        let n_cams = self.cams.len();
-        for cam in 0..n_cams {
-            if self.fault.cam_down[cam] {
-                continue; // dropped out: no device to probe
+        if self.fault.cam_down[cam] {
+            return Ok(()); // dropped out: no device to probe
+        }
+        if self.cams[cam].job.is_some() {
+            return Ok(()); // already retraining
+        }
+        if self.now() - self.cams[cam].last_request_t < self.cam_window_len(cam) * 0.5 {
+            return Ok(()); // debounce
+        }
+        if self.now() < self.fault.next_probe_t[cam] {
+            return Ok(()); // backing off after a lost probe
+        }
+        if self.fault.straggler[cam] {
+            self.probe_lost(cam);
+            return Ok(()); // straggler: the probe never reaches the server
+        }
+        let salt = (self.window_idx as u64) * 7919 + cam as u64 * 131 + 1;
+        let (frames, emb) = self.probe(cam, salt)?;
+        if !embedding_valid(&emb) {
+            // Corrupted probe: discard rather than poison the drift
+            // detector or the grouping metadata, and back off.
+            self.probe_lost(cam);
+            self.events.emit(Event::Degraded {
+                time: self.now(),
+                window: self.window_idx,
+                component: "probe",
+                detail: format!("cam {cam}: corrupt probe embedding discarded"),
+            });
+            return Ok(());
+        }
+        self.fault.probe_retries[cam] = 0;
+        let drifted = match &self.cams[cam].ref_embed {
+            None => {
+                self.cams[cam].ref_embed = Some(emb.clone());
+                false
             }
-            if self.cams[cam].job.is_some() {
-                continue; // already retraining
-            }
-            if self.now() - self.cams[cam].last_request_t < self.cfg.window_secs * 0.5 {
-                continue; // debounce
-            }
-            if self.now() < self.fault.next_probe_t[cam] {
-                continue; // backing off after a lost probe
-            }
-            if self.fault.straggler[cam] {
-                self.probe_lost(cam);
-                continue; // straggler: the probe never reaches the server
-            }
-            let salt = (self.window_idx as u64) * 7919 + cam as u64 * 131 + 1;
-            let (frames, emb) = self.probe(cam, salt)?;
-            if !embedding_valid(&emb) {
-                // Corrupted probe: discard rather than poison the drift
-                // detector or the grouping metadata, and back off.
-                self.probe_lost(cam);
-                self.events.emit(Event::Degraded {
-                    time: self.now(),
-                    window: self.window_idx,
-                    component: "probe",
-                    detail: format!("cam {cam}: corrupt probe embedding discarded"),
-                });
-                continue;
-            }
-            self.fault.probe_retries[cam] = 0;
-            let drifted = match &self.cams[cam].ref_embed {
-                None => {
-                    self.cams[cam].ref_embed = Some(emb.clone());
-                    false
-                }
-                Some(r) => l2(r, &emb) > self.cfg.drift_threshold,
-            };
-            self.update_dynamics(cam, &emb);
-            if drifted {
-                self.issue_request(cam, frames, emb)?;
-            }
+            Some(r) => l2(r, &emb) > self.cfg.drift_threshold,
+        };
+        self.update_dynamics(cam, &emb);
+        if drifted {
+            self.issue_request(cam, frames, emb)?;
         }
         Ok(())
     }
@@ -444,19 +512,51 @@ impl<'e> System<'e> {
         self.place_request(meta, frames, emb)
     }
 
+    /// Jobs the topology graph allows `cam` to consider: any job owning at
+    /// least one of its spatial neighbors (O(degree) set construction).
+    /// `None` lifts the pruning entirely — no topology configured, or a
+    /// long-range probe window.
+    fn neighbor_candidate_jobs(&self, cam: usize) -> Option<BTreeSet<usize>> {
+        let topo = self.cfg.grouping.topology.as_ref()?;
+        if topo.long_range_due(self.window_idx) {
+            return None;
+        }
+        let mut set = BTreeSet::new();
+        for &n in topo.neighbors(cam) {
+            if let Some(Some(job_id)) = self.cams.get(n).map(|c| c.job) {
+                set.insert(job_id);
+            }
+        }
+        Some(set)
+    }
+
     /// Shared by fresh requests and Alg. 2 evictions.
-    fn place_request(&mut self, meta: RequestMeta, frames: Vec<Frame>, emb: Vec<f32>) -> Result<()> {
+    fn place_request(
+        &mut self,
+        meta: RequestMeta,
+        frames: Vec<Frame>,
+        emb: Vec<f32>,
+    ) -> Result<()> {
         let cam = meta.cam;
         let decision = if self.cfg.policy.group_retraining {
             // Evaluate candidate jobs' models on the request subsamples.
             // With the metadata filter on, only correlated jobs pay the
             // eval (the whole point of §3.3's pre-filtering); the ablation
-            // switch makes EVERY job a candidate and pays for it. The
-            // candidate evals are independent, so they fan out across the
-            // engine's worker pool; index-ordered reduction keeps the
-            // decision (and the event stream) identical at any pool size.
+            // switch makes EVERY job a candidate and pays for it. A
+            // configured topology graph additionally prunes candidates to
+            // jobs owning a spatial neighbor of the requester — O(degree)
+            // evals per request instead of O(jobs). The candidate evals
+            // are independent, so they fan out across the engine's worker
+            // pool; index-ordered reduction keeps the decision (and the
+            // event stream) identical at any pool size.
+            let allowed = self.neighbor_candidate_jobs(cam);
             let mut candidates: Vec<(usize, &[f32])> = Vec::new();
             for job in &self.group_meta {
+                if let Some(set) = &allowed {
+                    if !set.contains(&job.id) {
+                        continue;
+                    }
+                }
                 let candidate = !self.cfg.grouping.metadata_filter
                     || grouping::metadata_correlated(&self.cfg.grouping, job, &meta);
                 if candidate {
@@ -472,10 +572,11 @@ impl<'e> System<'e> {
                 eval_model(engine, task, theta, &frames).map(|acc| (id, acc))
             })?;
             let evals: BTreeMap<usize, f32> = scored.into_iter().collect();
-            grouping::group_request(
+            grouping::group_request_pruned(
                 &mut self.group_meta,
                 &mut self.next_job_id,
                 &self.cfg.grouping,
+                allowed.as_ref(),
                 meta.clone(),
                 |job_id| evals.get(&job_id).copied().unwrap_or(0.0),
             )
@@ -645,49 +746,55 @@ impl<'e> System<'e> {
     /// higher-fps plan buys genuinely distinct observations instead of
     /// noise-duplicated copies of the micro-window's final timestamp.
     fn collect_data(&mut self, mw_secs: f64) -> Result<()> {
-        let t_end = self.now();
         for cam in 0..self.cams.len() {
-            let Some(job_id) = self.cams[cam].job else {
-                continue;
-            };
-            let flow = self.cams[cam].flow;
-            let total = self.net.delivered_mbit(flow);
-            let delta = (total - self.cams[cam].delivered_prev).max(0.0);
-            self.cams[cam].delivered_prev = total;
-            if self.fault.straggler[cam] {
-                continue; // straggler: bits were spent but uploads are lost
-            }
-            let plan = self.cams[cam].plan;
-            let outcome = transport_window(plan.config, mw_secs, delta);
-            let n = outcome.frames_delivered.min(MAX_FRAMES_PER_MW);
-            if n == 0 {
-                continue;
-            }
-            let Some(job_idx) = self.job_index(job_id) else {
-                self.events.emit(Event::Degraded {
-                    time: self.now(),
-                    window: self.window_idx,
-                    component: "ingest",
-                    detail: format!("cam {cam}: job {job_id} gone; {n} frames dropped"),
-                });
-                self.cams[cam].job = None;
-                continue;
-            };
-            for i in 0..n {
-                let t = t_end - mw_secs + ((i + 1) as f64 / n as f64) * mw_secs;
-                let mut frame = self.world.capture_at(cam, plan.config.res, t);
-                let seed = self
-                    .rng
-                    .next_u64()
-                    .wrapping_add(i as u64);
-                degrade(&mut frame.pixels, plan.config.res, outcome.quality, seed);
-                let labels = self.teacher.annotate(&frame.truth);
-                self.jobs[job_idx].push_sample(Sample {
-                    frame,
-                    labels,
-                    cam,
-                });
-            }
+            self.collect_cam(cam, mw_secs)?;
+        }
+        Ok(())
+    }
+
+    /// Ingest one camera's delivery over its last `dur_secs` of transport
+    /// (one micro-window in lockstep; possibly several ticks for a camera
+    /// on a sparse heterogeneous capture grid).
+    fn collect_cam(&mut self, cam: usize, dur_secs: f64) -> Result<()> {
+        let t_end = self.now();
+        self.last_capture_t[cam] = t_end;
+        let Some(job_id) = self.cams[cam].job else {
+            return Ok(());
+        };
+        let flow = self.cams[cam].flow;
+        let total = self.net.delivered_mbit(flow);
+        let delta = (total - self.cams[cam].delivered_prev).max(0.0);
+        self.cams[cam].delivered_prev = total;
+        if self.fault.straggler[cam] {
+            return Ok(()); // straggler: bits were spent but uploads are lost
+        }
+        let plan = self.cams[cam].plan;
+        let outcome = transport_window(plan.config, dur_secs, delta);
+        let n = outcome.frames_delivered.min(MAX_FRAMES_PER_MW);
+        if n == 0 {
+            return Ok(());
+        }
+        let Some(job_idx) = self.job_index(job_id) else {
+            self.events.emit(Event::Degraded {
+                time: self.now(),
+                window: self.window_idx,
+                component: "ingest",
+                detail: format!("cam {cam}: job {job_id} gone; {n} frames dropped"),
+            });
+            self.cams[cam].job = None;
+            return Ok(());
+        };
+        for i in 0..n {
+            let t = t_end - dur_secs + ((i + 1) as f64 / n as f64) * dur_secs;
+            let mut frame = self.world.capture_at(cam, plan.config.res, t);
+            let seed = self.rng.next_u64().wrapping_add(i as u64);
+            degrade(&mut frame.pixels, plan.config.res, outcome.quality, seed);
+            let labels = self.teacher.annotate(&frame.truth);
+            self.jobs[job_idx].push_sample(Sample {
+                frame,
+                labels,
+                cam,
+            });
         }
         Ok(())
     }
@@ -1254,8 +1361,19 @@ impl<'e> System<'e> {
     // Public driver
     // ------------------------------------------------------------------
 
-    /// Run one retraining window.
+    /// Run one retraining window under the configured scheduler. Any
+    /// per-camera window override forces the event driver (the lockstep
+    /// loop cannot express staggered boundaries).
     pub(crate) fn run_window(&mut self) -> Result<()> {
+        if self.cfg.scheduler == Scheduler::EventDriven || self.heterogeneous() {
+            self.run_window_events()
+        } else {
+            self.run_window_lockstep()
+        }
+    }
+
+    /// The legacy lockstep driver: every camera advances in unison.
+    fn run_window_lockstep(&mut self) -> Result<()> {
         if self.apply_fault_events(0)? {
             self.resplit_after_faults();
         }
@@ -1291,6 +1409,133 @@ impl<'e> System<'e> {
         }
         self.end_window()?;
         self.window_idx += 1;
+        Ok(())
+    }
+
+    /// The event/time-wheel driver (see [`crate::server::sched`]).
+    ///
+    /// The clock is slot-quantised: each of the window's `w_eff` ticks
+    /// advances the network and world by exactly `mw_secs` — the same
+    /// repeated-increment accumulation the lockstep loop performs — and
+    /// then drains the wheel's events due at that tick in `(action, cam)`
+    /// order. A uniform fleet schedules capture + probe for every camera
+    /// at every tick and one training event per tick, which replays the
+    /// lockstep body statement for statement; the event log is therefore
+    /// byte-identical (a property test pins this). Heterogeneous cameras
+    /// instead get events on their own `phase + k·step` grids, plus
+    /// mid-window [`Action::CamWindowEnd`] boundaries.
+    ///
+    /// Fault drains stay inline (not wheel events): the lockstep cursor
+    /// applies coordinate `m` *before* tick `m`'s time advance, and the
+    /// end-of-window drain runs after the last tick without re-pushing
+    /// transmission plans — both reproduced here exactly.
+    fn run_window_events(&mut self) -> Result<()> {
+        if self.apply_fault_events(0)? {
+            self.resplit_after_faults();
+        }
+        if self.window_idx == 0 {
+            self.detect_and_request()?;
+        }
+        self.apply_transmission_plans();
+        let w_eff = self.cfg.effective_micro_windows(self.jobs.len());
+        let mw_secs = self.cfg.window_secs / w_eff as f64;
+        let t0 = self.now();
+        let mut wheel = EventWheel::new();
+        for mw in 0..w_eff {
+            wheel.push(SchedEvent::train(mw + 1, mw));
+        }
+        for cam in 0..self.cams.len() {
+            if self.cam_uniform(cam) {
+                // Server-grid camera: due at every tick, the lockstep
+                // cadence.
+                for slot in 1..=w_eff {
+                    wheel.push(SchedEvent::capture(slot, cam));
+                    wheel.push(SchedEvent::probe(slot, cam));
+                }
+            } else {
+                let len = self.cam_window_len(cam);
+                let phase = self.cam_phase(cam);
+                // The camera's own capture/probe grid: w_eff instants per
+                // *its* window, quantised to the global ticks.
+                let step = len / w_eff as f64;
+                for slot in slots_for_grid(t0, self.cfg.window_secs, mw_secs, phase, step, w_eff) {
+                    wheel.push(SchedEvent::capture(slot, cam));
+                    wheel.push(SchedEvent::probe(slot, cam));
+                }
+                // Its own window boundaries that fall strictly inside the
+                // server window; the shared boundary is end_window's job.
+                for slot in slots_for_grid(t0, self.cfg.window_secs, mw_secs, phase, len, w_eff) {
+                    if slot < w_eff {
+                        wheel.push(SchedEvent::cam_window_end(slot, cam));
+                    }
+                }
+            }
+        }
+        for slot in 1..=w_eff {
+            let mw = slot - 1;
+            if mw > 0 && self.apply_fault_events(mw)? {
+                self.resplit_after_faults();
+                self.apply_transmission_plans();
+            }
+            self.net.run(mw_secs);
+            self.world.advance(mw_secs);
+            self.eval_cache.invalidate();
+            while let Some(ev) = wheel.pop_due(slot) {
+                match ev.action {
+                    Action::Capture => {
+                        let dur = if self.cam_uniform(ev.cam) {
+                            mw_secs
+                        } else {
+                            (self.now() - self.last_capture_t[ev.cam]).max(0.0)
+                        };
+                        self.collect_cam(ev.cam, dur)?;
+                    }
+                    Action::Probe => self.detect_and_request_cam(ev.cam)?,
+                    Action::Train(m) => self.train_micro_window(m, mw_secs)?,
+                    Action::CamWindowEnd => self.cam_window_end_boundary(ev.cam, slot)?,
+                }
+            }
+        }
+        if self.apply_fault_events(usize::MAX)? {
+            self.resplit_after_faults();
+        }
+        self.end_window()?;
+        self.window_idx += 1;
+        Ok(())
+    }
+
+    /// A heterogeneous camera's own window boundary, mid-server-window
+    /// (event scheduler only): refresh the device from its job's current
+    /// model when reachable, then measure its live stream so accuracy
+    /// history and response tracking run at the camera's own cadence.
+    fn cam_window_end_boundary(&mut self, cam: usize, slot: usize) -> Result<()> {
+        if self.fault.cam_down[cam] {
+            return Ok(()); // no device to publish to or measure
+        }
+        let now = self.now();
+        if let Some(job_id) = self.cams[cam].job {
+            if let Some(idx) = self.job_index(job_id) {
+                if self.fault.link_scale[cam] > 0.0 {
+                    self.cams[cam].theta = self.jobs[idx].model.theta.clone();
+                    self.events.emit(Event::ModelPublished {
+                        time: now,
+                        window: self.window_idx,
+                        job: job_id,
+                        cams: vec![cam],
+                    });
+                }
+            }
+        }
+        // The salt folds the slot in so staggered boundaries never collide
+        // with the end-of-window measurement pass.
+        let salt = (self.window_idx as u64 * 131 + slot as u64) * 31_337 + cam as u64;
+        let frames =
+            self.eval_cache
+                .eval_frames(&self.world, cam, EVAL_RES, self.cfg.eval_frames, salt);
+        let acc = eval_model(self.engine, self.cfg.task, &self.cams[cam].theta, &frames)?;
+        self.cams[cam].last_acc = acc;
+        self.history.push(cam, now, acc);
+        self.tracker.observe(cam, now, acc);
         Ok(())
     }
 

@@ -1,7 +1,7 @@
 //! Tests for the `ecco::api` façade itself: RunSpec validation at the
 //! session boundary, determinism of the event stream, and the JSONL sink.
 
-use ecco::api::{run_fleet, JsonlSink, RunReport, RunSpec, Session, SpecError};
+use ecco::api::{run_fleet, JsonlSink, RunReport, RunSpec, RuntimeOpts, Session, SpecError};
 use ecco::runtime::{Engine, Task};
 use ecco::scene::scenario;
 use ecco::server::Policy;
@@ -128,9 +128,16 @@ fn event_log_byte_identical_with_frame_cache_disabled() {
     // state, invalidated on every world advance — so disabling it must
     // not change a single byte of the run, including with the eval
     // fan-out active (cache hits happen on pool workers).
+    // One arm uses the legacy setters, the other the RuntimeOpts batch —
+    // also pinning that the deprecated wrappers and `runtime()` are the
+    // same hook.
     let engine = Engine::open_default().unwrap();
     let run_with = |cache: bool| -> (RunReport, String) {
-        let spec = small_spec(43).eval_threads(4).frame_cache(cache);
+        let spec = if cache {
+            small_spec(43).eval_threads(4).frame_cache(true)
+        } else {
+            small_spec(43).runtime(RuntimeOpts::new().threads(4).frame_cache(false))
+        };
         let report = Session::new(&engine, spec).unwrap().run().unwrap();
         let jsonl: String = report
             .events
@@ -148,6 +155,52 @@ fn event_log_byte_identical_with_frame_cache_disabled() {
     assert_eq!(a.cam_acc, b.cam_acc);
     assert_eq!(a.alloc_log, b.alloc_log);
     assert_eq!(a.membership, b.membership);
+}
+
+#[test]
+fn camera_builder_route_matches_uplinks_vector_byte_identically() {
+    // Setting one camera's uplink through `.camera(..)` must be the same
+    // run as the equivalent explicit `.uplinks(vec)` — the overrides layer
+    // onto the resolved vector before the world is built.
+    let engine = Engine::open_default().unwrap();
+    let run_with = |spec: RunSpec| -> RunReport {
+        Session::new(&engine, spec).unwrap().run().unwrap()
+    };
+    let via_vec = run_with(small_spec(45).uplinks(vec![20.0, 12.0]));
+    let via_builder = run_with(small_spec(45).camera(1, |c| c.uplink_mbps(12.0)));
+    assert!(!via_vec.events.is_empty());
+    assert_eq!(via_vec.events, via_builder.events);
+    assert_eq!(via_vec.window_acc, via_builder.window_acc);
+    assert_eq!(via_vec.cam_acc, via_builder.cam_acc);
+    assert_eq!(via_vec.alloc_log, via_builder.alloc_log);
+    assert_eq!(via_vec.membership, via_builder.membership);
+}
+
+#[test]
+fn camera_override_errors_surface_at_the_session_boundary() {
+    let mut engine = Engine::open_default().unwrap();
+    // validate() reports the typed errors...
+    assert_eq!(
+        small_spec(46).camera(9, |c| c.uplink_mbps(5.0)).validate(),
+        Err(SpecError::UnknownCamera { cam: 9, cams: 2 })
+    );
+    assert_eq!(
+        small_spec(46).camera(0, |c| c.window_len(-3.0)).validate(),
+        Err(SpecError::ZeroWindowLen { cam: 0, secs: -3.0 })
+    );
+    assert_eq!(
+        small_spec(46).camera(1, |c| c.window_len(10.0).phase(10.0)).validate(),
+        Err(SpecError::PhaseOutOfRange {
+            cam: 1,
+            phase: 10.0,
+            window_len: Some(10.0)
+        })
+    );
+    // ...and Session::new surfaces them without building anything.
+    let err = Session::new(&mut engine, small_spec(46).camera(9, |c| c.uplink_mbps(5.0)))
+        .err()
+        .expect("unknown camera override must not build a session");
+    assert!(err.to_string().contains("camera override"), "{err}");
 }
 
 #[test]

@@ -1,0 +1,166 @@
+//! Scheduler equivalence pins: the event/time-wheel driver with uniform
+//! camera windows must replay the lockstep loop **byte-identically**
+//! (events, accuracy series, alloc log, membership) at any eval-pool
+//! width, with or without a fault plan; topology pruning at degree n-1
+//! must reproduce all-pairs grouping exactly; and heterogeneous camera
+//! windows must run end to end with per-camera cadence visible in the
+//! accuracy history.
+
+use ecco::api::{RunReport, RunSpec, RuntimeOpts, Session};
+use ecco::faults::{FaultKind, FaultPlan};
+use ecco::runtime::{Engine, Task};
+use ecco::scene::scenario;
+use ecco::server::{Policy, Scheduler};
+
+/// A reduced-scale deterministic spec (4 cameras in two pairs, 3 windows).
+fn small_spec(seed: u64) -> RunSpec {
+    RunSpec::new(Task::Det, Policy::ecco())
+        .scenario(scenario::grouped_static(&[2, 2], 0.05, 20.0, seed))
+        .gpus(1.0)
+        .shared_mbps(10.0)
+        .uplink_mbps(20.0)
+        .windows(3)
+        .seed(seed)
+        .configure(|cfg| {
+            cfg.micro_windows = 4;
+            cfg.window_secs = 40.0;
+            cfg.eval_frames = 8;
+            cfg.pretrain_steps = 120;
+        })
+}
+
+fn run(engine: &Engine, spec: RunSpec) -> (RunReport, String) {
+    let report = Session::new(engine, spec).unwrap().run().unwrap();
+    let jsonl: String = report
+        .events
+        .iter()
+        .map(|e| e.to_json().to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n");
+    (report, jsonl)
+}
+
+fn assert_identical(a: &(RunReport, String), b: &(RunReport, String), what: &str) {
+    assert!(!a.0.events.is_empty(), "{what}: run must emit events");
+    assert_eq!(a.1, b.1, "{what}: event streams diverged");
+    assert_eq!(a.0.events, b.0.events, "{what}");
+    assert_eq!(a.0.window_acc, b.0.window_acc, "{what}");
+    assert_eq!(a.0.cam_acc, b.0.cam_acc, "{what}");
+    assert_eq!(a.0.alloc_log, b.0.alloc_log, "{what}");
+    assert_eq!(a.0.membership, b.0.membership, "{what}");
+    assert_eq!(a.0.final_acc, b.0.final_acc, "{what}");
+    assert_eq!(a.0.response_s, b.0.response_s, "{what}");
+}
+
+#[test]
+fn event_driven_uniform_windows_is_byte_identical_to_lockstep() {
+    // The tentpole contract: with every camera on the global window, the
+    // wheel replays the lockstep body statement for statement — at a
+    // serial pool and at a 4-wide pool.
+    let engine = Engine::open_default().unwrap();
+    for threads in [1usize, 4] {
+        let lockstep = run(
+            &engine,
+            small_spec(51).runtime(
+                RuntimeOpts::new()
+                    .threads(threads)
+                    .scheduler(Scheduler::Lockstep),
+            ),
+        );
+        let events = run(
+            &engine,
+            small_spec(51).runtime(
+                RuntimeOpts::new()
+                    .threads(threads)
+                    .scheduler(Scheduler::EventDriven),
+            ),
+        );
+        assert_identical(&lockstep, &events, &format!("uniform, {threads} threads"));
+    }
+}
+
+#[test]
+fn scheduler_equivalence_holds_under_a_fault_plan() {
+    // Fault drains are inline pre-advance steps in both drivers; a plan
+    // spanning mid-window events and a recovery must not open a gap.
+    let engine = Engine::open_default().unwrap();
+    let plan = || {
+        FaultPlan::none()
+            .at(1, 1, 0, FaultKind::CameraDown)
+            .at(1, 3, 3, FaultKind::UplinkScale { factor: 0.4 })
+            .at(2, 0, 0, FaultKind::CameraUp)
+    };
+    let with = |scheduler: Scheduler| {
+        run(
+            &engine,
+            small_spec(52)
+                .faults(plan())
+                .runtime(RuntimeOpts::new().threads(2).scheduler(scheduler)),
+        )
+    };
+    let lockstep = with(Scheduler::Lockstep);
+    let events = with(Scheduler::EventDriven);
+    assert_identical(&lockstep, &events, "fault plan");
+}
+
+#[test]
+fn topology_degree_n_minus_1_reproduces_all_pairs_grouping() {
+    // degree >= n-1 makes every camera a spatial neighbor of every other,
+    // so the pruned candidate scan examines exactly the all-pairs set and
+    // the whole run — placement decisions included — is byte-identical.
+    let engine = Engine::open_default().unwrap();
+    let all_pairs = run(&engine, small_spec(53));
+    let full_topo = run(&engine, small_spec(53).topology_degree(3));
+    assert_identical(&all_pairs, &full_topo, "degree n-1 topology");
+}
+
+#[test]
+fn heterogeneous_camera_windows_run_at_their_own_cadence() {
+    // Camera 0 gets a half-length window: the event driver (forced by the
+    // override) must publish + measure it at its own mid-window
+    // boundaries, doubling its accuracy-history cadence relative to the
+    // uniform cameras, while the run stays a valid partition throughout.
+    let engine = Engine::open_default().unwrap();
+    let windows = 3usize;
+    // Pin W to 8 regardless of job count so every tick is an exact 5s
+    // (power-of-two divisor of the 40s window) — boundary slot math stays
+    // deterministic across windows.
+    let spec = small_spec(54)
+        .camera(0, |c| c.window_len(20.0))
+        .configure(|cfg| {
+            cfg.micro_windows = 8;
+            cfg.max_micro_windows = 8;
+        });
+    let mut session = Session::new(&engine, spec).unwrap();
+    for _ in 0..windows {
+        session.step_window().unwrap();
+        assert!(session.is_partition());
+    }
+    let report = session.into_report();
+    // One boundary sample per 20s camera window inside each 40s server
+    // window, plus the end-of-window pass: 2 samples per server window.
+    assert_eq!(report.cam_acc[0].len(), 2 * windows, "half-window camera");
+    for series in &report.cam_acc[1..] {
+        assert_eq!(series.len(), windows, "uniform cameras keep one sample");
+    }
+    assert_eq!(report.window_acc.len(), windows);
+}
+
+#[test]
+fn explicit_event_scheduler_with_phase_stagger_completes() {
+    // A staggered phase shifts boundaries without changing their count;
+    // smoke-pin that phases inside (0, len) run end to end and report.
+    let engine = Engine::open_default().unwrap();
+    let spec = small_spec(55)
+        .camera(1, |c| c.window_len(20.0).phase(10.0))
+        .runtime(RuntimeOpts::new().scheduler(Scheduler::EventDriven))
+        .configure(|cfg| {
+            cfg.micro_windows = 8;
+            cfg.max_micro_windows = 8;
+        });
+    let report = Session::new(&engine, spec).unwrap().run().unwrap();
+    assert_eq!(report.window_acc.len(), 3);
+    assert!(!report.events.is_empty());
+    // Boundaries at 10/30 inside each 40s window -> 2 extras + 1 end pass.
+    assert_eq!(report.cam_acc[1].len(), 3 * 3, "staggered camera cadence");
+}
