@@ -1,0 +1,204 @@
+//! Load generator for `ecco serve`: N concurrent clients, each submitting
+//! a session over TCP and draining its full event stream, then fetching
+//! the final report. One client can be made deliberately slow (`--slow`)
+//! to exercise the server's bounded subscriber buffers — it must still
+//! receive its `end` frame, with drop markers accounting for every frame
+//! it missed, and no other client may be affected.
+//!
+//! Exits non-zero if any session fails, any stream ends without a report,
+//! or the whole run overshoots `--budget-secs`. Used by the `rust-serve`
+//! CI job at 32 clients:
+//!
+//!   cargo run --release --bin ecco -- serve --listen 127.0.0.1:7433 &
+//!   cargo run --release --example loadgen -- --clients 32 --slow 20 --shutdown
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use ecco::api::{RunSpec, SimOpts};
+use ecco::runtime::Task;
+use ecco::server::Policy;
+use ecco::util::cli::Args;
+use ecco::util::json::Json;
+
+/// Connect with retry — the server may still be binding when we start.
+fn connect(addr: &str, deadline: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(_) if t0.elapsed() < deadline => {
+                thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => return Err(e).with_context(|| format!("connecting to {addr}")),
+        }
+    }
+}
+
+struct ClientStats {
+    events: u64,
+    dropped: u64,
+    final_acc: f64,
+}
+
+/// One client: submit, drain the stream to its end frame, fetch the
+/// report — all on a single connection.
+fn run_client(addr: &str, id: usize, windows: usize, cams: usize, slow_ms: u64) -> Result<ClientStats> {
+    let stream = connect(addr, Duration::from_secs(10))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut request = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| -> Result<Json> {
+        writeln!(writer, "{req}")?;
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed by server");
+        }
+        Json::parse(line.trim_end())
+    };
+
+    let spec = RunSpec::new(Task::Det, Policy::ecco())
+        .cams(cams)
+        .gpus(1.0)
+        .shared_mbps(10.0)
+        .windows(windows)
+        .seed(1000 + id as u64)
+        .sim(
+            SimOpts::new()
+                .window_secs(30.0)
+                .micro_windows(2)
+                .eval_frames(4)
+                .pretrain_steps(40),
+        )
+        .to_wire_json()
+        .to_string_compact();
+    let submit = format!(
+        r#"{{"cmd":"submit","spec":{spec},"events":true,"throttle_ms":{slow_ms}}}"#
+    );
+    let resp = request(&mut writer, &mut reader, &submit)?;
+    if !matches!(resp.opt("ok"), Some(Json::Bool(true))) {
+        bail!("submit rejected: {}", resp.to_string_compact());
+    }
+    let session = resp.get("session")?.as_usize()?;
+
+    // Drain frames until the end frame; count events and dropped frames.
+    let mut events = 0u64;
+    let mut dropped = 0u64;
+    loop {
+        let mut frame = String::new();
+        if reader.read_line(&mut frame)? == 0 {
+            bail!("stream closed before end frame (session {session})");
+        }
+        let j = Json::parse(frame.trim_end())?;
+        match j.get("frame")?.as_str()? {
+            "event" => events += 1,
+            "dropped" => dropped += j.get("count")?.as_usize()? as u64,
+            "end" => {
+                let state = j.get("state")?.as_str()?.to_string();
+                if state != "done" {
+                    bail!("session {session} ended {state}");
+                }
+                break;
+            }
+            other => bail!("unexpected frame kind {other:?}"),
+        }
+    }
+
+    let resp = request(
+        &mut writer,
+        &mut reader,
+        &format!(r#"{{"cmd":"report","session":{session}}}"#),
+    )?;
+    let final_acc = resp
+        .get("final")
+        .and_then(|v| v.as_f64())
+        .map_err(|e| anyhow!("session {session} report missing final acc: {e}"))?;
+    Ok(ClientStats {
+        events,
+        dropped,
+        final_acc,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut args = args;
+    args.normalize_flags(&["shutdown"]);
+    args.reject_unknown(
+        &["connect", "clients", "windows", "cams", "budget-secs", "slow"],
+        &["shutdown"],
+    )?;
+    let addr = args.str_or("connect", "127.0.0.1:7433");
+    let clients = args.usize_or("clients", 32)?.max(1);
+    let windows = args.usize_or("windows", 3)?.max(1);
+    let cams = args.usize_or("cams", 3)?.max(2);
+    let budget = args.f64_or("budget-secs", 0.0)?;
+    let slow_ms = args.u64_or("slow", 0)?;
+
+    println!(
+        "loadgen: {clients} clients -> {addr}, {windows} windows x {cams} cams each{}",
+        if slow_ms > 0 {
+            format!(", client 0 throttled {slow_ms}ms/frame")
+        } else {
+            String::new()
+        }
+    );
+    let t0 = Instant::now();
+    let results: Vec<(usize, Result<ClientStats>)> = thread::scope(|scope| {
+        let addr = &addr;
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                let throttle = if i == 0 { slow_ms } else { 0 };
+                scope.spawn(move || (i, run_client(addr, i, windows, cams, throttle)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut failures = 0usize;
+    let mut total_events = 0u64;
+    let mut total_dropped = 0u64;
+    for (i, result) in &results {
+        match result {
+            Ok(stats) => {
+                total_events += stats.events;
+                total_dropped += stats.dropped;
+                if stats.dropped > 0 {
+                    println!(
+                        "client {i:>3}: {} events, {} dropped (slow consumer), final {:.3}",
+                        stats.events, stats.dropped, stats.final_acc
+                    );
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("client {i:>3}: FAILED: {e:#}");
+            }
+        }
+    }
+    println!(
+        "loadgen: {} sessions ok, {failures} failed, {total_events} events \
+         ({total_dropped} dropped at slow consumers), {wall:.1}s wall",
+        clients - failures
+    );
+
+    if args.flag("shutdown") {
+        let mut conn = connect(&addr, Duration::from_secs(5))?;
+        writeln!(conn, "{}", r#"{"cmd":"shutdown"}"#)?;
+        println!("loadgen: sent shutdown");
+    }
+    if failures > 0 {
+        bail!("{failures} of {clients} sessions failed");
+    }
+    if slow_ms > 0 && total_dropped == 0 {
+        bail!("expected the throttled client to exercise drop accounting, saw none");
+    }
+    if budget > 0.0 && wall > budget {
+        bail!("run took {wall:.1}s, over the {budget:.1}s budget");
+    }
+    Ok(())
+}

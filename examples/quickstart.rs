@@ -5,6 +5,10 @@
 //! open a [`Session`], step windows, read [`WindowReport`]s.
 //!
 //! Run with: `cargo run --release --example quickstart`
+//!
+//! The same session can be hosted remotely: `ecco serve` exposes submit /
+//! event-stream / snapshot / resume over a socket (see `ecco::serve` and
+//! `examples/loadgen.rs` for a many-client driver).
 
 use anyhow::Result;
 use ecco::api::{RunSpec, Session};

@@ -1,0 +1,74 @@
+//! Serve-host benchmarks, socket-free: protocol parse cost, wire-spec
+//! round-trip cost, and registry event fan-out to N subscribers (the
+//! per-event price every runner thread pays while streams are attached).
+//!
+//! Run: `cargo bench --bench serve`
+
+use ecco::api::{Event, RunSpec, SimOpts};
+use ecco::runtime::Task;
+use ecco::serve::{Registry, ServeConfig};
+use ecco::server::Policy;
+use ecco::util::bench::{black_box, BenchSuite};
+
+fn wide_spec() -> RunSpec {
+    RunSpec::new(Task::Det, Policy::ecco())
+        .cams(22)
+        .gpus(4.0)
+        .shared_mbps(12.0)
+        .uplinks((0..22).map(|c| 8.0 + c as f64).collect())
+        .topology_degree(6)
+        .windows(20)
+        .seed(42)
+        .sim(SimOpts::new().window_secs(40.0).micro_windows(4))
+}
+
+fn main() {
+    let mut b = BenchSuite::new("serve");
+
+    // Request-line parse latency (the per-request floor on every conn).
+    let submit_line = format!(
+        r#"{{"cmd":"submit","spec":{},"events":true,"throttle_ms":0}}"#,
+        wide_spec().to_wire_json().to_string_compact()
+    );
+    b.bench("protocol_parse_submit_22cams", || {
+        ecco::serve::protocol::parse_request(black_box(&submit_line)).unwrap()
+    });
+    let status_line = r#"{"cmd":"status","session":17}"#;
+    b.bench("protocol_parse_status", || {
+        ecco::serve::protocol::parse_request(black_box(status_line)).unwrap()
+    });
+
+    // Wire spec export + re-validate (paid once per submit and resume).
+    let wire = wide_spec().to_wire_json();
+    b.bench("spec_wire_round_trip_22cams", || {
+        let spec = RunSpec::from_wire_json(black_box(&wire)).unwrap();
+        spec.to_wire_json()
+    });
+
+    // Event fan-out through the registry: render + bounded push to N
+    // attached subscribers (nobody draining — worst case, all drops after
+    // the buffer fills).
+    for subs in [1usize, 8, 32] {
+        let registry = Registry::new(ServeConfig::default());
+        let (id, _sub) = registry
+            .submit(wire.clone(), 20, 0, None, true)
+            .unwrap();
+        for _ in 1..subs {
+            registry.subscribe(id).unwrap();
+        }
+        registry.next_job().unwrap();
+        registry.begin(id).unwrap();
+        let event = Event::WindowClosed {
+            time: 120.0,
+            window: 3,
+            mean_acc: 0.412,
+            cam_acc: vec![0.4; 22],
+            membership: vec![(0, (0..11).collect()), (1, (11..22).collect())],
+        };
+        b.bench(&format!("registry_publish_{subs}subs"), || {
+            registry.publish_event(black_box(id), black_box(&event), true)
+        });
+    }
+
+    b.finish();
+}

@@ -360,9 +360,15 @@ impl EventSink for RecordingSink {
 }
 
 /// Streams events as JSON Lines to any writer (a file for offline
-/// analysis, a buffer for tests). Flushes on drop.
+/// analysis, a buffer for tests, a serve subscriber). Flushes on drop.
+///
+/// A write failure never kills the run: the line is dropped, a counter is
+/// bumped, and one summary warning is logged when the sink closes
+/// ([`JsonlSink::into_inner`] or drop) — not one warning per event.
 pub struct JsonlSink<W: Write> {
     out: Option<W>,
+    /// Event lines dropped on write errors, reported once at close.
+    write_errors: u64,
 }
 
 impl JsonlSink<std::io::BufWriter<std::fs::File>> {
@@ -375,31 +381,61 @@ impl JsonlSink<std::io::BufWriter<std::fs::File>> {
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(out: W) -> Self {
-        JsonlSink { out: Some(out) }
+        JsonlSink {
+            out: Some(out),
+            write_errors: 0,
+        }
     }
 
-    /// Flush and hand back the underlying writer.
+    /// Flush and hand back the underlying writer, reporting (once) any
+    /// write errors accumulated during the run.
     pub fn into_inner(mut self) -> W {
         let mut out = self.out.take().expect("writer present until into_inner");
-        let _ = out.flush();
+        let flush_err = out.flush().err();
+        self.report_errors(flush_err);
         out
+    }
+
+    /// Event lines dropped on write errors so far (0 on a healthy sink).
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors
+    }
+
+    fn report_errors(&mut self, flush_err: Option<std::io::Error>) {
+        if self.write_errors > 0 || flush_err.is_some() {
+            let flush_note = match &flush_err {
+                Some(e) => format!("; final flush failed: {e}"),
+                None => String::new(),
+            };
+            crate::util::logger::log(
+                crate::util::logger::Level::Warn,
+                module_path!(),
+                &format!(
+                    "jsonl event sink dropped {} line(s) on write errors{flush_note}",
+                    self.write_errors
+                ),
+            );
+        }
+        self.write_errors = 0;
     }
 }
 
 impl<W: Write> EventSink for JsonlSink<W> {
     fn on_event(&mut self, event: &Event) {
-        // A sink write failure must not kill the simulation; drop the line.
+        // A sink write failure must not kill the simulation; count the
+        // dropped line and report once at close.
         if let Some(out) = &mut self.out {
-            let _ = writeln!(out, "{}", event.to_json().to_string_compact());
+            if writeln!(out, "{}", event.to_json().to_string_compact()).is_err() {
+                self.write_errors += 1;
+            }
         }
     }
 }
 
 impl<W: Write> Drop for JsonlSink<W> {
     fn drop(&mut self) {
-        if let Some(out) = &mut self.out {
-            let _ = out.flush();
-        }
+        let flush_err = self.out.as_mut().and_then(|out| out.flush().err());
+        self.report_errors(flush_err);
     }
 }
 
@@ -485,6 +521,42 @@ mod tests {
         }
         assert!(lines[0].contains("retrain_request"));
         assert!(lines[3].contains("window_closed"));
+    }
+
+    /// Fails every write/flush, like a full disk or a closed pipe.
+    struct FailingWriter;
+
+    impl Write for FailingWriter {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::other("disk full"))
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Err(std::io::Error::other("disk full"))
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_survives_a_failing_writer() {
+        let mut sink = JsonlSink::new(FailingWriter);
+        for e in sample_events() {
+            sink.on_event(&e);
+        }
+        assert_eq!(sink.write_errors(), 4, "every line dropped, none panicked");
+        // Drop flushes (which also fails) and reports once; must not panic.
+        drop(sink);
+        // into_inner on a failing writer must not panic either.
+        let mut sink = JsonlSink::new(FailingWriter);
+        sink.on_event(&sample_events()[0]);
+        let _writer = sink.into_inner();
+    }
+
+    #[test]
+    fn jsonl_sink_healthy_writer_reports_zero_errors() {
+        let mut sink = JsonlSink::new(Vec::new());
+        for e in sample_events() {
+            sink.on_event(&e);
+        }
+        assert_eq!(sink.write_errors(), 0);
     }
 
     #[test]

@@ -17,6 +17,14 @@
 //! engine with results in spec order — every report identical to its
 //! sequential equivalent (see the threading notes in [`crate`] docs).
 //!
+//! Specs also travel over the wire: [`RunSpec::to_wire_json`] exports the
+//! serializable surface (everything except `scenario` worlds and
+//! `configure` hooks) and [`RunSpec::from_wire_json`] validates it back
+//! with typed [`SpecError`]s — the contract behind `ecco serve`
+//! ([`crate::serve`]), which hosts many sessions in one process with
+//! FIFO admission, per-consumer back-pressure, and deterministic
+//! snapshot/resume.
+//!
 //! Two sub-builders refine a spec without new top-level setters:
 //! [`RunSpec::camera`] layers per-camera overrides ([`CameraSpec`]: uplink,
 //! window length, phase) over the fleet defaults, and
@@ -72,4 +80,4 @@ pub mod spec;
 pub use event::{Event, EventSink, JsonlSink, RecordingSink};
 pub use report::{Resilience, RunReport, WindowReport};
 pub use session::{run_fleet, Session};
-pub use spec::{CameraSpec, RunSpec, RuntimeOpts, SpecError};
+pub use spec::{CameraSpec, RunSpec, RuntimeOpts, SimOpts, SpecError};

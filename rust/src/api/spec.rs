@@ -18,6 +18,7 @@ use crate::faults::FaultPlan;
 use crate::runtime::Task;
 use crate::scene::scenario::{self, Scenario};
 use crate::server::{CamWindow, Policy, Scheduler, SystemConfig};
+use crate::util::json::{arr, num, obj, s, Json};
 
 /// A validation failure in a [`RunSpec`].
 #[derive(Debug, Clone, PartialEq)]
@@ -48,6 +49,19 @@ pub enum SpecError {
         phase: f64,
         window_len: Option<f64>,
     },
+    /// A wire spec ([`RunSpec::from_wire_json`]) was structurally invalid:
+    /// wrong JSON shape, a field of the wrong type, or an unparsable
+    /// sub-object. `detail` names the offending field.
+    Malformed { detail: String },
+    /// A wire spec carried a top-level or nested key the protocol doesn't
+    /// define (catches client-side typos instead of silently ignoring
+    /// them).
+    UnknownField { field: String },
+    /// A wire enum field (`task`, `policy`, `runtime.scheduler`) named a
+    /// variant that doesn't exist.
+    UnknownName { field: &'static str, value: String },
+    /// A `sim` override was out of range (zero/negative/non-finite).
+    BadSimOpt { field: &'static str, value: f64 },
 }
 
 impl fmt::Display for SpecError {
@@ -94,6 +108,16 @@ impl fmt::Display for SpecError {
                     "run spec: camera {cam} phase must be finite and >= 0, got {phase} s"
                 ),
             },
+            SpecError::Malformed { detail } => write!(f, "run spec: malformed: {detail}"),
+            SpecError::UnknownField { field } => {
+                write!(f, "run spec: unknown field {field:?}")
+            }
+            SpecError::UnknownName { field, value } => {
+                write!(f, "run spec: unknown {field} {value:?}")
+            }
+            SpecError::BadSimOpt { field, value } => {
+                write!(f, "run spec: sim.{field} out of range: {value}")
+            }
         }
     }
 }
@@ -200,6 +224,61 @@ impl RuntimeOpts {
     }
 }
 
+/// Simulation-granularity overrides, applied with [`RunSpec::sim`]. Unset
+/// fields keep the [`SystemConfig`] defaults. These are the knobs fast
+/// tests and serve clients use to shrink a run; they change the simulated
+/// workload (unlike [`RuntimeOpts`], which never changes results).
+///
+/// ```
+/// use ecco::api::{RunSpec, SimOpts};
+/// use ecco::runtime::Task;
+/// use ecco::server::Policy;
+///
+/// let spec = RunSpec::new(Task::Det, Policy::ecco())
+///     .sim(SimOpts::new().window_secs(40.0).micro_windows(4).eval_frames(8));
+/// assert_eq!(spec.validate(), Ok(()));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SimOpts {
+    window_secs: Option<f64>,
+    micro_windows: Option<usize>,
+    eval_frames: Option<usize>,
+    pretrain_steps: Option<usize>,
+}
+
+impl SimOpts {
+    pub fn new() -> SimOpts {
+        SimOpts::default()
+    }
+
+    /// Retraining-window length in simulated seconds. Non-finite or
+    /// non-positive values are ignored (the hook only applies valid
+    /// lengths); the wire parser rejects them with
+    /// [`SpecError::BadSimOpt`].
+    pub fn window_secs(mut self, secs: f64) -> Self {
+        self.window_secs = Some(secs);
+        self
+    }
+
+    /// Micro-windows per retraining window (clamped to >= 1).
+    pub fn micro_windows(mut self, n: usize) -> Self {
+        self.micro_windows = Some(n.max(1));
+        self
+    }
+
+    /// Held-out frames per evaluation pass (clamped to >= 1).
+    pub fn eval_frames(mut self, n: usize) -> Self {
+        self.eval_frames = Some(n.max(1));
+        self
+    }
+
+    /// Fine-tune steps for the window-0 pretrain phase.
+    pub fn pretrain_steps(mut self, n: usize) -> Self {
+        self.pretrain_steps = Some(n);
+        self
+    }
+}
+
 /// Builder for one system run. Defaults mirror the quick-driver CLI:
 /// 6 cameras in two correlated triples, 1 GPU, 6 Mbps shared / 20 Mbps
 /// uplinks, 8 windows, seed 7.
@@ -222,6 +301,11 @@ pub struct RunSpec {
     faults: FaultPlan,
     /// Zoo-prefill fine-tune steps when the policy warm-starts from a zoo.
     pub(crate) zoo_init_steps: usize,
+    /// Merged [`RunSpec::runtime`] calls, kept alongside the hook so the
+    /// spec can be exported to the wire ([`RunSpec::to_wire_json`]).
+    runtime_wire: RuntimeOpts,
+    /// Merged [`RunSpec::sim`] calls, kept for the same reason.
+    sim_wire: SimOpts,
     /// Config hooks, applied in order after the built-in knobs. `Send +
     /// Sync` so whole specs can be shipped to fleet-driver workers.
     #[allow(clippy::type_complexity)]
@@ -244,6 +328,8 @@ impl RunSpec {
             scenario: None,
             faults: FaultPlan::none(),
             zoo_init_steps: 40,
+            runtime_wire: RuntimeOpts::default(),
+            sim_wire: SimOpts::default(),
             hooks: Vec::new(),
         }
     }
@@ -347,7 +433,16 @@ impl RunSpec {
     /// Apply a batch of process-level runtime options (threads, frame
     /// cache, scheduler). Only fields explicitly set on `opts` are
     /// applied; like any hook, later calls win over earlier ones.
-    pub fn runtime(self, opts: RuntimeOpts) -> Self {
+    pub fn runtime(mut self, opts: RuntimeOpts) -> Self {
+        if let Some(n) = opts.threads {
+            self.runtime_wire.threads = Some(n);
+        }
+        if let Some(cache) = opts.frame_cache {
+            self.runtime_wire.frame_cache = Some(cache);
+        }
+        if let Some(scheduler) = opts.scheduler {
+            self.runtime_wire.scheduler = Some(scheduler);
+        }
         self.configure(move |cfg| {
             if let Some(n) = opts.threads {
                 cfg.eval_threads = n;
@@ -357,6 +452,42 @@ impl RunSpec {
             }
             if let Some(scheduler) = opts.scheduler {
                 cfg.scheduler = scheduler;
+            }
+        })
+    }
+
+    /// Apply simulation-granularity overrides (window length,
+    /// micro-windows, eval frames, pretrain steps). Only fields explicitly
+    /// set on `opts` are applied; later calls win over earlier ones. These
+    /// ride the wire (see [`RunSpec::to_wire_json`]) so serve clients can
+    /// size their runs without config hooks.
+    pub fn sim(mut self, opts: SimOpts) -> Self {
+        if let Some(secs) = opts.window_secs {
+            self.sim_wire.window_secs = Some(secs);
+        }
+        if let Some(n) = opts.micro_windows {
+            self.sim_wire.micro_windows = Some(n);
+        }
+        if let Some(n) = opts.eval_frames {
+            self.sim_wire.eval_frames = Some(n);
+        }
+        if let Some(n) = opts.pretrain_steps {
+            self.sim_wire.pretrain_steps = Some(n);
+        }
+        self.configure(move |cfg| {
+            if let Some(secs) = opts.window_secs {
+                if secs.is_finite() && secs > 0.0 {
+                    cfg.window_secs = secs;
+                }
+            }
+            if let Some(n) = opts.micro_windows {
+                cfg.micro_windows = n;
+            }
+            if let Some(n) = opts.eval_frames {
+                cfg.eval_frames = n;
+            }
+            if let Some(n) = opts.pretrain_steps {
+                cfg.pretrain_steps = n;
             }
         })
     }
@@ -470,6 +601,261 @@ impl RunSpec {
         Ok(())
     }
 
+    /// Export the wire-representable surface of this spec as the JSON
+    /// object the `ecco serve` protocol accepts in `submit`. Inverse of
+    /// [`RunSpec::from_wire_json`] for that surface: two process-local
+    /// pieces do NOT ride the wire — an explicit [`RunSpec::scenario`]
+    /// world (only its camera count is exported; the importer rebuilds the
+    /// default world at that count) and [`RunSpec::configure`] hooks
+    /// (closures aren't serializable; use [`RunSpec::runtime`] /
+    /// [`RunSpec::sim`], which are). Seeds above 2^53 lose precision
+    /// (numbers travel as f64).
+    pub fn to_wire_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("task", s(self.task.name())),
+            ("policy", s(self.policy.name)),
+            ("cams", num(self.n_cams() as f64)),
+            ("gpus", num(self.gpus)),
+            ("shared_mbps", num(self.shared_mbps)),
+            ("windows", num(self.windows as f64)),
+            ("seed", num(self.seed as f64)),
+            ("zoo_init_steps", num(self.zoo_init_steps as f64)),
+        ];
+        match &self.uplinks {
+            Uplinks::Uniform(mbps) => fields.push(("uplink_mbps", num(*mbps))),
+            Uplinks::PerCamera(ups) => {
+                fields.push(("uplinks", arr(ups.iter().map(|&m| num(m)).collect())));
+            }
+        }
+        if !self.cameras.is_empty() {
+            let m: BTreeMap<String, Json> = self
+                .cameras
+                .iter()
+                .map(|(&cam, c)| {
+                    let mut cf: Vec<(&str, Json)> = Vec::new();
+                    if let Some(mbps) = c.uplink_mbps {
+                        cf.push(("uplink_mbps", num(mbps)));
+                    }
+                    if let Some(len) = c.window_len {
+                        cf.push(("window_len", num(len)));
+                    }
+                    if let Some(phase) = c.phase {
+                        cf.push(("phase", num(phase)));
+                    }
+                    (cam.to_string(), obj(cf))
+                })
+                .collect();
+            fields.push(("cameras", Json::Obj(m)));
+        }
+        if let Some(d) = self.topology_degree {
+            fields.push(("topology_degree", num(d as f64)));
+        }
+        if !self.faults.is_empty() {
+            fields.push(("faults", self.faults.to_json()));
+        }
+        let rt = &self.runtime_wire;
+        if *rt != RuntimeOpts::default() {
+            let mut rf: Vec<(&str, Json)> = Vec::new();
+            if let Some(n) = rt.threads {
+                rf.push(("threads", num(n as f64)));
+            }
+            if let Some(cache) = rt.frame_cache {
+                rf.push(("frame_cache", Json::Bool(cache)));
+            }
+            if let Some(sched) = rt.scheduler {
+                rf.push(("scheduler", s(sched.name())));
+            }
+            fields.push(("runtime", obj(rf)));
+        }
+        let sim = &self.sim_wire;
+        if *sim != SimOpts::default() {
+            let mut sf: Vec<(&str, Json)> = Vec::new();
+            if let Some(secs) = sim.window_secs {
+                sf.push(("window_secs", num(secs)));
+            }
+            if let Some(n) = sim.micro_windows {
+                sf.push(("micro_windows", num(n as f64)));
+            }
+            if let Some(n) = sim.eval_frames {
+                sf.push(("eval_frames", num(n as f64)));
+            }
+            if let Some(n) = sim.pretrain_steps {
+                sf.push(("pretrain_steps", num(n as f64)));
+            }
+            fields.push(("sim", obj(sf)));
+        }
+        obj(fields)
+    }
+
+    /// Parse and validate a wire spec (see [`RunSpec::to_wire_json`] for
+    /// the schema). Every key is checked: unknown fields, wrong types, and
+    /// out-of-range values all map to a typed [`SpecError`], and the
+    /// returned spec has already passed [`RunSpec::validate`].
+    pub fn from_wire_json(j: &Json) -> Result<RunSpec, SpecError> {
+        let map = match j {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(SpecError::Malformed {
+                    detail: "spec must be a JSON object".into(),
+                })
+            }
+        };
+        let mut spec = RunSpec::new(Task::Det, Policy::ecco());
+        let mut runtime = RuntimeOpts::new();
+        let mut sim = SimOpts::new();
+        for (key, val) in map {
+            match key.as_str() {
+                "task" => {
+                    let name = wire_str(val, "task")?;
+                    spec.task = Task::parse(name).map_err(|_| SpecError::UnknownName {
+                        field: "task",
+                        value: name.to_string(),
+                    })?;
+                }
+                "policy" => {
+                    let name = wire_str(val, "policy")?;
+                    spec.policy = Policy::by_name(name).ok_or_else(|| SpecError::UnknownName {
+                        field: "policy",
+                        value: name.to_string(),
+                    })?;
+                }
+                "cams" => spec.cams = wire_usize(val, "cams")?,
+                "gpus" => spec.gpus = wire_f64(val, "gpus")?,
+                "shared_mbps" => spec.shared_mbps = wire_f64(val, "shared_mbps")?,
+                "windows" => spec.windows = wire_usize(val, "windows")?,
+                "seed" => spec.seed = wire_u64(val, "seed")?,
+                "zoo_init_steps" => spec.zoo_init_steps = wire_usize(val, "zoo_init_steps")?,
+                "uplink_mbps" => {
+                    spec.uplinks = Uplinks::Uniform(wire_f64(val, "uplink_mbps")?);
+                }
+                "uplinks" => {
+                    let items = val.as_arr().map_err(|e| wire_err("uplinks", &e))?;
+                    let mut ups = Vec::with_capacity(items.len());
+                    for (i, item) in items.iter().enumerate() {
+                        ups.push(wire_f64(item, &format!("uplinks[{i}]"))?);
+                    }
+                    spec.uplinks = Uplinks::PerCamera(ups);
+                }
+                "cameras" => {
+                    let cmap = val.as_obj().map_err(|e| wire_err("cameras", &e))?;
+                    for (cam_key, cval) in cmap {
+                        let cam: usize = cam_key.parse().map_err(|_| SpecError::Malformed {
+                            detail: format!("cameras key {cam_key:?} is not a camera index"),
+                        })?;
+                        let cobj = cval
+                            .as_obj()
+                            .map_err(|e| wire_err(&format!("cameras.{cam_key}"), &e))?;
+                        let mut cs = CameraSpec::default();
+                        for (ck, cv) in cobj {
+                            let label = format!("cameras.{cam_key}.{ck}");
+                            match ck.as_str() {
+                                "uplink_mbps" => cs.uplink_mbps = Some(wire_f64(cv, &label)?),
+                                "window_len" => cs.window_len = Some(wire_f64(cv, &label)?),
+                                "phase" => cs.phase = Some(wire_f64(cv, &label)?),
+                                _ => return Err(SpecError::UnknownField { field: label }),
+                            }
+                        }
+                        spec.cameras.insert(cam, cs);
+                    }
+                }
+                "topology_degree" => {
+                    spec.topology_degree = Some(wire_usize(val, "topology_degree")?);
+                }
+                "faults" => {
+                    spec.faults = FaultPlan::from_json(val)
+                        .map_err(|detail| SpecError::Malformed { detail })?;
+                }
+                "runtime" => {
+                    let rmap = val.as_obj().map_err(|e| wire_err("runtime", &e))?;
+                    for (rk, rv) in rmap {
+                        match rk.as_str() {
+                            "threads" => {
+                                runtime = runtime.threads(wire_usize(rv, "runtime.threads")?);
+                            }
+                            "frame_cache" => {
+                                runtime =
+                                    runtime.frame_cache(wire_bool(rv, "runtime.frame_cache")?);
+                            }
+                            "scheduler" => {
+                                let name = wire_str(rv, "runtime.scheduler")?;
+                                let sched = Scheduler::by_name(name).ok_or_else(|| {
+                                    SpecError::UnknownName {
+                                        field: "runtime.scheduler",
+                                        value: name.to_string(),
+                                    }
+                                })?;
+                                runtime = runtime.scheduler(sched);
+                            }
+                            other => {
+                                return Err(SpecError::UnknownField {
+                                    field: format!("runtime.{other}"),
+                                })
+                            }
+                        }
+                    }
+                }
+                "sim" => {
+                    let smap = val.as_obj().map_err(|e| wire_err("sim", &e))?;
+                    for (sk, sv) in smap {
+                        match sk.as_str() {
+                            "window_secs" => {
+                                let secs = wire_f64(sv, "sim.window_secs")?;
+                                if !(secs.is_finite() && secs > 0.0) {
+                                    return Err(SpecError::BadSimOpt {
+                                        field: "window_secs",
+                                        value: secs,
+                                    });
+                                }
+                                sim = sim.window_secs(secs);
+                            }
+                            "micro_windows" => {
+                                let n = wire_usize(sv, "sim.micro_windows")?;
+                                if n == 0 {
+                                    return Err(SpecError::BadSimOpt {
+                                        field: "micro_windows",
+                                        value: 0.0,
+                                    });
+                                }
+                                sim = sim.micro_windows(n);
+                            }
+                            "eval_frames" => {
+                                let n = wire_usize(sv, "sim.eval_frames")?;
+                                if n == 0 {
+                                    return Err(SpecError::BadSimOpt {
+                                        field: "eval_frames",
+                                        value: 0.0,
+                                    });
+                                }
+                                sim = sim.eval_frames(n);
+                            }
+                            "pretrain_steps" => {
+                                sim = sim.pretrain_steps(wire_usize(sv, "sim.pretrain_steps")?);
+                            }
+                            other => {
+                                return Err(SpecError::UnknownField {
+                                    field: format!("sim.{other}"),
+                                })
+                            }
+                        }
+                    }
+                }
+                other => {
+                    return Err(SpecError::UnknownField {
+                        field: other.to_string(),
+                    })
+                }
+            }
+        }
+        if runtime != RuntimeOpts::default() {
+            spec = spec.runtime(runtime);
+        }
+        if sim != SimOpts::default() {
+            spec = spec.sim(sim);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
     /// Resolve the scenario (building the default world if none was set)
     /// and the per-camera uplink vector. Call after [`RunSpec::validate`].
     pub(crate) fn into_parts(self) -> (Scenario, Vec<f64>, RunSpecRest) {
@@ -523,6 +909,42 @@ impl RunSpec {
             },
         )
     }
+}
+
+// -- wire parsing helpers: map Json accessor errors onto the typed
+// SpecError::Malformed with the offending field named. ------------------
+
+fn wire_err(field: &str, detail: &dyn fmt::Display) -> SpecError {
+    SpecError::Malformed {
+        detail: format!("{field}: {detail}"),
+    }
+}
+
+fn wire_f64(v: &Json, field: &str) -> Result<f64, SpecError> {
+    v.as_f64().map_err(|e| wire_err(field, &e))
+}
+
+fn wire_usize(v: &Json, field: &str) -> Result<usize, SpecError> {
+    v.as_usize().map_err(|e| wire_err(field, &e))
+}
+
+fn wire_u64(v: &Json, field: &str) -> Result<u64, SpecError> {
+    let n = wire_f64(v, field)?;
+    if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0) {
+        return Err(wire_err(field, &format!("not a non-negative integer: {n}")));
+    }
+    Ok(n as u64)
+}
+
+fn wire_bool(v: &Json, field: &str) -> Result<bool, SpecError> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        other => Err(wire_err(field, &format!("not a bool: {other:?}"))),
+    }
+}
+
+fn wire_str<'a>(v: &'a Json, field: &str) -> Result<&'a str, SpecError> {
+    v.as_str().map_err(|e| wire_err(field, &e))
 }
 
 /// The non-world remainder of a consumed [`RunSpec`].
@@ -710,5 +1132,186 @@ mod tests {
         }
         .to_string();
         assert!(msg.contains("4 cameras") || msg.contains("2 uplinks"), "{msg}");
+    }
+
+    fn full_spec() -> RunSpec {
+        use crate::faults::{FaultKind, FaultPlan};
+        base()
+            .cams(4)
+            .gpus(2.0)
+            .shared_mbps(8.0)
+            .uplinks(vec![20.0, 18.0, 16.0, 14.0])
+            .camera(1, |c| c.uplink_mbps(9.0).window_len(60.0).phase(10.0))
+            .camera(3, |c| c.uplink_mbps(5.0))
+            .topology_degree(2)
+            .windows(5)
+            .seed(1234)
+            .zoo_init_steps(20)
+            .faults(FaultPlan::none().at(1, 0, 2, FaultKind::CameraDown))
+            .runtime(
+                RuntimeOpts::new()
+                    .threads(2)
+                    .frame_cache(false)
+                    .scheduler(Scheduler::EventDriven),
+            )
+            .sim(
+                SimOpts::new()
+                    .window_secs(40.0)
+                    .micro_windows(4)
+                    .eval_frames(8)
+                    .pretrain_steps(120),
+            )
+    }
+
+    #[test]
+    fn wire_json_round_trips_the_full_surface() {
+        let spec = full_spec();
+        let wire = spec.to_wire_json();
+        let back = RunSpec::from_wire_json(&wire).expect("wire spec must re-validate");
+        // RunSpec carries closures, so compare through the wire form: a
+        // re-imported spec must export byte-identically.
+        assert_eq!(back.to_wire_json().to_string_compact(), wire.to_string_compact());
+        // The wire text itself parses back to the same value.
+        let reparsed = Json::parse(&wire.to_string_compact()).unwrap();
+        assert_eq!(
+            RunSpec::from_wire_json(&reparsed).unwrap().to_wire_json(),
+            wire
+        );
+        // Defaults export minimally and round-trip too.
+        let d = base().to_wire_json();
+        assert_eq!(RunSpec::from_wire_json(&d).unwrap().to_wire_json(), d);
+    }
+
+    #[test]
+    fn wire_json_applies_runtime_and_sim_to_the_config() {
+        let spec = RunSpec::from_wire_json(&full_spec().to_wire_json()).unwrap();
+        let mut cfg = SystemConfig::new(Task::Det, Policy::ecco());
+        for hook in &spec.hooks {
+            hook(&mut cfg);
+        }
+        assert_eq!(cfg.eval_threads, 2);
+        assert!(!cfg.frame_cache);
+        assert_eq!(cfg.scheduler, Scheduler::EventDriven);
+        assert_eq!(cfg.window_secs, 40.0);
+        assert_eq!(cfg.micro_windows, 4);
+        assert_eq!(cfg.eval_frames, 8);
+        assert_eq!(cfg.pretrain_steps, 120);
+    }
+
+    #[test]
+    fn wire_json_rejects_with_typed_errors() {
+        // RunSpec holds closures (no PartialEq/Debug), so compare errors.
+        let parse = |text: &str| RunSpec::from_wire_json(&Json::parse(text).unwrap()).err();
+        assert_eq!(
+            parse("[1,2]"),
+            Some(SpecError::Malformed {
+                detail: "spec must be a JSON object".into()
+            })
+        );
+        assert_eq!(
+            parse(r#"{"polciy":"ecco"}"#),
+            Some(SpecError::UnknownField {
+                field: "polciy".into()
+            })
+        );
+        assert_eq!(
+            parse(r#"{"policy":"sota"}"#),
+            Some(SpecError::UnknownName {
+                field: "policy",
+                value: "sota".into()
+            })
+        );
+        assert_eq!(
+            parse(r#"{"task":"cls"}"#),
+            Some(SpecError::UnknownName {
+                field: "task",
+                value: "cls".into()
+            })
+        );
+        assert_eq!(
+            parse(r#"{"runtime":{"scheduler":"fifo"}}"#),
+            Some(SpecError::UnknownName {
+                field: "runtime.scheduler",
+                value: "fifo".into()
+            })
+        );
+        assert_eq!(
+            parse(r#"{"sim":{"window_secs":0}}"#),
+            Some(SpecError::BadSimOpt {
+                field: "window_secs",
+                value: 0.0
+            })
+        );
+        assert_eq!(
+            parse(r#"{"sim":{"micro_windows":0}}"#),
+            Some(SpecError::BadSimOpt {
+                field: "micro_windows",
+                value: 0.0
+            })
+        );
+        assert_eq!(
+            parse(r#"{"cameras":{"two":{"phase":1}}}"#),
+            Some(SpecError::Malformed {
+                detail: "cameras key \"two\" is not a camera index".into()
+            })
+        );
+        assert_eq!(
+            parse(r#"{"cameras":{"2":{"jitter":1}}}"#),
+            Some(SpecError::UnknownField {
+                field: "cameras.2.jitter".into()
+            })
+        );
+        // Wrong types surface as Malformed naming the field.
+        for bad in [
+            r#"{"windows":"eight"}"#,
+            r#"{"seed":-1}"#,
+            r#"{"gpus":[1]}"#,
+            r#"{"uplinks":[20,"fast"]}"#,
+            r#"{"runtime":{"frame_cache":1}}"#,
+            r#"{"faults":{"window":0}}"#,
+        ] {
+            match parse(bad) {
+                Some(SpecError::Malformed { .. }) => {}
+                other => panic!("{bad} should be Malformed, got {other:?}"),
+            }
+        }
+        // Semantic validation still runs on the imported spec.
+        assert_eq!(parse(r#"{"windows":0}"#), Some(SpecError::NoWindows));
+        assert_eq!(
+            parse(r#"{"cams":3,"uplinks":[10,10]}"#),
+            Some(SpecError::UplinkCountMismatch {
+                cams: 3,
+                uplinks: 2
+            })
+        );
+    }
+
+    #[test]
+    fn wire_json_never_panics_on_garbage_values() {
+        // Fuzz-ish: drive the parser with structurally valid JSON carrying
+        // pseudo-random nonsense; from_wire_json must reject (or accept)
+        // without panicking.
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0x5eed, 42);
+        let keys = [
+            "task", "policy", "cams", "gpus", "shared_mbps", "windows", "seed",
+            "zoo_init_steps", "uplink_mbps", "uplinks", "cameras", "topology_degree",
+            "faults", "runtime", "sim", "bogus",
+        ];
+        for _ in 0..200 {
+            let mut fields = Vec::new();
+            for _ in 0..rng.index(4) + 1 {
+                let key = keys[rng.index(keys.len())];
+                let val = match rng.index(5) {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.index(2) == 0),
+                    2 => num(rng.f64() * 1e6 - 1e3),
+                    3 => s("zzz"),
+                    _ => arr(vec![num(rng.f64()), Json::Null]),
+                };
+                fields.push((key, val));
+            }
+            let _ = RunSpec::from_wire_json(&obj(fields));
+        }
     }
 }

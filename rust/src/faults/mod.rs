@@ -34,6 +34,7 @@
 //! consumed — event logs stay byte-identical to a build without the
 //! subsystem. `rust/tests/faults.rs` pins this A/B.
 
+use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Pcg32;
 
 /// How a corrupted probe embedding manifests.
@@ -285,6 +286,116 @@ impl FaultPlan {
         }
         plan
     }
+
+    /// Wire representation: a JSON array of event objects in schedule
+    /// order (the `ecco serve` protocol's `"faults"` field). Inverse of
+    /// [`FaultPlan::from_json`]; round-trips any plan exactly.
+    pub fn to_json(&self) -> Json {
+        arr(self.events.iter().map(FaultEvent::to_json).collect())
+    }
+
+    /// Parse a wire plan (see [`FaultPlan::to_json`]). Events are
+    /// re-inserted through [`FaultPlan::push`], so a hand-written
+    /// out-of-order array still yields a valid sorted schedule.
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let items = match j {
+            Json::Arr(items) => items,
+            _ => return Err("faults: expected an array of event objects".into()),
+        };
+        let mut plan = FaultPlan::none();
+        for item in items {
+            plan.push(FaultEvent::from_json(item)?);
+        }
+        Ok(plan)
+    }
+}
+
+impl FaultEvent {
+    /// Wire representation of one scheduled fault.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("window", num(self.window as f64)),
+            ("mw", num(self.mw as f64)),
+            ("cam", num(self.cam as f64)),
+            ("kind", s(self.kind.name())),
+        ];
+        match self.kind {
+            FaultKind::UplinkScale { factor } => fields.push(("factor", num(factor))),
+            FaultKind::CorruptProbe { mode } => fields.push((
+                "mode",
+                s(match mode {
+                    CorruptMode::Nan => "nan",
+                    CorruptMode::Zero => "zero",
+                }),
+            )),
+            _ => {}
+        }
+        obj(fields)
+    }
+
+    /// Parse one wire fault event; the error string names the bad field.
+    pub fn from_json(j: &Json) -> Result<FaultEvent, String> {
+        let geti = |key: &str| -> Result<usize, String> {
+            j.get(key)
+                .and_then(|v| v.as_usize())
+                .map_err(|e| format!("fault event {key:?}: {e}"))
+        };
+        let window = geti("window")?;
+        let mw = geti("mw")?;
+        let cam = geti("cam")?;
+        let kind_name = j
+            .get("kind")
+            .and_then(|v| v.as_str().map(str::to_string))
+            .map_err(|e| format!("fault event \"kind\": {e}"))?;
+        let kind = match kind_name.as_str() {
+            "camera_down" => FaultKind::CameraDown,
+            "camera_up" => FaultKind::CameraUp,
+            "uplink_down" => FaultKind::UplinkDown,
+            "uplink_restore" => FaultKind::UplinkRestore,
+            "straggler_window" => FaultKind::StragglerWindow,
+            "uplink_scale" => {
+                let factor = j
+                    .get("factor")
+                    .and_then(|v| v.as_f64())
+                    .map_err(|e| format!("uplink_scale \"factor\": {e}"))?;
+                if !(factor.is_finite() && (0.0..=1.0).contains(&factor)) {
+                    return Err(format!("uplink_scale factor {factor} must lie in [0, 1]"));
+                }
+                FaultKind::UplinkScale { factor }
+            }
+            "corrupt_probe" => {
+                let mode = match j.get("mode").and_then(|v| v.as_str().map(str::to_string)) {
+                    Ok(m) if m == "nan" => CorruptMode::Nan,
+                    Ok(m) if m == "zero" => CorruptMode::Zero,
+                    Ok(m) => return Err(format!("corrupt_probe mode {m:?} (use nan|zero)")),
+                    Err(e) => return Err(format!("corrupt_probe \"mode\": {e}")),
+                };
+                FaultKind::CorruptProbe { mode }
+            }
+            other => return Err(format!("unknown fault kind {other:?}")),
+        };
+        Ok(FaultEvent {
+            window,
+            mw,
+            cam,
+            kind,
+        })
+    }
+}
+
+impl FaultKind {
+    /// Stable machine-readable name (the wire `"kind"` discriminant).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::CameraDown => "camera_down",
+            FaultKind::CameraUp => "camera_up",
+            FaultKind::UplinkDown => "uplink_down",
+            FaultKind::UplinkScale { .. } => "uplink_scale",
+            FaultKind::UplinkRestore => "uplink_restore",
+            FaultKind::StragglerWindow => "straggler_window",
+            FaultKind::CorruptProbe { .. } => "corrupt_probe",
+        }
+    }
 }
 
 /// A usable probe embedding: finite everywhere and not the all-zero
@@ -388,5 +499,58 @@ mod tests {
         assert!(!embedding_valid(&[0.0, 0.0, 0.0]));
         // A single live channel is enough (real embeddings are unit-norm).
         assert!(embedding_valid(&[0.0, 1.0, 0.0]));
+    }
+
+    #[test]
+    fn wire_json_round_trips_every_kind() {
+        let plan = FaultPlan::none()
+            .at(0, 0, 1, FaultKind::CameraDown)
+            .at(1, 0, 1, FaultKind::CameraUp)
+            .at(1, 1, 2, FaultKind::UplinkDown)
+            .at(2, 0, 2, FaultKind::UplinkRestore)
+            .at(2, 1, 0, FaultKind::UplinkScale { factor: 0.25 })
+            .at(3, 0, 3, FaultKind::StragglerWindow)
+            .at(
+                3,
+                1,
+                3,
+                FaultKind::CorruptProbe {
+                    mode: CorruptMode::Nan,
+                },
+            )
+            .at(
+                4,
+                0,
+                0,
+                FaultKind::CorruptProbe {
+                    mode: CorruptMode::Zero,
+                },
+            );
+        let j = plan.to_json();
+        let back = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(plan, back);
+        // Text round trip too (the wire is JSONL text).
+        let reparsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(FaultPlan::from_json(&reparsed).unwrap(), plan);
+        // Heavy preset round-trips through its wire form unchanged.
+        let heavy = FaultPlan::scenario(FaultScenario::Heavy, 6, 4, 11);
+        assert_eq!(FaultPlan::from_json(&heavy.to_json()).unwrap(), heavy);
+    }
+
+    #[test]
+    fn wire_json_rejects_malformed_events() {
+        for bad in [
+            r#"{"not":"an array"}"#,
+            r#"[{"window":0,"mw":0,"cam":0}]"#,
+            r#"[{"window":0,"mw":0,"cam":0,"kind":"explode"}]"#,
+            r#"[{"window":-1,"mw":0,"cam":0,"kind":"camera_down"}]"#,
+            r#"[{"window":0,"mw":0,"cam":0,"kind":"uplink_scale"}]"#,
+            r#"[{"window":0,"mw":0,"cam":0,"kind":"uplink_scale","factor":1.5}]"#,
+            r#"[{"window":0,"mw":0,"cam":0,"kind":"corrupt_probe","mode":"purple"}]"#,
+            r#"[{"window":0.5,"mw":0,"cam":0,"kind":"camera_down"}]"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FaultPlan::from_json(&j).is_err(), "accepted: {bad}");
+        }
     }
 }

@@ -33,6 +33,7 @@
 //! | [`grouping`] | Alg. 2 dynamic camera grouping |
 //! | [`transmission`] | §3.2 sampling-config tables + GAIMD parameterisation |
 //! | [`zoo`] | RECL-style model zoo |
+//! | [`serve`] | multi-tenant socket host: line-JSON protocol, admission queue, back-pressure, snapshot/resume (`ecco serve`) |
 //! | [`server`] | retraining jobs, micro-window scheduler, the (crate-private) `System` loop |
 //! | [`exp`] | one runner per paper table/figure (`ecco exp <id>`) |
 //! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness, persistent worker pool ([`util::pool`]) |
@@ -114,6 +115,25 @@
 //! ([`api::RunSpec::topology_degree`]), with a periodic long-range window
 //! that rescans all pairs so distant-but-correlated cameras still merge.
 //!
+//! ## Serving model
+//!
+//! `ecco serve` ([`serve`]) hosts many sessions in one long-lived process:
+//! clients connect over TCP or a unix socket, `submit` a wire-form
+//! [`api::RunSpec`] ([`api::RunSpec::to_wire_json`] /
+//! [`api::RunSpec::from_wire_json`]) as one JSON line, and stream typed
+//! [`api::Event`] frames back. Sessions are admitted FIFO into a bounded
+//! queue and executed by a small runner pool sharing one engine — the
+//! same fan-out discipline as [`api::run_fleet`]. Back-pressure is
+//! per-consumer: each streaming connection owns a bounded frame buffer;
+//! a slow reader loses (counted, reported) frames, never stalls a runner,
+//! and never perturbs the run. `snapshot` captures
+//! `{"completed":k,"spec":…}` at a window boundary; because runs are
+//! deterministic given the spec, `resume` replays the first `k` windows
+//! silently and continues the event stream seq-contiguously — the
+//! combined stream is byte-identical to an uninterrupted run (pinned by
+//! `rust/tests/serve.rs`). `examples/loadgen.rs` drives the host with
+//! dozens of concurrent clients.
+//!
 //! ## Fault model
 //!
 //! Deployments churn: cameras flap, uplinks saturate, probes go missing.
@@ -189,6 +209,7 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod scene;
+pub mod serve;
 pub mod server;
 pub mod teacher;
 pub mod transmission;

@@ -6,6 +6,8 @@
 //!   exp <id>   — regenerate a paper table/figure
 //!                (fig2c fig5 tab1 fig6det fig6seg fig7 fig8 fig9 fig10
 //!                 fig11 fig12 fig13, or `all`)
+//!   serve      — host many concurrent sessions over a socket
+//!                (line-JSON protocol; see `ecco::serve`)
 //!   info       — print manifest / artifact inventory
 //!
 //! Common options: --task det|seg --gpus N --bw MBPS --windows N --seed N
@@ -17,6 +19,7 @@ use ecco::api::{JsonlSink, RunSpec, Session};
 use ecco::exp;
 use ecco::faults::{FaultPlan, FaultScenario};
 use ecco::runtime::{Engine, Task};
+use ecco::serve::{Bind, ServeConfig, Server};
 use ecco::server::Policy;
 use ecco::util::cli::Args;
 
@@ -25,16 +28,19 @@ fn main() -> Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: ecco <run|exp|info> [options]\n\
+                "usage: ecco <run|exp|serve|info> [options]\n\
                  \n\
                  ecco run [--policy ecco|naive|ekya|recl] [--task det|seg]\n\
                  \x20        [--cams N] [--gpus G] [--bw MBPS] [--windows N] [--seed S]\n\
                  \x20        [--events run.jsonl] [--faults none|light|heavy] [--fault-seed S]\n\
                  ecco exp <fig2c|fig5|tab1|fig6det|fig6seg|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>\n\
                  \x20        [--out results] [--seed S] [--fast] [--threads N]\n\
+                 ecco serve [--listen 127.0.0.1:7433] [--unix PATH] [--runners N]\n\
+                 \x20        [--queue-cap N] [--sub-buffer N]\n\
                  ecco info"
             );
             bail!("missing or unknown subcommand");
@@ -43,14 +49,7 @@ fn main() -> Result<()> {
 }
 
 fn policy_by_name(name: &str) -> Result<Policy> {
-    Ok(match name {
-        "ecco" => Policy::ecco(),
-        "ecco+recl" => Policy::ecco_recl(),
-        "naive" => Policy::naive(),
-        "ekya" => Policy::ekya(),
-        "recl" => Policy::recl(),
-        _ => bail!("unknown policy {name:?}"),
-    })
+    Policy::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown policy {name:?}"))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -156,6 +155,38 @@ fn cmd_exp(args: &Args) -> Result<()> {
         out: exp::OutSink::stdout(),
     };
     exp::run_experiment(&engine, id, &ctx)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.reject_unknown(&["listen", "unix", "runners", "queue-cap", "sub-buffer"], &[])?;
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        runners: args.usize_or("runners", defaults.runners)?.max(1),
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?.max(1),
+        sub_buffer: args.usize_or("sub-buffer", defaults.sub_buffer)?.max(1),
+    };
+    let bind = match args.get("unix") {
+        #[cfg(unix)]
+        Some(path) => Bind::Unix(std::path::PathBuf::from(path)),
+        #[cfg(not(unix))]
+        Some(_) => bail!("--unix is only available on unix platforms"),
+        None => Bind::Tcp(args.str_or("listen", "127.0.0.1:7433")),
+    };
+    let engine = Engine::open_default()?;
+    let server = Server::bind(&engine, &bind, cfg)?;
+    match (&bind, server.local_addr()) {
+        (_, Some(addr)) => println!("# ecco serve listening on tcp://{addr}"),
+        (Bind::Tcp(addr), None) => println!("# ecco serve listening on tcp://{addr}"),
+        #[cfg(unix)]
+        (Bind::Unix(path), None) => {
+            println!("# ecco serve listening on unix://{}", path.display())
+        }
+    }
+    println!(
+        "# runners {}, queue cap {}, subscriber buffer {} frames",
+        cfg.runners, cfg.queue_cap, cfg.sub_buffer
+    );
+    server.run()
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

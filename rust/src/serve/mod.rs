@@ -1,0 +1,57 @@
+//! `ecco::serve` — a multi-tenant session host over plain sockets.
+//!
+//! `ecco serve` turns the library into a long-lived process: clients
+//! connect over TCP (or a unix-domain socket), submit [`RunSpec`]s as
+//! JSON, and stream typed run events back — many sessions multiplexed
+//! onto one shared [`Engine`] and a small runner pool. Std-only: the
+//! protocol is line-delimited JSON over a socket, readable with `nc`.
+//!
+//! # Protocol
+//!
+//! One JSON object per line, both directions (grammar in [`protocol`]):
+//!
+//! ```text
+//! → {"cmd":"submit","spec":{"task":"det","policy":"ecco","windows":8},"events":true}
+//! ← {"ok":true,"session":1}
+//! ← {"event":{"kind":"window_closed",...},"frame":"event","seq":42}
+//! ← {"frame":"end","state":"done"}
+//! ```
+//!
+//! `submit` admits a session (FIFO queue, bounded by `--queue-cap`;
+//! overflow is rejected, not buffered). `events` re-attaches a stream,
+//! `status`/`report` poll, `cancel` stops at the next window boundary,
+//! and `snapshot`/`resume` implement stop-and-restart (below). `ping`
+//! and `shutdown` do what they say; `shutdown` drains queued sessions,
+//! finishes running ones, then exits the server.
+//!
+//! # Back-pressure
+//!
+//! Producers never block on consumers. Each streaming connection owns a
+//! *bounded* frame buffer (`--sub-buffer`); while it is full, frames are
+//! counted instead of queued, and the count is delivered as
+//! `{"count":N,"frame":"dropped"}` as soon as the consumer catches up.
+//! A slow client therefore costs exactly one buffer of memory and loses
+//! only its own frames — never another session's, and never the run
+//! itself (the authoritative event record lives in the session, not the
+//! stream). The `end` frame always arrives.
+//!
+//! # Snapshot / resume
+//!
+//! A snapshot is `{"completed":k,"spec":<canonical wire spec>}` — no
+//! model weights, no allocator state. Runs are deterministic given the
+//! spec (at any thread count), so `resume` rebuilds the session and
+//! re-steps the first `k` windows with event forwarding suppressed,
+//! then continues live. Sequence numbers count the replayed events, so
+//! the resumed stream continues exactly where the snapshot's left off:
+//! the concatenation of both streams is byte-identical to an
+//! uninterrupted run (pinned by a test).
+//!
+//! [`RunSpec`]: crate::api::RunSpec
+//! [`Engine`]: crate::runtime::Engine
+
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use registry::{Registry, ServeConfig, SessState, Subscriber};
+pub use server::{Bind, Server};

@@ -1,0 +1,345 @@
+//! Line protocol: one JSON object per line, in both directions.
+//!
+//! Requests name a `cmd` plus command-specific fields; unknown fields are
+//! rejected (typo'd knobs fail loudly instead of silently running the
+//! default — same policy as the CLI and the wire spec). Responses always
+//! carry `"ok"`: `{"ok":true,...}` on success, `{"error":"...","ok":false}`
+//! otherwise. Streaming commands (`submit` with `"events":true`, `events`,
+//! `resume`) follow the response with event frames until an `end` frame.
+//!
+//! Grammar (one line each):
+//!
+//! ```text
+//! {"cmd":"submit","spec":{...},"events":true,"pause_after":4,"throttle_ms":0}
+//! {"cmd":"events","session":3,"throttle_ms":0}
+//! {"cmd":"status","session":3}
+//! {"cmd":"report","session":3}
+//! {"cmd":"cancel","session":3}
+//! {"cmd":"snapshot","session":3}
+//! {"cmd":"resume","snapshot":{"completed":4,"spec":{...}},"events":true}
+//! {"cmd":"ping"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! `spec` is the [`RunSpec`](crate::api::RunSpec) wire form
+//! ([`RunSpec::to_wire_json`](crate::api::RunSpec::to_wire_json)).
+//! `throttle_ms` paces the server's frame writes (testing aid: it makes a
+//! deliberately slow consumer deterministic instead of depending on OS
+//! socket buffering). `pause_after` schedules a snapshot after that many
+//! completed windows.
+
+use crate::util::json::{obj, s, Json};
+
+/// One parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit {
+        spec: Json,
+        events: bool,
+        pause_after: Option<usize>,
+        throttle_ms: u64,
+    },
+    Events {
+        session: u64,
+        throttle_ms: u64,
+    },
+    Status {
+        session: u64,
+    },
+    Report {
+        session: u64,
+    },
+    Cancel {
+        session: u64,
+    },
+    Snapshot {
+        session: u64,
+    },
+    Resume {
+        snapshot: Json,
+        events: bool,
+        pause_after: Option<usize>,
+        throttle_ms: u64,
+    },
+    Ping,
+    Shutdown,
+}
+
+/// Parse one request line. Every failure is a client error string destined
+/// for an `{"ok":false}` response — the connection survives.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| format!("malformed json: {e}"))?;
+    let Json::Obj(fields) = &j else {
+        return Err("request must be a json object".to_string());
+    };
+    let cmd = match fields.get("cmd") {
+        Some(Json::Str(c)) => c.as_str(),
+        Some(_) => return Err("cmd must be a string".to_string()),
+        None => return Err("missing cmd".to_string()),
+    };
+    let allowed: &[&str] = match cmd {
+        "submit" => &["cmd", "spec", "events", "pause_after", "throttle_ms"],
+        "events" => &["cmd", "session", "throttle_ms"],
+        "status" | "report" | "cancel" | "snapshot" => &["cmd", "session"],
+        "resume" => &["cmd", "snapshot", "events", "pause_after", "throttle_ms"],
+        "ping" | "shutdown" => &["cmd"],
+        other => return Err(format!("unknown cmd {other:?}")),
+    };
+    for key in fields.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(format!("unknown field {key:?} for cmd {cmd:?}"));
+        }
+    }
+    match cmd {
+        "submit" => Ok(Request::Submit {
+            spec: fields
+                .get("spec")
+                .cloned()
+                .ok_or_else(|| "submit requires a spec".to_string())?,
+            events: get_bool(fields, "events")?.unwrap_or(false),
+            pause_after: get_usize(fields, "pause_after")?,
+            throttle_ms: get_u64(fields, "throttle_ms")?.unwrap_or(0),
+        }),
+        "events" => Ok(Request::Events {
+            session: req_session(fields)?,
+            throttle_ms: get_u64(fields, "throttle_ms")?.unwrap_or(0),
+        }),
+        "status" => Ok(Request::Status {
+            session: req_session(fields)?,
+        }),
+        "report" => Ok(Request::Report {
+            session: req_session(fields)?,
+        }),
+        "cancel" => Ok(Request::Cancel {
+            session: req_session(fields)?,
+        }),
+        "snapshot" => Ok(Request::Snapshot {
+            session: req_session(fields)?,
+        }),
+        "resume" => Ok(Request::Resume {
+            snapshot: fields
+                .get("snapshot")
+                .cloned()
+                .ok_or_else(|| "resume requires a snapshot".to_string())?,
+            events: get_bool(fields, "events")?.unwrap_or(false),
+            pause_after: get_usize(fields, "pause_after")?,
+            throttle_ms: get_u64(fields, "throttle_ms")?.unwrap_or(0),
+        }),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        _ => unreachable!("cmd validated above"),
+    }
+}
+
+/// Validate a snapshot object (`{"completed":k,"spec":{...}}`, exactly
+/// those keys) into its parts. The spec itself is validated separately by
+/// [`RunSpec::from_wire_json`](crate::api::RunSpec::from_wire_json).
+pub fn parse_snapshot(j: &Json) -> Result<(Json, usize), String> {
+    let Json::Obj(fields) = j else {
+        return Err("snapshot must be a json object".to_string());
+    };
+    for key in fields.keys() {
+        if key != "completed" && key != "spec" {
+            return Err(format!("unknown snapshot field {key:?}"));
+        }
+    }
+    let completed = get_usize(fields, "completed")?
+        .ok_or_else(|| "snapshot missing completed".to_string())?;
+    let spec = fields
+        .get("spec")
+        .cloned()
+        .ok_or_else(|| "snapshot missing spec".to_string())?;
+    Ok((spec, completed))
+}
+
+/// `{"ok":true,...extra}` — success response.
+pub fn ok_response(extra: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(extra);
+    obj(pairs).to_string_compact()
+}
+
+/// `{"error":"...","ok":false}` — failure response; connection stays open.
+pub fn err_response(msg: &str) -> String {
+    obj(vec![("error", s(msg)), ("ok", Json::Bool(false))]).to_string_compact()
+}
+
+type Fields = std::collections::BTreeMap<String, Json>;
+
+fn req_session(fields: &Fields) -> Result<u64, String> {
+    get_u64(fields, "session")?.ok_or_else(|| "missing session".to_string())
+}
+
+fn get_u64(fields: &Fields, key: &str) -> Result<Option<u64>, String> {
+    match fields.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 => {
+            Ok(Some(*n as u64))
+        }
+        Some(_) => Err(format!("{key} must be a non-negative integer")),
+    }
+}
+
+fn get_usize(fields: &Fields, key: &str) -> Result<Option<usize>, String> {
+    Ok(get_u64(fields, key)?.map(|n| n as usize))
+}
+
+fn get_bool(fields: &Fields, key: &str) -> Result<Option<bool>, String> {
+    match fields.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(format!("{key} must be a boolean")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn parses_every_command() {
+        let req = parse_request(
+            r#"{"cmd":"submit","spec":{"task":"det"},"events":true,"pause_after":2,"throttle_ms":5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            req,
+            Request::Submit {
+                spec: obj(vec![("task", s("det"))]),
+                events: true,
+                pause_after: Some(2),
+                throttle_ms: 5,
+            }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"events","session":3}"#).unwrap(),
+            Request::Events {
+                session: 3,
+                throttle_ms: 0
+            }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"status","session":1}"#).unwrap(),
+            Request::Status { session: 1 }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"report","session":1}"#).unwrap(),
+            Request::Report { session: 1 }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"cancel","session":9}"#).unwrap(),
+            Request::Cancel { session: 9 }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"snapshot","session":9}"#).unwrap(),
+            Request::Snapshot { session: 9 }
+        );
+        let resume = parse_request(
+            r#"{"cmd":"resume","snapshot":{"completed":4,"spec":{"task":"det"}}}"#,
+        )
+        .unwrap();
+        match resume {
+            Request::Resume {
+                snapshot,
+                events,
+                pause_after,
+                throttle_ms,
+            } => {
+                assert!(!events);
+                assert_eq!(pause_after, None);
+                assert_eq!(throttle_ms, 0);
+                let (spec, completed) = parse_snapshot(&snapshot).unwrap();
+                assert_eq!(completed, 4);
+                assert_eq!(spec.to_string_compact(), r#"{"task":"det"}"#);
+            }
+            other => panic!("expected resume, got {other:?}"),
+        }
+        assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(
+            parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_useful_errors() {
+        for (line, needle) in [
+            ("not json", "malformed json"),
+            ("[1,2]", "must be a json object"),
+            (r#"{"spec":{}}"#, "missing cmd"),
+            (r#"{"cmd":17}"#, "cmd must be a string"),
+            (r#"{"cmd":"launch"}"#, "unknown cmd"),
+            (r#"{"cmd":"ping","extra":1}"#, "unknown field"),
+            (r#"{"cmd":"submit"}"#, "requires a spec"),
+            (r#"{"cmd":"submit","spec":{},"events":"yes"}"#, "boolean"),
+            (r#"{"cmd":"status"}"#, "missing session"),
+            (r#"{"cmd":"status","session":-1}"#, "non-negative integer"),
+            (r#"{"cmd":"status","session":1.5}"#, "non-negative integer"),
+            (r#"{"cmd":"resume"}"#, "requires a snapshot"),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(needle), "{line} -> {err}");
+        }
+        for (snap, needle) in [
+            (s("x"), "must be a json object"),
+            (obj(vec![("completed", num(1.0))]), "missing spec"),
+            (obj(vec![("spec", obj(vec![]))]), "missing completed"),
+            (
+                obj(vec![
+                    ("completed", num(1.0)),
+                    ("spec", obj(vec![])),
+                    ("zzz", num(0.0)),
+                ]),
+                "unknown snapshot field",
+            ),
+        ] {
+            let err = parse_snapshot(&snap).unwrap_err();
+            assert!(err.contains(needle), "{needle} -> {err}");
+        }
+    }
+
+    #[test]
+    fn responses_render_compact_with_ok_marker() {
+        assert_eq!(ok_response(vec![]), r#"{"ok":true}"#);
+        assert_eq!(
+            ok_response(vec![("session", num(4.0))]),
+            r#"{"ok":true,"session":4}"#
+        );
+        assert_eq!(
+            err_response("bad"),
+            r#"{"error":"bad","ok":false}"#
+        );
+    }
+
+    #[test]
+    fn parser_never_panics_on_garbage_lines() {
+        let mut rng = Pcg32::new(0x5e21e, 17);
+        let keys = [
+            "cmd", "spec", "session", "events", "snapshot", "pause_after", "throttle_ms", "zz",
+        ];
+        let cmds = ["submit", "events", "status", "resume", "ping", "nope"];
+        for _ in 0..300 {
+            let mut pairs = Vec::new();
+            for &key in &keys {
+                if rng.chance(0.5) {
+                    let val = match rng.below(4) {
+                        0 => num(rng.f64() * 10.0 - 2.0),
+                        1 => s(cmds[rng.index(cmds.len())]),
+                        2 => Json::Bool(rng.chance(0.5)),
+                        _ => obj(vec![("completed", num(rng.f64() * 4.0))]),
+                    };
+                    pairs.push((key, val));
+                }
+            }
+            let line = obj(pairs).to_string_compact();
+            let _ = parse_request(&line); // must not panic
+        }
+        // Truncated lines and raw bytes must not panic either.
+        let full = r#"{"cmd":"submit","spec":{"task":"det"}}"#;
+        for cut in 0..full.len() {
+            let _ = parse_request(&full[..cut]);
+        }
+    }
+}

@@ -1,0 +1,624 @@
+//! Session registry: the shared state behind the serve host.
+//!
+//! One [`Registry`] multiplexes every client session onto the runner pool.
+//! Sessions move through a small state machine
+//! (`queued → running → done | cancelled | snapshotted | failed`), runner
+//! threads pull work FIFO off the admission queue with [`Registry::next_job`],
+//! and each streaming client holds a [`Subscriber`] — a *bounded* frame
+//! buffer, so a slow consumer can never wedge a runner or grow memory
+//! without limit. When the buffer is full, frames are counted instead of
+//! queued, and the count is delivered as a `{"frame":"dropped"}` marker as
+//! soon as the consumer catches up.
+//!
+//! All frames are pre-rendered compact JSON strings. Event frames carry no
+//! session id — `{"event":{...},"frame":"event","seq":N}` — which keeps the
+//! stream of an interrupted-then-resumed session byte-comparable to an
+//! uninterrupted run (see the snapshot test in `tests/serve.rs`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::Event;
+use crate::util::json::{num, obj, s, Json};
+
+/// Tunables for the serve host. `Copy` so the CLI can thread it around.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Runner threads sharing the engine (concurrent sessions).
+    pub runners: usize,
+    /// Max sessions waiting in the admission queue before submits are
+    /// rejected with an error response (back-pressure at the front door).
+    pub queue_cap: usize,
+    /// Per-subscriber frame buffer capacity; overflow is counted and
+    /// reported via a `dropped` marker frame, never buffered.
+    pub sub_buffer: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            runners: 2,
+            queue_cap: 256,
+            sub_buffer: 256,
+        }
+    }
+}
+
+/// Lifecycle of one submitted session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessState {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+    Snapshotted,
+    Failed,
+}
+
+impl SessState {
+    pub fn name(self) -> &'static str {
+        match self {
+            SessState::Queued => "queued",
+            SessState::Running => "running",
+            SessState::Done => "done",
+            SessState::Cancelled => "cancelled",
+            SessState::Snapshotted => "snapshotted",
+            SessState::Failed => "failed",
+        }
+    }
+
+    /// Terminal states deliver an `end` frame and accept no further work.
+    pub fn terminal(self) -> bool {
+        !matches!(self, SessState::Queued | SessState::Running)
+    }
+}
+
+/// What a runner should do after finishing a window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    Continue,
+    Cancel,
+    Snapshot,
+}
+
+#[derive(Default)]
+struct SubState {
+    buf: VecDeque<String>,
+    /// Frames counted (not queued) while the buffer was full.
+    dropped: u64,
+    done: bool,
+}
+
+/// A bounded frame queue feeding one streaming connection. Producers
+/// (runner threads, via the registry) never block on it; the consumer
+/// blocks in [`Subscriber::pop`] until a frame or end-of-stream arrives.
+pub struct Subscriber {
+    state: Mutex<SubState>,
+    cv: Condvar,
+}
+
+impl Subscriber {
+    fn new() -> Arc<Subscriber> {
+        Arc::new(Subscriber {
+            state: Mutex::new(SubState::default()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Queue a frame if there is room; otherwise count it as dropped. A
+    /// pending drop count is flushed as a marker frame *before* the next
+    /// queued frame, so the consumer always learns how many it missed and
+    /// where the gap was.
+    fn push(&self, frame: &str, cap: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.done {
+            return;
+        }
+        if st.buf.len() >= cap.max(1) {
+            st.dropped += 1;
+            return;
+        }
+        if st.dropped > 0 {
+            let marker = dropped_frame(st.dropped);
+            st.dropped = 0;
+            st.buf.push_back(marker);
+        }
+        st.buf.push_back(frame.to_string());
+        self.cv.notify_one();
+    }
+
+    /// Queue the final frame unconditionally (end frames bypass the cap)
+    /// and close the stream. Any pending drop count is flushed first.
+    fn push_final(&self, frame: &str) {
+        let mut st = self.state.lock().unwrap();
+        if st.done {
+            return;
+        }
+        if st.dropped > 0 {
+            let marker = dropped_frame(st.dropped);
+            st.dropped = 0;
+            st.buf.push_back(marker);
+        }
+        st.buf.push_back(frame.to_string());
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop; `None` once the stream is closed and drained.
+    pub fn pop(&self) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(frame) = st.buf.pop_front() {
+                return Some(frame);
+            }
+            if st.done {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn dropped_frame(count: u64) -> String {
+    obj(vec![("count", num(count as f64)), ("frame", s("dropped"))]).to_string_compact()
+}
+
+fn event_frame(event: &Event, seq: u64) -> String {
+    obj(vec![
+        ("event", event.to_json()),
+        ("frame", s("event")),
+        ("seq", num(seq as f64)),
+    ])
+    .to_string_compact()
+}
+
+fn end_frame(state: SessState, error: Option<&str>) -> String {
+    let mut pairs = vec![("frame", s("end")), ("state", s(state.name()))];
+    if let Some(e) = error {
+        pairs.push(("error", s(e)));
+    }
+    obj(pairs).to_string_compact()
+}
+
+struct Entry {
+    /// Canonical wire spec (the parsed spec re-exported, *not* the client's
+    /// raw text) — cloned into snapshots so resume replays the exact run.
+    spec: Json,
+    windows: usize,
+    replay: usize,
+    state: SessState,
+    windows_done: usize,
+    /// Events published so far — counts replayed (suppressed) events too,
+    /// so a resumed stream continues seq-contiguously.
+    seq: u64,
+    /// Global start ordinal (admission order proof for the fairness test).
+    started: Option<u64>,
+    pause_after: Option<usize>,
+    cancel: bool,
+    snap_req: bool,
+    snapshot: Option<Json>,
+    report: Option<Json>,
+    error: Option<String>,
+    subs: Vec<Arc<Subscriber>>,
+}
+
+struct Inner {
+    next_id: u64,
+    next_start: u64,
+    accepting: bool,
+    sessions: BTreeMap<u64, Entry>,
+    queue: VecDeque<u64>,
+}
+
+/// The shared session table. One lock guards everything; the condvar wakes
+/// idle runners (new job), snapshot waiters (state change), and shutdown.
+/// Lock ordering: registry inner before any subscriber lock, never the
+/// reverse.
+pub struct Registry {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    cfg: ServeConfig,
+}
+
+impl Registry {
+    pub fn new(cfg: ServeConfig) -> Registry {
+        Registry {
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                next_start: 0,
+                accepting: true,
+                sessions: BTreeMap::new(),
+                queue: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            cfg,
+        }
+    }
+
+    /// Admit a session (optionally with an attached subscriber, under the
+    /// same lock — no submit/subscribe race). `replay` > 0 marks a resume:
+    /// that many windows re-run with event forwarding suppressed.
+    #[allow(clippy::type_complexity)]
+    pub fn submit(
+        &self,
+        spec: Json,
+        windows: usize,
+        replay: usize,
+        pause_after: Option<usize>,
+        subscribe: bool,
+    ) -> Result<(u64, Option<Arc<Subscriber>>), String> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.accepting {
+            return Err("server is shutting down".to_string());
+        }
+        if inner.queue.len() >= self.cfg.queue_cap {
+            return Err(format!(
+                "admission queue full ({} sessions queued)",
+                inner.queue.len()
+            ));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let sub = subscribe.then(Subscriber::new);
+        inner.sessions.insert(
+            id,
+            Entry {
+                spec,
+                windows,
+                replay,
+                state: SessState::Queued,
+                windows_done: 0,
+                seq: 0,
+                started: None,
+                pause_after,
+                cancel: false,
+                snap_req: false,
+                snapshot: None,
+                report: None,
+                error: None,
+                subs: sub.iter().cloned().collect(),
+            },
+        );
+        inner.queue.push_back(id);
+        self.cv.notify_all();
+        Ok((id, sub))
+    }
+
+    /// Attach a subscriber to an existing session. On a terminal session
+    /// the end frame is delivered immediately.
+    pub fn subscribe(&self, id: u64) -> Result<Arc<Subscriber>, String> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| format!("unknown session {id}"))?;
+        let sub = Subscriber::new();
+        if entry.state.terminal() {
+            sub.push_final(&end_frame(entry.state, entry.error.as_deref()));
+        } else {
+            entry.subs.push(Arc::clone(&sub));
+        }
+        Ok(sub)
+    }
+
+    /// Runner loop: block for the next queued session id, FIFO. `None`
+    /// once the registry stops accepting and the queue is drained —
+    /// already-queued sessions still run during shutdown.
+    pub fn next_job(&self) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            while let Some(id) = inner.queue.pop_front() {
+                // Skip entries cancelled or snapshotted while queued.
+                if inner.sessions.get(&id).map(|e| e.state) == Some(SessState::Queued) {
+                    return Some(id);
+                }
+            }
+            if !inner.accepting {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Transition a claimed job to running; returns its canonical spec,
+    /// horizon, and replay depth. `None` if it was cancelled in between.
+    pub fn begin(&self, id: u64) -> Option<(Json, usize, usize)> {
+        let mut inner = self.inner.lock().unwrap();
+        let start = inner.next_start;
+        let entry = inner.sessions.get_mut(&id)?;
+        if entry.state != SessState::Queued {
+            return None;
+        }
+        entry.state = SessState::Running;
+        entry.windows_done = entry.replay;
+        entry.started = Some(start);
+        inner.next_start += 1;
+        let entry = &inner.sessions[&id];
+        Some((entry.spec.clone(), entry.windows, entry.replay))
+    }
+
+    /// Count an event against the session's stream and, when `forward` is
+    /// set (false during resume replay), fan the rendered frame out to all
+    /// subscribers. Producers never block: full buffers count drops.
+    pub fn publish_event(&self, id: u64, event: &Event, forward: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(entry) = inner.sessions.get_mut(&id) else {
+            return;
+        };
+        let seq = entry.seq;
+        entry.seq += 1;
+        if forward && !entry.subs.is_empty() {
+            let frame = event_frame(event, seq);
+            for sub in &entry.subs {
+                sub.push(&frame, self.cfg.sub_buffer);
+            }
+        }
+    }
+
+    /// Window boundary: record progress and tell the runner whether to
+    /// keep going, stop for a cancel, or stop for a snapshot (requested
+    /// explicitly or scheduled via `pause_after`).
+    pub fn checkpoint(&self, id: u64, windows_done: usize) -> Control {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(entry) = inner.sessions.get_mut(&id) else {
+            return Control::Cancel;
+        };
+        entry.windows_done = windows_done;
+        if entry.cancel {
+            entry.state = SessState::Cancelled;
+            let frame = end_frame(SessState::Cancelled, None);
+            for sub in entry.subs.drain(..) {
+                sub.push_final(&frame);
+            }
+            self.cv.notify_all();
+            return Control::Cancel;
+        }
+        if entry.snap_req || entry.pause_after == Some(windows_done) {
+            entry.snapshot = Some(obj(vec![
+                ("completed", num(windows_done as f64)),
+                ("spec", entry.spec.clone()),
+            ]));
+            entry.snap_req = false;
+            entry.state = SessState::Snapshotted;
+            let frame = end_frame(SessState::Snapshotted, None);
+            for sub in entry.subs.drain(..) {
+                sub.push_final(&frame);
+            }
+            self.cv.notify_all();
+            return Control::Snapshot;
+        }
+        Control::Continue
+    }
+
+    /// Mark a session complete and store its report.
+    pub fn finish(&self, id: u64, report: Json) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(entry) = inner.sessions.get_mut(&id) else {
+            return;
+        };
+        entry.state = SessState::Done;
+        entry.windows_done = entry.windows;
+        entry.report = Some(report);
+        let frame = end_frame(SessState::Done, None);
+        for sub in entry.subs.drain(..) {
+            sub.push_final(&frame);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark a session failed; the error rides the end frame and `report`.
+    pub fn fail(&self, id: u64, error: String) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(entry) = inner.sessions.get_mut(&id) else {
+            return;
+        };
+        entry.state = SessState::Failed;
+        let frame = end_frame(SessState::Failed, Some(&error));
+        entry.error = Some(error);
+        for sub in entry.subs.drain(..) {
+            sub.push_final(&frame);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Cancel: queued sessions die immediately, running ones at the next
+    /// window boundary. Returns the resulting state name.
+    pub fn cancel(&self, id: u64) -> Result<&'static str, String> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| format!("unknown session {id}"))?;
+        match entry.state {
+            SessState::Queued => {
+                entry.state = SessState::Cancelled;
+                let frame = end_frame(SessState::Cancelled, None);
+                for sub in entry.subs.drain(..) {
+                    sub.push_final(&frame);
+                }
+                self.cv.notify_all();
+                Ok("cancelled")
+            }
+            SessState::Running => {
+                entry.cancel = true;
+                Ok("cancelling")
+            }
+            state => Err(format!("session {id} already {}", state.name())),
+        }
+    }
+
+    /// Snapshot a session: queued sessions snapshot at zero completed
+    /// windows immediately; running ones at the next window boundary
+    /// (this call blocks until the runner gets there). The returned JSON
+    /// is exactly what `resume` accepts.
+    pub fn request_snapshot(&self, id: u64) -> Result<Json, String> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let entry = inner
+                .sessions
+                .get_mut(&id)
+                .ok_or_else(|| format!("unknown session {id}"))?;
+            match entry.state {
+                SessState::Queued => {
+                    let snap = obj(vec![
+                        ("completed", num(0.0)),
+                        ("spec", entry.spec.clone()),
+                    ]);
+                    entry.snapshot = Some(snap.clone());
+                    entry.state = SessState::Snapshotted;
+                    let frame = end_frame(SessState::Snapshotted, None);
+                    for sub in entry.subs.drain(..) {
+                        sub.push_final(&frame);
+                    }
+                    self.cv.notify_all();
+                    return Ok(snap);
+                }
+                SessState::Running => {
+                    entry.snap_req = true;
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                SessState::Snapshotted => {
+                    return entry
+                        .snapshot
+                        .clone()
+                        .ok_or_else(|| format!("session {id} snapshot missing"));
+                }
+                state => return Err(format!("session {id} already {}", state.name())),
+            }
+        }
+    }
+
+    /// Point-in-time status object for one session.
+    pub fn status(&self, id: u64) -> Result<Json, String> {
+        let inner = self.inner.lock().unwrap();
+        let entry = inner
+            .sessions
+            .get(&id)
+            .ok_or_else(|| format!("unknown session {id}"))?;
+        Ok(obj(vec![
+            ("session", num(id as f64)),
+            (
+                "started",
+                entry.started.map(|n| num(n as f64)).unwrap_or(Json::Null),
+            ),
+            ("seq", num(entry.seq as f64)),
+            ("state", s(entry.state.name())),
+            ("windows", num(entry.windows as f64)),
+            ("windows_done", num(entry.windows_done as f64)),
+        ]))
+    }
+
+    /// Final run report (available once the session is done).
+    pub fn report(&self, id: u64) -> Result<Json, String> {
+        let inner = self.inner.lock().unwrap();
+        let entry = inner
+            .sessions
+            .get(&id)
+            .ok_or_else(|| format!("unknown session {id}"))?;
+        match (&entry.report, &entry.error) {
+            (Some(report), _) => Ok(report.clone()),
+            (None, Some(error)) => Err(format!("session {id} failed: {error}")),
+            (None, None) => Err(format!(
+                "session {id} has no report yet (state {})",
+                entry.state.name()
+            )),
+        }
+    }
+
+    /// Stop admitting sessions and wake every waiter. Queued sessions
+    /// still drain; running ones finish.
+    pub fn shutdown(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.accepting = false;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_stub() -> Json {
+        obj(vec![("task", s("det"))])
+    }
+
+    #[test]
+    fn bounded_buffer_counts_drops_and_flushes_a_marker() {
+        let sub = Subscriber::new();
+        for i in 0..5 {
+            sub.push(&format!("f{i}"), 2);
+        }
+        sub.push_final("end");
+        assert_eq!(sub.pop().as_deref(), Some("f0"));
+        assert_eq!(sub.pop().as_deref(), Some("f1"));
+        assert_eq!(
+            sub.pop().as_deref(),
+            Some(r#"{"count":3,"frame":"dropped"}"#)
+        );
+        assert_eq!(sub.pop().as_deref(), Some("end"));
+        assert_eq!(sub.pop(), None);
+        // Closed stream ignores further pushes.
+        sub.push("late", 2);
+        assert_eq!(sub.pop(), None);
+    }
+
+    #[test]
+    fn queue_is_fifo_and_skips_cancelled_entries() {
+        let reg = Registry::new(ServeConfig::default());
+        let (a, _) = reg.submit(spec_stub(), 4, 0, None, false).unwrap();
+        let (b, _) = reg.submit(spec_stub(), 4, 0, None, false).unwrap();
+        let (c, _) = reg.submit(spec_stub(), 4, 0, None, false).unwrap();
+        assert_eq!(reg.cancel(b).unwrap(), "cancelled");
+        assert_eq!(reg.next_job(), Some(a));
+        assert!(reg.begin(a).is_some());
+        assert_eq!(reg.next_job(), Some(c));
+        reg.shutdown();
+        assert_eq!(reg.next_job(), None);
+    }
+
+    #[test]
+    fn admission_queue_cap_rejects_excess_submits() {
+        let cfg = ServeConfig {
+            queue_cap: 2,
+            ..ServeConfig::default()
+        };
+        let reg = Registry::new(cfg);
+        reg.submit(spec_stub(), 1, 0, None, false).unwrap();
+        reg.submit(spec_stub(), 1, 0, None, false).unwrap();
+        let err = reg.submit(spec_stub(), 1, 0, None, false).unwrap_err();
+        assert!(err.contains("admission queue full"), "{err}");
+    }
+
+    #[test]
+    fn queued_session_snapshots_immediately_at_zero() {
+        let reg = Registry::new(ServeConfig::default());
+        let (id, sub) = reg.submit(spec_stub(), 6, 0, None, true).unwrap();
+        let snap = reg.request_snapshot(id).unwrap();
+        let completed = snap.get("completed").unwrap().as_usize().unwrap();
+        assert_eq!(completed, 0);
+        assert_eq!(
+            snap.get("spec").unwrap().to_string_compact(),
+            spec_stub().to_string_compact()
+        );
+        // The subscriber sees the snapshotted end frame, and the queue
+        // entry no longer reaches runners.
+        let frame = sub.unwrap().pop().unwrap();
+        assert!(frame.contains(r#""state":"snapshotted""#), "{frame}");
+        reg.shutdown();
+        assert_eq!(reg.next_job(), None);
+    }
+
+    #[test]
+    fn terminal_subscribe_gets_an_immediate_end_frame() {
+        let reg = Registry::new(ServeConfig::default());
+        let (id, _) = reg.submit(spec_stub(), 1, 0, None, false).unwrap();
+        assert_eq!(reg.next_job(), Some(id));
+        reg.begin(id).unwrap();
+        reg.finish(id, obj(vec![("final", num(0.5))]));
+        let sub = reg.subscribe(id).unwrap();
+        let frame = sub.pop().unwrap();
+        assert_eq!(frame, r#"{"frame":"end","state":"done"}"#);
+        assert_eq!(sub.pop(), None);
+        assert!(reg.report(id).is_ok());
+    }
+}

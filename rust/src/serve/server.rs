@@ -1,0 +1,453 @@
+//! The socket host: accept loop, per-connection handlers, runner pool.
+//!
+//! Everything runs inside one [`std::thread::scope`]: `runners` worker
+//! threads pull sessions FIFO off the [`Registry`] and drive them over the
+//! shared [`Engine`], while the acceptor spawns one handler thread per
+//! connection. Listeners are non-blocking (polled against the stop flag);
+//! accepted streams are blocking with a short read timeout so handlers
+//! notice shutdown promptly. `shutdown` stops admissions, drains the queue,
+//! and lets in-flight sessions finish — then every thread unwinds and
+//! `run()` returns.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::api::{Event, EventSink, RunSpec, Session};
+use crate::runtime::Engine;
+use crate::util::json::{num, Json};
+use crate::util::pool;
+
+use super::protocol::{
+    err_response, ok_response, parse_request, parse_snapshot, Request,
+};
+use super::registry::{Control, Registry, ServeConfig, Subscriber};
+
+/// Poll interval for the non-blocking accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Read timeout on accepted streams — how fast handlers see the stop flag.
+const READ_TIMEOUT: Duration = Duration::from_millis(250);
+/// Write timeout — a consumer that stalls this long loses its connection.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Where to listen.
+#[derive(Debug, Clone)]
+pub enum Bind {
+    /// TCP address, e.g. `127.0.0.1:7433` (port 0 picks a free port).
+    Tcp(String),
+    /// Unix-domain socket path (stale files are replaced).
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Accepted streams are blocking with a short read timeout (so the
+    /// handler can poll the stop flag) and a long write timeout (so a
+    /// wedged consumer is eventually disconnected, not waited on forever).
+    fn set_timeouts(&self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                s.set_write_timeout(Some(WRITE_TIMEOUT))
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                s.set_write_timeout(Some(WRITE_TIMEOUT))
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The serve host. Bind, then [`Server::run`] until a `shutdown` request.
+pub struct Server<'e> {
+    engine: &'e Engine,
+    listener: Listener,
+    registry: Arc<Registry>,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl<'e> Server<'e> {
+    pub fn bind(engine: &'e Engine, bind: &Bind, cfg: ServeConfig) -> Result<Server<'e>> {
+        let listener = match bind {
+            Bind::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("binding tcp listener on {addr}"))?;
+                l.set_nonblocking(true)?;
+                Listener::Tcp(l)
+            }
+            #[cfg(unix)]
+            Bind::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {}", path.display()))?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding unix listener on {}", path.display()))?;
+                l.set_nonblocking(true)?;
+                Listener::Unix(l)
+            }
+        };
+        Ok(Server {
+            engine,
+            listener,
+            registry: Arc::new(Registry::new(cfg)),
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Bound TCP address (None for unix-domain listeners). Lets tests bind
+    /// port 0 and discover the real port.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        match &self.listener {
+            Listener::Tcp(l) => l.local_addr().ok(),
+            #[cfg(unix)]
+            Listener::Unix(_) => None,
+        }
+    }
+
+    /// Serve until a client sends `shutdown`. Queued sessions drain and
+    /// running ones finish before this returns.
+    pub fn run(self) -> Result<()> {
+        let Server {
+            engine,
+            listener,
+            registry,
+            cfg,
+            stop,
+        } = self;
+        thread::scope(|scope| {
+            for _ in 0..cfg.runners.max(1) {
+                let registry = Arc::clone(&registry);
+                scope.spawn(move || runner_loop(engine, &registry, cfg));
+            }
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok(stream) => {
+                        let registry = Arc::clone(&registry);
+                        let stop = Arc::clone(&stop);
+                        scope.spawn(move || handle_conn(stream, &registry, &stop));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        crate::util::logger::log(
+                            crate::util::logger::Level::Warn,
+                            module_path!(),
+                            &format!("accept failed: {e}"),
+                        );
+                        thread::sleep(ACCEPT_POLL);
+                    }
+                }
+            }
+            // Acceptor is done; make sure runners unblock and drain.
+            registry.shutdown();
+        });
+        Ok(())
+    }
+}
+
+/// Forwards session events into the registry. `forward` is false while a
+/// resumed session replays already-completed windows — the events still
+/// count (seq stays contiguous with the original stream) but no frames go
+/// out.
+struct RegistrySink {
+    registry: Arc<Registry>,
+    id: u64,
+    forward: Arc<AtomicBool>,
+}
+
+impl EventSink for RegistrySink {
+    fn on_event(&mut self, event: &Event) {
+        self.registry
+            .publish_event(self.id, event, self.forward.load(Ordering::Relaxed));
+    }
+}
+
+fn runner_loop(engine: &Engine, registry: &Arc<Registry>, cfg: ServeConfig) {
+    while let Some(id) = registry.next_job() {
+        let Some((spec, windows, replay)) = registry.begin(id) else {
+            continue;
+        };
+        if let Err(e) = run_session(engine, registry, cfg, id, &spec, windows, replay) {
+            registry.fail(id, format!("{e:#}"));
+        }
+    }
+}
+
+/// Drive one session window-by-window, checking for cancel/snapshot at
+/// each boundary. The session is rebuilt from its canonical wire spec, so
+/// a resumed run replays deterministically into the same state.
+fn run_session(
+    engine: &Engine,
+    registry: &Arc<Registry>,
+    cfg: ServeConfig,
+    id: u64,
+    spec_json: &Json,
+    windows: usize,
+    replay: usize,
+) -> Result<()> {
+    let spec = RunSpec::from_wire_json(spec_json)?;
+    // Split eval workers across the runner pool the same way run_fleet
+    // does across its fleet threads.
+    let spec = spec.eval_threads_floor(pool::per_run_threads(cfg.runners, cfg.runners));
+    let forward = Arc::new(AtomicBool::new(replay == 0));
+    let mut session = Session::new(engine, spec)?;
+    session.add_sink(Box::new(RegistrySink {
+        registry: Arc::clone(registry),
+        id,
+        forward: Arc::clone(&forward),
+    }));
+    for w in 0..windows {
+        if w == replay {
+            forward.store(true, Ordering::Relaxed);
+        }
+        session.step_window()?;
+        if w + 1 < windows {
+            match registry.checkpoint(id, w + 1) {
+                Control::Continue => {}
+                Control::Cancel | Control::Snapshot => return Ok(()),
+            }
+        }
+    }
+    registry.finish(id, session.into_report().to_json());
+    Ok(())
+}
+
+/// Read one line, tolerating read timeouts (poll the stop flag) and
+/// partial reads. `None` on EOF, hard error, or shutdown.
+///
+/// `BufReader::read_line` is unusable here: with a read timeout it can
+/// time out mid-line and *discard* the partial line. This keeps its own
+/// pending buffer instead.
+fn read_line(stream: &mut Stream, pending: &mut Vec<u8>, stop: &AtomicBool) -> Option<String> {
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(pos) = pending.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = pending.drain(..=pos).collect();
+            return Some(String::from_utf8_lossy(&line[..pos]).into_owned());
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return None,
+            Ok(n) => pending.extend_from_slice(&buf[..n]),
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if stop.load(Ordering::Relaxed) {
+                    return None;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return None,
+        }
+    }
+}
+
+/// What a dispatched request asks the connection loop to do.
+enum Outcome {
+    /// Write one response line, keep reading requests.
+    Reply(String),
+    /// Write the response, then stream frames until the session ends.
+    /// The throttle paces writes (deliberate slow-consumer testing).
+    Stream(String, Arc<Subscriber>, u64),
+    /// Write the response, then stop the whole server.
+    Shutdown(String),
+}
+
+fn handle_conn(mut stream: Stream, registry: &Arc<Registry>, stop: &AtomicBool) {
+    if stream.set_timeouts().is_err() {
+        return;
+    }
+    let mut pending = Vec::new();
+    while let Some(line) = read_line(&mut stream, &mut pending, stop) {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match dispatch(line, registry) {
+            Outcome::Reply(resp) => {
+                if writeln!(stream, "{resp}").is_err() {
+                    return;
+                }
+            }
+            Outcome::Stream(resp, sub, throttle_ms) => {
+                if writeln!(stream, "{resp}").is_err() {
+                    return;
+                }
+                while let Some(frame) = sub.pop() {
+                    if throttle_ms > 0 {
+                        thread::sleep(Duration::from_millis(throttle_ms));
+                    }
+                    if writeln!(stream, "{frame}").is_err() {
+                        return;
+                    }
+                }
+            }
+            Outcome::Shutdown(resp) => {
+                let _ = writeln!(stream, "{resp}");
+                registry.shutdown();
+                stop.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+fn dispatch(line: &str, registry: &Arc<Registry>) -> Outcome {
+    let req = match parse_request(line) {
+        Ok(req) => req,
+        Err(e) => return Outcome::Reply(err_response(&e)),
+    };
+    match req {
+        Request::Ping => Outcome::Reply(ok_response(vec![])),
+        Request::Shutdown => Outcome::Shutdown(ok_response(vec![])),
+        Request::Status { session } => Outcome::Reply(result_response(registry.status(session))),
+        Request::Report { session } => Outcome::Reply(result_response(registry.report(session))),
+        Request::Cancel { session } => Outcome::Reply(match registry.cancel(session) {
+            Ok(state) => ok_response(vec![("state", crate::util::json::s(state))]),
+            Err(e) => err_response(&e),
+        }),
+        Request::Snapshot { session } => {
+            Outcome::Reply(match registry.request_snapshot(session) {
+                Ok(snap) => ok_response(vec![("snapshot", snap)]),
+                Err(e) => err_response(&e),
+            })
+        }
+        Request::Submit {
+            spec,
+            events,
+            pause_after,
+            throttle_ms,
+        } => admit(registry, &spec, 0, events, pause_after, throttle_ms),
+        Request::Resume {
+            snapshot,
+            events,
+            pause_after,
+            throttle_ms,
+        } => match parse_snapshot(&snapshot) {
+            Ok((spec, completed)) => {
+                admit(registry, &spec, completed, events, pause_after, throttle_ms)
+            }
+            Err(e) => Outcome::Reply(err_response(&e)),
+        },
+    }
+}
+
+/// Validate a wire spec and admit it — shared by submit (replay 0) and
+/// resume. The *canonical* re-export of the parsed spec is what the
+/// registry stores, so a snapshot of this session resumes byte-identically
+/// regardless of how the client formatted the original spec.
+fn admit(
+    registry: &Arc<Registry>,
+    spec: &Json,
+    replay: usize,
+    events: bool,
+    pause_after: Option<usize>,
+    throttle_ms: u64,
+) -> Outcome {
+    let parsed = match RunSpec::from_wire_json(spec) {
+        Ok(parsed) => parsed,
+        Err(e) => return Outcome::Reply(err_response(&e.to_string())),
+    };
+    let windows = parsed.windows;
+    if replay > windows {
+        return Outcome::Reply(err_response(&format!(
+            "snapshot completed {replay} exceeds horizon {windows}"
+        )));
+    }
+    let canonical = parsed.to_wire_json();
+    match registry.submit(canonical, windows, replay, pause_after, events) {
+        Ok((id, sub)) => {
+            let mut extra = vec![("session", num(id as f64))];
+            if replay > 0 {
+                extra.insert(0, ("replay", num(replay as f64)));
+            }
+            let resp = ok_response(extra);
+            match sub {
+                Some(sub) => Outcome::Stream(resp, sub, throttle_ms),
+                None => Outcome::Reply(resp),
+            }
+        }
+        Err(e) => Outcome::Reply(err_response(&e)),
+    }
+}
+
+fn result_response(result: Result<Json, String>) -> String {
+    match result {
+        Ok(Json::Obj(fields)) => {
+            let pairs: Vec<(&str, Json)> = fields
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect();
+            ok_response(pairs)
+        }
+        Ok(other) => ok_response(vec![("result", other)]),
+        Err(e) => err_response(&e),
+    }
+}

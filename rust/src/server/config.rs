@@ -89,6 +89,19 @@ impl Policy {
             name: "recl",
         }
     }
+
+    /// Look a preset up by its stable [`Policy::name`] — the inverse used
+    /// by the CLI `--policy` flag and the serve-protocol `"policy"` field.
+    pub fn by_name(name: &str) -> Option<Policy> {
+        match name {
+            "ecco" => Some(Policy::ecco()),
+            "ecco+recl" => Some(Policy::ecco_recl()),
+            "naive" => Some(Policy::naive()),
+            "ekya" => Some(Policy::ekya()),
+            "recl" => Some(Policy::recl()),
+            _ => None,
+        }
+    }
 }
 
 /// Which per-window driver runs the simulation loop.
@@ -104,6 +117,26 @@ pub enum Scheduler {
     /// loop byte-identically; it is selected automatically whenever any
     /// camera has a heterogeneous window.
     EventDriven,
+}
+
+impl Scheduler {
+    /// Stable machine-readable name (the serve-protocol `"scheduler"`
+    /// discriminant).
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheduler::Lockstep => "lockstep",
+            Scheduler::EventDriven => "event_driven",
+        }
+    }
+
+    /// Inverse of [`Scheduler::name`].
+    pub fn by_name(name: &str) -> Option<Scheduler> {
+        match name {
+            "lockstep" => Some(Scheduler::Lockstep),
+            "event_driven" => Some(Scheduler::EventDriven),
+            _ => None,
+        }
+    }
 }
 
 /// Per-camera window override (see [`crate::api::CameraSpec`]).

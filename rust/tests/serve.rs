@@ -1,0 +1,371 @@
+//! End-to-end serve-host pins over real sockets: FIFO admission fairness,
+//! snapshot/resume byte-equality with an uninterrupted run, bounded
+//! subscriber buffers under a deliberately slow consumer, and protocol
+//! robustness against malformed lines.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+
+use ecco::api::{RunSpec, SimOpts};
+use ecco::runtime::{Engine, Task};
+use ecco::serve::{Bind, ServeConfig, Server};
+use ecco::server::Policy;
+use ecco::util::json::{obj, s, Json};
+
+/// A reduced-scale deterministic spec that still exercises grouping and
+/// retraining (3 cameras, 3 windows, short windows, few eval frames).
+fn small_spec(seed: u64) -> RunSpec {
+    RunSpec::new(Task::Det, Policy::ecco())
+        .cams(3)
+        .gpus(1.0)
+        .shared_mbps(10.0)
+        .windows(3)
+        .seed(seed)
+        .sim(
+            SimOpts::new()
+                .window_secs(30.0)
+                .micro_windows(2)
+                .eval_frames(4)
+                .pretrain_steps(40),
+        )
+}
+
+fn spec_json(seed: u64) -> String {
+    small_spec(seed).to_wire_json().to_string_compact()
+}
+
+/// Bind on an ephemeral port, run the server on a scoped thread, hand the
+/// address to the test body, then shut the server down.
+fn with_server<F>(cfg: ServeConfig, f: F)
+where
+    F: FnOnce(SocketAddr) + Send,
+{
+    let engine = Engine::open_default().unwrap();
+    let server = Server::bind(&engine, &Bind::Tcp("127.0.0.1:0".into()), cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    thread::scope(|scope| {
+        let host = scope.spawn(move || server.run().unwrap());
+        f(addr);
+        // Always send shutdown, even if the body already did (idempotent:
+        // a second connection either errors or goes unanswered).
+        if let Ok(mut conn) = TcpStream::connect(addr) {
+            let _ = writeln!(conn, "{}", r#"{"cmd":"shutdown"}"#);
+        }
+        host.join().unwrap();
+    });
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn read_line(&mut self) -> Option<String> {
+        let mut buf = String::new();
+        match self.reader.read_line(&mut buf) {
+            Ok(0) => None,
+            Ok(_) => Some(buf.trim_end().to_string()),
+            Err(e) => panic!("client read failed: {e}"),
+        }
+    }
+
+    fn read_json(&mut self) -> Json {
+        let line = self.read_line().expect("connection closed mid-response");
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+    }
+
+    /// Send one request line and read the one-line response.
+    fn send(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").unwrap();
+        self.read_json()
+    }
+
+    /// Read stream frames until (and including) the `end` frame.
+    fn drain_frames(&mut self) -> Vec<String> {
+        let mut frames = Vec::new();
+        loop {
+            let line = self.read_line().expect("stream closed before end frame");
+            let done = line.contains(r#""frame":"end""#);
+            frames.push(line);
+            if done {
+                return frames;
+            }
+        }
+    }
+}
+
+fn assert_ok(resp: &Json) {
+    assert_eq!(
+        resp.get("ok").ok().cloned(),
+        Some(Json::Bool(true)),
+        "expected ok response, got {}",
+        resp.to_string_compact()
+    );
+}
+
+fn session_id(resp: &Json) -> u64 {
+    assert_ok(resp);
+    resp.get("session").unwrap().as_usize().unwrap() as u64
+}
+
+fn event_frames(frames: &[String]) -> Vec<String> {
+    frames
+        .iter()
+        .filter(|f| f.contains(r#""frame":"event""#))
+        .cloned()
+        .collect()
+}
+
+fn frame_seq(frame: &str) -> u64 {
+    Json::parse(frame).unwrap().get("seq").unwrap().as_usize().unwrap() as u64
+}
+
+#[test]
+fn single_runner_completes_sessions_in_fifo_order() {
+    let cfg = ServeConfig {
+        runners: 1,
+        ..ServeConfig::default()
+    };
+    with_server(cfg, |addr| {
+        // Submit 4 sessions on 4 connections, strictly in order; each
+        // subscribes to its own event stream at submit time.
+        let mut clients: Vec<Client> = Vec::new();
+        let mut ids: Vec<u64> = Vec::new();
+        for i in 0..4u64 {
+            let mut client = Client::connect(addr);
+            let resp = client.send(&format!(
+                r#"{{"cmd":"submit","spec":{},"events":true}}"#,
+                spec_json(100 + i)
+            ));
+            ids.push(session_id(&resp));
+            clients.push(client);
+        }
+        // Drain all 4 streams concurrently — completion order must not
+        // depend on which consumer reads first.
+        let streams: Vec<Vec<String>> = thread::scope(|scope| {
+            let handles: Vec<_> = clients
+                .iter_mut()
+                .map(|c| scope.spawn(move || c.drain_frames()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Every session ran to completion and logged a complete stream:
+        // seq contiguous from 0 and one window_closed per window.
+        for (i, frames) in streams.iter().enumerate() {
+            let events = event_frames(frames);
+            assert!(!events.is_empty(), "session {i} forwarded no events");
+            for (k, frame) in events.iter().enumerate() {
+                assert_eq!(frame_seq(frame), k as u64, "session {i} seq gap");
+            }
+            let closed = events
+                .iter()
+                .filter(|f| f.contains(r#""type":"window_closed""#))
+                .count();
+            assert_eq!(closed, 3, "session {i} window_closed count");
+            assert_eq!(
+                frames.last().unwrap().as_str(),
+                r#"{"frame":"end","state":"done"}"#
+            );
+        }
+        // FIFO: with one runner, start order equals submit order.
+        let mut ctl = Client::connect(addr);
+        let mut starts = Vec::new();
+        for &id in &ids {
+            let resp = ctl.send(&format!(r#"{{"cmd":"status","session":{id}}}"#));
+            assert_ok(&resp);
+            assert_eq!(resp.get("state").unwrap().as_str().unwrap(), "done");
+            starts.push(resp.get("started").unwrap().as_usize().unwrap());
+        }
+        assert_eq!(starts, vec![0, 1, 2, 3], "admission order violated");
+    });
+}
+
+#[test]
+fn snapshot_resume_replays_byte_identically() {
+    with_server(ServeConfig::default(), |addr| {
+        // Reference: the uninterrupted run's event frames.
+        let mut fresh = Client::connect(addr);
+        let resp = fresh.send(&format!(
+            r#"{{"cmd":"submit","spec":{},"events":true}}"#,
+            spec_json(91)
+        ));
+        let fresh_id = session_id(&resp);
+        let fresh_frames = event_frames(&fresh.drain_frames());
+        assert!(!fresh_frames.is_empty());
+
+        // Same spec, interrupted by a scheduled snapshot after 1 window.
+        let mut part1 = Client::connect(addr);
+        let resp = part1.send(&format!(
+            r#"{{"cmd":"submit","spec":{},"events":true,"pause_after":1}}"#,
+            spec_json(91)
+        ));
+        let paused_id = session_id(&resp);
+        assert_ne!(paused_id, fresh_id);
+        let part1_all = part1.drain_frames();
+        assert_eq!(
+            part1_all.last().unwrap().as_str(),
+            r#"{"frame":"end","state":"snapshotted"}"#
+        );
+        let part1_frames = event_frames(&part1_all);
+        assert!(!part1_frames.is_empty(), "nothing ran before the snapshot");
+        assert!(part1_frames.len() < fresh_frames.len());
+
+        // Fetch the snapshot and resume it on a new connection.
+        let resp = part1.send(&format!(r#"{{"cmd":"snapshot","session":{paused_id}}}"#));
+        assert_ok(&resp);
+        let snapshot = resp.get("snapshot").unwrap().clone();
+        assert_eq!(snapshot.get("completed").unwrap().as_usize().unwrap(), 1);
+        let mut part2 = Client::connect(addr);
+        let resume = obj(vec![
+            ("cmd", s("resume")),
+            ("events", Json::Bool(true)),
+            ("snapshot", snapshot),
+        ])
+        .to_string_compact();
+        let resp = part2.send(&resume);
+        assert_ok(&resp);
+        assert_eq!(resp.get("replay").unwrap().as_usize().unwrap(), 1);
+        let part2_all = part2.drain_frames();
+        assert_eq!(
+            part2_all.last().unwrap().as_str(),
+            r#"{"frame":"end","state":"done"}"#
+        );
+        let part2_frames = event_frames(&part2_all);
+
+        // The pin: interrupted + resumed equals uninterrupted, byte for
+        // byte — replayed windows are suppressed but still counted, so
+        // the resumed stream continues seq-contiguously.
+        assert_eq!(
+            frame_seq(&part2_frames[0]),
+            part1_frames.len() as u64,
+            "resumed stream must continue where the snapshot stopped"
+        );
+        let stitched: Vec<String> = part1_frames
+            .iter()
+            .chain(part2_frames.iter())
+            .cloned()
+            .collect();
+        assert_eq!(stitched, fresh_frames, "stitched stream diverged");
+    });
+}
+
+#[test]
+fn slow_consumer_gets_bounded_buffer_and_drop_accounting() {
+    let cfg = ServeConfig {
+        runners: 1,
+        sub_buffer: 4,
+        ..ServeConfig::default()
+    };
+    with_server(cfg, |addr| {
+        // throttle_ms paces the server's writes to this consumer, so the
+        // 4-frame buffer must overflow while the session trains.
+        let mut slow = Client::connect(addr);
+        let resp = slow.send(&format!(
+            r#"{{"cmd":"submit","spec":{},"events":true,"throttle_ms":25}}"#,
+            spec_json(17)
+        ));
+        let id = session_id(&resp);
+        let frames = slow.drain_frames();
+        assert_eq!(
+            frames.last().unwrap().as_str(),
+            r#"{"frame":"end","state":"done"}"#
+        );
+        let delivered = event_frames(&frames).len() as u64;
+        let dropped: u64 = frames
+            .iter()
+            .filter(|f| f.contains(r#""frame":"dropped""#))
+            .map(|f| {
+                Json::parse(f).unwrap().get("count").unwrap().as_usize().unwrap() as u64
+            })
+            .sum();
+        assert!(dropped > 0, "slow consumer never overflowed the buffer");
+        // Conservation: every published event was either delivered or
+        // counted in a drop marker.
+        let mut ctl = Client::connect(addr);
+        let resp = ctl.send(&format!(r#"{{"cmd":"status","session":{id}}}"#));
+        assert_ok(&resp);
+        let seq = resp.get("seq").unwrap().as_usize().unwrap() as u64;
+        assert_eq!(delivered + dropped, seq, "drop accounting leaked frames");
+        // The report survived the lossy stream (authoritative record is
+        // server-side).
+        let resp = ctl.send(&format!(r#"{{"cmd":"report","session":{id}}}"#));
+        assert_ok(&resp);
+        assert!(resp.get("final").unwrap().as_f64().unwrap().is_finite());
+    });
+}
+
+#[test]
+fn malformed_lines_get_error_responses_and_the_server_survives() {
+    with_server(ServeConfig::default(), |addr| {
+        let mut client = Client::connect(addr);
+        for bad in [
+            "not json at all",
+            "[1,2,3]",
+            r#"{"spec":{}}"#,
+            r#"{"cmd":"launch"}"#,
+            r#"{"cmd":"ping","bogus":1}"#,
+            r#"{"cmd":"submit","spec":{"task":"det","policy":"warp"}}"#,
+            r#"{"cmd":"submit","spec":{"task":"det","zzz":1}}"#,
+            r#"{"cmd":"status","session":999}"#,
+            r#"{"cmd":"resume","snapshot":{"completed":99,"spec":{"windows":3}}}"#,
+        ] {
+            let resp = client.send(bad);
+            assert_eq!(
+                resp.get("ok").ok().cloned(),
+                Some(Json::Bool(false)),
+                "{bad} should be rejected, got {}",
+                resp.to_string_compact()
+            );
+            assert!(resp.get("error").is_ok(), "{bad} missing error");
+        }
+        // Same connection still works...
+        assert_ok(&client.send(r#"{"cmd":"ping"}"#));
+        // ...and so does a real session afterwards.
+        let resp = client.send(&format!(
+            r#"{{"cmd":"submit","spec":{},"events":true}}"#,
+            spec_json(5)
+        ));
+        session_id(&resp);
+        let frames = client.drain_frames();
+        assert_eq!(
+            frames.last().unwrap().as_str(),
+            r#"{"frame":"end","state":"done"}"#
+        );
+    });
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_serves_the_same_protocol() {
+    use std::os::unix::net::UnixStream;
+
+    let path = std::env::temp_dir().join(format!("ecco-serve-test-{}.sock", std::process::id()));
+    let engine = Engine::open_default().unwrap();
+    let server = Server::bind(&engine, &Bind::Unix(path.clone()), ServeConfig::default()).unwrap();
+    thread::scope(|scope| {
+        let host = scope.spawn(move || server.run().unwrap());
+        let stream = UnixStream::connect(&path).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(writer, "{}", r#"{"cmd":"ping"}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), r#"{"ok":true}"#);
+        writeln!(writer, "{}", r#"{"cmd":"shutdown"}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), r#"{"ok":true}"#);
+        host.join().unwrap();
+    });
+    let _ = std::fs::remove_file(&path);
+}
