@@ -13,7 +13,7 @@ use ecco::api::{run_fleet, RunSpec, RuntimeOpts};
 use ecco::grouping::topology::Topology;
 use ecco::grouping::{group_request_pruned, Decision, GroupJob, GroupingPolicy, RequestMeta};
 use ecco::runtime::native::{self, Exec};
-use ecco::runtime::{Engine, Labels, Task, TrainBatch};
+use ecco::runtime::{CoalesceOpts, Engine, Labels, Task, TrainBatch};
 use ecco::scene::scenario;
 use ecco::server::sched::{EventWheel, SchedEvent};
 use ecco::server::{eval_model, Policy};
@@ -83,6 +83,33 @@ fn main() {
             })
             .expect("eval fan-out")
         });
+    }
+
+    // Micro-batched eval fan-out: the same end-of-window shape, but with
+    // the engine's coalescing submission layer on vs off. Eight cameras
+    // evaluate ONE shared model, so with >=2 outer threads the coalesced
+    // rows merge per-camera infer calls into mega-batched launches; at 1
+    // thread a lone submitter skips the coalesce window entirely, so the
+    // coalesced row should be no slower than per-call. Results are
+    // bit-identical across all four rows (per-sample pure kernels).
+    {
+        let cams8: Vec<usize> = (0..8).collect();
+        for threads in [1usize, n_threads] {
+            for (tag, opts) in [
+                ("percall", CoalesceOpts::default()),
+                ("coalesced", CoalesceOpts::on()),
+            ] {
+                engine_serial.set_coalesce(opts);
+                b.bench(&format!("infer_endwindow_8cams_{tag}_{threads}t"), || {
+                    pool::try_map(threads, &cams8, |_, &cam| {
+                        let frames = world.eval_frames(cam, 32, 16, 0x5eed + cam as u64);
+                        eval_model(&engine_serial, Task::Det, &model.theta, &frames)
+                    })
+                    .expect("micro-batched eval fan-out")
+                });
+            }
+        }
+        engine_serial.set_coalesce(CoalesceOpts::default());
     }
 
     // Fleet driver: four policy arms of a small end-to-end run sharing the

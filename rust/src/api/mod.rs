@@ -29,7 +29,8 @@
 //! [`RunSpec::camera`] layers per-camera overrides ([`CameraSpec`]: uplink,
 //! window length, phase) over the fleet defaults, and
 //! [`RunSpec::runtime`] groups process-level knobs ([`RuntimeOpts`]:
-//! eval threads, frame cache, lockstep vs event-driven scheduler).
+//! eval threads, frame cache, lockstep vs event-driven scheduler, and
+//! micro-batch inference coalescing via [`CoalesceOpts`]).
 //! City-scale fleets add [`RunSpec::topology_degree`] to prune grouping's
 //! candidate scan to spatial neighbors:
 //!
@@ -80,4 +81,5 @@ pub mod spec;
 pub use event::{Event, EventSink, JsonlSink, RecordingSink};
 pub use report::{Resilience, RunReport, WindowReport};
 pub use session::{run_fleet, Session};
+pub use crate::runtime::CoalesceOpts;
 pub use spec::{CameraSpec, RunSpec, RuntimeOpts, SimOpts, SpecError};

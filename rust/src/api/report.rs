@@ -54,6 +54,16 @@ pub struct RunReport {
     /// fault plan).
     pub resilience: Resilience,
     pub wall_secs: f64,
+    /// Logical inference submissions during this session (engine-stats
+    /// delta over the session lifetime; see `Session` docs for the
+    /// engine-sharing caveat).
+    pub infer_requests: u64,
+    /// Inference kernel launches during this session. Equals
+    /// `infer_requests` with micro-batch coalescing off; fewer with it on.
+    /// Timing-dependent when coalescing — a perf observation like
+    /// `wall_secs`, never part of the deterministic event/accuracy
+    /// surface.
+    pub infer_calls: u64,
 }
 
 /// Resilience metrics for runs with a fault plan attached (see
@@ -99,6 +109,19 @@ impl RunReport {
                 num(self.resilience.windows_to_recover),
             ),
             ("wall_secs", num(self.wall_secs)),
+            ("infer_requests", num(self.infer_requests as f64)),
+            ("infer_calls", num(self.infer_calls as f64)),
+            ("coalesce_ratio", num(self.coalesce_ratio())),
         ])
+    }
+
+    /// Micro-batch coalescing ratio: logical inference requests per
+    /// kernel launch (1.0 = no coalescing; higher = bigger mega-batches).
+    pub fn coalesce_ratio(&self) -> f64 {
+        if self.infer_calls == 0 {
+            1.0
+        } else {
+            self.infer_requests as f64 / self.infer_calls as f64
+        }
     }
 }

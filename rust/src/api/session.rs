@@ -27,6 +27,12 @@ pub struct Session<'e> {
     windows: usize,
     stepped: usize,
     t0: std::time::Instant,
+    /// Engine stats at session creation; [`Session::into_report`] reports
+    /// the delta so per-run infer request/launch counts survive engine
+    /// sharing (sessions interleaved on one engine each see engine-wide
+    /// activity during their lifetime — a perf observation, not part of
+    /// the deterministic result surface, like `wall_secs`).
+    stats0: EngineStats,
 }
 
 impl<'e> Session<'e> {
@@ -58,16 +64,24 @@ impl<'e> Session<'e> {
         }
         let name = cfg.policy.name.to_string();
         let zoo_prefill = cfg.policy.zoo_warm_start && rest.zoo_init_steps > 0;
+        // Apply the spec's micro-batch coalescing knobs to the shared
+        // engine (engine-wide, last writer wins; results are bit-identical
+        // either way — see `runtime::microbatch`).
+        if let Some(coalesce) = cfg.coalesce {
+            engine.set_coalesce(coalesce);
+        }
         let mut sys = System::new(cfg, sc.world, &uplinks, rest.shared_mbps, engine)?;
         if zoo_prefill {
             sys.populate_zoo_from_initial(rest.zoo_init_steps)?;
         }
+        let stats0 = engine.stats();
         Ok(Session {
             sys,
             name,
             windows: rest.windows,
             stepped: 0,
             t0: std::time::Instant::now(),
+            stats0,
         })
     }
 
@@ -110,6 +124,7 @@ impl<'e> Session<'e> {
     /// first).
     pub fn into_report(self) -> RunReport {
         let horizon = self.sys.now();
+        let st = self.sys.engine.stats();
         let record = &self.sys.events.record;
         let cam_acc: Vec<Vec<f32>> = self
             .sys
@@ -133,6 +148,8 @@ impl<'e> Session<'e> {
             events: record.events.clone(),
             resilience: resilience_of(&self.sys),
             wall_secs: self.t0.elapsed().as_secs_f64(),
+            infer_requests: st.infer_requests.saturating_sub(self.stats0.infer_requests),
+            infer_calls: st.infer_calls.saturating_sub(self.stats0.infer_calls),
         }
     }
 

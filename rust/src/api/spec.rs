@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::faults::FaultPlan;
-use crate::runtime::Task;
+use crate::runtime::{CoalesceOpts, Task};
 use crate::scene::scenario::{self, Scenario};
 use crate::server::{CamWindow, Policy, Scheduler, SystemConfig};
 use crate::util::json::{arr, num, obj, s, Json};
@@ -62,6 +62,9 @@ pub enum SpecError {
     UnknownName { field: &'static str, value: String },
     /// A `sim` override was out of range (zero/negative/non-finite).
     BadSimOpt { field: &'static str, value: f64 },
+    /// A `runtime.coalesce` knob was out of range (zero mega-batch cap, or
+    /// a coalesce window past the 1 s sanity bound).
+    BadCoalesceOpt { field: &'static str, value: u64 },
 }
 
 impl fmt::Display for SpecError {
@@ -117,6 +120,9 @@ impl fmt::Display for SpecError {
             }
             SpecError::BadSimOpt { field, value } => {
                 write!(f, "run spec: sim.{field} out of range: {value}")
+            }
+            SpecError::BadCoalesceOpt { field, value } => {
+                write!(f, "run spec: runtime.coalesce.{field} out of range: {value}")
             }
         }
     }
@@ -195,6 +201,7 @@ pub struct RuntimeOpts {
     threads: Option<usize>,
     frame_cache: Option<bool>,
     scheduler: Option<Scheduler>,
+    coalesce: Option<CoalesceOpts>,
 }
 
 impl RuntimeOpts {
@@ -220,6 +227,14 @@ impl RuntimeOpts {
     /// [`Scheduler::EventDriven`] regardless of this setting.
     pub fn scheduler(mut self, scheduler: Scheduler) -> Self {
         self.scheduler = Some(scheduler);
+        self
+    }
+
+    /// Micro-batch coalescing for the engine's inference submission layer
+    /// ([`crate::runtime::microbatch`]). Off by default; byte-identical
+    /// results either way — only the kernel-launch count changes.
+    pub fn coalesce(mut self, opts: CoalesceOpts) -> Self {
+        self.coalesce = Some(opts);
         self
     }
 }
@@ -443,6 +458,9 @@ impl RunSpec {
         if let Some(scheduler) = opts.scheduler {
             self.runtime_wire.scheduler = Some(scheduler);
         }
+        if let Some(coalesce) = opts.coalesce {
+            self.runtime_wire.coalesce = Some(coalesce);
+        }
         self.configure(move |cfg| {
             if let Some(n) = opts.threads {
                 cfg.eval_threads = n;
@@ -452,6 +470,9 @@ impl RunSpec {
             }
             if let Some(scheduler) = opts.scheduler {
                 cfg.scheduler = scheduler;
+            }
+            if let Some(coalesce) = opts.coalesce {
+                cfg.coalesce = Some(coalesce);
             }
         })
     }
@@ -598,6 +619,22 @@ impl RunSpec {
                 }
             }
         }
+        if let Some(c) = self.runtime_wire.coalesce {
+            if c.max_batch == 0 {
+                return Err(SpecError::BadCoalesceOpt {
+                    field: "max_batch",
+                    value: 0,
+                });
+            }
+            // A coalesce window is scheduling jitter, not a batching
+            // schedule; past 1 s it can only be a units mistake.
+            if c.window_us > 1_000_000 {
+                return Err(SpecError::BadCoalesceOpt {
+                    field: "window_us",
+                    value: c.window_us,
+                });
+            }
+        }
         Ok(())
     }
 
@@ -664,6 +701,16 @@ impl RunSpec {
             }
             if let Some(sched) = rt.scheduler {
                 rf.push(("scheduler", s(sched.name())));
+            }
+            if let Some(c) = rt.coalesce {
+                rf.push((
+                    "coalesce",
+                    obj(vec![
+                        ("enabled", Json::Bool(c.enabled)),
+                        ("window_us", num(c.window_us as f64)),
+                        ("max_batch", num(c.max_batch as f64)),
+                    ]),
+                ));
             }
             fields.push(("runtime", obj(rf)));
         }
@@ -785,6 +832,33 @@ impl RunSpec {
                                     }
                                 })?;
                                 runtime = runtime.scheduler(sched);
+                            }
+                            "coalesce" => {
+                                let cmap =
+                                    rv.as_obj().map_err(|e| wire_err("runtime.coalesce", &e))?;
+                                let mut c = CoalesceOpts::default();
+                                for (ck, cv) in cmap {
+                                    match ck.as_str() {
+                                        "enabled" => {
+                                            c.enabled =
+                                                wire_bool(cv, "runtime.coalesce.enabled")?;
+                                        }
+                                        "window_us" => {
+                                            c.window_us =
+                                                wire_u64(cv, "runtime.coalesce.window_us")?;
+                                        }
+                                        "max_batch" => {
+                                            c.max_batch =
+                                                wire_usize(cv, "runtime.coalesce.max_batch")?;
+                                        }
+                                        other => {
+                                            return Err(SpecError::UnknownField {
+                                                field: format!("runtime.coalesce.{other}"),
+                                            })
+                                        }
+                                    }
+                                }
+                                runtime = runtime.coalesce(c);
                             }
                             other => {
                                 return Err(SpecError::UnknownField {
@@ -1152,7 +1226,8 @@ mod tests {
                 RuntimeOpts::new()
                     .threads(2)
                     .frame_cache(false)
-                    .scheduler(Scheduler::EventDriven),
+                    .scheduler(Scheduler::EventDriven)
+                    .coalesce(CoalesceOpts::on().window_us(150).max_batch(96)),
             )
             .sim(
                 SimOpts::new()
@@ -1192,6 +1267,10 @@ mod tests {
         assert_eq!(cfg.eval_threads, 2);
         assert!(!cfg.frame_cache);
         assert_eq!(cfg.scheduler, Scheduler::EventDriven);
+        assert_eq!(
+            cfg.coalesce,
+            Some(CoalesceOpts::on().window_us(150).max_batch(96))
+        );
         assert_eq!(cfg.window_secs, 40.0);
         assert_eq!(cfg.micro_windows, 4);
         assert_eq!(cfg.eval_frames, 8);
@@ -1240,6 +1319,26 @@ mod tests {
             Some(SpecError::BadSimOpt {
                 field: "window_secs",
                 value: 0.0
+            })
+        );
+        assert_eq!(
+            parse(r#"{"runtime":{"coalesce":{"enabled":true,"max_batch":0}}}"#),
+            Some(SpecError::BadCoalesceOpt {
+                field: "max_batch",
+                value: 0
+            })
+        );
+        assert_eq!(
+            parse(r#"{"runtime":{"coalesce":{"window_us":2000000}}}"#),
+            Some(SpecError::BadCoalesceOpt {
+                field: "window_us",
+                value: 2_000_000
+            })
+        );
+        assert_eq!(
+            parse(r#"{"runtime":{"coalesce":{"window":5}}}"#),
+            Some(SpecError::UnknownField {
+                field: "runtime.coalesce.window".into()
             })
         );
         assert_eq!(

@@ -73,6 +73,27 @@
 //!   fans the independent experiment ids out with per-experiment buffered
 //!   printing (whole experiments print in id order).
 //!
+//! A fourth layer sits between the eval fan-outs and the kernels: the
+//! **micro-batch submission layer** ([`runtime::microbatch`]). Every
+//! `Engine::infer_det` / `infer_seg` / `features` call is a *submission*
+//! into an [`runtime::microbatch::InferQueue`] owned by the engine. With
+//! coalescing enabled ([`api::RuntimeOpts::coalesce`] /
+//! `Engine::set_coalesce`; **off by default**), concurrent submissions
+//! sharing a coalesce key — the program (det/seg/features), the
+//! resolution, and a content hash of theta (so per-camera clones of a
+//! published group model merge without pointer aliasing) — combine into
+//! one mega-batched kernel launch under a bounded coalesce window and
+//! mega-batch cap, and each submitter gets back exactly its own
+//! per-sample slice. The queue lives as long as the engine; knobs are
+//! atomics, so serve sessions reconfigure a shared engine lock-free
+//! (last writer wins). The **determinism rule**: inference kernels are
+//! per-sample pure with index-ordered concatenation, so results are
+//! bit-identical no matter how requests group — event logs and
+//! accuracies are byte-equal with coalescing on or off, at any pool
+//! width; only the `infer_calls` launch counter (a perf statistic) is
+//! timing-dependent. A leader that observes no other in-flight submitter
+//! skips the coalesce window entirely, so serial callers pay nothing.
+//!
 //! The eval fan-outs additionally read rendered frames through a
 //! **per-(camera, salt) eval-frame cache** owned by each run: renders are
 //! pure functions of the frozen world state, the cache is invalidated on

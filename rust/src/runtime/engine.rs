@@ -16,6 +16,15 @@
 //! * [`Engine::train_step`] — one SGD step on a model's flat params
 //! * [`Engine::infer_det`] / [`Engine::infer_seg`] — batched predictions
 //! * [`Engine::features`]  — drift/grouping descriptors
+//!
+//! Inference calls are **submissions**, not direct launches: they route
+//! through the engine's [`InferQueue`](super::microbatch::InferQueue),
+//! which (when enabled via [`Engine::set_coalesce`]) merges concurrent
+//! requests sharing a `(program, resolution, theta)` key into single
+//! mega-batched kernel launches and hands each caller back its own
+//! per-sample slice — bit-identical to the per-call path (see
+//! [`super::microbatch`] for the determinism argument). Off by default;
+//! the disabled path is a zero-overhead passthrough.
 
 #[cfg(not(feature = "pjrt"))]
 use anyhow::{bail, Result};
@@ -27,6 +36,8 @@ use std::path::Path;
 #[cfg(not(feature = "pjrt"))]
 use super::manifest::Manifest;
 use super::manifest::Task;
+#[cfg(not(feature = "pjrt"))]
+use super::microbatch::{self, CoalesceOpts, InferOut, InferQueue, InferRequest, ReqKind};
 #[cfg(not(feature = "pjrt"))]
 use super::native;
 #[cfg(not(feature = "pjrt"))]
@@ -121,7 +132,15 @@ impl SegPred {
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     pub train_steps: u64,
+    /// Logical inference submissions (`infer_det`/`infer_seg` entries).
+    /// Deterministic for a given run.
+    pub infer_requests: u64,
+    /// Actual inference kernel launches. With coalescing off this equals
+    /// `infer_requests`; with it on, launches ≤ requests and the exact
+    /// count depends on submission timing (a perf counter, never part of
+    /// the deterministic event/accuracy surface).
     pub infer_calls: u64,
+    /// Feature-extraction kernel launches (coalesced the same way).
     pub feature_calls: u64,
     pub compile_count: u64,
     pub exec_nanos: u128,
@@ -139,6 +158,7 @@ pub struct EngineStats {
 #[derive(Debug, Default)]
 pub(crate) struct StatsCell {
     pub(crate) train_steps: AtomicU64,
+    pub(crate) infer_requests: AtomicU64,
     pub(crate) infer_calls: AtomicU64,
     pub(crate) feature_calls: AtomicU64,
     pub(crate) compile_count: AtomicU64,
@@ -155,6 +175,7 @@ impl StatsCell {
     pub(crate) fn snapshot(&self) -> EngineStats {
         EngineStats {
             train_steps: self.train_steps.load(Ordering::Relaxed),
+            infer_requests: self.infer_requests.load(Ordering::Relaxed),
             infer_calls: self.infer_calls.load(Ordering::Relaxed),
             feature_calls: self.feature_calls.load(Ordering::Relaxed),
             compile_count: self.compile_count.load(Ordering::Relaxed),
@@ -184,6 +205,9 @@ pub struct Engine {
     pub manifest: Manifest,
     stats: StatsCell,
     pool: Pool,
+    /// Micro-batch coalescing submission layer for the infer/feature
+    /// paths (see [`super::microbatch`]). Disabled by default.
+    queue: InferQueue,
 }
 
 // Compile-time statement of the sharing contract the eval fan-outs and
@@ -221,6 +245,7 @@ impl Engine {
             stats: StatsCell::default(),
             // Caller + workers == default_threads() total concurrency.
             pool: Pool::new(pool::default_threads().saturating_sub(1)),
+            queue: InferQueue::new(CoalesceOpts::default()),
         })
     }
 
@@ -248,6 +273,19 @@ impl Engine {
     /// Snapshot of the execution statistics.
     pub fn stats(&self) -> EngineStats {
         self.stats.snapshot()
+    }
+
+    /// Reconfigure the micro-batch coalescing layer. Engine-wide and
+    /// lock-free (atomics): sessions sharing an engine see the last
+    /// writer's knobs, which affects only batching granularity — results
+    /// are bit-identical either way (the [`super::microbatch`] contract).
+    pub fn set_coalesce(&self, opts: CoalesceOpts) {
+        self.queue.set_opts(opts);
+    }
+
+    /// Current micro-batch coalescing knobs.
+    pub fn coalesce(&self) -> CoalesceOpts {
+        self.queue.opts()
     }
 
     /// No-op for the native backend (nothing to pre-compile).
@@ -319,6 +357,11 @@ impl Engine {
     }
 
     /// Batched detection inference. `pixels` is `[B,r,r,3]`, B = infer_batch.
+    ///
+    /// A **submission**: with coalescing enabled, concurrent calls that
+    /// share `(theta, res)` merge into one mega-batched launch and this
+    /// call returns exactly its own samples' predictions — bit-identical
+    /// to a solo launch.
     pub fn infer_det(&self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<DetPred> {
         let m = &self.manifest;
         let (b, g, k) = (m.infer_batch, m.grid, m.classes);
@@ -326,22 +369,44 @@ impl Engine {
         if pixels.len() != b * res * res * 3 {
             bail!("infer batch pixels wrong size");
         }
-        let t0 = std::time::Instant::now();
-        let (obj, cls) = native::infer_det(theta, pixels, b, res, self.exec());
-        let dt = t0.elapsed().as_nanos() as u64;
-        StatsCell::add(&self.stats.exec_nanos, dt);
-        StatsCell::add(&self.stats.infer_nanos, dt);
-        StatsCell::add(&self.stats.infer_calls, 1);
-        Ok(DetPred {
-            batch: b,
-            grid: g,
-            classes: k,
-            obj,
-            cls,
-        })
+        StatsCell::add(&self.stats.infer_requests, 1);
+        let run = |px: &[f32], n: usize| {
+            let t0 = std::time::Instant::now();
+            let (obj, cls) = native::infer_det(theta, px, n, res, self.exec());
+            let dt = t0.elapsed().as_nanos() as u64;
+            StatsCell::add(&self.stats.exec_nanos, dt);
+            StatsCell::add(&self.stats.infer_nanos, dt);
+            StatsCell::add(&self.stats.infer_calls, 1);
+            InferOut::Det { obj, cls }
+        };
+        // Hash theta only when coalescing can use it; the disabled path
+        // stays a plain launch.
+        let out = if self.queue.enabled() {
+            let req = InferRequest {
+                kind: ReqKind::Det,
+                theta_id: microbatch::theta_id(theta),
+                res,
+                pixels,
+                samples: b,
+            };
+            self.queue.submit(req, theta, run)
+        } else {
+            run(pixels, b)
+        };
+        match out {
+            InferOut::Det { obj, cls } => Ok(DetPred {
+                batch: b,
+                grid: g,
+                classes: k,
+                obj,
+                cls,
+            }),
+            _ => unreachable!("det submission yielded a non-det output"),
+        }
     }
 
-    /// Batched segmentation inference.
+    /// Batched segmentation inference (a submission, like
+    /// [`Engine::infer_det`]).
     pub fn infer_seg(&self, theta: &[f32], res: usize, pixels: &[f32]) -> Result<SegPred> {
         let m = &self.manifest;
         let (b, k) = (m.infer_batch, m.classes);
@@ -349,34 +414,77 @@ impl Engine {
         if pixels.len() != b * res * res * 3 {
             bail!("infer batch pixels wrong size");
         }
-        let t0 = std::time::Instant::now();
-        let probs = native::infer_seg(theta, pixels, b, res, self.exec());
-        let dt = t0.elapsed().as_nanos() as u64;
-        StatsCell::add(&self.stats.exec_nanos, dt);
-        StatsCell::add(&self.stats.infer_nanos, dt);
-        StatsCell::add(&self.stats.infer_calls, 1);
-        Ok(SegPred {
-            batch: b,
-            side: res / 4,
-            classes: k + 1,
-            probs,
-        })
+        StatsCell::add(&self.stats.infer_requests, 1);
+        let run = |px: &[f32], n: usize| {
+            let t0 = std::time::Instant::now();
+            let probs = native::infer_seg(theta, px, n, res, self.exec());
+            let dt = t0.elapsed().as_nanos() as u64;
+            StatsCell::add(&self.stats.exec_nanos, dt);
+            StatsCell::add(&self.stats.infer_nanos, dt);
+            StatsCell::add(&self.stats.infer_calls, 1);
+            InferOut::Seg { probs }
+        };
+        let out = if self.queue.enabled() {
+            let req = InferRequest {
+                kind: ReqKind::Seg,
+                theta_id: microbatch::theta_id(theta),
+                res,
+                pixels,
+                samples: b,
+            };
+            self.queue.submit(req, theta, run)
+        } else {
+            run(pixels, b)
+        };
+        match out {
+            InferOut::Seg { probs } => Ok(SegPred {
+                batch: b,
+                side: res / 4,
+                classes: k + 1,
+                probs,
+            }),
+            _ => unreachable!("seg submission yielded a non-seg output"),
+        }
     }
 
     /// Drift/grouping descriptors for a `[B,32,32,3]` batch -> `[B,96]`.
+    ///
+    /// Also a submission: concurrent probe batches coalesce (the key is
+    /// theta-free — all feature requests at one resolution merge), and a
+    /// mega-batch past `native::FEATURE_SHARD_MIN` samples shards across
+    /// the pool; smaller launches stay serial (see the cutoff note in
+    /// `native.rs`).
     pub fn features(&self, pixels: &[f32]) -> Result<Vec<f32>> {
         let m = &self.manifest;
         let (b, r) = (m.infer_batch, m.feature_res);
         if pixels.len() != b * r * r * 3 {
             bail!("feature batch pixels wrong size");
         }
-        let t0 = std::time::Instant::now();
-        let emb = native::features(pixels, b, r);
-        let dt = t0.elapsed().as_nanos() as u64;
-        StatsCell::add(&self.stats.exec_nanos, dt);
-        StatsCell::add(&self.stats.infer_nanos, dt);
-        StatsCell::add(&self.stats.feature_calls, 1);
-        Ok(emb)
+        let run = |px: &[f32], n: usize| {
+            let t0 = std::time::Instant::now();
+            let emb = native::features(px, n, r, self.exec());
+            let dt = t0.elapsed().as_nanos() as u64;
+            StatsCell::add(&self.stats.exec_nanos, dt);
+            StatsCell::add(&self.stats.infer_nanos, dt);
+            StatsCell::add(&self.stats.feature_calls, 1);
+            InferOut::Feat { emb }
+        };
+        let out = if self.queue.enabled() {
+            let req = InferRequest {
+                kind: ReqKind::Feat,
+                theta_id: microbatch::theta_id(&[]),
+                res: r,
+                pixels,
+                samples: b,
+            };
+            self.queue.submit(req, &[], run)
+        } else {
+            run(pixels, b)
+        };
+        match out {
+            InferOut::Feat { emb } => Ok(emb),
+            _ => unreachable!("feature submission yielded a non-feature output"),
+        }
     }
 }
 
@@ -402,6 +510,41 @@ mod tests {
         let loss = e.train_step(&mut state, &batch, 0.01).unwrap();
         assert!(loss.is_finite());
         assert_eq!(e.stats().train_steps, 1);
+    }
+
+    #[test]
+    fn infer_requests_equal_calls_without_coalescing() {
+        let e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
+        let state = e.init_model(Task::Det).unwrap();
+        let m = e.manifest.clone();
+        let px = vec![0.1; m.infer_batch * 32 * 32 * 3];
+        for _ in 0..3 {
+            e.infer_det(&state.theta, 32, &px).unwrap();
+        }
+        let st = e.stats();
+        assert_eq!(st.infer_requests, 3);
+        assert_eq!(st.infer_calls, 3);
+    }
+
+    #[test]
+    fn coalesce_knobs_round_trip_and_preserve_results() {
+        let e = Engine::new(Path::new("/definitely/not/generated")).unwrap();
+        let state = e.init_model(Task::Det).unwrap();
+        let m = e.manifest.clone();
+        let px: Vec<f32> = (0..m.infer_batch * 32 * 32 * 3)
+            .map(|i| ((i % 17) as f32) / 17.0)
+            .collect();
+        let base = e.infer_det(&state.theta, 32, &px).unwrap();
+        let opts = CoalesceOpts::on().window_us(0).max_batch(64);
+        e.set_coalesce(opts);
+        assert_eq!(e.coalesce(), opts);
+        let via_queue = e.infer_det(&state.theta, 32, &px).unwrap();
+        assert_eq!(base.obj, via_queue.obj);
+        assert_eq!(base.cls, via_queue.cls);
+        let st = e.stats();
+        assert_eq!(st.infer_requests, 2);
+        e.set_coalesce(CoalesceOpts::default());
+        assert!(!e.coalesce().enabled);
     }
 
     #[test]

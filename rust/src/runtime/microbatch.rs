@@ -1,0 +1,557 @@
+//! Cross-camera micro-batched inference: the coalescing submission layer.
+//!
+//! Eval fan-outs ([`crate::server`]) and concurrent serve sessions
+//! ([`crate::serve`]) issue one `Engine::infer_*` call per (model,
+//! frame-batch), paying per-call kernel overhead for every camera even
+//! when many cameras evaluate the *same* published model at the same
+//! resolution — exactly the shape of the end-of-window pass and the
+//! regroup matrix. [`InferQueue`] closes that gap: concurrent submitters
+//! whose requests share a coalesce key `(kind, resolution, theta)` are
+//! merged into one mega-batch, a single `native::infer_*` launch runs it,
+//! and each submitter gets back exactly its own per-sample slice.
+//!
+//! # Determinism rule
+//!
+//! The native inference kernels are **per-sample pure**: each sample is
+//! forwarded independently (`map_n` over the batch dimension with an
+//! index-ordered concatenation) and there is no batch-global statistic in
+//! the inference path. Concatenating K requests into one launch therefore
+//! produces, sample by sample, the same bits as K separate launches — so
+//! results are independent of how requests happen to group, and event
+//! logs stay byte-stable at any pool width with coalescing on or off.
+//! The only observable difference is the `infer_calls` perf counter
+//! (kernel launches), which is timing-dependent by nature; event logs and
+//! accuracies never include it.
+//!
+//! # Protocol
+//!
+//! The first submitter for a key becomes the **leader**: it opens a
+//! [group](GroupCell), copies its pixels in, and waits a bounded coalesce
+//! window for co-submitters (skipped entirely when it is the only
+//! in-flight submitter, so a serial caller pays only a hash and two mutex
+//! hops). **Joiners** append their pixels, record their sample offset,
+//! and park on the group's condvar. When the window expires or the
+//! mega-batch fills, the leader closes the group (no further joins),
+//! unlinks it from the key map, runs the kernel outside all locks, stores
+//! the whole-batch output, and wakes the joiners; everyone slices out
+//! their own samples. Lock order is always key-map → group, and followers
+//! hold no locks while parked, so the leader's nested batch-sharded
+//! kernel can freely use the worker pool.
+//!
+//! Keys hash theta *content* ([`theta_id`], FNV-1a over the f32 bit
+//! patterns), not pointer identity: after a publish, every camera holds
+//! its own clone of the group model, and those value-equal clones are
+//! precisely the requests worth coalescing. A joiner verifies its theta
+//! bitwise against the group's before merging, so a hash collision
+//! degrades to a per-call launch instead of a wrong answer.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default leader wait for co-submitters, in microseconds. Small against
+/// a multi-millisecond infer launch, large against the scheduling jitter
+/// between pool workers entering an eval fan-out together.
+pub const DEFAULT_WINDOW_US: u64 = 200;
+
+/// Default mega-batch cap in samples (16 requests of the default
+/// 16-sample infer batch).
+pub const DEFAULT_MAX_BATCH: usize = 256;
+
+/// Micro-batch coalescing knobs, set per-run via
+/// `RuntimeOpts::coalesce` or directly with `Engine::set_coalesce`.
+///
+/// Defaults to **off** so the per-call path stays byte-for-byte the
+/// shipping behavior; the identity contract (see module docs) makes
+/// turning it on safe for any workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoalesceOpts {
+    /// Master switch; off = every request is its own kernel launch.
+    pub enabled: bool,
+    /// How long a leader waits for co-submitters (microseconds).
+    pub window_us: u64,
+    /// Mega-batch cap in samples; a request that would overflow it
+    /// starts a fresh group.
+    pub max_batch: usize,
+}
+
+impl Default for CoalesceOpts {
+    fn default() -> Self {
+        CoalesceOpts { enabled: false, window_us: DEFAULT_WINDOW_US, max_batch: DEFAULT_MAX_BATCH }
+    }
+}
+
+impl CoalesceOpts {
+    /// Coalescing on with default window and cap.
+    pub fn on() -> Self {
+        CoalesceOpts { enabled: true, ..CoalesceOpts::default() }
+    }
+
+    /// Set the coalesce window (microseconds).
+    pub fn window_us(mut self, us: u64) -> Self {
+        self.window_us = us;
+        self
+    }
+
+    /// Set the mega-batch cap (samples).
+    pub fn max_batch(mut self, samples: usize) -> Self {
+        self.max_batch = samples;
+        self
+    }
+}
+
+/// Content hash of a parameter vector — the model identity in a coalesce
+/// key. FNV-1a over the f32 bit patterns, so value-equal clones (the
+/// per-camera copies of a published group model) share an id without any
+/// pointer aliasing requirement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ThetaId(pub u64);
+
+/// Hash `theta` into a [`ThetaId`]. ~6k multiplies for the student model
+/// — noise against a single-sample forward pass.
+pub fn theta_id(theta: &[f32]) -> ThetaId {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in theta {
+        h = (h ^ u64::from(v.to_bits())).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    ThetaId(h ^ theta.len() as u64)
+}
+
+/// Which inference program a request targets. Part of the coalesce key:
+/// requests only merge within one program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReqKind {
+    /// Detection head (`native::infer_det`).
+    Det,
+    /// Segmentation head (`native::infer_seg`).
+    Seg,
+    /// Probe-feature extraction (`native::features`; theta-free, so all
+    /// concurrent feature batches at one resolution share a key).
+    Feat,
+}
+
+/// One logical inference submission: `samples` frames at `res`×`res`
+/// against the model identified by `theta_id`.
+#[derive(Debug, Clone, Copy)]
+pub struct InferRequest<'a> {
+    pub kind: ReqKind,
+    pub theta_id: ThetaId,
+    pub res: usize,
+    /// `samples * res * res * 3` floats, sample-major.
+    pub pixels: &'a [f32],
+    pub samples: usize,
+}
+
+/// Whole-batch kernel output, sliceable per submitter.
+#[derive(Debug, Clone)]
+pub enum InferOut {
+    /// `(obj, cls)` from `native::infer_det`.
+    Det { obj: Vec<f32>, cls: Vec<f32> },
+    /// Per-pixel class probabilities from `native::infer_seg`.
+    Seg { probs: Vec<f32> },
+    /// L2-normalized descriptors from `native::features`.
+    Feat { emb: Vec<f32> },
+}
+
+impl InferOut {
+    /// Extract samples `[off, off + n)` out of an output covering
+    /// `total` samples. Every payload vector is sample-major with a
+    /// uniform per-sample stride, so the slice is a pure copy.
+    fn slice_samples(&self, total: usize, off: usize, n: usize) -> InferOut {
+        fn part(v: &[f32], total: usize, off: usize, n: usize) -> Vec<f32> {
+            debug_assert_eq!(v.len() % total, 0);
+            let per = v.len() / total;
+            v[off * per..(off + n) * per].to_vec()
+        }
+        match self {
+            InferOut::Det { obj, cls } => InferOut::Det {
+                obj: part(obj, total, off, n),
+                cls: part(cls, total, off, n),
+            },
+            InferOut::Seg { probs } => InferOut::Seg { probs: part(probs, total, off, n) },
+            InferOut::Feat { emb } => InferOut::Feat { emb: part(emb, total, off, n) },
+        }
+    }
+}
+
+/// Coalesce key: requests merge only when the program, the resolution,
+/// and the model content all match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    kind: ReqKind,
+    res: usize,
+    theta: ThetaId,
+    theta_len: usize,
+}
+
+/// One in-flight mega-batch.
+struct Group {
+    /// Leader's theta, copied in so joiners can reject hash collisions
+    /// bitwise (≈25 KB once per group — noise against the launch).
+    theta: Vec<f32>,
+    /// Concatenated member pixels, join order.
+    pixels: Vec<f32>,
+    /// Total samples accumulated.
+    total: usize,
+    /// Set by the leader once it stops accepting joins.
+    closed: bool,
+    /// Whole-batch output, set by the leader after the launch.
+    out: Option<Arc<InferOut>>,
+}
+
+struct GroupCell {
+    inner: Mutex<Group>,
+    cv: Condvar,
+}
+
+/// The coalescing submission layer, one per `Engine`. All knobs are
+/// atomics so serve sessions can reconfigure a shared engine without a
+/// write lock (last writer wins; results are unaffected either way —
+/// only batching granularity changes).
+pub struct InferQueue {
+    enabled: AtomicBool,
+    window_us: AtomicU64,
+    max_batch: AtomicUsize,
+    /// Submitters currently inside [`InferQueue::submit`]. A leader that
+    /// observes itself alone skips the coalesce window entirely, so
+    /// serial callers pay no added latency.
+    active: AtomicUsize,
+    /// Open groups by coalesce key. Lock order: this map, then a group.
+    groups: Mutex<HashMap<Key, Arc<GroupCell>>>,
+}
+
+impl InferQueue {
+    pub fn new(opts: CoalesceOpts) -> InferQueue {
+        let q = InferQueue {
+            enabled: AtomicBool::new(false),
+            window_us: AtomicU64::new(0),
+            max_batch: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            groups: Mutex::new(HashMap::new()),
+        };
+        q.set_opts(opts);
+        q
+    }
+
+    pub fn set_opts(&self, opts: CoalesceOpts) {
+        self.window_us.store(opts.window_us, Ordering::Relaxed);
+        self.max_batch.store(opts.max_batch.max(1), Ordering::Relaxed);
+        self.enabled.store(opts.enabled, Ordering::Relaxed);
+    }
+
+    pub fn opts(&self) -> CoalesceOpts {
+        CoalesceOpts {
+            enabled: self.enabled.load(Ordering::Relaxed),
+            window_us: self.window_us.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Submit one request. `run(mega_pixels, total_samples)` launches the
+    /// kernel over a (possibly merged) batch; the caller gets back
+    /// exactly its own samples' worth of output, bit-identical to
+    /// `run(req.pixels, req.samples)`.
+    ///
+    /// `theta` must be the parameter vector `req.theta_id` was hashed
+    /// from (empty for [`ReqKind::Feat`]). `run` must not panic — the
+    /// engine validates shapes before submitting — and may itself fan
+    /// out over the worker pool (followers park without holding locks).
+    pub fn submit<F>(&self, req: InferRequest<'_>, theta: &[f32], run: F) -> InferOut
+    where
+        F: Fn(&[f32], usize) -> InferOut,
+    {
+        if !self.enabled() {
+            return run(req.pixels, req.samples);
+        }
+        self.active.fetch_add(1, Ordering::SeqCst);
+        let out = self.submit_coalescing(req, theta, run);
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    fn submit_coalescing<F>(&self, req: InferRequest<'_>, theta: &[f32], run: F) -> InferOut
+    where
+        F: Fn(&[f32], usize) -> InferOut,
+    {
+        let key = Key {
+            kind: req.kind,
+            res: req.res,
+            theta: req.theta_id,
+            theta_len: theta.len(),
+        };
+        let max_batch = self.max_batch.load(Ordering::Relaxed).max(req.samples);
+
+        // Join an open group if one fits, else install ourselves as the
+        // leader of a fresh one (evicting a closed/full/mismatched entry
+        // from the map — its members still hold it via Arc).
+        let cell = {
+            let mut map = self.groups.lock().expect("infer queue map poisoned");
+            let joinable = map.get(&key).cloned().and_then(|c| {
+                let mut g = c.inner.lock().expect("infer group poisoned");
+                if !g.closed && g.total + req.samples <= max_batch && same_bits(&g.theta, theta) {
+                    let off = g.total;
+                    g.pixels.extend_from_slice(req.pixels);
+                    g.total += req.samples;
+                    let full = g.total >= max_batch;
+                    drop(g);
+                    if full {
+                        c.cv.notify_all();
+                    }
+                    Some((c.clone(), off))
+                } else {
+                    None
+                }
+            });
+            if let Some((c, off)) = joinable {
+                drop(map);
+                return self.follow(&c, off, req.samples);
+            }
+            let fresh = Arc::new(GroupCell {
+                inner: Mutex::new(Group {
+                    theta: theta.to_vec(),
+                    pixels: req.pixels.to_vec(),
+                    total: req.samples,
+                    closed: false,
+                    out: None,
+                }),
+                cv: Condvar::new(),
+            });
+            map.insert(key, fresh.clone());
+            fresh
+        };
+        self.lead(key, &cell, req.samples, max_batch, run)
+    }
+
+    /// Leader: wait out the coalesce window, close, launch, publish.
+    fn lead<F>(
+        &self,
+        key: Key,
+        cell: &Arc<GroupCell>,
+        own_samples: usize,
+        max_batch: usize,
+        run: F,
+    ) -> InferOut
+    where
+        F: Fn(&[f32], usize) -> InferOut,
+    {
+        let window = Duration::from_micros(self.window_us.load(Ordering::Relaxed));
+        let mut g = cell.inner.lock().expect("infer group poisoned");
+        if !window.is_zero() {
+            let deadline = Instant::now() + window;
+            // Wait only while someone else is in-flight who could still
+            // join; a lone submitter closes immediately.
+            while g.total < max_batch && self.active.load(Ordering::SeqCst) > 1 {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = cell
+                    .cv
+                    .wait_timeout(g, deadline - now)
+                    .expect("infer group poisoned");
+                g = guard;
+            }
+        }
+        g.closed = true;
+        let mega = std::mem::take(&mut g.pixels);
+        let total = g.total;
+        drop(g);
+
+        // Unlink so new submitters start a fresh group (unless a joiner
+        // that found us full already replaced the entry).
+        {
+            let mut map = self.groups.lock().expect("infer queue map poisoned");
+            if matches!(map.get(&key), Some(c) if Arc::ptr_eq(c, cell)) {
+                map.remove(&key);
+            }
+        }
+
+        let out = Arc::new(run(&mega, total));
+        let mine = out.slice_samples(total, 0, own_samples);
+        let mut g = cell.inner.lock().expect("infer group poisoned");
+        g.out = Some(out);
+        drop(g);
+        cell.cv.notify_all();
+        mine
+    }
+
+    /// Follower: park until the leader publishes, then slice.
+    fn follow(&self, cell: &GroupCell, off: usize, n: usize) -> InferOut {
+        let mut g = cell.inner.lock().expect("infer group poisoned");
+        loop {
+            if let Some(out) = &g.out {
+                let total = g.total;
+                return out.slice_samples(total, off, n);
+            }
+            g = cell.cv.wait(g).expect("infer group poisoned");
+        }
+    }
+}
+
+/// Bitwise slice equality — NaN-proof (a theta containing NaN simply
+/// never coalesces with a value-equal clone via `==`, which would forfeit
+/// batching; bit comparison keeps it working).
+fn same_bits(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det_run(px: &[f32], n: usize) -> InferOut {
+        // Stand-in kernel: per-sample pure, shape 2 floats per sample.
+        let per = px.len() / n;
+        let mut obj = Vec::with_capacity(n);
+        let mut cls = Vec::with_capacity(n);
+        for s in 0..n {
+            let chunk = &px[s * per..(s + 1) * per];
+            obj.push(chunk.iter().sum::<f32>());
+            cls.push(chunk.iter().fold(0.0f32, |a, &v| a.max(v)));
+        }
+        InferOut::Det { obj, cls }
+    }
+
+    fn req(theta: &[f32], px: &[f32], samples: usize) -> InferRequest<'_> {
+        InferRequest {
+            kind: ReqKind::Det,
+            theta_id: theta_id(theta),
+            res: 16,
+            pixels: px,
+            samples,
+        }
+    }
+
+    #[test]
+    fn theta_id_is_content_keyed() {
+        let a = vec![1.0f32, -2.5, 0.0];
+        let b = a.clone();
+        let c = vec![1.0f32, -2.5, 0.5];
+        assert_eq!(theta_id(&a), theta_id(&b));
+        assert_ne!(theta_id(&a), theta_id(&c));
+        // Length is folded in: a prefix must not collide with the whole.
+        assert_ne!(theta_id(&a[..2]), theta_id(&a));
+    }
+
+    #[test]
+    fn disabled_queue_is_a_passthrough() {
+        let q = InferQueue::new(CoalesceOpts::default());
+        let theta = vec![0.25f32; 8];
+        let px: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let direct = det_run(&px, 4);
+        let via = q.submit(req(&theta, &px, 4), &theta, det_run);
+        match (direct, via) {
+            (InferOut::Det { obj: o1, cls: c1 }, InferOut::Det { obj: o2, cls: c2 }) => {
+                assert_eq!(o1, o2);
+                assert_eq!(c1, c2);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn lone_submitter_skips_the_window() {
+        let q = InferQueue::new(CoalesceOpts::on().window_us(1_000_000));
+        let theta = vec![1.5f32; 8];
+        let px = vec![2.0f32; 6];
+        let t0 = Instant::now();
+        let out = q.submit(req(&theta, &px, 3), &theta, det_run);
+        // A 1 s window must not be waited out when active == 1.
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        match out {
+            InferOut::Det { obj, .. } => assert_eq!(obj, vec![4.0f32; 3]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_coalesce_and_slice_correctly() {
+        let q = InferQueue::new(CoalesceOpts::on().window_us(50_000));
+        let theta = vec![0.5f32; 16];
+        let launches = AtomicUsize::new(0);
+        let n_threads = 4;
+        let samples = 3;
+        let outs: Vec<(usize, InferOut)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    let (q, theta, launches) = (&q, &theta, &launches);
+                    s.spawn(move || {
+                        let px: Vec<f32> = (0..samples * 2).map(|i| (t * 100 + i) as f32).collect();
+                        let out = q.submit(req(theta, &px, samples), theta, |mega, n| {
+                            launches.fetch_add(1, Ordering::SeqCst);
+                            det_run(mega, n)
+                        });
+                        (t, out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Each submitter must get exactly its own samples back.
+        for (t, out) in &outs {
+            let px: Vec<f32> = (0..samples * 2).map(|i| (t * 100 + i) as f32).collect();
+            let want = det_run(&px, samples);
+            match (out, &want) {
+                (InferOut::Det { obj, cls }, InferOut::Det { obj: wo, cls: wc }) => {
+                    assert_eq!(obj, wo, "submitter {t} got someone else's slice");
+                    assert_eq!(cls, wc);
+                }
+                _ => unreachable!(),
+            }
+        }
+        // And at least some coalescing must have happened under a wide
+        // window with 4 concurrent submitters.
+        assert!(launches.load(Ordering::SeqCst) <= n_threads);
+        assert!(launches.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn mismatched_theta_never_merges() {
+        let q = InferQueue::new(CoalesceOpts::on().window_us(20_000));
+        let t1 = vec![1.0f32; 8];
+        let t2 = vec![2.0f32; 8];
+        std::thread::scope(|s| {
+            for theta in [&t1, &t2] {
+                let q = &q;
+                s.spawn(move || {
+                    let px = vec![theta[0]; 4];
+                    let out = q.submit(req(theta, &px, 2), theta, det_run);
+                    match out {
+                        InferOut::Det { obj, .. } => {
+                            assert_eq!(obj, vec![theta[0] * 2.0; 2]);
+                        }
+                        _ => unreachable!(),
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn max_batch_splits_groups() {
+        // Cap of 4 samples: two 3-sample requests can never share a
+        // group, but both must still complete with correct slices.
+        let q = InferQueue::new(CoalesceOpts::on().window_us(10_000).max_batch(4));
+        let theta = vec![3.0f32; 8];
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let (q, theta) = (&q, &theta);
+                s.spawn(move || {
+                    let px = vec![(t + 1) as f32; 6];
+                    let out = q.submit(req(theta, &px, 3), theta, det_run);
+                    match out {
+                        InferOut::Det { obj, .. } => {
+                            assert_eq!(obj, vec![(t + 1) as f32 * 2.0; 3]);
+                        }
+                        _ => unreachable!(),
+                    }
+                });
+            }
+        });
+    }
+}

@@ -10,6 +10,7 @@
 pub mod batch;
 pub mod engine;
 pub mod manifest;
+pub mod microbatch;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -21,3 +22,4 @@ pub use pjrt::Engine;
 
 pub use engine::{DetPred, EngineStats, Labels, ModelState, SegPred, TrainBatch};
 pub use manifest::{artifact_key, Manifest, Task};
+pub use microbatch::CoalesceOpts;

@@ -158,9 +158,60 @@ fn split_grads(grad: &mut [f32]) -> Grads<'_> {
 // Dense primitives
 // ---------------------------------------------------------------------------
 
+/// Output-row block for the tiled matmul: this many rows of `a` share
+/// each `b`-row load.
+const MM_ROW_BLOCK: usize = 4;
+
+/// Widest `n` the tiled matmul keeps in a stack tile. Every forward-pass
+/// call site fits (conv widths 8/16/32, head width 5); anything wider
+/// falls back to the row-at-a-time loop.
+const MM_N_MAX: usize = 32;
+
 /// `out[m,n] += a[m,k] @ b[k,n]` (row-major), skipping zero lhs entries —
 /// im2col patches are full of padding zeros.
+///
+/// Register-blocked/tiled for the infer forward pass: [`MM_ROW_BLOCK`]
+/// output rows are accumulated together in a stack tile (small enough for
+/// the compiler to keep in vector registers, since `n <= MM_N_MAX` at
+/// every call site), so each `b` row is loaded once per block instead of
+/// once per row, and the contiguous inner loop over `n` autovectorizes.
+/// Bit-identical to the naive loop by construction: every output element
+/// still accumulates its `k` terms in ascending order with the same
+/// per-element zero-skip, and moving f32 values through the tile changes
+/// no bits. Remainder rows (`m % MM_ROW_BLOCK`) and wide-`n` calls take
+/// [`matmul_acc_rows`], the original row-at-a-time loop.
 fn matmul_acc(out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
+    if n > MM_N_MAX {
+        return matmul_acc_rows(out, a, m, k, b, n);
+    }
+    let mut i = 0;
+    while i + MM_ROW_BLOCK <= m {
+        let mut tile = [[0.0f32; MM_N_MAX]; MM_ROW_BLOCK];
+        for (r, trow) in tile.iter_mut().enumerate() {
+            trow[..n].copy_from_slice(&out[(i + r) * n..(i + r) * n + n]);
+        }
+        for kk in 0..k {
+            let brow = &b[kk * n..kk * n + n];
+            for (r, trow) in tile.iter_mut().enumerate() {
+                let av = a[(i + r) * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in trow[..n].iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        for (r, trow) in tile.iter().enumerate() {
+            out[(i + r) * n..(i + r) * n + n].copy_from_slice(&trow[..n]);
+        }
+        i += MM_ROW_BLOCK;
+    }
+    matmul_acc_rows(&mut out[i * n..], &a[i * k..], m - i, k, b, n);
+}
+
+/// Row-at-a-time fallback (remainder rows; `n > MM_N_MAX`).
+fn matmul_acc_rows(out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
@@ -774,47 +825,69 @@ pub fn infer_seg(theta: &[f32], pixels: &[f32], b: usize, r: usize, exec: Exec) 
     out
 }
 
+/// Descriptor batch size at which [`features`] starts sharding across the
+/// pool. One sample is ~15k flops (a few µs) — below the pool's per-wake
+/// handout cost — so the default 16-sample probe batch stays on the
+/// serial fast path; only coalesced mega-batches (the micro-batch layer
+/// merging concurrent probes) get large enough for sharding to pay.
+pub const FEATURE_SHARD_MIN: usize = 64;
+
 /// Patch-statistics descriptors: `[B,R,R,3] -> [B,96]`, L2-normalised.
 ///
 /// Mirrors `python/compile/kernels/patchstats.py`: a 4x4 patch grid, each
-/// patch contributing per-channel (mean, sqrt(var + 1e-6)). Deliberately
-/// **not** batch-sharded: one sample is ~15k flops, far below the pool's
-/// handout cost, so the serial loop is the fast path.
-pub fn features(x: &[f32], b: usize, r: usize) -> Vec<f32> {
-    let patch = r / PATCHES;
-    let inv_n = 1.0 / (patch * patch) as f32;
-    let mut out = vec![0.0f32; b * EMBED_DIM];
+/// patch contributing per-channel (mean, sqrt(var + 1e-6)). Serial below
+/// [`FEATURE_SHARD_MIN`] samples, batch-sharded (index-ordered, so
+/// bit-identical to serial) at or above it.
+pub fn features(x: &[f32], b: usize, r: usize, exec: Exec) -> Vec<f32> {
+    if b >= FEATURE_SHARD_MIN && exec.threads > 1 {
+        let per: Vec<[f32; EMBED_DIM]> =
+            exec.pool.map_n(exec.threads, b, |bi| feature_sample(x, bi, r));
+        let mut out = Vec::with_capacity(b * EMBED_DIM);
+        for emb in per {
+            out.extend_from_slice(&emb);
+        }
+        return out;
+    }
+    let mut out = Vec::with_capacity(b * EMBED_DIM);
     for bi in 0..b {
-        let emb = &mut out[bi * EMBED_DIM..(bi + 1) * EMBED_DIM];
-        for py in 0..PATCHES {
-            for px in 0..PATCHES {
-                let mut s1 = [0.0f32; 3];
-                let mut s2 = [0.0f32; 3];
-                for y in 0..patch {
-                    for xx in 0..patch {
-                        let src = ((bi * r + py * patch + y) * r + px * patch + xx) * 3;
-                        for c in 0..3 {
-                            let v = x[src + c];
-                            s1[c] += v;
-                            s2[c] += v * v;
-                        }
-                    }
-                }
-                for c in 0..3 {
-                    let mean = s1[c] * inv_n;
-                    let var = (s2[c] * inv_n - mean * mean).max(0.0);
-                    let base = ((py * PATCHES + px) * 3 + c) * 2;
-                    emb[base] = mean;
-                    emb[base + 1] = (var + 1e-6).sqrt();
-                }
-            }
-        }
-        let norm = emb.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-8;
-        for v in emb.iter_mut() {
-            *v /= norm;
-        }
+        out.extend_from_slice(&feature_sample(x, bi, r));
     }
     out
+}
+
+/// One sample's descriptor — the shared body of both [`features`] paths.
+fn feature_sample(x: &[f32], bi: usize, r: usize) -> [f32; EMBED_DIM] {
+    let patch = r / PATCHES;
+    let inv_n = 1.0 / (patch * patch) as f32;
+    let mut emb = [0.0f32; EMBED_DIM];
+    for py in 0..PATCHES {
+        for px in 0..PATCHES {
+            let mut s1 = [0.0f32; 3];
+            let mut s2 = [0.0f32; 3];
+            for y in 0..patch {
+                for xx in 0..patch {
+                    let src = ((bi * r + py * patch + y) * r + px * patch + xx) * 3;
+                    for c in 0..3 {
+                        let v = x[src + c];
+                        s1[c] += v;
+                        s2[c] += v * v;
+                    }
+                }
+            }
+            for c in 0..3 {
+                let mean = s1[c] * inv_n;
+                let var = (s2[c] * inv_n - mean * mean).max(0.0);
+                let base = ((py * PATCHES + px) * 3 + c) * 2;
+                emb[base] = mean;
+                emb[base + 1] = (var + 1e-6).sqrt();
+            }
+        }
+    }
+    let norm = emb.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-8;
+    for v in emb.iter_mut() {
+        *v /= norm;
+    }
+    emb
 }
 
 #[cfg(test)]
@@ -991,7 +1064,7 @@ mod tests {
     fn features_unit_norm_and_shape() {
         let b = 4usize;
         let x = lcg(b * 32 * 32 * 3, 29);
-        let emb = features(&x, b, 32);
+        let emb = features(&x, b, 32, Exec::serial());
         assert_eq!(emb.len(), b * EMBED_DIM);
         for row in emb.chunks(EMBED_DIM) {
             let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
@@ -1000,8 +1073,50 @@ mod tests {
         // A constant image has zero variance everywhere: stds collapse to
         // sqrt(eps), means dominate.
         let flat = vec![0.5f32; 32 * 32 * 3];
-        let e = features(&flat, 1, 32);
+        let e = features(&flat, 1, 32, Exec::serial());
         assert!(e[0] > e[1], "mean channel should dominate std channel");
+    }
+
+    #[test]
+    fn features_sharded_bit_identical_to_serial() {
+        // Past FEATURE_SHARD_MIN the batch shards across the pool with an
+        // index-ordered concat — pinned bitwise equal to the serial loop.
+        let b = FEATURE_SHARD_MIN + 3;
+        let x = lcg(b * 32 * 32 * 3, 53);
+        let serial = features(&x, b, 32, Exec::serial());
+        let pool = Pool::new(3);
+        let sharded = features(
+            &x,
+            b,
+            32,
+            Exec {
+                pool: &pool,
+                threads: 4,
+            },
+        );
+        assert_eq!(serial, sharded);
+    }
+
+    #[test]
+    fn tiled_matmul_bit_identical_to_row_loop() {
+        // The register-blocked matmul must preserve every bit of the
+        // row-at-a-time reference, including remainder rows and the
+        // zero-skip path, across the widths the forward pass uses.
+        for &(m, k, n) in &[(16usize, 27usize, 8usize), (7, 72, 16), (9, 144, 32), (16, 32, 5)] {
+            let mut a = lcg(m * k, (m * 31 + n) as u32);
+            // Sprinkle exact zeros like im2col padding does.
+            for (i, v) in a.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let bm = lcg(k * n, (k * 7 + n) as u32);
+            let mut out_tiled = lcg(m * n, 11);
+            let mut out_ref = out_tiled.clone();
+            matmul_acc(&mut out_tiled, &a, m, k, &bm, n);
+            matmul_acc_rows(&mut out_ref, &a, m, k, &bm, n);
+            assert_eq!(out_tiled, out_ref, "m={m} k={k} n={n}");
+        }
     }
 
     #[test]

@@ -64,6 +64,16 @@ impl Engine {
         &self.pool
     }
 
+    /// Micro-batch coalescing is a native-backend optimization; the PJRT
+    /// path executes per-call, so the knobs are accepted and ignored
+    /// (keeps `RuntimeOpts::coalesce` specs portable across backends).
+    pub fn set_coalesce(&self, _opts: super::microbatch::CoalesceOpts) {}
+
+    /// Always the disabled default on this backend.
+    pub fn coalesce(&self) -> super::microbatch::CoalesceOpts {
+        super::microbatch::CoalesceOpts::default()
+    }
+
     /// Default artifacts location (crate-root `artifacts/`).
     pub fn open_default() -> Result<Engine> {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -213,6 +223,7 @@ impl Engine {
         let key = spec.name.clone();
         let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
         let outs = self.run(&key, &inputs)?;
+        StatsCell::add(&self.stats.infer_requests, 1);
         StatsCell::add(&self.stats.infer_calls, 1);
         Ok(DetPred {
             batch: b,
@@ -234,6 +245,7 @@ impl Engine {
         let key = spec.name.clone();
         let inputs = [vec1(theta, &[theta.len()])?, vec1(pixels, &[b, res, res, 3])?];
         let outs = self.run(&key, &inputs)?;
+        StatsCell::add(&self.stats.infer_requests, 1);
         StatsCell::add(&self.stats.infer_calls, 1);
         Ok(SegPred {
             batch: b,

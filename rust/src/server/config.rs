@@ -211,6 +211,12 @@ pub struct SystemConfig {
     /// Per-window driver; heterogeneous `cam_windows` force
     /// [`Scheduler::EventDriven`] regardless of this setting.
     pub scheduler: Scheduler,
+    /// Micro-batch coalescing knobs for the engine's inference
+    /// submission layer ([`crate::runtime::microbatch`]). `None` leaves
+    /// the shared engine's current setting untouched; `Some` is applied
+    /// by `Session::new`. Results are bit-identical either way — the
+    /// knob only trades kernel-launch count for batching latency.
+    pub coalesce: Option<crate::runtime::CoalesceOpts>,
     /// Per-camera window length/phase overrides (empty = uniform fleet).
     pub cam_windows: std::collections::BTreeMap<usize, CamWindow>,
     /// Upper bound on [`SystemConfig::effective_micro_windows`]. The
@@ -247,6 +253,7 @@ impl SystemConfig {
             frame_cache: true,
             faults: FaultPlan::none(),
             scheduler: Scheduler::default(),
+            coalesce: None,
             cam_windows: std::collections::BTreeMap::new(),
             max_micro_windows: usize::MAX,
         }

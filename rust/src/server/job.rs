@@ -154,6 +154,15 @@ impl Job {
 /// Takes `&Engine` (inference never mutates engine state), so callers can
 /// fan independent evals out across [`crate::util::pool`] workers sharing
 /// one engine.
+///
+/// This is the eval fan-outs' entry into the engine's micro-batch
+/// **submission layer**: each `infer_det`/`infer_seg` call here is a
+/// logical request, and with coalescing enabled
+/// ([`crate::runtime::CoalesceOpts`]) concurrent workers evaluating the
+/// same `(theta, res)` — e.g. every member of a group against the freshly
+/// published group model — share single mega-batched kernel launches.
+/// Returned mAPs are bit-identical either way, so the fan-outs'
+/// index-ordered reduction (and the event log) is unaffected.
 pub fn eval_model(
     engine: &Engine,
     task: Task,

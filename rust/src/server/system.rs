@@ -493,7 +493,8 @@ impl<'e> System<'e> {
     fn issue_request(&mut self, cam: usize, frames: Vec<Frame>, emb: Vec<f32>) -> Result<()> {
         let now = self.now();
         let loc = self.world.cameras[cam].position(now);
-        // The admission bar: the camera's own model accuracy on the probe.
+        // The admission bar: the camera's own model accuracy on the probe
+        // (a micro-batch submission like every eval — see `eval_model`).
         let own_acc = eval_model(self.engine, self.cfg.task, &self.cams[cam].theta, &frames)?;
         let meta = RequestMeta {
             cam,
@@ -548,7 +549,10 @@ impl<'e> System<'e> {
             // evals per request instead of O(jobs). The candidate evals
             // are independent, so they fan out across the engine's worker
             // pool; index-ordered reduction keeps the decision (and the
-            // event stream) identical at any pool size.
+            // event stream) identical at any pool size. Each eval submits
+            // through the engine's micro-batch layer, so concurrent
+            // candidates sharing a model coalesce into one kernel launch
+            // when coalescing is enabled (bit-identical results).
             let allowed = self.neighbor_candidate_jobs(cam);
             let mut candidates: Vec<(usize, &[f32])> = Vec::new();
             for job in &self.group_meta {
@@ -809,7 +813,10 @@ impl<'e> System<'e> {
     /// engine's worker pool; the sum reduces in member order, so the
     /// result is bit-equal to the serial loop at any pool size. Frames
     /// come from the eval cache: the pre-/post-training eval pair of a
-    /// micro-window shares one render per member.
+    /// micro-window shares one render per member. Every member evaluates
+    /// the same job model, so with micro-batch coalescing enabled the
+    /// concurrent submissions merge into mega-batched launches — the
+    /// canonical win case for the submission layer.
     fn eval_job(&self, job_idx: usize) -> Result<f32> {
         let job = &self.jobs[job_idx];
         let theta = &job.model.theta;
@@ -934,7 +941,10 @@ impl<'e> System<'e> {
         // camera, reduced in camera order so downstream bookkeeping is
         // order-identical. Renders go through the eval cache, so cameras
         // sharing a (cam, salt) key with a later consumer this window
-        // render once.
+        // render once. After a group publish, members hold value-equal
+        // theta clones, so their concurrent submissions coalesce into
+        // shared kernel launches when micro-batching is enabled (the
+        // coalesce key hashes theta *content*, not pointers).
         let accs = {
             let engine = self.engine;
             let task = self.cfg.task;
@@ -1082,7 +1092,9 @@ impl<'e> System<'e> {
         // order) matches the old serial nesting, and the BTreeMap
         // reduction is keyed, so the grouping decision is identical at any
         // pool size. The eval cache collapses a camera's render to once
-        // per window here no matter how many jobs evaluate it.
+        // per window here no matter how many jobs evaluate it. A job's
+        // members all submit the same theta, so the matrix's rows coalesce
+        // into mega-batched launches when micro-batching is enabled.
         let evals: BTreeMap<(usize, usize), f32> = {
             let mut pairs: Vec<(usize, usize, &[f32])> = Vec::new();
             for job in &self.jobs {
@@ -1527,7 +1539,11 @@ impl<'e> System<'e> {
             }
         }
         // The salt folds the slot in so staggered boundaries never collide
-        // with the end-of-window measurement pass.
+        // with the end-of-window measurement pass. This history eval runs
+        // serially per boundary, but it still submits through the engine's
+        // micro-batch layer, so it can share a launch with whatever the
+        // pool is evaluating concurrently (a lone submitter skips the
+        // coalesce window and pays nothing).
         let salt = (self.window_idx as u64 * 131 + slot as u64) * 31_337 + cam as u64;
         let frames =
             self.eval_cache

@@ -4,7 +4,7 @@
 
 use ecco::net::{gaimd_weight, NetSim};
 use ecco::runtime::native::{self, Exec};
-use ecco::runtime::{Engine, Labels, Task, TrainBatch};
+use ecco::runtime::{CoalesceOpts, Engine, Labels, Task, TrainBatch};
 use ecco::scene::{render, Frame, SceneState};
 use ecco::server::eval_model;
 use ecco::util::pool::Pool;
@@ -251,6 +251,76 @@ fn prop_batch_sharded_kernels_bit_identical_to_serial() {
                 let pp = native::infer_seg(&theta_s, &xi, native::INFER_BATCH, r, par);
                 if ps != pp {
                     return Err("infer_seg diverged".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_microbatched_infer_bit_identical_to_per_call() {
+    // The micro-batch submission layer's correctness contract: routing
+    // concurrent infer calls through the coalescing queue — wide window
+    // (groups actually merge) or zero window (opportunistic only), det
+    // and seg interleaved, 2..4 OS-thread submitters on top of whatever
+    // kernel pool ECCO_THREADS gave the engine — yields outputs
+    // bit-identical to the per-call path. The native inference kernels
+    // are per-sample pure, so a mega-batch is pure concatenation:
+    // equality, not approximation.
+    let engine = Engine::open_default().unwrap();
+    let det_theta = engine.init_model(Task::Det).unwrap().theta;
+    let seg_theta = engine.init_model(Task::Seg).unwrap().theta;
+    let b = engine.manifest.infer_batch;
+    prop::check("microbatch-bit-identical", 4, |g| {
+        let r = [16usize, 32][g.usize(0, 1)];
+        let n_subs = g.usize(2, 4);
+        let sets: Vec<Vec<f32>> = (0..n_subs)
+            .map(|_| (0..b * r * r * 3).map(|_| g.f32(0.0, 1.0)).collect())
+            .collect();
+        // Per-call reference: coalescing off (the shipping default).
+        engine.set_coalesce(CoalesceOpts::default());
+        let base: Vec<_> = sets
+            .iter()
+            .map(|px| {
+                (
+                    engine.infer_det(&det_theta, r, px).unwrap(),
+                    engine.infer_seg(&seg_theta, r, px).unwrap(),
+                )
+            })
+            .collect();
+        for (tag, opts) in [
+            ("wide", CoalesceOpts::on().window_us(50_000)),
+            ("zero", CoalesceOpts::on().window_us(0)),
+        ] {
+            engine.set_coalesce(opts);
+            let eng = &engine;
+            let (dt, st) = (&det_theta[..], &seg_theta[..]);
+            let outs: Vec<_> = std::thread::scope(|scope| {
+                let handles: Vec<_> = sets
+                    .iter()
+                    .map(|px| {
+                        scope.spawn(move || {
+                            (
+                                eng.infer_det(dt, r, px).unwrap(),
+                                eng.infer_seg(st, r, px).unwrap(),
+                            )
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            engine.set_coalesce(CoalesceOpts::default());
+            for (i, (d, sg)) in outs.iter().enumerate() {
+                if d.obj != base[i].0.obj || d.cls != base[i].0.cls {
+                    return Err(format!(
+                        "det diverged (r={r} subs={n_subs} window={tag})"
+                    ));
+                }
+                if sg.probs != base[i].1.probs {
+                    return Err(format!(
+                        "seg diverged (r={r} subs={n_subs} window={tag})"
+                    ));
                 }
             }
         }

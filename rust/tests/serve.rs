@@ -7,7 +7,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::thread;
 
-use ecco::api::{RunSpec, SimOpts};
+use ecco::api::{CoalesceOpts, RunSpec, RuntimeOpts, SimOpts};
 use ecco::runtime::{Engine, Task};
 use ecco::serve::{Bind, ServeConfig, Server};
 use ecco::server::Policy;
@@ -302,6 +302,65 @@ fn slow_consumer_gets_bounded_buffer_and_drop_accounting() {
         assert_ok(&resp);
         assert!(resp.get("final").unwrap().as_f64().unwrap().is_finite());
     });
+}
+
+#[test]
+fn concurrent_coalescing_sessions_stream_byte_identically() {
+    // Two tenants submit the same spec with micro-batch coalescing
+    // enabled and drain their streams concurrently on a 2-runner host
+    // sharing one engine — so their eval fan-outs can merge into shared
+    // mega-batched kernel launches. The pin: both event streams are
+    // byte-identical to each other AND to a per-call (coalescing off)
+    // reference run, i.e. the submission layer never leaks into the
+    // deterministic event surface.
+    let mut reference: Vec<String> = Vec::new();
+    with_server(
+        ServeConfig {
+            runners: 2,
+            ..ServeConfig::default()
+        },
+        |addr| {
+            let mut c = Client::connect(addr);
+            let resp = c.send(&format!(
+                r#"{{"cmd":"submit","spec":{},"events":true}}"#,
+                spec_json(63)
+            ));
+            session_id(&resp);
+            reference = event_frames(&c.drain_frames());
+        },
+    );
+    assert!(!reference.is_empty(), "reference run forwarded no events");
+
+    let spec_on = small_spec(63)
+        .runtime(RuntimeOpts::new().coalesce(CoalesceOpts::on()))
+        .to_wire_json()
+        .to_string_compact();
+    let mut streams: Vec<Vec<String>> = Vec::new();
+    with_server(
+        ServeConfig {
+            runners: 2,
+            ..ServeConfig::default()
+        },
+        |addr| {
+            let mut a = Client::connect(addr);
+            let mut b = Client::connect(addr);
+            for client in [&mut a, &mut b] {
+                let resp = client.send(&format!(
+                    r#"{{"cmd":"submit","spec":{spec_on},"events":true}}"#
+                ));
+                session_id(&resp);
+            }
+            streams = thread::scope(|scope| {
+                let ha = scope.spawn(move || a.drain_frames());
+                let hb = scope.spawn(move || b.drain_frames());
+                vec![ha.join().unwrap(), hb.join().unwrap()]
+            });
+        },
+    );
+    let ea = event_frames(&streams[0]);
+    let eb = event_frames(&streams[1]);
+    assert_eq!(ea, eb, "concurrent coalescing tenants diverged");
+    assert_eq!(ea, reference, "coalesced stream diverged from per-call run");
 }
 
 #[test]
