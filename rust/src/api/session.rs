@@ -80,6 +80,8 @@ impl<'e> Session<'e> {
             name,
             windows: rest.windows,
             stepped: 0,
+            // ecco-lint: allow(D003) wall-clock start for the wall_secs
+            // perf counter only; never reaches events or accuracies.
             t0: std::time::Instant::now(),
             stats0,
         })

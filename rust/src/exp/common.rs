@@ -39,7 +39,7 @@ impl OutSink {
         match &self.buf {
             None => println!("{}", text.as_ref()),
             Some(buf) => {
-                let mut buf = buf.lock().expect("exp output buffer poisoned");
+                let mut buf = crate::util::sync::plock(buf);
                 buf.push_str(text.as_ref());
                 buf.push('\n');
             }

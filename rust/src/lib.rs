@@ -36,7 +36,8 @@
 //! | [`serve`] | multi-tenant socket host: line-JSON protocol, admission queue, back-pressure, snapshot/resume (`ecco serve`) |
 //! | [`server`] | retraining jobs, micro-window scheduler, the (crate-private) `System` loop |
 //! | [`exp`] | one runner per paper table/figure (`ecco exp <id>`) |
-//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness, persistent worker pool ([`util::pool`]) |
+//! | [`lint`] | determinism & safety static analysis over this crate's own sources (`ecco lint`, rules D001–D006) |
+//! | [`util`] | from-scratch substrates: RNG, JSON, CLI, logging, stats, property tests, bench harness, persistent worker pool ([`util::pool`]), poison-tolerant lock helpers ([`util::sync`]) |
 //!
 //! ## Threading model
 //!
@@ -184,6 +185,44 @@
 //! are byte-identical to a fault-free build (pinned by
 //! `rust/tests/faults.rs`).
 //!
+//! ## Determinism contract
+//!
+//! Everything above leans on one invariant: **given a spec, event logs
+//! and accuracies are byte-identical at any thread count, on any
+//! machine** — it is what makes the A/B claims (coalescing on/off, cache
+//! on/off, event-driven vs lockstep, resume vs uninterrupted) checkable
+//! at all. The [`lint`] subsystem (`ecco lint`, run in CI) enforces the
+//! contract's known failure modes as named rules:
+//!
+//! * **D001** — no `unwrap`/`expect`/`panic!` in hot-path modules
+//!   (`server`, `runtime`, `serve`, `net`, `transmission`, `alloc`): a
+//!   panic there takes down a runner, a session, or the process instead
+//!   of failing one request. Typed errors or a documented suppression.
+//! * **D002** — no `HashMap`/`HashSet` in event-emitting or
+//!   wire-serializing modules: hash iteration order would leak into
+//!   event and frame bytes. `BTreeMap`/`BTreeSet` only.
+//! * **D003** — no wall-clock (`Instant::now`, `SystemTime::now`),
+//!   `sleep`, or entropy-seeded randomness outside allowlisted perf
+//!   surfaces: wall time may feed perf counters, never events or
+//!   accuracies.
+//! * **D004** — every `unsafe` lives in an allowlisted module
+//!   ([`util::pool`], [`runtime::microbatch`]), carries an adjacent
+//!   `// SAFETY:` comment, and every `unsafe fn` a `# Safety` doc
+//!   section. The pool's slot protocol is additionally checked under
+//!   Miri in CI.
+//! * **D005** — no `partial_cmp` on floats (the repo's most recurrent
+//!   bug class): one NaN in a score column makes ordering panic or go
+//!   unstable. `total_cmp` only.
+//! * **D006** — no `.lock().unwrap()` / unhandled poison: one panicked
+//!   thread must not cascade into every later locker. Use
+//!   [`util::sync::plock`] and friends, which recover the guard (sound
+//!   because every lock in this crate restores invariants before
+//!   unlock).
+//!
+//! Intentional exceptions are inline `// ecco-lint: allow(D00x) reason`
+//! suppressions with a mandatory written reason; `ecco lint` exits
+//! non-zero on any unsuppressed finding, and the shipped tree is clean.
+//!
 //! ## Quick start
 //!
 //! Every run goes through [`api::RunSpec`] and [`api::Session`]:
@@ -226,6 +265,7 @@ pub mod api;
 pub mod exp;
 pub mod faults;
 pub mod grouping;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod runtime;

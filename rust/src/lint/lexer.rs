@@ -1,0 +1,380 @@
+//! A lightweight Rust lexer for the lint pass.
+//!
+//! This is not a compiler front-end: it splits source text into just
+//! enough structure for token-pattern rules — identifiers, single-char
+//! punctuation, opaque literals, lifetimes — while keeping **comments**
+//! (with line numbers) as a separate stream, because two of the lint
+//! rules are *about* comments: `// SAFETY:` adjacency (D004) and
+//! `// ecco-lint: allow(..)` suppressions. The tricky parts it must get
+//! right so rules never fire inside non-code text:
+//!
+//! * line and nested block comments;
+//! * string/char literals, including raw strings (`r#"..."#`), byte and
+//!   C-string prefixes, and escapes — `"lock().unwrap()"` in a string is
+//!   a literal, not a call;
+//! * lifetimes vs char literals (`'a` vs `'a'`);
+//! * numbers with tuple access, ranges, and exponents (`x.0`, `0..n`,
+//!   `1e-5`) so the `.` punctuation rules see is really method syntax.
+
+/// One code token. Comments are *not* tokens — see [`Comment`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: Tok,
+    /// 1-based source line of the token's first character.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unwrap`, `unsafe`, `HashMap`, ...).
+    Ident(String),
+    /// A single punctuation character (`.`, `(`, `!`, ...). Multi-char
+    /// operators arrive as consecutive tokens; the rules only ever match
+    /// single chars.
+    Punct(char),
+    /// String/char/number literal, content discarded.
+    Literal,
+    /// `'a`, `'static` — kept distinct so they can't be mistaken for
+    /// unterminated char literals.
+    Lifetime,
+}
+
+/// One comment, line (`// ...`) or block (`/* ... */`), doc or plain.
+/// Block comments spanning multiple lines keep their full text and the
+/// line they *start* on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Comment {
+    pub text: String,
+    /// 1-based line of the comment's first character.
+    pub line: usize,
+}
+
+/// Lexed file: code tokens and comments as parallel streams.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src`. Never fails: malformed input (unterminated strings and the
+/// like) degrades to consuming the rest of the file as a literal, which
+/// is the safe direction for a linter (no token patterns can fire there).
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        cs: src.chars().collect(),
+        i: 0,
+        line: 1,
+        out: Lexed::default(),
+    }
+    .run()
+}
+
+struct Lexer {
+    cs: Vec<char>,
+    i: usize,
+    line: usize,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    /// Advance one char, tracking newlines.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek(0)?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn push(&mut self, kind: Tok, line: usize) {
+        self.out.tokens.push(Token { kind, line });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment(line);
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment(line);
+            } else if c == '"' {
+                self.string();
+                self.push(Tok::Literal, line);
+            } else if c == '\'' {
+                self.quote(line);
+            } else if c.is_ascii_digit() {
+                self.number();
+                self.push(Tok::Literal, line);
+            } else if is_ident_start(c) {
+                self.ident_or_prefixed(line);
+            } else {
+                self.bump();
+                self.push(Tok::Punct(c), line);
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { text, line });
+    }
+
+    fn block_comment(&mut self, line: usize) {
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.out.comments.push(Comment { text, line });
+    }
+
+    /// A `"`-delimited string with escapes; the opening quote is current.
+    fn string(&mut self) {
+        self.bump(); // opening "
+        while let Some(c) = self.bump() {
+            if c == '\\' {
+                self.bump(); // whatever is escaped, incl. \" and \\
+            } else if c == '"' {
+                break;
+            }
+        }
+    }
+
+    /// A raw string with `hashes` hash marks; positioned at the opening
+    /// quote.
+    fn raw_string(&mut self, hashes: usize) {
+        self.bump(); // opening "
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                for k in 0..hashes {
+                    if self.peek(k) != Some('#') {
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+        }
+    }
+
+    /// `'` disambiguation: lifetime (`'a`) vs char literal (`'a'`, `'\n'`).
+    fn quote(&mut self, line: usize) {
+        let one = self.peek(1);
+        let two = self.peek(2);
+        let is_lifetime = one.is_some_and(is_ident_start) && two != Some('\'');
+        self.bump(); // the '
+        if is_lifetime {
+            while self.peek(0).is_some_and(is_ident_continue) {
+                self.bump();
+            }
+            self.push(Tok::Lifetime, line);
+            return;
+        }
+        // Char literal: consume up to the closing quote, honoring escapes.
+        while let Some(c) = self.bump() {
+            if c == '\\' {
+                self.bump();
+            } else if c == '\'' {
+                break;
+            }
+        }
+        self.push(Tok::Literal, line);
+    }
+
+    /// Number literal: integers, floats, suffixes, hex, exponents. Stops
+    /// before `..` (ranges) and before `.method` / `.0`-style access so
+    /// the dot stays a punct token.
+    fn number(&mut self) {
+        self.digits_and_suffix();
+        if self.peek(0) == Some('.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            self.bump();
+            self.digits_and_suffix();
+        }
+    }
+
+    /// `[0-9a-zA-Z_]*` plus an exponent sign immediately after `e`/`E`.
+    fn digits_and_suffix(&mut self) {
+        let mut prev = '\0';
+        while let Some(c) = self.peek(0) {
+            if is_ident_continue(c) {
+                prev = c;
+                self.bump();
+            } else if (c == '+' || c == '-')
+                && (prev == 'e' || prev == 'E')
+                && self.peek(1).is_some_and(|d| d.is_ascii_digit())
+            {
+                prev = c;
+                self.bump();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// An identifier, unless it turns out to be a string prefix
+    /// (`r"`, `r#"`, `b"`, `br#"`, `c"`, ...) or a raw identifier
+    /// (`r#type`).
+    fn ident_or_prefixed(&mut self, line: usize) {
+        let start = self.i;
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump();
+        }
+        let name: String = self.cs[start..self.i].iter().collect();
+        let next = self.peek(0);
+        let string_prefix = matches!(name.as_str(), "r" | "b" | "c" | "br" | "cr" | "rb");
+        if string_prefix && next == Some('"') {
+            if name.contains('r') {
+                self.raw_string(0);
+            } else {
+                self.string();
+            }
+            self.push(Tok::Literal, line);
+            return;
+        }
+        if string_prefix && next == Some('#') {
+            let mut hashes = 0;
+            while self.peek(hashes) == Some('#') {
+                hashes += 1;
+            }
+            if self.peek(hashes) == Some('"') {
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                self.raw_string(hashes);
+                self.push(Tok::Literal, line);
+                return;
+            }
+            if name == "r" && self.peek(1).is_some_and(is_ident_start) {
+                // Raw identifier r#type: emit the bare name.
+                self.bump(); // #
+                let s2 = self.i;
+                while self.peek(0).is_some_and(is_ident_continue) {
+                    self.bump();
+                }
+                let raw: String = self.cs[s2..self.i].iter().collect();
+                self.push(Tok::Ident(raw), line);
+                return;
+            }
+        }
+        self.push(Tok::Ident(name), line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn code_inside_strings_and_comments_is_not_tokenized() {
+        let src = r###"
+            let a = "x.lock().unwrap()"; // y.lock().unwrap()
+            /* z.lock().unwrap() /* nested */ still comment */
+            let b = r#"raw "quoted" .unwrap()"#;
+        "###;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert_eq!(lex(src).comments.len(), 2);
+    }
+
+    #[test]
+    fn comment_lines_are_recorded() {
+        let src = "let x = 1;\n// first\nlet y = 2; // second\n";
+        let lexed = lex(src);
+        let lines: Vec<(usize, &str)> = lexed
+            .comments
+            .iter()
+            .map(|c| (c.line, c.text.as_str()))
+            .collect();
+        assert_eq!(lines, vec![(2, "// first"), (3, "// second")]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let lexed = lex(src);
+        let lifetimes = lexed.tokens.iter().filter(|t| t.kind == Tok::Lifetime).count();
+        assert_eq!(lifetimes, 2);
+        // The 'x' char literal must not swallow the closing brace.
+        assert_eq!(lexed.tokens.last().map(|t| t.kind.clone()), Some(Tok::Punct('}')));
+    }
+
+    #[test]
+    fn numbers_leave_method_dots_alone() {
+        // Tuple access, ranges, float exponents: the dots that matter for
+        // rules (method call syntax) must survive as Punct('.').
+        let src = "let a = x.0; for i in 0..n {} let b = 1e-5; y.1.lock()";
+        let lexed = lex(src);
+        let has = |name: &str| lexed.tokens.iter().any(|t| t.kind == Tok::Ident(name.to_string()));
+        assert!(has("lock"));
+        // `1e-5` is one literal: no stray identifier `e` appears.
+        assert!(!has("e"));
+        // The range's two dots are two puncts between two literals.
+        let dots = lexed.tokens.iter().filter(|t| t.kind == Tok::Punct('.')).count();
+        assert!(dots >= 4, "tuple + range + chained access dots: {dots}");
+    }
+
+    #[test]
+    fn token_lines_are_one_based_and_accurate() {
+        let src = "a\nb\n\nc";
+        let lexed = lex(src);
+        let got: Vec<usize> = lexed.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(got, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn raw_identifiers_yield_bare_names() {
+        assert_eq!(idents("let r#type = 1;"), vec!["let", "type"]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Rendering and baseline handling for lint findings.
+//!
+//! The JSON output is CI's interface: `{"findings":[..],"total":N}` with
+//! sorted keys (the in-tree [`Json`] writer is BTreeMap-backed), so a
+//! saved report is byte-stable and can be fed straight back in as a
+//! `--baseline` to suppress known findings — the round-trip the
+//! integration test pins.
+
+use std::collections::BTreeSet;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::rules::{rule_meta, Finding};
+
+/// Outcome of linting a file set.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings after suppression filtering, file order then line.
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Drop findings present in `baseline` (matched on rule + path +
+    /// line). Returns how many were baselined out.
+    pub fn apply_baseline(&mut self, baseline: &Baseline) -> usize {
+        let before = self.findings.len();
+        self.findings.retain(|f| !baseline.contains(f));
+        before - self.findings.len()
+    }
+
+    /// Human-readable listing, one finding per line, optionally followed
+    /// by per-rule fix hints.
+    pub fn render_text(&self, fix_hints: bool) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: {} [{}]\n", f.path, f.line, f.message, f.rule));
+        }
+        if fix_hints {
+            let rules: BTreeSet<&str> = self.findings.iter().map(|f| f.rule.as_str()).collect();
+            for id in rules {
+                if let Some(meta) = rule_meta(id) {
+                    out.push_str(&format!("hint[{id}]: {}\n", meta.hint));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "{} finding(s) across {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Machine-readable report; parseable back into a [`Baseline`].
+    pub fn render_json(&self) -> String {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("line", num(f.line as f64)),
+                    ("message", s(&f.message)),
+                    ("path", s(&f.path)),
+                    ("rule", s(&f.rule)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("files", num(self.files_scanned as f64)),
+            ("findings", arr(findings)),
+            ("total", num(self.findings.len() as f64)),
+        ])
+        .to_string_pretty()
+    }
+}
+
+/// A set of known findings to ignore, keyed `(rule, path, line)`.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: BTreeSet<(String, String, usize)>,
+}
+
+impl Baseline {
+    /// Parse a baseline from JSON — either the exact shape
+    /// [`Report::render_json`] emits or a bare array of finding objects.
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let j = Json::parse(text).context("parsing baseline json")?;
+        let list = match &j {
+            Json::Arr(_) => &j,
+            _ => j.get("findings").context("baseline: no findings array")?,
+        };
+        let mut entries = BTreeSet::new();
+        for item in list.as_arr().context("baseline findings")? {
+            entries.insert((
+                item.get("rule")?.as_str()?.to_string(),
+                item.get("path")?.as_str()?.to_string(),
+                item.get("line")?.as_usize()?,
+            ));
+        }
+        Ok(Baseline { entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn contains(&self, f: &Finding) -> bool {
+        self.entries.contains(&(f.rule.clone(), f.path.clone(), f.line))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            findings: vec![
+                Finding {
+                    rule: "D001".to_string(),
+                    path: "serve/x.rs".to_string(),
+                    line: 3,
+                    message: ".unwrap() in hot-path module".to_string(),
+                },
+                Finding {
+                    rule: "D006".to_string(),
+                    path: "zoo/y.rs".to_string(),
+                    line: 9,
+                    message: "lock(..) unwrapped".to_string(),
+                },
+            ],
+            files_scanned: 2,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_as_a_baseline() {
+        let mut report = sample();
+        let rendered = report.render_json();
+        let baseline = Baseline::parse(&rendered).expect("parse own output");
+        assert_eq!(baseline.len(), 2);
+        assert_eq!(report.apply_baseline(&baseline), 2);
+        assert!(report.clean());
+    }
+
+    #[test]
+    fn baseline_matches_exactly() {
+        let mut report = sample();
+        // Same rule+path, different line: not baselined.
+        let baseline = Baseline::parse(r#"[{"rule":"D001","path":"serve/x.rs","line":4}]"#)
+            .expect("parse");
+        assert_eq!(report.apply_baseline(&baseline), 0);
+        assert_eq!(report.findings.len(), 2);
+    }
+
+    #[test]
+    fn text_render_lists_findings_and_hints() {
+        let text = sample().render_text(true);
+        assert!(text.contains("serve/x.rs:3:"), "{text}");
+        assert!(text.contains("[D001]"), "{text}");
+        assert!(text.contains("hint[D006]:"), "{text}");
+        assert!(text.contains("2 finding(s)"), "{text}");
+        // Without hints the hint lines disappear.
+        assert!(!sample().render_text(false).contains("hint["));
+    }
+
+    #[test]
+    fn malformed_baseline_errors() {
+        assert!(Baseline::parse("not json").is_err());
+        assert!(Baseline::parse(r#"{"nope":1}"#).is_err());
+        assert!(Baseline::parse(r#"[{"rule":"D001"}]"#).is_err());
+    }
+}

@@ -1,0 +1,683 @@
+//! The determinism & safety rules (D001–D006) and the per-file analysis
+//! they share: `#[cfg(test)]` region exclusion and `// ecco-lint:
+//! allow(..)` suppressions.
+//!
+//! Every rule is a token-pattern matcher over [`lexer::Lexed`] output —
+//! deliberately syntactic. The rules encode *project* invariants (which
+//! modules are hot paths, which containers may appear on the wire), so a
+//! few false-negative shapes a type checker would catch (a re-exported
+//! `HashMap` alias, a bare float `<` on scores) are out of scope; the
+//! fixture tests pin exactly what each rule does and does not catch.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{self, Tok, Token};
+
+/// Static metadata for one rule, used by `--fix-hints` and the docs.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleMeta {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// What the rule protects, shown with `--fix-hints`.
+    pub hint: &'static str,
+}
+
+pub const RULES: &[RuleMeta] = &[
+    RuleMeta {
+        id: "D001",
+        title: "unwrap/expect/panic in hot-path modules",
+        hint: "return a typed error (Result + bail!/context) instead; if the \
+               invariant is real, document it with an ecco-lint suppression",
+    },
+    RuleMeta {
+        id: "D002",
+        title: "hash-ordered container in event/wire code",
+        hint: "use BTreeMap/BTreeSet so iteration order (and thus event and \
+               wire bytes) is deterministic",
+    },
+    RuleMeta {
+        id: "D003",
+        title: "wall-clock or randomness outside perf-counter sites",
+        hint: "route timing through perf counters only (never events or \
+               accuracies) and randomness through util::rng seeds; suppress \
+               with a reason at genuine perf/IO-pacing sites",
+    },
+    RuleMeta {
+        id: "D004",
+        title: "undocumented or stray unsafe",
+        hint: "add an adjacent // SAFETY: comment (# Safety doc section for \
+               unsafe fn), or move the code into an allowlisted module",
+    },
+    RuleMeta {
+        id: "D005",
+        title: "NaN-unsafe float comparison",
+        hint: "use f32::total_cmp/f64::total_cmp instead of partial_cmp",
+    },
+    RuleMeta {
+        id: "D006",
+        title: "lock()/wait() unwrapped without poison handling",
+        hint: "use util::sync::{plock, pwait, pwait_timeout} (every lock in \
+               this crate restores invariants before unlock, so recovering \
+               the guard is sound)",
+    },
+];
+
+pub fn rule_meta(id: &str) -> Option<&'static RuleMeta> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Modules D001 treats as hot paths (panics there kill runners, servers,
+/// or whole processes instead of failing one request).
+const HOT_DIRS: &[&str] = &[
+    "server/", "runtime/", "serve/", "net/", "transmission/", "alloc/",
+];
+
+/// Modules whose containers can reach the determinism surface (events,
+/// wire frames, reports): hash iteration order is forbidden here (D002).
+const WIRE_DIRS: &[&str] = &[
+    "api/", "serve/", "server/", "net/", "transmission/", "alloc/",
+    "faults/", "grouping/", "metrics/", "exp/",
+];
+
+/// Files allowed to read wall clocks freely (D003): the bench harness and
+/// the logger's timestamp, which are perf/diagnostic surfaces by
+/// definition and never feed results.
+const CLOCK_ALLOWED_FILES: &[&str] = &["util/bench.rs", "util/logger.rs"];
+
+/// Modules allowed to contain `unsafe` at all (D004); everywhere else any
+/// `unsafe` is a violation regardless of comments.
+const UNSAFE_ALLOWED_FILES: &[&str] = &["util/pool.rs", "runtime/microbatch.rs"];
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    /// Path relative to the scanned root, `/`-separated.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+}
+
+/// Lint one file; `rel` is its root-relative path with `/` separators.
+pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let test_lines = test_regions(&lexed.tokens);
+    let comment_lines: BTreeMap<usize, String> = lexed
+        .comments
+        .iter()
+        .map(|c| (c.line, c.text.clone()))
+        .collect();
+    let (suppressed, mut findings) = suppressions(rel, &lexed.comments, &lexed.tokens);
+
+    let f = |out: &mut Vec<Finding>, rule: &str, line: usize, msg: String| {
+        if test_lines.contains(&line) {
+            return;
+        }
+        if suppressed
+            .get(rule)
+            .is_some_and(|lines| lines.contains(&line))
+        {
+            return;
+        }
+        out.push(Finding {
+            rule: rule.to_string(),
+            path: rel.to_string(),
+            line,
+            message: msg,
+        });
+    };
+
+    let toks = &lexed.tokens;
+    d001(rel, toks, &mut |r, l, m| f(&mut findings, r, l, m));
+    d002(rel, toks, &mut |r, l, m| f(&mut findings, r, l, m));
+    d003(rel, toks, &mut |r, l, m| f(&mut findings, r, l, m));
+    d004(rel, toks, &comment_lines, &mut |r, l, m| f(&mut findings, r, l, m));
+    d005(toks, &mut |r, l, m| f(&mut findings, r, l, m));
+    d006(toks, &mut |r, l, m| f(&mut findings, r, l, m));
+
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Shared analysis
+// ---------------------------------------------------------------------------
+
+fn ident(t: &Token) -> Option<&str> {
+    match &t.kind {
+        Tok::Ident(s) => Some(s),
+        _ => None,
+    }
+}
+
+fn is_punct(t: &Token, c: char) -> bool {
+    t.kind == Tok::Punct(c)
+}
+
+/// Lines covered by `#[cfg(test)]`-guarded items (including
+/// `cfg(all(test, ..))`, excluding `cfg(not(test))`): attribute line
+/// through the matching close brace of the item that follows.
+fn test_regions(toks: &[Token]) -> BTreeSet<usize> {
+    let mut lines = BTreeSet::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !(is_punct(&toks[i], '#') && i + 1 < toks.len() && is_punct(&toks[i + 1], '[')) {
+            i += 1;
+            continue;
+        }
+        // Find the attribute's closing bracket.
+        let mut depth = 0usize;
+        let mut end = i + 1;
+        while end < toks.len() {
+            if is_punct(&toks[end], '[') {
+                depth += 1;
+            } else if is_punct(&toks[end], ']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            end += 1;
+        }
+        let attr = &toks[i..=end.min(toks.len() - 1)];
+        if !attr_gates_on_test(attr) {
+            i = end + 1;
+            continue;
+        }
+        // Skip any further attributes between this one and the item.
+        let mut j = end + 1;
+        while j + 1 < toks.len() && is_punct(&toks[j], '#') && is_punct(&toks[j + 1], '[') {
+            let mut d = 0usize;
+            while j < toks.len() {
+                if is_punct(&toks[j], '[') {
+                    d += 1;
+                } else if is_punct(&toks[j], ']') {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            j += 1;
+        }
+        // The guarded item: everything to the matching close of its first
+        // brace (covers `mod tests { .. }`, `fn`, `impl`, `struct { .. }`).
+        let mut brace = 0usize;
+        let mut k = j;
+        let mut entered = false;
+        while k < toks.len() {
+            if is_punct(&toks[k], '{') {
+                brace += 1;
+                entered = true;
+            } else if is_punct(&toks[k], '}') {
+                brace -= 1;
+                if entered && brace == 0 {
+                    break;
+                }
+            } else if !entered && is_punct(&toks[k], ';') {
+                break; // braceless item, e.g. `mod tests;`
+            }
+            k += 1;
+        }
+        let start_line = toks[i].line;
+        let end_line = toks[k.min(toks.len() - 1)].line;
+        lines.extend(start_line..=end_line);
+        i = k + 1;
+    }
+    lines
+}
+
+/// Does this attribute token slice gate on `test` (outside `not(..)`)?
+/// Matches `cfg(test)`, `cfg(all(test, ..))`, and `cfg_attr(test, ..)`;
+/// rejects `cfg(not(test))` and unrelated attributes.
+fn attr_gates_on_test(attr: &[Token]) -> bool {
+    let head = attr.iter().skip(2).find_map(ident);
+    if head != Some("cfg") && head != Some("cfg_attr") {
+        return false;
+    }
+    let mut stack: Vec<String> = Vec::new();
+    let mut last_ident: Option<&str> = None;
+    for t in attr {
+        match &t.kind {
+            Tok::Ident(s) => {
+                if s == "test" && !stack.iter().any(|f| f == "not") {
+                    return true;
+                }
+                last_ident = Some(s);
+            }
+            Tok::Punct('(') => {
+                stack.push(last_ident.unwrap_or_default().to_string());
+                last_ident = None;
+            }
+            Tok::Punct(')') => {
+                stack.pop();
+            }
+            _ => last_ident = None,
+        }
+    }
+    false
+}
+
+/// Parse `// ecco-lint: allow(D00x) reason` comments. Returns, per rule,
+/// the set of source lines the suppressions cover (the comment's own line
+/// plus the first code line at or below it, so a comment block directly
+/// above the offending line works), plus findings for malformed
+/// suppressions — an allow without a reason, or for an unknown rule.
+///
+/// A comment is a suppression only if it *starts* with `ecco-lint` once
+/// comment markers are stripped — prose that mentions the syntax
+/// mid-sentence (like this doc comment, or the crate docs) is not one.
+fn suppressions(
+    rel: &str,
+    comments: &[lexer::Comment],
+    toks: &[Token],
+) -> (BTreeMap<String, BTreeSet<usize>>, Vec<Finding>) {
+    let code_lines: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+    let mut map: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        let stripped = c.text.trim_start_matches(|ch: char| {
+            ch == '/' || ch == '*' || ch == '!' || ch.is_whitespace()
+        });
+        let Some(after) = stripped.strip_prefix("ecco-lint") else {
+            continue;
+        };
+        let Some(rest) = after.strip_prefix(':').map(str::trim_start) else {
+            findings.push(Finding {
+                rule: "LINT".to_string(),
+                path: rel.to_string(),
+                line: c.line,
+                message: format!(
+                    "malformed suppression (expected `ecco-lint: allow(D00x) reason`): {}",
+                    c.text.trim()
+                ),
+            });
+            continue;
+        };
+        let Some(body) = rest.strip_prefix("allow(") else {
+            findings.push(Finding {
+                rule: "LINT".to_string(),
+                path: rel.to_string(),
+                line: c.line,
+                message: format!(
+                    "malformed suppression (expected `ecco-lint: allow(D00x) reason`): {}",
+                    c.text.trim()
+                ),
+            });
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            findings.push(Finding {
+                rule: "LINT".to_string(),
+                path: rel.to_string(),
+                line: c.line,
+                message: "unclosed ecco-lint allow(..)".to_string(),
+            });
+            continue;
+        };
+        let rule = body[..close].trim().to_string();
+        let reason = body[close + 1..].trim();
+        if rule_meta(&rule).is_none() {
+            findings.push(Finding {
+                rule: "LINT".to_string(),
+                path: rel.to_string(),
+                line: c.line,
+                message: format!("suppression names unknown rule {rule:?}"),
+            });
+            continue;
+        }
+        if reason.is_empty() {
+            findings.push(Finding {
+                rule: "LINT".to_string(),
+                path: rel.to_string(),
+                line: c.line,
+                message: format!(
+                    "suppression of {rule} has no reason — every allow must say why"
+                ),
+            });
+            continue;
+        }
+        let entry = map.entry(rule).or_default();
+        entry.insert(c.line);
+        if let Some(&target) = code_lines.range(c.line..).next() {
+            entry.insert(target);
+        }
+    }
+    (map, findings)
+}
+
+// ---------------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------------
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// D001: `.unwrap()` / `.expect(` / panic-family macros in hot-path
+/// modules. A panic in these modules takes down a runner thread, a serve
+/// session, or the whole coordinator instead of failing one request.
+fn d001(rel: &str, toks: &[Token], emit: &mut dyn FnMut(&str, usize, String)) {
+    if !in_dirs(rel, HOT_DIRS) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        let Some(name) = ident(t) else { continue };
+        match name {
+            "unwrap" | "expect" => {
+                let dotted = i > 0 && is_punct(&toks[i - 1], '.');
+                let called = toks.get(i + 1).is_some_and(|n| is_punct(n, '('));
+                if dotted && called {
+                    emit("D001", t.line, format!(".{name}() in hot-path module"));
+                }
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                if toks.get(i + 1).is_some_and(|n| is_punct(n, '!')) {
+                    emit("D001", t.line, format!("{name}! in hot-path module"));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// D002: `HashMap`/`HashSet` in modules whose data reaches events or the
+/// wire — hash iteration order would leak into the determinism surface.
+fn d002(rel: &str, toks: &[Token], emit: &mut dyn FnMut(&str, usize, String)) {
+    if !in_dirs(rel, WIRE_DIRS) {
+        return;
+    }
+    for t in toks {
+        if let Some(name @ ("HashMap" | "HashSet")) = ident(t) {
+            emit("D002", t.line, format!("{name} in event/wire-serializing module"));
+        }
+    }
+}
+
+/// D003: wall-clock reads (`Instant::now`, `SystemTime::now`), sleeps,
+/// and entropy-based RNG outside the allowlisted perf surfaces. Wall
+/// time must only ever feed perf counters; events and accuracies must be
+/// byte-stable across machines and thread counts.
+fn d003(rel: &str, toks: &[Token], emit: &mut dyn FnMut(&str, usize, String)) {
+    if CLOCK_ALLOWED_FILES.contains(&rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        let Some(name) = ident(t) else { continue };
+        match name {
+            "Instant" | "SystemTime" => {
+                let qualified_now = is_punct_at(toks, i + 1, ':')
+                    && is_punct_at(toks, i + 2, ':')
+                    && toks.get(i + 3).and_then(ident) == Some("now");
+                if qualified_now {
+                    emit("D003", t.line, format!("{name}::now() wall-clock read"));
+                }
+            }
+            "sleep" => {
+                if toks.get(i + 1).is_some_and(|n| is_punct(n, '(')) {
+                    emit("D003", t.line, "sleep() call".to_string());
+                }
+            }
+            "thread_rng" | "from_entropy" | "OsRng" | "getrandom" => {
+                emit("D003", t.line, format!("{name}: entropy-seeded randomness"));
+            }
+            _ => {}
+        }
+    }
+}
+
+fn is_punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i).is_some_and(|t| is_punct(t, c))
+}
+
+/// D004: `unsafe` discipline. Outside the allowlisted modules any
+/// `unsafe` is a violation; inside them every `unsafe` block or impl
+/// needs an adjacent `// SAFETY:` comment and every named `unsafe fn` a
+/// `# Safety` doc section. `unsafe fn(..)` in *type* position (a fn
+/// pointer) carries no body to justify and is exempt.
+fn d004(
+    rel: &str,
+    toks: &[Token],
+    comment_lines: &BTreeMap<usize, String>,
+    emit: &mut dyn FnMut(&str, usize, String),
+) {
+    let allowed = UNSAFE_ALLOWED_FILES.contains(&rel);
+    for (i, t) in toks.iter().enumerate() {
+        if ident(t) != Some("unsafe") {
+            continue;
+        }
+        let next = toks.get(i + 1).and_then(ident);
+        if next == Some("fn") && is_punct_at(toks, i + 2, '(') {
+            continue; // fn-pointer type, nothing to document
+        }
+        if !allowed {
+            emit("D004", t.line, "unsafe outside allowlisted modules".to_string());
+            continue;
+        }
+        if next == Some("fn") {
+            if !adjacent_comment_contains(comment_lines, t.line, "# Safety") {
+                emit("D004", t.line, "unsafe fn without a `# Safety` doc section".to_string());
+            }
+        } else if !adjacent_comment_contains(comment_lines, t.line, "SAFETY:") {
+            let what = if next == Some("impl") { "impl" } else { "block" };
+            emit(
+                "D004",
+                t.line,
+                format!("unsafe {what} without an adjacent // SAFETY: comment"),
+            );
+        }
+    }
+}
+
+/// Is there a comment containing `marker` on `line` itself or in the
+/// contiguous run of comment lines directly above it?
+fn adjacent_comment_contains(
+    comment_lines: &BTreeMap<usize, String>,
+    line: usize,
+    marker: &str,
+) -> bool {
+    if comment_lines.get(&line).is_some_and(|t| t.contains(marker)) {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        match comment_lines.get(&l) {
+            Some(text) if text.contains(marker) => return true,
+            Some(_) => continue,
+            None => return false,
+        }
+    }
+    false
+}
+
+/// D005: `partial_cmp` — the repo's most recurrent bug class. A NaN
+/// anywhere in a score column turns `partial_cmp(..).unwrap()` into a
+/// panic and a NaN-tolerant fallback into an unstable order; `total_cmp`
+/// is well-defined for every bit pattern.
+fn d005(toks: &[Token], emit: &mut dyn FnMut(&str, usize, String)) {
+    for (i, t) in toks.iter().enumerate() {
+        if ident(t) == Some("partial_cmp") && is_punct_at(toks, i + 1, '(') {
+            emit("D005", t.line, "partial_cmp on floats (NaN-unsafe ordering)".to_string());
+        }
+    }
+}
+
+/// D006: `.lock(..).unwrap()` / `.wait(..).expect(..)` — poison from one
+/// panicked thread cascades into every later locker. The blessed helpers
+/// in `util::sync` recover the guard instead.
+fn d006(toks: &[Token], emit: &mut dyn FnMut(&str, usize, String)) {
+    for (i, t) in toks.iter().enumerate() {
+        let Some(name @ ("lock" | "wait" | "wait_timeout")) = ident(t) else {
+            continue;
+        };
+        if !is_punct_at(toks, i + 1, '(') {
+            continue;
+        }
+        // Skip to the call's matching close paren.
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        while j < toks.len() {
+            if is_punct(&toks[j], '(') {
+                depth += 1;
+            } else if is_punct(&toks[j], ')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let chained = is_punct_at(toks, j + 1, '.')
+            && matches!(toks.get(j + 2).and_then(ident), Some("unwrap" | "expect"));
+        if chained {
+            emit(
+                "D006",
+                t.line,
+                format!("{name}(..) unwrapped without poison handling"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<String> {
+        check_file(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn d001_fires_in_hot_paths_only() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(rules_fired("serve/x.rs", bad), vec!["D001"]);
+        assert_eq!(rules_fired("runtime/x.rs", "fn f() { panic!(\"no\") }"), vec!["D001"]);
+        // Same code outside a hot dir is fine.
+        assert!(rules_fired("scene/x.rs", bad).is_empty());
+        // unwrap_or_else is not unwrap.
+        let or_else = "fn f(x: Option<u32>) { x.unwrap_or_else(|| 0); }";
+        assert!(rules_fired("serve/x.rs", or_else).is_empty());
+    }
+
+    #[test]
+    fn d001_skips_cfg_test_regions() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+        assert!(rules_fired("serve/x.rs", src).is_empty());
+        // ...but cfg(not(test)) regions still count.
+        let gated = "#[cfg(not(test))]\nfn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(rules_fired("serve/x.rs", gated), vec!["D001"]);
+    }
+
+    #[test]
+    fn d002_fires_on_hash_containers_in_wire_dirs() {
+        let bad = "use std::collections::HashMap;\nfn f() -> HashMap<u8, u8> { HashMap::new() }";
+        let fired = rules_fired("api/x.rs", bad);
+        assert!(fired.iter().all(|r| r == "D002"));
+        assert_eq!(fired.len(), 3);
+        assert!(rules_fired("runtime/x.rs", bad).is_empty(), "runtime is lookup-only");
+        assert!(rules_fired("api/x.rs", "use std::collections::BTreeMap;").is_empty());
+    }
+
+    #[test]
+    fn d003_fires_on_clocks_sleeps_and_entropy() {
+        let clock = "fn f() { let t = Instant::now(); }";
+        assert_eq!(rules_fired("grouping/x.rs", clock), vec!["D003"]);
+        assert_eq!(rules_fired("scene/x.rs", "fn f() { thread::sleep(d); }"), vec!["D003"]);
+        let entropy = "fn f() { let r = rand::thread_rng(); }";
+        assert_eq!(rules_fired("zoo/x.rs", entropy), vec!["D003"]);
+        // The import alone (no ::now) is fine, as are the allowlisted files.
+        assert!(rules_fired("scene/x.rs", "use std::time::Instant;").is_empty());
+        assert!(rules_fired("util/bench.rs", "fn f() { Instant::now(); }").is_empty());
+    }
+
+    #[test]
+    fn d004_requires_safety_comments_and_allowlisted_modules() {
+        let undocumented = "fn f(p: *const u32) -> u32 { unsafe { *p } }";
+        // Outside the allowlist: stray unsafe.
+        let fired = check_file("scene/x.rs", undocumented);
+        assert_eq!(fired[0].rule, "D004");
+        assert!(fired[0].message.contains("outside"), "{}", fired[0].message);
+        // Inside the allowlist but uncommented: missing SAFETY.
+        let fired = check_file("util/pool.rs", undocumented);
+        assert_eq!(fired[0].rule, "D004");
+        assert!(fired[0].message.contains("SAFETY"), "{}", fired[0].message);
+        // A SAFETY comment directly above satisfies it.
+        let ok = "fn f(p: *const u8) -> u8 {\n    // SAFETY: ok.\n    unsafe { *p }\n}";
+        assert!(rules_fired("util/pool.rs", ok).is_empty());
+        // unsafe fn needs a # Safety doc section...
+        let f_bad = "unsafe fn g(p: *const u32) -> u32 { *p }";
+        assert_eq!(rules_fired("util/pool.rs", f_bad), vec!["D004"]);
+        let f_ok = "/// x.\n/// # Safety\n/// ok.\nunsafe fn g(p: *const u8) -> u8 { *p }";
+        assert!(rules_fired("util/pool.rs", f_ok).is_empty());
+        // ...but an fn-pointer type position is exempt.
+        assert!(rules_fired("util/pool.rs", "struct J { call: unsafe fn(*const ()) }").is_empty());
+    }
+
+    #[test]
+    fn d005_fires_on_partial_cmp() {
+        let bad = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        assert_eq!(rules_fired("metrics/x.rs", bad), vec!["D005"]);
+        let ok = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(rules_fired("metrics/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn d006_fires_on_unwrapped_locks_anywhere() {
+        assert_eq!(
+            rules_fired("zoo/x.rs", "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }"),
+            vec!["D006"]
+        );
+        assert_eq!(
+            rules_fired("zoo/x.rs", "fn f() { g = cv.wait(g).expect(\"poisoned\"); }"),
+            vec!["D006"]
+        );
+        let fine = "fn f(m: &Mutex<u8>) { m.lock().unwrap_or_else(PoisonError::into_inner); }";
+        assert!(rules_fired("zoo/x.rs", fine).is_empty());
+    }
+
+    #[test]
+    fn suppressions_cover_the_next_code_line_and_require_reasons() {
+        let ok = [
+            "fn f(x: Option<u32>) -> u32 {",
+            "    // ecco-lint: allow(D001) invariant: x is Some by construction",
+            "    // (second comment line still counts as the same block)",
+            "    x.unwrap()",
+            "}",
+        ]
+        .join("\n");
+        assert!(rules_fired("serve/x.rs", &ok).is_empty());
+        // Same-line suppression works too.
+        let inline = "fn f(x: Option<u32>) -> u32 { x.unwrap() } // ecco-lint: allow(D001) fixture";
+        assert!(rules_fired("serve/x.rs", inline).is_empty());
+        // No reason: the original finding stays and a LINT finding appears.
+        let bare = "fn f(x: Option<u8>) -> u8 {\n    // ecco-lint: allow(D001)\n    x.unwrap()\n}";
+        let fired = rules_fired("serve/x.rs", bare);
+        assert!(fired.contains(&"LINT".to_string()), "{fired:?}");
+        assert!(fired.contains(&"D001".to_string()), "{fired:?}");
+        // Unknown rule id is called out.
+        let unknown = "// ecco-lint: allow(D099) whatever\nfn f() {}";
+        assert_eq!(rules_fired("scene/x.rs", unknown), vec!["LINT"]);
+        // A suppression for rule A does not silence rule B.
+        let wrong = [
+            "fn f(x: Option<u32>) -> u32 {",
+            "    // ecco-lint: allow(D005) mismatched rule",
+            "    x.unwrap()",
+            "}",
+        ]
+        .join("\n");
+        assert!(rules_fired("serve/x.rs", &wrong).contains(&"D001".to_string()));
+    }
+
+    #[test]
+    fn findings_carry_paths_lines_and_messages() {
+        let src = "fn a() {}\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let fs = check_file("net/x.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].path, "net/x.rs");
+        assert_eq!(fs[0].line, 2);
+        assert!(fs[0].message.contains("unwrap"), "{}", fs[0].message);
+    }
+}

@@ -8,6 +8,8 @@
 //!                 fig11 fig12 fig13, or `all`)
 //!   serve      — host many concurrent sessions over a socket
 //!                (line-JSON protocol; see `ecco::serve`)
+//!   lint       — static-analysis pass enforcing the determinism &
+//!                safety rules D001–D006 (see `ecco::lint`)
 //!   info       — print manifest / artifact inventory
 //!
 //! Common options: --task det|seg --gpus N --bw MBPS --windows N --seed N
@@ -29,10 +31,11 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: ecco <run|exp|serve|info> [options]\n\
+                "usage: ecco <run|exp|serve|lint|info> [options]\n\
                  \n\
                  ecco run [--policy ecco|naive|ekya|recl] [--task det|seg]\n\
                  \x20        [--cams N] [--gpus G] [--bw MBPS] [--windows N] [--seed S]\n\
@@ -41,6 +44,7 @@ fn main() -> Result<()> {
                  \x20        [--out results] [--seed S] [--fast] [--threads N]\n\
                  ecco serve [--listen 127.0.0.1:7433] [--unix PATH] [--runners N]\n\
                  \x20        [--queue-cap N] [--sub-buffer N]\n\
+                 ecco lint [DIR] [--fix-hints] [--baseline FILE] [--format text|json]\n\
                  ecco info"
             );
             bail!("missing or unknown subcommand");
@@ -187,6 +191,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.runners, cfg.queue_cap, cfg.sub_buffer
     );
     server.run()
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    // `--fix-hints` takes no value; recover a positional the parser may
+    // have bound to it (`ecco lint --fix-hints src`).
+    let mut args = args.clone();
+    args.normalize_flags(&["fix-hints"]);
+    args.reject_unknown(&["baseline", "format"], &["fix-hints"])?;
+    let root = match args.positional.first() {
+        Some(dir) => std::path::PathBuf::from(dir),
+        // Default: the crate's own sources, wherever the binary was built
+        // from — `ecco lint` with no args lints this repo.
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src"),
+    };
+    let clean = ecco::lint::run_cli(
+        &root,
+        args.get("baseline"),
+        &args.str_or("format", "text"),
+        args.flag("fix-hints"),
+    )?;
+    if !clean {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -250,7 +250,10 @@ impl Manifest {
                     }
                 }
             }
-            let meta = &self.tasks[task.name()];
+            let meta = self
+                .tasks
+                .get(task.name())
+                .with_context(|| format!("manifest missing task entry {:?}", task.name()))?;
             if !meta.init_file.exists() {
                 bail!("init params missing: {:?}", meta.init_file);
             }

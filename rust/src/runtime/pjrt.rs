@@ -87,7 +87,7 @@ impl Engine {
 
     /// Pre-compile every artifact (otherwise compilation is lazy).
     pub fn warmup(&self) -> Result<()> {
-        let mut cache = self.executables.lock().expect("pjrt cache poisoned");
+        let mut cache = crate::util::sync::plock(&self.executables);
         let keys: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
         for key in keys {
             self.ensure_compiled(&mut cache, &key)?;
@@ -135,8 +135,10 @@ impl Engine {
     }
 
     fn run(&self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        // ecco-lint: allow(D003) perf counter: exec/train/infer_nanos
+        // stats atomics only, never events or accuracies.
         let t0 = std::time::Instant::now();
-        let mut cache = self.executables.lock().expect("pjrt cache poisoned");
+        let mut cache = crate::util::sync::plock(&self.executables);
         let exe = self.ensure_compiled(&mut cache, key)?;
         let result = exe
             .execute::<xla::Literal>(inputs)

@@ -144,8 +144,7 @@ impl World {
     /// Schedule events (must be called before advancing past their times).
     pub fn schedule(&mut self, mut events: Vec<(f64, usize, DriftEvent)>) {
         self.events.append(&mut events);
-        self.events
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.events.sort_by(|a, b| a.0.total_cmp(&b.0));
         self.next_event = self
             .events
             .iter()

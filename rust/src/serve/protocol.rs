@@ -127,7 +127,10 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }),
         "ping" => Ok(Request::Ping),
         "shutdown" => Ok(Request::Shutdown),
-        _ => unreachable!("cmd validated above"),
+        // The allowlist match above already rejected every other cmd, but
+        // a typed error keeps the protocol layer panic-free even if the
+        // two matches ever drift apart.
+        other => Err(format!("unknown cmd {other:?}")),
     }
 }
 

@@ -20,6 +20,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::api::Event;
 use crate::util::json::{num, obj, s, Json};
+use crate::util::sync::{plock, pwait};
 
 /// Tunables for the serve host. `Copy` so the CLI can thread it around.
 #[derive(Debug, Clone, Copy)]
@@ -110,7 +111,7 @@ impl Subscriber {
     /// queued frame, so the consumer always learns how many it missed and
     /// where the gap was.
     fn push(&self, frame: &str, cap: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = plock(&self.state);
         if st.done {
             return;
         }
@@ -130,7 +131,7 @@ impl Subscriber {
     /// Queue the final frame unconditionally (end frames bypass the cap)
     /// and close the stream. Any pending drop count is flushed first.
     fn push_final(&self, frame: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = plock(&self.state);
         if st.done {
             return;
         }
@@ -146,7 +147,7 @@ impl Subscriber {
 
     /// Blocking pop; `None` once the stream is closed and drained.
     pub fn pop(&self) -> Option<String> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = plock(&self.state);
         loop {
             if let Some(frame) = st.buf.pop_front() {
                 return Some(frame);
@@ -154,7 +155,7 @@ impl Subscriber {
             if st.done {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = pwait(&self.cv, st);
         }
     }
 }
@@ -247,7 +248,7 @@ impl Registry {
         pause_after: Option<usize>,
         subscribe: bool,
     ) -> Result<(u64, Option<Arc<Subscriber>>), String> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         if !inner.accepting {
             return Err("server is shutting down".to_string());
         }
@@ -287,7 +288,7 @@ impl Registry {
     /// Attach a subscriber to an existing session. On a terminal session
     /// the end frame is delivered immediately.
     pub fn subscribe(&self, id: u64) -> Result<Arc<Subscriber>, String> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let entry = inner
             .sessions
             .get_mut(&id)
@@ -305,7 +306,7 @@ impl Registry {
     /// once the registry stops accepting and the queue is drained —
     /// already-queued sessions still run during shutdown.
     pub fn next_job(&self) -> Option<u64> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         loop {
             while let Some(id) = inner.queue.pop_front() {
                 // Skip entries cancelled or snapshotted while queued.
@@ -316,14 +317,14 @@ impl Registry {
             if !inner.accepting {
                 return None;
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = pwait(&self.cv, inner);
         }
     }
 
     /// Transition a claimed job to running; returns its canonical spec,
     /// horizon, and replay depth. `None` if it was cancelled in between.
     pub fn begin(&self, id: u64) -> Option<(Json, usize, usize)> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let start = inner.next_start;
         let entry = inner.sessions.get_mut(&id)?;
         if entry.state != SessState::Queued {
@@ -341,7 +342,7 @@ impl Registry {
     /// set (false during resume replay), fan the rendered frame out to all
     /// subscribers. Producers never block: full buffers count drops.
     pub fn publish_event(&self, id: u64, event: &Event, forward: bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let Some(entry) = inner.sessions.get_mut(&id) else {
             return;
         };
@@ -359,7 +360,7 @@ impl Registry {
     /// keep going, stop for a cancel, or stop for a snapshot (requested
     /// explicitly or scheduled via `pause_after`).
     pub fn checkpoint(&self, id: u64, windows_done: usize) -> Control {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let Some(entry) = inner.sessions.get_mut(&id) else {
             return Control::Cancel;
         };
@@ -392,7 +393,7 @@ impl Registry {
 
     /// Mark a session complete and store its report.
     pub fn finish(&self, id: u64, report: Json) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let Some(entry) = inner.sessions.get_mut(&id) else {
             return;
         };
@@ -408,7 +409,7 @@ impl Registry {
 
     /// Mark a session failed; the error rides the end frame and `report`.
     pub fn fail(&self, id: u64, error: String) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let Some(entry) = inner.sessions.get_mut(&id) else {
             return;
         };
@@ -424,7 +425,7 @@ impl Registry {
     /// Cancel: queued sessions die immediately, running ones at the next
     /// window boundary. Returns the resulting state name.
     pub fn cancel(&self, id: u64) -> Result<&'static str, String> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         let entry = inner
             .sessions
             .get_mut(&id)
@@ -452,7 +453,7 @@ impl Registry {
     /// (this call blocks until the runner gets there). The returned JSON
     /// is exactly what `resume` accepts.
     pub fn request_snapshot(&self, id: u64) -> Result<Json, String> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         loop {
             let entry = inner
                 .sessions
@@ -475,7 +476,7 @@ impl Registry {
                 }
                 SessState::Running => {
                     entry.snap_req = true;
-                    inner = self.cv.wait(inner).unwrap();
+                    inner = pwait(&self.cv, inner);
                 }
                 SessState::Snapshotted => {
                     return entry
@@ -490,7 +491,7 @@ impl Registry {
 
     /// Point-in-time status object for one session.
     pub fn status(&self, id: u64) -> Result<Json, String> {
-        let inner = self.inner.lock().unwrap();
+        let inner = plock(&self.inner);
         let entry = inner
             .sessions
             .get(&id)
@@ -510,7 +511,7 @@ impl Registry {
 
     /// Final run report (available once the session is done).
     pub fn report(&self, id: u64) -> Result<Json, String> {
-        let inner = self.inner.lock().unwrap();
+        let inner = plock(&self.inner);
         let entry = inner
             .sessions
             .get(&id)
@@ -528,7 +529,7 @@ impl Registry {
     /// Stop admitting sessions and wake every waiter. Queued sessions
     /// still drain; running ones finish.
     pub fn shutdown(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = plock(&self.inner);
         inner.accepting = false;
         self.cv.notify_all();
     }

@@ -195,6 +195,8 @@ impl<'e> Server<'e> {
                         scope.spawn(move || handle_conn(stream, &registry, &stop));
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        // ecco-lint: allow(D003) accept-loop poll pacing on
+                        // the I/O surface; session results are unaffected.
                         thread::sleep(ACCEPT_POLL);
                     }
                     Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
@@ -204,6 +206,8 @@ impl<'e> Server<'e> {
                             module_path!(),
                             &format!("accept failed: {e}"),
                         );
+                        // ecco-lint: allow(D003) accept-loop error backoff,
+                        // same I/O-surface pacing as the WouldBlock arm.
                         thread::sleep(ACCEPT_POLL);
                     }
                 }
@@ -342,6 +346,8 @@ fn handle_conn(mut stream: Stream, registry: &Arc<Registry>, stop: &AtomicBool) 
                 }
                 while let Some(frame) = sub.pop() {
                     if throttle_ms > 0 {
+                        // ecco-lint: allow(D003) client-requested stream
+                        // throttle; frame *contents* stay byte-identical.
                         thread::sleep(Duration::from_millis(throttle_ms));
                     }
                     if writeln!(stream, "{frame}").is_err() {

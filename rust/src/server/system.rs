@@ -16,8 +16,8 @@
 //! executables on frames rendered by the scene simulator and degraded by
 //! the encoder model.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -71,14 +71,14 @@ const EVAL_RES: usize = 32;
 /// workers racing on one key render identical frames and keep the first).
 pub(crate) struct FrameCache {
     enabled: bool,
-    map: Mutex<HashMap<(usize, usize, usize, u64), Arc<Vec<Frame>>>>,
+    map: Mutex<BTreeMap<(usize, usize, usize, u64), Arc<Vec<Frame>>>>,
 }
 
 impl FrameCache {
     fn new(enabled: bool) -> FrameCache {
         FrameCache {
             enabled,
-            map: Mutex::new(HashMap::new()),
+            map: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -107,8 +107,8 @@ impl FrameCache {
 
     fn lock_map(
         &self,
-    ) -> std::sync::MutexGuard<'_, HashMap<(usize, usize, usize, u64), Arc<Vec<Frame>>>> {
-        self.map.lock().unwrap_or_else(PoisonError::into_inner)
+    ) -> std::sync::MutexGuard<'_, BTreeMap<(usize, usize, usize, u64), Arc<Vec<Frame>>>> {
+        crate::util::sync::plock(&self.map)
     }
 
     /// Drop every entry; called whenever the world advances.

@@ -1,6 +1,6 @@
 //! Foundation substrates: RNG, JSON, CLI parsing, logging, statistics,
-//! property testing, a microbenchmark harness, and a persistent worker
-//! pool.
+//! property testing, a microbenchmark harness, a persistent worker pool,
+//! and poison-tolerant lock helpers.
 //!
 //! These replace `rand` / `serde` / `clap` / `log` / `proptest` /
 //! `criterion` / `rayon`, none of which are available in the offline
@@ -14,3 +14,4 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

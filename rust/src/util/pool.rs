@@ -42,6 +42,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
+use crate::util::sync::{plock, pwait, pwait_timeout};
+
 /// Fan-outs below this many items skip the pool entirely: the
 /// handout/notify overhead cannot be amortised over a single item.
 const SERIAL_BELOW: usize = 2;
@@ -137,9 +139,14 @@ struct Job {
 
 // SAFETY: `ctx` points at a `Sync` closure owned by the stack frame of
 // `Pool::run_job`, which does not return before every handed-out item has
-// finished (`done == n`), so sharing the pointer with worker threads is
-// sound for the job's whole reachable lifetime.
+// finished (`done == n`), so moving an `Arc<Job>` (and the raw `ctx`
+// pointer inside it) to a worker thread cannot let `ctx` outlive the
+// closure it points at.
 unsafe impl Send for Job {}
+
+// SAFETY: every `Job` field is atomic, lock-guarded, or part of the
+// read-only `(call, ctx, n, max_workers)` descriptor of a `Sync` closure,
+// so concurrent `&Job` access from the caller and workers is sound.
 unsafe impl Sync for Job {}
 
 impl Job {
@@ -156,10 +163,14 @@ impl Job {
             if i >= self.n {
                 break;
             }
-            let outcome =
-                panic::catch_unwind(AssertUnwindSafe(|| unsafe { (self.call)(self.ctx, i) }));
+            // SAFETY: `call` is the trampoline monomorphised for the
+            // closure `ctx` points at, and `run_job` keeps that closure
+            // alive on its stack until `done == n` (see the `Job` safety
+            // comments above).
+            let call = AssertUnwindSafe(|| unsafe { (self.call)(self.ctx, i) });
+            let outcome = panic::catch_unwind(call);
             if let Err(payload) = outcome {
-                let mut slot = self.panic.lock().expect("pool panic slot poisoned");
+                let mut slot = plock(&self.panic);
                 if slot.is_none() {
                     *slot = Some(payload);
                 }
@@ -168,7 +179,7 @@ impl Job {
                 // Lock-then-notify handshake with `run_job`'s final wait:
                 // the waiter re-checks `done` under this lock, so the
                 // wakeup cannot be lost.
-                drop(self.wait.lock().expect("pool wait lock poisoned"));
+                drop(plock(&self.wait));
                 self.cv.notify_all();
             }
         }
@@ -187,7 +198,7 @@ struct PoolShared {
 }
 
 fn worker_loop(shared: &PoolShared) {
-    let mut q = shared.queue.lock().expect("pool queue poisoned");
+    let mut q = plock(&shared.queue);
     loop {
         // Drop finished jobs, then join the first one with spare slots.
         q.jobs.retain(|j| !j.exhausted());
@@ -204,10 +215,10 @@ fn worker_loop(shared: &PoolShared) {
                 drop(q);
                 job.work();
                 job.active.fetch_sub(1, Ordering::Relaxed);
-                q = shared.queue.lock().expect("pool queue poisoned");
+                q = plock(&shared.queue);
             }
             None if q.shutdown => return,
-            None => q = shared.cv.wait(q).expect("pool queue poisoned"),
+            None => q = pwait(&shared.cv, q),
         }
     }
 }
@@ -265,6 +276,13 @@ impl Pool {
     /// wait for items in flight on workers; rethrows the first item panic.
     fn run_job<F: Fn(usize) + Sync>(&self, n: usize, extra_workers: usize, f: &F) {
         /// Monomorphised trampoline back from the erased context pointer.
+        ///
+        /// # Safety
+        ///
+        /// `ctx` must be the `*const F` that `run_job` erased from `f`,
+        /// and the closure it points at must be alive for the whole call
+        /// — both guaranteed by `run_job`, which borrows `f` on its stack
+        /// and does not return until `done == n`.
         unsafe fn trampoline<F: Fn(usize)>(ctx: *const (), i: usize) {
             (*(ctx as *const F))(i);
         }
@@ -281,7 +299,7 @@ impl Pool {
             cv: Condvar::new(),
         });
         {
-            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            let mut q = plock(&self.shared.queue);
             q.jobs.push_back(job.clone());
         }
         self.shared.cv.notify_all();
@@ -291,18 +309,17 @@ impl Pool {
         // belt-and-braces: the lock-then-notify handshake in `Job::work`
         // already rules out lost wakeups.
         {
-            let mut g = job.wait.lock().expect("pool wait lock poisoned");
+            let mut g = plock(&job.wait);
             while job.done.load(Ordering::Acquire) < job.n {
-                let waited = job.cv.wait_timeout(g, Duration::from_millis(1));
-                g = waited.expect("pool wait lock poisoned").0;
+                g = pwait_timeout(&job.cv, g, Duration::from_millis(1)).0;
             }
         }
         // Remove our queue entry if no worker got around to it.
         {
-            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            let mut q = plock(&self.shared.queue);
             q.jobs.retain(|j| !Arc::ptr_eq(j, &job));
         }
-        let payload = job.panic.lock().expect("pool panic slot poisoned").take();
+        let payload = plock(&job.panic).take();
         if let Some(p) = payload {
             panic::resume_unwind(p);
         }
@@ -377,9 +394,11 @@ impl Pool {
         let slots: Vec<Slot<R>> = (0..n).map(|_| Slot::empty()).collect();
         let runner = |i: usize| {
             // SAFETY: the cursor hands index `i` to exactly one thread, so
-            // each source item is taken once and each slot written once.
+            // each source item is taken exactly once.
             let item = unsafe { (*src[i].0.get()).take().expect("item taken twice") };
             let r = f(i, item);
+            // SAFETY: same index partition — this thread is the only
+            // writer of result slot `i`.
             unsafe { *slots[i].0.get() = Some(r) };
         };
         self.run_job(n, workers - 1, &runner);
@@ -393,7 +412,7 @@ impl Pool {
 impl Drop for Pool {
     fn drop(&mut self) {
         {
-            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            let mut q = plock(&self.shared.queue);
             q.shutdown = true;
         }
         self.shared.cv.notify_all();
@@ -409,8 +428,15 @@ impl Drop for Pool {
 /// serialising write-backs).
 struct Slot<V>(UnsafeCell<Option<V>>);
 
-// SAFETY: slot access is partitioned by item index (one thread per slot),
-// and the contained value only crosses threads by move — hence `V: Send`.
+/// # Safety
+///
+/// `Slot`s are only shared during a pool map, where the atomic cursor
+/// partitions item indices: exactly one thread touches each slot's cell,
+/// and the caller reads results only after its acquire load of `done == n`
+/// pairs with the workers' release increments. The contained value crosses
+/// threads by move, hence `V: Send`.
+// SAFETY: see the `# Safety` contract above — single writer per slot,
+// reads ordered after all writes by the done-counter acquire/release pair.
 unsafe impl<V: Send> Sync for Slot<V> {}
 
 impl<V> Slot<V> {
@@ -536,6 +562,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "200-iteration stress loop is too slow under Miri")]
     fn persistent_pool_reuses_workers_across_many_maps() {
         // Hundreds of small maps on one explicit pool: exercises the
         // park/wake path the per-call scoped spawns never had.
@@ -592,6 +619,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "30 randomised property cases are too slow under Miri")]
     fn prop_pool_matches_serial_map() {
         prop::check("pool-matches-serial", 30, |g| {
             let n = g.usize(0, 64);

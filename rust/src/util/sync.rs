@@ -1,0 +1,90 @@
+//! Poison-tolerant lock helpers (the D006 contract).
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a cascade: every
+//! later locker panics on the poison it left behind, which in a long-lived
+//! serve host or a worker pool converts a single bad eval item into a dead
+//! process. Every lock in this crate guards state whose invariants are
+//! restored before each unlock (whole-value inserts, queue push/pop,
+//! counter bumps), so recovering the guard from a [`PoisonError`] is always
+//! sound — the panic unwound *between* critical sections, not through a
+//! half-applied update. These helpers are the one blessed way to do that;
+//! the `ecco lint` rule **D006** flags any `.lock().unwrap()` /
+//! `.lock().expect(..)` that bypasses them.
+//!
+//! If a future lock ever guards multi-step state that a mid-update panic
+//! could tear, do **not** route it through these helpers — handle the
+//! poison explicitly at the call site and document why.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`], recovering the guard from a poisoned lock.
+pub fn pwait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`], recovering the guard from a poisoned lock.
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Mutex};
+
+    fn poisoned_mutex() -> Arc<Mutex<u32>> {
+        let m = Arc::new(Mutex::new(7));
+        let m2 = Arc::clone(&m);
+        let _ = catch_unwind(AssertUnwindSafe(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.is_poisoned(), "setup: mutex must be poisoned");
+        m
+    }
+
+    #[test]
+    fn plock_recovers_a_poisoned_guard() {
+        let m = poisoned_mutex();
+        assert_eq!(*plock(&m), 7);
+        *plock(&m) += 1;
+        assert_eq!(*plock(&m), 8);
+    }
+
+    #[test]
+    fn pwait_timeout_survives_poison() {
+        let m = poisoned_mutex();
+        let cv = Condvar::new();
+        let g = plock(&m);
+        let (g, timed_out) = pwait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out.timed_out());
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    fn pwait_wakes_normally() {
+        let m = Arc::new(Mutex::new(false));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+        let h = std::thread::spawn(move || {
+            *plock(&m2) = true;
+            cv2.notify_all();
+        });
+        let mut g = plock(&m);
+        while !*g {
+            g = pwait(&cv, g);
+        }
+        h.join().expect("notifier thread");
+    }
+}

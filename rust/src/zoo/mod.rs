@@ -63,7 +63,7 @@ impl ModelZoo {
         self.entries
             .iter()
             .map(|e| (e, cosine(&e.signature, query)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .filter(|(_, sim)| *sim >= min_sim)
             .map(|(e, _)| e)
     }

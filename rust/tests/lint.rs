@@ -1,0 +1,167 @@
+//! Integration pins for `ecco lint`: every rule fires on a fixture tree,
+//! the shipped sources are clean through the real binary, and the JSON
+//! report round-trips as a `--baseline`.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use ecco::lint::lint_root;
+use ecco::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_ecco");
+
+/// A scratch fixture tree under the OS temp dir, removed on drop. Tagged
+/// per test so parallel tests don't collide.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let dir = std::env::temp_dir().join(format!("ecco-lint-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).expect("create scratch dir");
+        Scratch(dir)
+    }
+
+    fn write(&self, rel: &str, src: &str) {
+        let path = self.0.join(rel);
+        fs::create_dir_all(path.parent().expect("fixture has a parent")).expect("mkdir");
+        fs::write(&path, src).expect("write fixture");
+    }
+
+    fn path(&self) -> &str {
+        self.0.to_str().expect("utf-8 temp path")
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn run_lint(args: &[&str]) -> Output {
+    Command::new(BIN).arg("lint").args(args).output().expect("spawn ecco lint")
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8(out.stdout.clone()).expect("utf-8 stdout")
+}
+
+/// One known-bad file per rule; the library walk must flag all six.
+#[test]
+fn every_rule_fires_across_a_fixture_tree() {
+    let scratch = Scratch::new("rules");
+    scratch.write("serve/d001.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+    scratch.write("api/d002.rs", "use std::collections::HashMap;\n");
+    scratch.write("scene/d003.rs", "fn f() { let t = Instant::now(); }\n");
+    scratch.write("scene/d004.rs", "fn f(p: *const u32) -> u32 { unsafe { *p } }\n");
+    scratch.write(
+        "metrics/d005.rs",
+        "fn f(a: f64, b: f64) { let _ = a.partial_cmp(&b); }\n",
+    );
+    scratch.write("zoo/d006.rs", "fn f(m: &Mutex<u32>) { let _g = m.lock().unwrap(); }\n");
+
+    let report = lint_root(&scratch.0).expect("lint fixture tree");
+    assert_eq!(report.files_scanned, 6);
+    let rules: Vec<&str> = report.findings.iter().map(|f| f.rule.as_str()).collect();
+    for rule in ["D001", "D002", "D003", "D004", "D005", "D006"] {
+        assert!(rules.contains(&rule), "{rule} missing from {rules:?}");
+    }
+    // Paths come back root-relative with `/` separators.
+    assert!(report.findings.iter().any(|f| f.path == "serve/d001.rs"));
+}
+
+/// The same assertion CI's `rust-lint` job makes: the shipped tree is
+/// clean through the real binary (exit 0), and the summary line says so.
+#[test]
+fn shipped_tree_is_clean_via_binary() {
+    let out = run_lint(&[]);
+    let text = stdout_of(&out);
+    assert!(
+        out.status.success(),
+        "ecco lint found violations:\n{text}{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("0 finding(s)"), "{text}");
+}
+
+/// A dirty tree exits 1 with JSON findings; feeding that JSON back as
+/// `--baseline` suppresses them and exits 0 — the round-trip CI relies on
+/// to introduce the linter over a tree with known debt.
+#[test]
+fn json_report_round_trips_as_a_baseline() {
+    let scratch = Scratch::new("baseline");
+    scratch.write("serve/bad.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+    scratch.write("zoo/bad.rs", "fn f(m: &Mutex<u32>) { let _g = m.lock().unwrap(); }\n");
+
+    let dirty = run_lint(&[scratch.path(), "--format", "json"]);
+    assert_eq!(dirty.status.code(), Some(1), "dirty tree must exit 1");
+    let json = stdout_of(&dirty);
+    let parsed = Json::parse(&json).expect("findings are valid json");
+    let total = parsed.get("total").unwrap().as_usize().unwrap();
+    assert_eq!(total, 2, "{json}");
+
+    let baseline_file = scratch.0.join("baseline.json");
+    fs::write(&baseline_file, &json).expect("write baseline");
+    let clean = run_lint(&[
+        scratch.path(),
+        "--format",
+        "json",
+        "--baseline",
+        baseline_file.to_str().unwrap(),
+    ]);
+    assert!(
+        clean.status.success(),
+        "baselined run should exit 0:\n{}",
+        stdout_of(&clean)
+    );
+    let reparsed = Json::parse(&stdout_of(&clean)).expect("json");
+    assert_eq!(reparsed.get("total").unwrap().as_usize().unwrap(), 0);
+}
+
+/// Inline suppressions silence a finding only with a written reason; a
+/// bare `allow(..)` keeps the finding and adds a LINT complaint.
+#[test]
+fn suppressions_require_reasons_through_the_binary() {
+    let scratch = Scratch::new("suppress");
+    scratch.write(
+        "serve/ok.rs",
+        "fn f(x: Option<u32>) -> u32 {\n\
+         \x20   // ecco-lint: allow(D001) fixture: x is Some by construction\n\
+         \x20   x.unwrap()\n\
+         }\n",
+    );
+    let out = run_lint(&[scratch.path()]);
+    assert!(out.status.success(), "{}", stdout_of(&out));
+
+    scratch.write(
+        "serve/bare.rs",
+        "fn f(x: Option<u32>) -> u32 {\n\
+         \x20   // ecco-lint: allow(D001)\n\
+         \x20   x.unwrap()\n\
+         }\n",
+    );
+    let out = run_lint(&[scratch.path()]);
+    assert_eq!(out.status.code(), Some(1));
+    let text = stdout_of(&out);
+    assert!(text.contains("[LINT]"), "{text}");
+    assert!(text.contains("[D001]"), "{text}");
+}
+
+/// `--fix-hints` appends per-rule remediation lines; bad `--format`
+/// values are rejected with a non-zero exit.
+#[test]
+fn cli_hints_and_format_validation() {
+    let scratch = Scratch::new("cli");
+    scratch.write("serve/bad.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+
+    let hinted = run_lint(&[scratch.path(), "--fix-hints"]);
+    let text = stdout_of(&hinted);
+    assert!(text.contains("hint[D001]:"), "{text}");
+
+    let bad_format = run_lint(&[scratch.path(), "--format", "yaml"]);
+    assert!(!bad_format.status.success());
+    let err = String::from_utf8_lossy(&bad_format.stderr).to_string();
+    assert!(err.contains("format"), "{err}");
+}
